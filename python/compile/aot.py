@@ -1,0 +1,104 @@
+"""AOT lowering: the five paper kernels -> HLO text artifacts.
+
+Interchange format is HLO *text*, NOT a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+bundled xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text
+parser reassigns ids, so text round-trips cleanly.
+(See /opt/xla-example/load_hlo + its gen_hlo.py.)
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts          # all variants
+    python -m compile.aot --only conv_relu_32 --out-dir ../artifacts
+
+Each artifact `<name>_<size>.hlo.txt` is the Pallas-backed (interpret=True)
+kernel lowered at its concrete input shape, taking one int32 tensor and
+returning a 1-tuple of int32. A sibling `<name>_<size>.meta` records the
+shapes for the Rust loader. Re-running is a no-op when inputs are older
+than outputs (the Makefile also guards this).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants: without it the text printer elides big
+    # weight literals as `constant({...})`, which the xla_extension
+    # 0.5.1 parser silently mis-reads (values come back as iota!).
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def lower_variant(name: str, size: int, shape) -> str:
+    fn = model.build(name, size, use_pallas=True)
+    spec = jax.ShapeDtypeStruct(shape, jax.numpy.int32)
+    return to_hlo_text(jax.jit(fn).lower(spec))
+
+
+def out_shape(name: str, size: int):
+    if name in ("linear", "feedforward"):
+        return (model.LIN_M, model.LIN_N)
+    if name == "tiny_cnn":
+        return (size // 4, size // 4, model.CONV_F)
+    return (size, size, model.CONV_F)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="restrict to one variant key, e.g. conv_relu_32")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    wrote = 0
+    for name, size, shape in model.artifact_variants():
+        key = f"{name}_{size}"
+        if args.only and key != args.only:
+            continue
+        hlo_path = os.path.join(args.out_dir, f"{key}.hlo.txt")
+        meta_path = os.path.join(args.out_dir, f"{key}.meta")
+        if not args.force and os.path.exists(hlo_path):
+            src_mtime = max(
+                os.path.getmtime(p)
+                for p in [
+                    __file__,
+                    os.path.join(os.path.dirname(__file__), "model.py"),
+                ]
+            )
+            if os.path.getmtime(hlo_path) >= src_mtime:
+                print(f"[aot] up-to-date: {key}")
+                continue
+        print(f"[aot] lowering {key} (input {shape}) ...", flush=True)
+        text = lower_variant(name, size, shape)
+        with open(hlo_path, "w") as f:
+            f.write(text)
+        oshape = out_shape(name, size)
+        with open(meta_path, "w") as f:
+            f.write(
+                "in_shape=%s\nout_shape=%s\nrequant_shift=%d\n"
+                % (
+                    ",".join(map(str, shape)),
+                    ",".join(map(str, oshape)),
+                    6,
+                )
+            )
+        print(f"[aot] wrote {hlo_path} ({len(text)} chars)")
+        wrote += 1
+    print(f"[aot] done ({wrote} lowered)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

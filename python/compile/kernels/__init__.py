@@ -1,0 +1,5 @@
+"""L1 Pallas kernels + pure-jnp oracle for the MING golden model."""
+
+from . import ref  # noqa: F401
+from .conv2d_stream import conv2d_stream, vmem_footprint_bytes  # noqa: F401
+from .matmul_stream import matmul_stream  # noqa: F401

@@ -1,0 +1,125 @@
+"""Pallas line-buffer convolution kernel — the paper's compute hot-spot.
+
+MING's FPGA design streams the input feature map row by row through a
+`(K-1) x W` line buffer; each arriving row completes a `K x W` slab from
+which one full output row is computed and pushed to the output stream
+(paper §IV-B).
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the line buffer becomes a
+K-row *slab resident in VMEM*; the per-pixel `K*K*C` dot products of one
+output row are batched into a single `(W_out, K*K*C) @ (K*K*C, F)` matmul
+so the MXU — not scalar DSP-style MACs — does the work. The Pallas grid
+walks output rows, i.e. the streaming dimension: grid step `r` touches
+input rows `[r*stride, r*stride+K)` only, exactly the paper's slab
+schedule. Because adjacent slabs overlap by `K-stride` rows (BlockSpec
+blocks cannot overlap), the kernel receives the padded input whole and
+slices its slab with `pl.dslice` — on a real TPU this slice is the
+per-step HBM->VMEM DMA of one new row while `K-1` rows stay resident,
+i.e. the line buffer.
+
+Run with interpret=True: real-TPU lowering emits a Mosaic custom-call the
+CPU PJRT plugin cannot execute.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import I8_MAX, I8_MIN, REQUANT_SHIFT
+
+
+def _conv_row_kernel(xp_ref, w_ref, o_ref, *, k: int, stride: int, w_out: int,
+                     relu: bool, requant: bool):
+    """Compute one output row from the K-row input slab.
+
+    xp_ref: (H_pad, W_pad, C) padded input (int8) — whole map; only the
+            current K-row slab is read (the VMEM line buffer).
+    w_ref:  (K*K*C, F) pre-flattened weights (int8).
+    o_ref:  (1, W_out, F) output row (int32).
+    """
+    r = pl.program_id(0)
+    # --- line-buffer fill: the K-row slab for output row r -------------
+    slab = xp_ref[pl.dslice(r * stride, k), :, :].astype(jnp.int32)  # (K, W_pad, C)
+
+    # --- window extraction: one (W_out, K*K*C) patch matrix ------------
+    # Columns c*stride .. c*stride+K for every output column c. Gather by
+    # stacking K shifted views, which keeps everything vectorized.
+    cols = [slab[:, j : j + (w_out - 1) * stride + 1 : stride, :] for j in range(k)]
+    # each cols[j]: (K, W_out, C); stack -> (K, K, W_out, C)
+    win = jnp.stack(cols, axis=1)
+    patches = jnp.transpose(win, (2, 0, 1, 3)).reshape(w_out, -1)  # (W_out, K*K*C)
+
+    # --- MXU contraction: one matmul per output row ---------------------
+    acc = jax.lax.dot_general(
+        patches,
+        w_ref[...].astype(jnp.int32),
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )  # (W_out, F)
+
+    if relu:
+        acc = jnp.maximum(acc, 0)
+    if requant:
+        acc = jnp.clip(jnp.right_shift(acc, REQUANT_SHIFT), I8_MIN, I8_MAX)
+    o_ref[0, :, :] = acc
+
+
+def conv2d_stream(x, w, *, stride: int = 1, padding: int = 1, relu: bool = True,
+                  requant: bool = True, interpret: bool = True):
+    """Line-buffer streaming conv via Pallas.
+
+    x: (H, W, C) int8; w: (F, K, K, C) int8.
+    Returns int8 (H_out, W_out, F) if requant else int32 accumulators.
+    """
+    h, wid, c = x.shape
+    f, k, _, _ = w.shape
+    h_out = (h + 2 * padding - k) // stride + 1
+    w_out = (wid + 2 * padding - k) // stride + 1
+
+    xp = jnp.pad(x, ((padding, padding), (padding, padding), (0, 0)))
+    # Weights flattened to (K*K*C, F) once, matching the patch layout.
+    wf = jnp.transpose(w, (1, 2, 3, 0)).reshape(k * k * c, f)
+
+    kern = functools.partial(
+        _conv_row_kernel, k=k, stride=stride, w_out=w_out, relu=relu, requant=requant
+    )
+    out = pl.pallas_call(
+        kern,
+        grid=(h_out,),
+        in_specs=[
+            # Whole padded map visible; the kernel reads only its K-row slab.
+            pl.BlockSpec(xp.shape, lambda r: (0, 0, 0)),
+            pl.BlockSpec(wf.shape, lambda r: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, w_out, f), lambda r: (r, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((h_out, w_out, f), jnp.int32),
+        interpret=interpret,
+    )(xp, wf)
+    if requant:
+        out = out.astype(jnp.int8)
+    return out
+
+
+def vmem_footprint_bytes(h: int, w: int, c: int, k: int, f: int,
+                         padding: int = 1) -> dict:
+    """Estimate the per-grid-step VMEM residency of the slab schedule.
+
+    This is the TPU analogue of the paper's BRAM line-buffer sizing
+    ((K-1) x W x C on the FPGA). Reported in EXPERIMENTS.md §Perf.
+    """
+    w_pad = w + 2 * padding
+    slab = k * w_pad * c * 4            # int32-widened K-row slab
+    weights = k * k * c * f             # int8 flattened weights
+    patches = w * k * k * c * 4         # patch matrix
+    out_row = w * f * 4                 # one int32 output row
+    return {
+        "slab_bytes": slab,
+        "weight_bytes": weights,
+        "patch_bytes": patches,
+        "out_row_bytes": out_row,
+        "total_bytes": slab + weights + patches + out_row,
+    }

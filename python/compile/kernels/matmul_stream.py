@@ -1,0 +1,65 @@
+"""Pallas tiled int8 matmul for the Linear / Feed-Forward paper kernels.
+
+The FPGA design streams activation rows through the linear node while the
+weight matrix stays resident (the paper's regular-reduction node: a data
+line is buffered, reduced against the constant operand, and the result is
+streamed out). The TPU mapping tiles M into row blocks: each grid step
+holds one `(BM, K)` activation tile plus the whole `(K, N)` weight panel
+in VMEM and performs an MXU matmul — the weight panel is the analogue of
+the FPGA node's resident coefficient buffer.
+
+interpret=True only (CPU PJRT cannot execute Mosaic custom-calls).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import I8_MAX, I8_MIN, REQUANT_SHIFT
+
+
+def _mm_kernel(x_ref, w_ref, o_ref, *, relu: bool, requant: bool):
+    acc = jax.lax.dot_general(
+        x_ref[...].astype(jnp.int32),
+        w_ref[...].astype(jnp.int32),
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    if relu:
+        acc = jnp.maximum(acc, 0)
+    if requant:
+        acc = jnp.clip(jnp.right_shift(acc, REQUANT_SHIFT), I8_MIN, I8_MAX)
+    o_ref[...] = acc
+
+
+def matmul_stream(x, w, *, block_m: int = 64, relu: bool = True,
+                  requant: bool = True, interpret: bool = True):
+    """x (M, K) int8 @ w (K, N) int8, streamed over M row-tiles.
+
+    Returns (M, N) int8 if requant else int32.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2
+    bm = min(block_m, m)
+    assert m % bm == 0, f"M={m} must be divisible by block_m={bm}"
+
+    kern = functools.partial(_mm_kernel, relu=relu, requant=requant)
+    out = pl.pallas_call(
+        kern,
+        grid=(m // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i: (i, 0)),
+            pl.BlockSpec((k, n), lambda i: (0, 0)),  # weight panel resident
+        ],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=interpret,
+    )(x, w)
+    if requant:
+        out = out.astype(jnp.int8)
+    return out

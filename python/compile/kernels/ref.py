@@ -1,0 +1,185 @@
+"""Pure-jnp reference oracle for the MING golden model.
+
+These functions define the *semantics* that every other layer of the stack
+must match exactly:
+
+  * the Pallas kernels in this package (checked by pytest),
+  * the AOT-lowered HLO artifacts executed from Rust via PJRT,
+  * the Rust cycle-level dataflow simulator's functional output
+    (checked by `ming verify` / examples/e2e_cnn.rs).
+
+All CNN kernels follow the paper's edge-inference setting: 8-bit integer
+post-training quantization. Arithmetic contract (mirrored bit-exactly in
+Rust `sim::process`):
+
+  - activations and weights are int8,
+  - convolution / linear accumulate in int32,
+  - ReLU is applied on the int32 accumulator,
+  - requantization is an arithmetic right shift by REQUANT_SHIFT followed
+    by clamping to [-128, 127] (floor rounding, i.e. plain `>>`).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+# Right-shift applied when requantizing an int32 accumulator back to int8.
+# 3x3x8 int8 MACs peak around 2^20; >>6 keeps typical outputs in range
+# while still exercising the clamp on adversarial inputs.
+REQUANT_SHIFT = 6
+
+I8_MIN, I8_MAX = -128, 127
+
+
+def requantize(acc):
+    """int32 accumulator -> int8 activation (shift + clamp, floor rounding)."""
+    shifted = jnp.right_shift(acc, REQUANT_SHIFT)
+    return jnp.clip(shifted, I8_MIN, I8_MAX).astype(jnp.int8)
+
+
+def relu_i32(acc):
+    """ReLU on the int32 accumulator (pre-requantization)."""
+    return jnp.maximum(acc, 0)
+
+
+def conv2d_i8(x, w, stride: int = 1, padding: int = 1):
+    """Quantized 2-D convolution.
+
+    x: (H, W, C)   int8 input feature map
+    w: (F, K, K, C) int8 weights
+    returns (H_out, W_out, F) int32 accumulators (no activation).
+    """
+    assert x.dtype == jnp.int8 and w.dtype == jnp.int8
+    h, wid, c = x.shape
+    f, k, _, c2 = w.shape
+    assert c == c2, f"channel mismatch {c} vs {c2}"
+    xp = jnp.pad(x.astype(jnp.int32), ((padding, padding), (padding, padding), (0, 0)))
+    h_out = (h + 2 * padding - k) // stride + 1
+    w_out = (wid + 2 * padding - k) // stride + 1
+    # im2col: gather (h_out, w_out, k, k, c) windows then contract with w.
+    win = jnp.stack(
+        [
+            jnp.stack(
+                [
+                    xp[r : r + h_out * stride : stride, s : s + w_out * stride : stride, :]
+                    for s in range(k)
+                ],
+                axis=2,
+            )
+            for r in range(k)
+        ],
+        axis=2,
+    )  # (h_out, w_out, k, k, c)
+    acc = jnp.einsum("hwijc,fijc->hwf", win, w.astype(jnp.int32))
+    return acc.astype(jnp.int32)
+
+
+def conv_relu_i8(x, w, stride: int = 1, padding: int = 1):
+    """Conv2D -> ReLU -> requantize: the paper's single-layer kernel."""
+    return requantize(relu_i32(conv2d_i8(x, w, stride, padding)))
+
+
+def linear_i8(x, w):
+    """Quantized matmul: x (M, K) int8 @ w (K, N) int8 -> (M, N) int32."""
+    assert x.dtype == jnp.int8 and w.dtype == jnp.int8
+    return jnp.matmul(x.astype(jnp.int32), w.astype(jnp.int32))
+
+
+def add_i8(a, b):
+    """Residual addition of two int8 maps -> int8 (saturating)."""
+    s = a.astype(jnp.int32) + b.astype(jnp.int32)
+    return jnp.clip(s, I8_MIN, I8_MAX).astype(jnp.int8)
+
+
+def maxpool2d_i8(x, k: int = 2, stride: int = 2):
+    """Max-pooling over (H, W, C) int8 maps -> (H_out, W_out, C) int8."""
+    assert x.dtype == jnp.int8
+    h, w, c = x.shape
+    h_out = (h - k) // stride + 1
+    w_out = (w - k) // stride + 1
+    win = jnp.stack(
+        [
+            jnp.stack(
+                [
+                    x[r : r + h_out * stride : stride, s : s + w_out * stride : stride, :]
+                    for s in range(k)
+                ],
+                axis=2,
+            )
+            for r in range(k)
+        ],
+        axis=2,
+    )  # (h_out, w_out, k, k, c)
+    return jnp.max(win, axis=(2, 3))
+
+
+# ---------------------------------------------------------------------------
+# The five paper kernels (evaluation section, Table II)
+# ---------------------------------------------------------------------------
+
+def kernel_conv_relu(x, w1):
+    """Conv+ReLU (single layer)."""
+    return conv_relu_i8(x, w1)
+
+
+def kernel_cascade(x, w1, w2):
+    """Cascade Conv Block: conv -> relu -> conv -> relu."""
+    t = conv_relu_i8(x, w1)
+    return conv_relu_i8(t, w2)
+
+
+def kernel_residual(x, w1, w2):
+    """Residual Block: y = sat(relu(x + requant(conv(relu_conv(x))))).
+
+    Diamond-shaped dataflow: the input feeds both the conv chain and the
+    skip connection — this is the FIFO-deadlock case the paper's DSE
+    sizes buffers for.
+    """
+    t = conv_relu_i8(x, w1)
+    u = requantize(conv2d_i8(t, w2))  # second conv: requant, no relu pre-add
+    s = x.astype(jnp.int32) + u.astype(jnp.int32)
+    s = jnp.maximum(s, 0)
+    return jnp.clip(s, I8_MIN, I8_MAX).astype(jnp.int8)
+
+
+def kernel_tiny_cnn(x, w1, w2):
+    """Extension workload: conv -> relu -> pool -> conv -> relu -> pool."""
+    t = conv_relu_i8(x, w1)
+    t = maxpool2d_i8(t, 2, 2)
+    t = conv_relu_i8(t, w2)
+    return maxpool2d_i8(t, 2, 2)
+
+
+def kernel_linear(x, w1):
+    """Linear: (512,128)@(128,128) with ReLU + requantize."""
+    return requantize(relu_i32(linear_i8(x, w1)))
+
+
+def kernel_feedforward(x, w1, w2):
+    """Feed Forward: two cascaded Linear layers with ReLU between."""
+    t = requantize(relu_i32(linear_i8(x, w1)))
+    return requantize(relu_i32(linear_i8(t, w2)))
+
+
+# ---------------------------------------------------------------------------
+# Deterministic test-vector generation, mirrored bit-exactly by
+# rust/src/util/prng.rs::det_i8 so both sides can regenerate identical
+# weights/inputs without shipping tensors around.
+# ---------------------------------------------------------------------------
+
+_MIX1 = np.uint64(0x9E3779B97F4A7C15)
+_MIX2 = np.uint64(0xD1B54A32D192ED03)
+
+
+def det_i8(seed: int, n: int) -> np.ndarray:
+    """n deterministic int8 values for `seed`; same formula as Rust."""
+    i = np.arange(1, n + 1, dtype=np.uint64)
+    with np.errstate(over="ignore"):
+        v = (i * _MIX1) ^ ((np.uint64(seed) + np.uint64(1)) * _MIX2)
+        v = (v >> np.uint64(32)) & np.uint64(0xFF)
+    return v.astype(np.uint8).view(np.int8)
+
+
+def det_tensor(seed: int, shape) -> np.ndarray:
+    return det_i8(seed, int(np.prod(shape))).reshape(shape)

@@ -1,0 +1,138 @@
+"""Pallas kernels vs pure-jnp oracle — the core L1 correctness signal.
+
+Shape/parameter sweeps play the role hypothesis would (no third-party
+property-testing package in this environment): the grids below enumerate
+the parameter lattice rather than sampling it, which is strictly stronger
+for these small spaces.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile.kernels import ref, conv2d_stream, matmul_stream
+from compile.kernels.conv2d_stream import vmem_footprint_bytes
+
+
+def conv_pair(seed, h, w, c, f, k):
+    x = jnp.asarray(ref.det_tensor(seed, (h, w, c)))
+    wt = jnp.asarray(ref.det_tensor(seed + 100, (f, k, k, c)))
+    return x, wt
+
+
+# ---------------------------------------------------------------------------
+# conv2d_stream sweeps
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("h,w", [(4, 4), (5, 7), (8, 8), (16, 12), (32, 32)])
+@pytest.mark.parametrize("c,f", [(1, 1), (3, 4), (8, 8)])
+def test_conv_shapes(h, w, c, f):
+    x, wt = conv_pair(h * 31 + w, h, w, c, f, 3)
+    got = conv2d_stream(x, wt)
+    want = ref.kernel_conv_relu(x, wt)
+    np.testing.assert_array_equal(np.array(got), np.array(want))
+
+
+@pytest.mark.parametrize("k,pad", [(1, 0), (3, 1), (5, 2)])
+def test_conv_kernel_sizes(k, pad):
+    x, wt = conv_pair(k, 12, 12, 4, 4, k)
+    got = conv2d_stream(x, wt, padding=pad)
+    want = ref.requantize(ref.relu_i32(ref.conv2d_i8(x, wt, padding=pad)))
+    np.testing.assert_array_equal(np.array(got), np.array(want))
+
+
+@pytest.mark.parametrize("stride", [1, 2])
+def test_conv_strides(stride):
+    x, wt = conv_pair(stride * 13, 16, 16, 4, 4, 3)
+    got = conv2d_stream(x, wt, stride=stride)
+    want = ref.requantize(ref.relu_i32(ref.conv2d_i8(x, wt, stride=stride)))
+    np.testing.assert_array_equal(np.array(got), np.array(want))
+
+
+def test_conv_no_relu_no_requant():
+    x, wt = conv_pair(5, 8, 8, 4, 4, 3)
+    got = conv2d_stream(x, wt, relu=False, requant=False)
+    want = ref.conv2d_i8(x, wt)
+    assert got.dtype == jnp.int32
+    np.testing.assert_array_equal(np.array(got), np.array(want))
+
+
+def test_conv_requant_saturates():
+    # All-max inputs must exercise the int8 clamp, not wrap around.
+    x = jnp.full((8, 8, 8), 127, dtype=jnp.int8)
+    wt = jnp.full((8, 3, 3, 8), 127, dtype=jnp.int8)
+    got = np.array(conv2d_stream(x, wt))
+    assert got.max() == ref.I8_MAX
+    want = np.array(ref.kernel_conv_relu(x, wt))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_conv_negative_inputs_relu_zeroes():
+    x = jnp.full((6, 6, 2), -128, dtype=jnp.int8)
+    wt = jnp.full((2, 3, 3, 2), 127, dtype=jnp.int8)
+    got = np.array(conv2d_stream(x, wt))
+    # interior pixels: all-negative accumulators -> relu -> 0
+    assert (got[2:-2, 2:-2, :] == 0).all()
+
+
+# ---------------------------------------------------------------------------
+# matmul_stream sweeps
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,k,n", [(8, 8, 8), (64, 32, 16), (128, 64, 32), (512, 128, 128)])
+def test_matmul_shapes(m, k, n):
+    x = jnp.asarray(ref.det_tensor(m + n, (m, k)))
+    w = jnp.asarray(ref.det_tensor(k, (k, n)))
+    got = matmul_stream(x, w)
+    want = ref.requantize(ref.relu_i32(ref.linear_i8(x, w)))
+    np.testing.assert_array_equal(np.array(got), np.array(want))
+
+
+@pytest.mark.parametrize("bm", [8, 16, 64])
+def test_matmul_block_sizes(bm):
+    x = jnp.asarray(ref.det_tensor(3, (64, 32)))
+    w = jnp.asarray(ref.det_tensor(4, (32, 32)))
+    got = matmul_stream(x, w, block_m=bm)
+    want = ref.requantize(ref.relu_i32(ref.linear_i8(x, w)))
+    np.testing.assert_array_equal(np.array(got), np.array(want))
+
+
+def test_matmul_rejects_indivisible_m():
+    x = jnp.asarray(ref.det_tensor(3, (10, 8)))
+    w = jnp.asarray(ref.det_tensor(4, (8, 8)))
+    with pytest.raises(AssertionError):
+        matmul_stream(x, w, block_m=4)  # 10 % 4 != 0
+
+
+# ---------------------------------------------------------------------------
+# quantization contract invariants
+# ---------------------------------------------------------------------------
+
+def test_requantize_floor_rounding():
+    acc = jnp.asarray([-65, -64, -1, 0, 1, 63, 64, 65], dtype=jnp.int32)
+    got = np.array(ref.requantize(acc))
+    # arithmetic >> floors toward -inf: -65>>6 == -2, -1>>6 == -1
+    np.testing.assert_array_equal(got, [-2, -1, -1, 0, 0, 0, 1, 1])
+
+
+def test_requantize_clamps():
+    acc = jnp.asarray([1 << 20, -(1 << 20)], dtype=jnp.int32)
+    got = np.array(ref.requantize(acc))
+    np.testing.assert_array_equal(got, [ref.I8_MAX, ref.I8_MIN])
+
+
+def test_det_tensor_deterministic_and_full_range():
+    a = ref.det_tensor(42, (1024,))
+    b = ref.det_tensor(42, (1024,))
+    np.testing.assert_array_equal(a, b)
+    assert a.min() < -100 and a.max() > 100  # spans the int8 range
+    assert ref.det_tensor(43, (1024,)).tolist() != a.tolist()
+
+
+def test_vmem_footprint_model():
+    fp = vmem_footprint_bytes(32, 32, 8, 3, 8)
+    assert fp["total_bytes"] == fp["slab_bytes"] + fp["weight_bytes"] + fp["patch_bytes"] + fp["out_row_bytes"]
+    # slab is the (K x W_pad x C) int32 line buffer analogue
+    assert fp["slab_bytes"] == 3 * 34 * 8 * 4
+    # footprint must be << 16 MiB VMEM for every paper size
+    assert vmem_footprint_bytes(224, 224, 8, 3, 8)["total_bytes"] < 16 * 2**20

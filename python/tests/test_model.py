@@ -1,0 +1,115 @@
+"""L2 model tests: Pallas-backed paper kernels vs the oracle composition,
+artifact variant metadata, and HLO lowering smoke checks."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model, aot
+from compile.kernels import ref
+
+
+def run_both(name, size, shape):
+    x32 = jnp.asarray(ref.det_tensor(model.SEED_INPUT, shape), dtype=jnp.int32)
+    pallas_fn = model.build(name, size, use_pallas=True)
+    oracle_fn = model.build(name, size, use_pallas=False)
+    (got,) = pallas_fn(x32)
+    (want,) = oracle_fn(x32)
+    return np.array(got), np.array(want)
+
+
+@pytest.mark.parametrize("name", ["conv_relu", "cascade", "residual"])
+def test_conv_kernels_pallas_vs_oracle(name):
+    got, want = run_both(name, 32, (32, 32, model.CONV_C))
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("name", ["linear", "feedforward"])
+def test_linear_kernels_pallas_vs_oracle(name):
+    got, want = run_both(name, 0, (model.LIN_M, model.LIN_K))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_residual_is_a_diamond():
+    # The residual output must differ from plain cascade output: the skip
+    # path has to contribute. Guards against accidentally dropping the add.
+    shape = (16, 16, model.CONV_C)
+    x32 = jnp.asarray(ref.det_tensor(model.SEED_INPUT, shape), dtype=jnp.int32)
+    (res,) = model.build("residual", 16, use_pallas=False)(x32)
+    w1, w2 = model.conv_weights(2)
+    x = x32.astype(jnp.int8)
+    chain = ref.requantize(ref.conv2d_i8(ref.conv_relu_i8(x, w1), w2))
+    assert np.array(res).tolist() != np.array(chain.astype(jnp.int32)).tolist()
+
+
+def test_outputs_in_int8_range():
+    for name, size, shape in model.artifact_variants():
+        if size == 224:
+            continue  # covered by the 32x32 variants; skip slow interpret runs
+        x32 = jnp.asarray(ref.det_tensor(model.SEED_INPUT, shape), dtype=jnp.int32)
+        (y,) = model.build(name, size, use_pallas=False)(x32)
+        y = np.array(y)
+        assert y.min() >= ref.I8_MIN and y.max() <= ref.I8_MAX, name
+
+
+def test_artifact_variants_cover_paper_table2():
+    keys = {f"{n}_{s}" for n, s, _ in model.artifact_variants()}
+    assert {"conv_relu_32", "conv_relu_224", "cascade_32", "cascade_224",
+            "residual_32", "residual_224", "linear_0", "feedforward_0"} <= keys
+
+
+def test_out_shape_matches_eval():
+    assert aot.out_shape("conv_relu", 32) == (32, 32, model.CONV_F)
+    assert aot.out_shape("linear", 0) == (model.LIN_M, model.LIN_N)
+
+
+def test_hlo_text_lowering_smoke():
+    text = aot.lower_variant("conv_relu", 8, (8, 8, model.CONV_C))
+    assert text.startswith("HloModule")
+    assert "s32[8,8,8]" in text          # int32 boundary types
+    assert "s8[" in text                 # int8 compute inside
+
+
+def test_hlo_lowering_is_deterministic():
+    a = aot.lower_variant("linear", 0, (model.LIN_M, model.LIN_K))
+    b = aot.lower_variant("linear", 0, (model.LIN_M, model.LIN_K))
+    assert a == b
+
+
+def test_weights_are_baked_constants():
+    # The lowered module must have exactly one parameter (the input);
+    # weights are constants — Rust never feeds them.
+    text = aot.lower_variant("conv_relu", 8, (8, 8, model.CONV_C))
+    entry = [l for l in text.splitlines() if "ENTRY" in l]
+    assert entry, "no ENTRY computation"
+    params = [l for l in text.split("ENTRY", 1)[1].splitlines() if "parameter(" in l]
+    assert len(params) == 1, params
+
+
+# ---------------------------------------------------------------------------
+# extension workload: tiny_cnn (conv-pool-conv-pool)
+# ---------------------------------------------------------------------------
+
+def test_maxpool_semantics():
+    x = jnp.asarray(ref.det_tensor(3, (6, 6, 2)))
+    y = np.array(ref.maxpool2d_i8(x, 2, 2))
+    assert y.shape == (3, 3, 2)
+    xn = np.array(x)
+    for r in range(3):
+        for c in range(3):
+            for ch in range(2):
+                want = xn[2 * r : 2 * r + 2, 2 * c : 2 * c + 2, ch].max()
+                assert y[r, c, ch] == want
+
+
+def test_tiny_cnn_pallas_vs_oracle():
+    got, want = run_both("tiny_cnn", 32, (32, 32, 4))
+    np.testing.assert_array_equal(got, want)
+    assert got.shape == (8, 8, 8)
+
+
+def test_tiny_cnn_artifact_lowering():
+    text = aot.lower_variant("tiny_cnn", 32, (32, 32, 4))
+    assert text.startswith("HloModule")
+    assert "constant({...})" not in text, "constants must not be elided"

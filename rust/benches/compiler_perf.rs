@@ -1,0 +1,80 @@
+//! Bench: compiler-stack hot paths (the §Perf targets in EXPERIMENTS.md):
+//!   * kernel analysis (Algorithms 1+2) throughput,
+//!   * streaming-architecture construction,
+//!   * DSE solve (branch & bound),
+//!   * cycle-level simulation throughput (firings/s and token ops/s),
+//!   * PJRT golden-model execution (when artifacts exist).
+//!
+//! Run: `cargo bench --bench compiler_perf`
+
+use ming::analysis::classify::classify;
+use ming::baselines::framework::{compile_with, FrameworkKind};
+use ming::dse::ilp::{solve, DseConfig};
+use ming::dataflow::build::build_streaming_design;
+use ming::ir::builder::models;
+use ming::resources::device::DeviceSpec;
+use ming::runtime::golden::GoldenModel;
+use ming::sim::{simulate, SimMode};
+use ming::util::bench::bench;
+use ming::util::prng;
+
+fn main() {
+    let dev = DeviceSpec::kv260();
+
+    // --- analysis ---------------------------------------------------------
+    let g = models::residual(224, models::CONV_C, models::CONV_F);
+    let s = bench("analysis_classify_residual224", 5, 200, || {
+        g.ops.iter().map(classify).count()
+    });
+    println!("{}", s.summary());
+
+    // --- build ------------------------------------------------------------
+    let s = bench("build_streaming_residual224", 5, 100, || {
+        build_streaming_design(&g).unwrap()
+    });
+    println!("{}", s.summary());
+
+    // --- DSE --------------------------------------------------------------
+    for (name, size) in [("residual", 32usize), ("feedforward", 0)] {
+        let gg = models::paper_kernel(name, size).unwrap();
+        let s = bench(&format!("dse_solve_{name}"), 3, 50, || {
+            let mut d = build_streaming_design(&gg).unwrap();
+            solve(&mut d, &DseConfig::new(dev.clone())).unwrap()
+        });
+        println!("{}", s.summary());
+    }
+
+    // --- simulation throughput ---------------------------------------------
+    for (name, size) in [("conv_relu", 224usize), ("cascade", 224), ("linear", 0)] {
+        let gg = models::paper_kernel(name, size).unwrap();
+        let d = compile_with(FrameworkKind::Ming, &gg, &dev).unwrap();
+        let x: Vec<i32> = prng::det_tensor(prng::SEED_INPUT, gg.inputs()[0].ty.numel())
+            .iter()
+            .map(|&v| v as i32)
+            .collect();
+        let mut firings = 0u64;
+        let s = bench(&format!("simulate_ming_{name}_{size}"), 1, 5, || {
+            let rep = simulate(&d, &x, SimMode::Dataflow).unwrap();
+            firings = rep.total_firings;
+            rep.cycles
+        });
+        let per_sec = firings as f64 / s.mean.as_secs_f64();
+        println!("{}  [{:.1}M firings/s]", s.summary(), per_sec / 1e6);
+    }
+
+    // --- golden model (PJRT) ------------------------------------------------
+    if let Ok(gm) = GoldenModel::open_default() {
+        if gm.available("conv_relu_32") {
+            let x: Vec<i32> =
+                prng::det_tensor(prng::SEED_INPUT, 32 * 32 * 8).iter().map(|&v| v as i32).collect();
+            // first call compiles; bench the warm path
+            gm.run("conv_relu_32", &x).unwrap();
+            let s = bench("pjrt_golden_conv_relu_32", 2, 20, || {
+                gm.run("conv_relu_32", &x).unwrap()
+            });
+            println!("{}", s.summary());
+        }
+    } else {
+        println!("pjrt_golden_*: skipped (run `make artifacts`)");
+    }
+}

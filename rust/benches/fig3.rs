@@ -1,0 +1,65 @@
+//! Bench: regenerate the paper's Fig. 3 series (single-layer BRAM
+//! utilization vs input size — StreamHLS grows near-linearly with the
+//! input area, MING stays constant).
+//!
+//! Run: `cargo bench --bench fig3`
+
+use ming::baselines::framework::{compile_with, FrameworkKind};
+use ming::ir::builder::models;
+use ming::resources::device::DeviceSpec;
+use ming::resources::estimate;
+use ming::util::bench::bench;
+use ming::util::tables::TextTable;
+
+const SIZES: [usize; 7] = [32, 64, 96, 128, 160, 192, 224];
+
+fn series(fw: FrameworkKind, dev: &DeviceSpec) -> Vec<u64> {
+    SIZES
+        .iter()
+        .map(|&n| {
+            let g = models::conv_relu(n, models::CONV_C, models::CONV_F);
+            let d = compile_with(fw, &g, dev).unwrap();
+            estimate(&d, dev).bram18k
+        })
+        .collect()
+}
+
+fn main() {
+    let dev = DeviceSpec::kv260();
+    let sh = series(FrameworkKind::StreamHls, &dev);
+    let vg = series(FrameworkKind::Vanilla, &dev);
+    let mg = series(FrameworkKind::Ming, &dev);
+
+    println!("=== Fig. 3 (reproduction): BRAM18K vs input size ===");
+    let mut t = TextTable::new(vec!["input", "vanilla", "streamhls", "ming", "KV260 cap"]);
+    for (i, &n) in SIZES.iter().enumerate() {
+        t.row(vec![
+            format!("{n}x{n}"),
+            vg[i].to_string(),
+            sh[i].to_string(),
+            mg[i].to_string(),
+            dev.bram18k.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // shape claims: StreamHLS strictly increasing & over budget at 224;
+    // MING constant and under budget everywhere.
+    assert!(sh.windows(2).all(|w| w[0] < w[1]), "StreamHLS BRAM must grow: {sh:?}");
+    assert!(sh.last().unwrap() > &dev.bram18k, "StreamHLS must exceed the KV260 at 224");
+    assert!(mg.windows(2).all(|w| w[0] == w[1]), "MING BRAM must be constant: {mg:?}");
+    assert!(mg[0] < dev.bram18k);
+    // near-linear growth in input area: ratio of successive increments ~const
+    let r_end = sh[6] as f64 / sh[0] as f64;
+    let area = (224.0f64 / 32.0).powi(2);
+    assert!(
+        r_end > 0.5 * area && r_end < 2.0 * area,
+        "StreamHLS growth should track input area: {r_end} vs {area}"
+    );
+    println!("shape checks passed (linear growth vs constant 16)\n");
+
+    let s = bench("fig3_series_streamhls", 1, 10, || series(FrameworkKind::StreamHls, &dev));
+    println!("{}", s.summary());
+    let s = bench("fig3_series_ming", 1, 5, || series(FrameworkKind::Ming, &dev));
+    println!("{}", s.summary());
+}

@@ -1,0 +1,40 @@
+//! Bench: regenerate the paper's Table II (kernel × framework: MCycles,
+//! BRAM, DSP, Speedup, E_DSP) and time the compile+simulate pipeline.
+//!
+//! Run: `cargo bench --bench table2`
+
+use ming::coordinator::report::{self, Cell};
+use ming::coordinator::service::{CompileService, SweepConfig};
+use ming::resources::device::DeviceSpec;
+use ming::util::bench::bench;
+
+fn cells(dev: &DeviceSpec) -> Vec<Cell> {
+    let svc = CompileService::default();
+    svc.run_sweep(&SweepConfig::table2(dev.clone()))
+        .iter()
+        .filter_map(|r| r.as_ref().ok().map(report::cell))
+        .collect()
+}
+
+fn main() {
+    let dev = DeviceSpec::kv260();
+
+    // the table itself (paper evaluation artifact)
+    let c = cells(&dev);
+    println!("=== Table II (reproduction) ===");
+    println!("{}", report::render_table2(&c));
+
+    // sanity assertions on the paper's shape claims
+    let ming_conv32 = c
+        .iter()
+        .find(|x| x.kernel == "conv_relu" && x.size == 32 && x.framework.name() == "ming")
+        .unwrap();
+    let sp = report::speedup(&c, ming_conv32).unwrap();
+    assert!(sp > 100.0, "single-layer MING speedup must be in the hundreds: {sp}");
+    assert!(ming_conv32.fits);
+    println!("shape checks passed (MING conv32 speedup {sp:.0}x)\n");
+
+    // timing of the full sweep (32 designs compiled + simulated)
+    let s = bench("table2_full_sweep", 1, 5, || cells(&dev));
+    println!("{}", s.summary());
+}

@@ -1,0 +1,57 @@
+//! Bench: regenerate the paper's Table III (post-PnR LUT/LUTRAM/FF % for
+//! the 32×32 kernels across ScaleHLS / StreamHLS / MING).
+//!
+//! Run: `cargo bench --bench table3`
+
+use ming::baselines::framework::FrameworkKind;
+use ming::coordinator::report::{self, Cell};
+use ming::coordinator::service::{CompileService, SweepConfig};
+use ming::resources::device::DeviceSpec;
+use ming::util::bench::bench;
+
+fn cells(dev: &DeviceSpec) -> Vec<Cell> {
+    let cfg = SweepConfig {
+        workloads: vec![
+            ("conv_relu".into(), 32),
+            ("cascade".into(), 32),
+            ("residual".into(), 32),
+        ],
+        frameworks: FrameworkKind::all().to_vec(),
+        device: dev.clone(),
+        estimate_only: true,
+    };
+    CompileService::default()
+        .run_sweep(&cfg)
+        .iter()
+        .filter_map(|r| r.as_ref().ok().map(report::cell))
+        .collect()
+}
+
+fn main() {
+    let dev = DeviceSpec::kv260();
+    let c = cells(&dev);
+    println!("=== Table III (reproduction) ===");
+    println!("{}", report::render_table3(&c));
+
+    // shape claim: MING consumes the least fabric on every kernel
+    for kernel in ["conv_relu", "cascade", "residual"] {
+        let of = |fw: FrameworkKind| {
+            c.iter().find(|x| x.kernel == kernel && x.framework == fw).unwrap()
+        };
+        let ming = of(FrameworkKind::Ming);
+        for fw in [FrameworkKind::ScaleHls, FrameworkKind::StreamHls] {
+            let other = of(fw);
+            assert!(
+                ming.lut_pct <= other.lut_pct + 1e-9,
+                "{kernel}: MING LUT% {} must not exceed {} ({})",
+                ming.lut_pct,
+                other.lut_pct,
+                fw.name()
+            );
+        }
+    }
+    println!("shape checks passed (MING lowest fabric on all kernels)\n");
+
+    let s = bench("table3_estimates", 1, 10, || cells(&dev));
+    println!("{}", s.summary());
+}

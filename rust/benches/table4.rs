@@ -1,0 +1,59 @@
+//! Bench: regenerate the paper's Table IV (DSP-constraint sweep on the
+//! single-layer 32×32 kernel: speedup, DSP used, E_DSP) and time the DSE
+//! under successively tighter budgets.
+//!
+//! Run: `cargo bench --bench table4`
+
+use ming::baselines::framework::{compile_with, FrameworkKind};
+use ming::dse::ilp::{solve, DseConfig};
+use ming::dataflow::build::build_streaming_design;
+use ming::ir::builder::models;
+use ming::resources::device::DeviceSpec;
+use ming::resources::estimate;
+use ming::sim::{simulate, SimMode};
+use ming::util::bench::bench;
+use ming::util::prng;
+use ming::util::tables::{fnum, TextTable};
+
+fn main() {
+    let kv = DeviceSpec::kv260();
+    let g = models::conv_relu(32, models::CONV_C, models::CONV_F);
+    let x: Vec<i32> = prng::det_tensor(prng::SEED_INPUT, g.inputs()[0].ty.numel())
+        .iter()
+        .map(|&v| v as i32)
+        .collect();
+    let dv = compile_with(FrameworkKind::Vanilla, &g, &kv).unwrap();
+    let base = simulate(&dv, &x, SimMode::of(dv.style)).unwrap().expect_complete().cycles;
+
+    println!("=== Table IV (reproduction) — Vanilla baseline {base} cycles ===");
+    let mut t = TextTable::new(vec!["DSP constraint", "Speedup", "DSP", "E_DSP"]);
+    let mut last_speedup = f64::INFINITY;
+    for cap in [1248u64, 250, 50] {
+        let dev = kv.with_dsp_limit(cap);
+        let d = compile_with(FrameworkKind::Ming, &g, &dev).unwrap();
+        let r = estimate(&d, &dev);
+        assert!(r.fits(), "design must respect the cap: {r}");
+        let rep = simulate(&d, &x, SimMode::Dataflow).unwrap().expect_complete();
+        let sp = base as f64 / rep.cycles as f64;
+        assert!(sp < last_speedup, "speedup must degrade with the budget");
+        last_speedup = sp;
+        t.row(vec![
+            cap.to_string(),
+            fnum(sp, 1),
+            r.dsp.to_string(),
+            fnum(sp / r.dsp.max(1) as f64, 2),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("shape checks passed (monotone, always feasible)\n");
+
+    // DSE solve time under each budget
+    for cap in [1248u64, 250, 50] {
+        let dev = kv.with_dsp_limit(cap);
+        let s = bench(&format!("dse_solve_dsp{cap}"), 2, 20, || {
+            let mut d = build_streaming_design(&g).unwrap();
+            solve(&mut d, &DseConfig::new(dev.clone())).unwrap()
+        });
+        println!("{}", s.summary());
+    }
+}

@@ -1,0 +1,84 @@
+//! Kernel-class assignment (paper §IV-A): every `linalg.generic` op is
+//! *pure parallel*, *regular reduction*, or *sliding window*; each class
+//! gets its own dataflow/buffering strategy in `dataflow::build`.
+
+use crate::ir::generic::GenericOp;
+
+use super::sliding::{detect_sliding_window, SlidingWindow};
+
+/// The three kernel categories of MING.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelClass {
+    /// All iterators parallel; consume-compute-produce per element.
+    PureParallel,
+    /// Has reduction dims but no sliding access; buffers one data line.
+    RegularReduction,
+    /// Sliding-window access; line buffer + window buffer.
+    SlidingWindow(SlidingWindow),
+}
+
+impl KernelClass {
+    pub fn name(&self) -> &'static str {
+        match self {
+            KernelClass::PureParallel => "pure-parallel",
+            KernelClass::RegularReduction => "regular-reduction",
+            KernelClass::SlidingWindow(_) => "sliding-window",
+        }
+    }
+}
+
+/// Classify one generic op.
+pub fn classify(op: &GenericOp) -> KernelClass {
+    if let Some(sw) = detect_sliding_window(op) {
+        return KernelClass::SlidingWindow(sw);
+    }
+    if op.has_reduction() {
+        KernelClass::RegularReduction
+    } else {
+        KernelClass::PureParallel
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::builder::models;
+
+    #[test]
+    fn paper_kernel_classes() {
+        let g = models::conv_relu(16, 4, 4);
+        assert!(matches!(classify(g.op("conv0").unwrap()), KernelClass::SlidingWindow(_)));
+        assert_eq!(classify(g.op("rr0").unwrap()), KernelClass::PureParallel);
+
+        let g = models::linear();
+        assert_eq!(classify(g.op("mm0").unwrap()), KernelClass::RegularReduction);
+
+        let g = models::residual(16, 4, 4);
+        assert_eq!(classify(g.op("add0").unwrap()), KernelClass::PureParallel);
+        assert_eq!(classify(g.op("relu_out").unwrap()), KernelClass::PureParallel);
+    }
+
+    #[test]
+    fn class_names() {
+        assert_eq!(KernelClass::PureParallel.name(), "pure-parallel");
+        assert_eq!(KernelClass::RegularReduction.name(), "regular-reduction");
+    }
+
+    #[test]
+    fn every_table2_op_is_classified_consistently() {
+        for (name, size) in models::table2_workloads() {
+            let g = models::paper_kernel(name, size.max(8)).unwrap();
+            for op in &g.ops {
+                let c = classify(op);
+                match c {
+                    KernelClass::SlidingWindow(sw) => {
+                        assert!(sw.stride > 0 && sw.dilation > 0);
+                        assert!(op.has_reduction());
+                    }
+                    KernelClass::RegularReduction => assert!(op.has_reduction()),
+                    KernelClass::PureParallel => assert!(!op.has_reduction()),
+                }
+            }
+        }
+    }
+}

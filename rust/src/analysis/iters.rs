@@ -1,0 +1,116 @@
+//! Paper Algorithm 2 — iterator classification for stream and line-buffer
+//! construction.
+//!
+//! Walks every input indexing map: single-dim results land in `P`
+//! (parallel) or `R` (reduction); compound results (the sliding
+//! expressions) land in `O` (original input dims). Output-map parallel
+//! dims not already in `P` form `W` (window / spatial walk dims).
+
+use std::collections::BTreeSet;
+
+use crate::ir::generic::{GenericOp, IterType};
+
+/// The four dimension sets of paper Algorithm 2.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct IterSets {
+    /// Parallel dims: independent lanes shared by inputs and output —
+    /// define the initial shape (width) of the *output* streams.
+    pub p: BTreeSet<usize>,
+    /// Reduction dims: accumulation axes — define the *input* stream shape.
+    pub r: BTreeSet<usize>,
+    /// Original input dims: compound (sliding) accesses that must be
+    /// preserved to size line buffers.
+    pub o: BTreeSet<usize>,
+    /// Window dims: output-map parallel dims not in P — the spatial extent
+    /// the window walks; compute-window data comes from the line buffer.
+    pub w: BTreeSet<usize>,
+}
+
+/// Algorithm 2.
+pub fn classify_iterators(op: &GenericOp) -> IterSets {
+    let mut s = IterSets::default();
+    // lines 2-12: input maps
+    for map in op.input_maps() {
+        for expr in &map.results {
+            if let Some(d) = expr.single_dim() {
+                match op.iter_types[d] {
+                    IterType::Parallel => {
+                        s.p.insert(d);
+                    }
+                    IterType::Reduction => {
+                        s.r.insert(d);
+                    }
+                }
+            } else {
+                // compound expression: record every referenced dim as an
+                // original-input dim (the sliding access)
+                for d in expr.dims() {
+                    s.o.insert(d);
+                }
+            }
+        }
+    }
+    // lines 13-16: output map
+    for expr in &op.output_map().results {
+        if let Some(d) = expr.single_dim() {
+            if op.iter_types[d] == IterType::Parallel && !s.p.contains(&d) {
+                s.w.insert(d);
+            }
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::builder::models;
+
+    fn set(v: &[usize]) -> BTreeSet<usize> {
+        v.iter().copied().collect()
+    }
+
+    #[test]
+    fn conv_sets_match_paper_semantics() {
+        // conv dims: d0=h, d1=w, d2=f (P), d3=kh, d4=kw, d5=c (R)
+        // x map: (d0+d3-1, d1+d4-1, d5)  w map: (d2,d3,d4,d5)  out: (d0,d1,d2)
+        let g = models::conv_relu(16, 4, 4);
+        let s = classify_iterators(g.op("conv0").unwrap());
+        assert_eq!(s.p, set(&[2]), "P = {{f}} from the weight map");
+        assert_eq!(s.r, set(&[3, 4, 5]), "R = {{kh, kw, c}}");
+        assert_eq!(s.o, set(&[0, 1, 3, 4]), "O = sliding dims");
+        assert_eq!(s.w, set(&[0, 1]), "W = output spatial walk dims");
+    }
+
+    #[test]
+    fn matmul_sets() {
+        // dims: d0=m, d1=n (P), d2=k (R); x:(d0,d2) w:(d2,d1) out:(d0,d1)
+        let g = models::linear();
+        let s = classify_iterators(g.op("mm0").unwrap());
+        assert_eq!(s.p, set(&[0, 1]));
+        assert_eq!(s.r, set(&[2]));
+        assert!(s.o.is_empty());
+        assert!(s.w.is_empty(), "no window walk for regular reduction");
+    }
+
+    #[test]
+    fn elementwise_sets() {
+        let g = models::conv_relu(16, 4, 4);
+        let s = classify_iterators(g.op("rr0").unwrap());
+        assert_eq!(s.p, set(&[0, 1, 2]), "identity map: all dims in P");
+        assert!(s.r.is_empty() && s.o.is_empty() && s.w.is_empty());
+    }
+
+    #[test]
+    fn sets_are_disjoint_where_required() {
+        // P and W are disjoint by construction (line 14 guards E ∉ P).
+        for (name, size) in models::table2_workloads() {
+            let g = models::paper_kernel(name, size.max(8)).unwrap();
+            for op in &g.ops {
+                let s = classify_iterators(op);
+                assert!(s.p.is_disjoint(&s.w), "{}: P ∩ W ≠ ∅", op.name);
+                assert!(s.p.is_disjoint(&s.r), "{}: P ∩ R ≠ ∅", op.name);
+            }
+        }
+    }
+}

@@ -1,0 +1,12 @@
+//! Kernel analysis (paper §IV-A): sliding-window detection (Algorithm 1),
+//! iterator classification into P/R/O/W sets (Algorithm 2), kernel-class
+//! assignment, and derived geometry (stream widths, line-buffer shapes).
+
+pub mod sliding;
+pub mod iters;
+pub mod classify;
+pub mod shapes;
+
+pub use classify::{classify, KernelClass};
+pub use iters::{classify_iterators, IterSets};
+pub use sliding::{detect_sliding_window, SlidingWindow};

@@ -1,0 +1,230 @@
+//! Derived per-op geometry: token shapes for the streaming contract,
+//! line-buffer / window-buffer sizes, and per-token work. This is the
+//! "stream and buffer creation" information of paper §IV-B, computed from
+//! the Algorithm 1/2 results plus tensor shapes.
+//!
+//! **Streaming contract.** Tensors flow through FIFOs in row-major order,
+//! one *token* per innermost position group:
+//!   * `(H, W, C)` feature maps: `H·W` tokens of `C` values (one pixel);
+//!   * `(M, K)` activation matrices: `M` tokens of `K` values (one row).
+//! Weights never stream — they are resident constants inside their node.
+
+use anyhow::{ensure, Result};
+
+use crate::ir::generic::{GenericOp, Payload};
+use crate::ir::graph::{ModelGraph, TensorKind};
+
+use super::classify::{classify, KernelClass};
+
+/// Line buffer geometry (sliding-window and regular-reduction nodes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LineBufferShape {
+    /// Number of buffered lines ((K-1) for a K-window; 1 for reductions).
+    pub rows: usize,
+    /// Values per line (W·C for conv; K for linear).
+    pub row_len: usize,
+    /// Element bit width.
+    pub elem_bits: u64,
+}
+
+impl LineBufferShape {
+    pub fn total_bits(&self) -> u64 {
+        self.rows as u64 * self.row_len as u64 * self.elem_bits
+    }
+}
+
+/// Everything the dataflow builder / DSE / simulator need to know about
+/// one op's streaming shape.
+#[derive(Debug, Clone)]
+pub struct NodeGeometry {
+    /// Kernel class from Algorithm 1 + 2.
+    pub class: KernelClass,
+    /// Values per token for each *activation* input (weights excluded).
+    pub in_token_len: Vec<usize>,
+    /// Tokens per activation input for one graph execution.
+    pub in_tokens: Vec<u64>,
+    /// Values per output token.
+    pub out_token_len: usize,
+    /// Output tokens for one graph execution.
+    pub out_tokens: u64,
+    /// Line buffer, if the class requires one.
+    pub line_buffer: Option<LineBufferShape>,
+    /// Window buffer (K × K × C values), sliding-window class only.
+    pub window_values: Option<usize>,
+    /// MAC operations needed to produce one output token.
+    pub macs_per_out_token: u64,
+    /// Non-MAC ALU ops per output token.
+    pub alu_per_out_token: u64,
+    /// Tokens that must be consumed before the first output token can be
+    /// produced (line-buffer warm-up; 0 for pure-parallel).
+    pub warmup_tokens: u64,
+}
+
+/// Indices of `op.inputs` that are activations (non-weight operands).
+pub fn activation_inputs(g: &ModelGraph, op: &GenericOp) -> Vec<usize> {
+    op.inputs
+        .iter()
+        .enumerate()
+        .filter(|(_, &t)| g.tensor(t).kind != TensorKind::Weight)
+        .map(|(i, _)| i)
+        .collect()
+}
+
+/// Token shape of a tensor: (token_count, values_per_token).
+pub fn tensor_tokens(shape: &[usize]) -> (u64, usize) {
+    match shape.len() {
+        0 => (1, 1),
+        1 => (1, shape[0]),
+        _ => {
+            let lead: u64 = shape[..shape.len() - 1].iter().map(|&d| d as u64).product();
+            (lead, shape[shape.len() - 1])
+        }
+    }
+}
+
+/// Compute the full streaming geometry of one op within its graph.
+pub fn node_geometry(g: &ModelGraph, op: &GenericOp) -> Result<NodeGeometry> {
+    let class = classify(op);
+    let act_idx = activation_inputs(g, op);
+    ensure!(!act_idx.is_empty(), "op {} has no activation inputs", op.name);
+
+    let mut in_token_len = Vec::new();
+    let mut in_tokens = Vec::new();
+    for &i in &act_idx {
+        let t = g.tensor(op.inputs[i]);
+        let (n, len) = tensor_tokens(&t.ty.shape);
+        in_tokens.push(n);
+        in_token_len.push(len);
+    }
+    let out_t = g.tensor(op.output);
+    let (out_tokens, out_token_len) = tensor_tokens(&out_t.ty.shape);
+
+    let elem_bits = g.tensor(op.inputs[act_idx[0]]).ty.dtype.bits();
+    let macs_total = op.iter_space() * op.payload.macs_per_iter();
+    let alu_total = op.iter_space() * op.payload.alu_per_iter().max(
+        // reduction payloads like MaxReduce do one compare per iter
+        if op.payload == Payload::MaxReduce { 1 } else { 0 },
+    );
+
+    let (line_buffer, window_values, warmup) = match class {
+        KernelClass::SlidingWindow(sw) => {
+            // Window extent along the sliding (reduction) dims: product of
+            // trips of reduction dims that participate in compound exprs.
+            let in_shape = &g.tensor(op.inputs[act_idx[0]]).ty.shape;
+            let k = op.dims[sw.reduction_dim];
+            // line width = input row length × channels (all trailing axes)
+            let row_vals: usize = in_shape[1..].iter().product();
+            let lb = LineBufferShape { rows: k.saturating_sub(1), row_len: row_vals, elem_bits };
+            // window buffer: product of all reduction-dim trips (K·K·C for
+            // conv, K·K for pooling)
+            let winvals: usize = op.reduction_space() as usize;
+            // First output row needs (K-1-pad) full input rows + K-pad pixels.
+            let w_in = in_shape.get(1).copied().unwrap_or(1) as u64;
+            let rows_needed = (k.saturating_sub(1 + op.pad)) as u64;
+            (Some(lb), Some(winvals), rows_needed * w_in + 1)
+        }
+        KernelClass::RegularReduction => {
+            // buffer one data line (the row being reduced)
+            let len = in_token_len[0];
+            let lb = LineBufferShape { rows: 1, row_len: len, elem_bits };
+            (Some(lb), None, 1)
+        }
+        KernelClass::PureParallel => (None, None, 0),
+    };
+
+    Ok(NodeGeometry {
+        class,
+        in_token_len,
+        in_tokens,
+        out_token_len,
+        out_tokens,
+        line_buffer,
+        window_values,
+        macs_per_out_token: macs_total / out_tokens.max(1),
+        alu_per_out_token: alu_total / out_tokens.max(1),
+        warmup_tokens: warmup,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::builder::models;
+
+    #[test]
+    fn conv_geometry_paper_line_buffer() {
+        // Paper §IV-B: N×N input, K×K kernel -> line buffer (K-1)×N (×C).
+        let g = models::conv_relu(32, 8, 8);
+        let geo = node_geometry(&g, g.op("conv0").unwrap()).unwrap();
+        let lb = geo.line_buffer.unwrap();
+        assert_eq!(lb.rows, 2);
+        assert_eq!(lb.row_len, 32 * 8);
+        assert_eq!(lb.total_bits(), 2 * 32 * 8 * 8);
+        assert_eq!(geo.window_values, Some(3 * 3 * 8));
+        assert_eq!(geo.in_tokens, vec![32 * 32]);
+        assert_eq!(geo.in_token_len, vec![8]);
+        assert_eq!(geo.out_tokens, 32 * 32);
+        assert_eq!(geo.out_token_len, 8);
+        // F·K·K·C MACs per output pixel
+        assert_eq!(geo.macs_per_out_token, 8 * 9 * 8);
+        assert!(geo.warmup_tokens >= 32); // ≥ one row minus padding
+    }
+
+    #[test]
+    fn linear_geometry_one_line() {
+        let g = models::linear();
+        let geo = node_geometry(&g, g.op("mm0").unwrap()).unwrap();
+        let lb = geo.line_buffer.unwrap();
+        assert_eq!(lb.rows, 1);
+        assert_eq!(lb.row_len, 128);
+        assert_eq!(geo.in_tokens, vec![512]);
+        assert_eq!(geo.out_tokens, 512);
+        assert_eq!(geo.out_token_len, 128);
+        assert_eq!(geo.macs_per_out_token, 128 * 128);
+        assert!(geo.window_values.is_none());
+    }
+
+    #[test]
+    fn pure_parallel_geometry_no_buffers() {
+        let g = models::conv_relu(32, 8, 8);
+        let geo = node_geometry(&g, g.op("rr0").unwrap()).unwrap();
+        assert!(geo.line_buffer.is_none());
+        assert_eq!(geo.warmup_tokens, 0);
+        assert_eq!(geo.macs_per_out_token, 0);
+        assert!(geo.alu_per_out_token > 0);
+    }
+
+    #[test]
+    fn add_has_two_activation_inputs() {
+        let g = models::residual(16, 8, 8);
+        let add = g.op("add0").unwrap();
+        let geo = node_geometry(&g, add).unwrap();
+        assert_eq!(geo.in_tokens.len(), 2);
+        assert_eq!(geo.in_tokens[0], geo.in_tokens[1]);
+    }
+
+    #[test]
+    fn conv_weights_not_streamed() {
+        let g = models::conv_relu(16, 8, 8);
+        let conv = g.op("conv0").unwrap();
+        assert_eq!(activation_inputs(&g, conv), vec![0]);
+    }
+
+    #[test]
+    fn tensor_token_shapes() {
+        assert_eq!(tensor_tokens(&[32, 32, 8]), (1024, 8));
+        assert_eq!(tensor_tokens(&[512, 128]), (512, 128));
+        assert_eq!(tensor_tokens(&[128]), (1, 128));
+    }
+
+    #[test]
+    fn line_buffer_grows_linearly_with_input_size() {
+        // The MING headline: line buffer bits scale with N, not N².
+        let g32 = models::conv_relu(32, 8, 8);
+        let g224 = models::conv_relu(224, 8, 8);
+        let lb32 = node_geometry(&g32, g32.op("conv0").unwrap()).unwrap().line_buffer.unwrap();
+        let lb224 =
+            node_geometry(&g224, g224.op("conv0").unwrap()).unwrap().line_buffer.unwrap();
+        assert_eq!(lb224.total_bits() / lb32.total_bits(), 224 / 32);
+    }
+}

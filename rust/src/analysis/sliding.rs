@@ -1,0 +1,115 @@
+//! Paper Algorithm 1 — sliding-window detection.
+//!
+//! A kernel is sliding-window iff some input indexing-map result is a
+//! linear combination `s·i_p + δ·i_r` of exactly one *parallel* iterator
+//! (coefficient `s` = stride) and one *reduction* iterator (coefficient
+//! `δ` = dilation), both positive. Regular-reduction access patterns never
+//! match this invariant. Runs in `O(Σ|E|)` over all map results.
+
+use crate::ir::generic::{GenericOp, IterType};
+
+/// Result of a positive sliding-window detection.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SlidingWindow {
+    pub stride: i64,
+    pub dilation: i64,
+    /// The parallel (spatial) iterator of the matched expression.
+    pub parallel_dim: usize,
+    /// The reduction (window) iterator of the matched expression.
+    pub reduction_dim: usize,
+}
+
+/// Algorithm 1. Returns `Some(SlidingWindow)` with extracted stride and
+/// dilation iff `op` exhibits sliding-window semantics.
+pub fn detect_sliding_window(op: &GenericOp) -> Option<SlidingWindow> {
+    // line 1: all-parallel ops can't slide
+    if !op.has_reduction() {
+        return None;
+    }
+    // lines 2-11: scan every result expression of every *input* map
+    for map in op.input_maps() {
+        for expr in &map.results {
+            // line 4: rewrite E as a sum of (iterator · const) terms
+            let Some((terms, _konst)) = expr.linear_terms() else {
+                continue;
+            };
+            // exactly two dim terms, one parallel one reduction (lines 5-6)
+            if terms.len() != 2 {
+                continue;
+            }
+            let (d_a, c_a) = terms[0];
+            let (d_b, c_b) = terms[1];
+            let (p, r, s, delta) = match (op.iter_types[d_a], op.iter_types[d_b]) {
+                (IterType::Parallel, IterType::Reduction) => (d_a, d_b, c_a, c_b),
+                (IterType::Reduction, IterType::Parallel) => (d_b, d_a, c_b, c_a),
+                _ => continue,
+            };
+            // nonzero positive coefficients (s, δ) required
+            if s > 0 && delta > 0 {
+                // line 7-8: stride = parallel coeff, dilation = reduction coeff
+                return Some(SlidingWindow {
+                    stride: s,
+                    dilation: delta,
+                    parallel_dim: p,
+                    reduction_dim: r,
+                });
+            }
+        }
+    }
+    // line 12
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::builder::{models, GraphBuilder};
+    use crate::ir::types::DType;
+
+    #[test]
+    fn conv_is_sliding_window() {
+        let g = models::conv_relu(16, 4, 4);
+        let sw = detect_sliding_window(g.op("conv0").unwrap()).unwrap();
+        assert_eq!(sw.stride, 1);
+        assert_eq!(sw.dilation, 1);
+        assert_eq!(sw.parallel_dim, 0);
+        assert_eq!(sw.reduction_dim, 3);
+    }
+
+    #[test]
+    fn strided_dilated_conv_extracts_parameters() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", vec![32, 32, 2], DType::I8);
+        let w = b.det_weight("w", vec![2, 3, 3, 2], 1);
+        let acc = b.conv2d_dilated("c", x, w, 2, 0, 3);
+        b.mark_output(acc);
+        let g = b.finish();
+        let sw = detect_sliding_window(g.op("c").unwrap()).unwrap();
+        assert_eq!(sw.stride, 2);
+        assert_eq!(sw.dilation, 3);
+    }
+
+    #[test]
+    fn matmul_is_not_sliding_window() {
+        let g = models::linear();
+        assert_eq!(detect_sliding_window(g.op("mm0").unwrap()), None);
+    }
+
+    #[test]
+    fn elementwise_is_not_sliding_window() {
+        let g = models::conv_relu(16, 4, 4);
+        assert_eq!(detect_sliding_window(g.op("rr0").unwrap()), None);
+    }
+
+    #[test]
+    fn maxpool_is_sliding_window_without_weights() {
+        let mut b = GraphBuilder::new("mp");
+        let x = b.input("x", vec![8, 8, 2], DType::I8);
+        let y = b.maxpool2d("pool", x, 2, 2);
+        b.mark_output(y);
+        let g = b.finish();
+        let sw = detect_sliding_window(g.op("pool").unwrap()).unwrap();
+        assert_eq!(sw.stride, 2);
+        assert_eq!(sw.dilation, 1);
+    }
+}

@@ -1,0 +1,100 @@
+//! The `Framework` trait: graph + device → design.
+
+use anyhow::Result;
+
+use crate::dataflow::design::Design;
+use crate::dse::ilp::{solve, DseConfig};
+use crate::dataflow::build::build_streaming_design;
+use crate::ir::graph::ModelGraph;
+use crate::resources::device::DeviceSpec;
+
+/// Identifies one of the four evaluated compilation strategies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FrameworkKind {
+    Vanilla,
+    ScaleHls,
+    StreamHls,
+    Ming,
+}
+
+impl FrameworkKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            FrameworkKind::Vanilla => "vanilla",
+            FrameworkKind::ScaleHls => "scalehls",
+            FrameworkKind::StreamHls => "streamhls",
+            FrameworkKind::Ming => "ming",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "vanilla" => Some(FrameworkKind::Vanilla),
+            "scalehls" => Some(FrameworkKind::ScaleHls),
+            "streamhls" => Some(FrameworkKind::StreamHls),
+            "ming" => Some(FrameworkKind::Ming),
+            _ => None,
+        }
+    }
+
+    /// All four, in the paper's Table II column order.
+    pub fn all() -> [FrameworkKind; 4] {
+        [FrameworkKind::Vanilla, FrameworkKind::ScaleHls, FrameworkKind::StreamHls, FrameworkKind::Ming]
+    }
+}
+
+/// A compilation strategy.
+pub trait Framework {
+    fn kind(&self) -> FrameworkKind;
+    /// Lower `g` into a hardware design for `device`.
+    fn compile(&self, g: &ModelGraph, device: &DeviceSpec) -> Result<Design>;
+}
+
+/// MING itself: streaming build + ILP DSE.
+pub struct Ming;
+
+impl Framework for Ming {
+    fn kind(&self) -> FrameworkKind {
+        FrameworkKind::Ming
+    }
+
+    fn compile(&self, g: &ModelGraph, device: &DeviceSpec) -> Result<Design> {
+        let mut d = build_streaming_design(g)?;
+        solve(&mut d, &DseConfig::new(device.clone()))?;
+        Ok(d)
+    }
+}
+
+/// Compile `g` with the named strategy.
+pub fn compile_with(kind: FrameworkKind, g: &ModelGraph, device: &DeviceSpec) -> Result<Design> {
+    match kind {
+        FrameworkKind::Vanilla => super::vanilla::Vanilla.compile(g, device),
+        FrameworkKind::ScaleHls => super::scalehls::ScaleHls.compile(g, device),
+        FrameworkKind::StreamHls => super::streamhls::StreamHls.compile(g, device),
+        FrameworkKind::Ming => Ming.compile(g, device),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::builder::models;
+
+    #[test]
+    fn names_roundtrip() {
+        for k in FrameworkKind::all() {
+            assert_eq!(FrameworkKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(FrameworkKind::parse("tvm"), None);
+    }
+
+    #[test]
+    fn all_frameworks_compile_conv() {
+        let g = models::conv_relu(16, 8, 8);
+        for k in FrameworkKind::all() {
+            let d = compile_with(k, &g, &DeviceSpec::kv260()).unwrap();
+            assert_eq!(d.framework, k.name());
+            assert_eq!(d.nodes.len(), g.ops.len());
+        }
+    }
+}

@@ -1,0 +1,24 @@
+//! Re-implementations of the comparison frameworks' design *strategies*
+//! (paper §V): Vanilla (Vitis auto-optimization), ScaleHLS-like, and
+//! StreamHLS-like. Each lowers a model graph onto the same [`Design`]
+//! representation so the shared resource estimator and simulator compare
+//! strategies like-for-like — the substitution for running the actual
+//! third-party binaries + Vitis (see DESIGN.md).
+//!
+//! Strategy summaries (derived from the paper's §II/§V observations):
+//!
+//! | framework  | node overlap | II | unroll | intermediates |
+//! |------------|--------------|----|--------|----------------|
+//! | Vanilla    | sequential   | 1  | none   | full tensors in BRAM |
+//! | ScaleHLS   | dataflow     | 2 (WAR) | none | HLS-managed args → LUTRAM/FF |
+//! | StreamHLS  | dataflow     | 2 (WAR) | innermost (convs); unbounded (linears) | materialized + reordered tensors in BRAM |
+//! | MING       | dataflow     | 1  | ILP DSE | none (streams + line buffers) |
+//!
+//! [`Design`]: crate::dataflow::design::Design
+
+pub mod framework;
+pub mod vanilla;
+pub mod scalehls;
+pub mod streamhls;
+
+pub use framework::{compile_with, Framework, FrameworkKind};

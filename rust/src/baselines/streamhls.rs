@@ -1,0 +1,185 @@
+//! StreamHLS-like strategy (paper §II/§V observations):
+//!
+//! * streaming dataflow between nodes, **but** intermediate tensors are
+//!   still materialized — and reordered into an additional tensor per
+//!   edge ("StreamHLS reorders the intermediate tensor into an additional
+//!   newly created tensor") — so BRAM grows linearly with the input area
+//!   (Fig. 3) and explodes at 224×224 (>6000 BRAM in Table II);
+//! * its DSE optimizes under a **DSP-only** constraint: convolutions get
+//!   innermost-loop unrolling; linear layers get unbounded reduction
+//!   unrolling, which is exactly the Table II failure ("for kernels
+//!   containing linear computations, the framework fails to produce
+//!   feasible designs" — DSP 28330);
+//! * WAR hazards persist ⇒ II=2.
+
+use anyhow::Result;
+
+use crate::analysis::classify::KernelClass;
+use crate::dataflow::buffers::{BufferAlloc, BufferRole, Storage};
+use crate::dataflow::build::build_streaming_design;
+use crate::dataflow::channel::Endpoint;
+use crate::dataflow::design::{Design, DesignStyle};
+use crate::dataflow::node::NodeTiming;
+use crate::ir::graph::ModelGraph;
+use crate::ir::graph::TensorKind;
+use crate::resources::device::DeviceSpec;
+
+use super::framework::{Framework, FrameworkKind};
+
+/// WAR-hazard II of StreamHLS pipelines.
+pub const STREAMHLS_II: u64 = 2;
+
+pub struct StreamHls;
+
+impl Framework for StreamHls {
+    fn kind(&self) -> FrameworkKind {
+        FrameworkKind::StreamHls
+    }
+
+    fn compile(&self, g: &ModelGraph, _device: &DeviceSpec) -> Result<Design> {
+        let mut d = build_streaming_design(g)?;
+        d.framework = self.kind().name().into();
+        d.style = DesignStyle::Dataflow;
+
+        for n in &mut d.nodes {
+            let timing = match n.geo.class {
+                KernelClass::SlidingWindow(_) => {
+                    // innermost (channel) loop unrolled, WAR II=2
+                    let c = n.geo.in_token_len[0] as u64;
+                    NodeTiming {
+                        mac_lanes: c,
+                        ii: STREAMHLS_II,
+                        depth: 8,
+                        unroll_par: 1,
+                        unroll_red: c,
+                    }
+                }
+                KernelClass::RegularReduction => {
+                    // DSP-unaware full reduction unroll (the Linear/FF
+                    // failure mode): lanes = K·N.
+                    let k = n.geo.in_token_len[0] as u64;
+                    let nn = n.geo.out_token_len as u64;
+                    NodeTiming {
+                        mac_lanes: k * nn,
+                        ii: STREAMHLS_II,
+                        depth: 10,
+                        unroll_par: nn,
+                        unroll_red: k,
+                    }
+                }
+                KernelClass::PureParallel => NodeTiming {
+                    mac_lanes: n.geo.out_token_len as u64,
+                    ii: STREAMHLS_II,
+                    depth: 2,
+                    unroll_par: n.geo.out_token_len as u64,
+                    unroll_red: 1,
+                },
+            };
+            n.timing = timing;
+        }
+
+        // Materialized intermediates: every node→node edge gets the full
+        // tensor in BRAM *plus* the reorder copy, the copy partitioned by
+        // the consumer's unroll (the "additional memory partitioning"
+        // the paper observes). Channels behave as full-tensor buffers.
+        let mut buffers = Vec::new();
+        for t in &d.graph.tensors {
+            if t.kind == TensorKind::Weight {
+                buffers.push(BufferAlloc {
+                    name: t.name.clone(),
+                    role: BufferRole::Weights,
+                    bits: t.ty.bits(),
+                    partitions: 2,
+                    storage: Storage::Rom,
+                    node: None,
+                });
+            }
+        }
+        let chans: Vec<(usize, usize)> = d
+            .channels
+            .iter()
+            .enumerate()
+            .filter_map(|(i, c)| match (c.src, c.dst) {
+                (Endpoint::Node(_), Endpoint::Node(dst)) => Some((i, dst)),
+                _ => None,
+            })
+            .collect();
+        for (ci, dst) in chans {
+            let c = &d.channels[ci];
+            let bits = c.tokens_total * c.token_len as u64 * c.elem_bits;
+            buffers.push(BufferAlloc {
+                name: format!("{}_tensor", c.name),
+                role: BufferRole::IntermediateTensor,
+                bits,
+                partitions: 1,
+                storage: Storage::Bram,
+                node: None,
+            });
+            let part = d.nodes[dst].timing.unroll_red.max(1);
+            buffers.push(BufferAlloc {
+                name: format!("{}_reorder", c.name),
+                role: BufferRole::ReorderBuffer,
+                bits,
+                partitions: part,
+                storage: Storage::Bram,
+                node: Some(dst),
+            });
+        }
+        d.buffers = buffers;
+        for c in &mut d.channels {
+            c.depth = c.tokens_total.max(4) as usize; // tensor-backed edges
+            c.externally_buffered = true; // tensors modeled as BufferAllocs
+        }
+        Ok(d)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::builder::models;
+    use crate::resources::estimate;
+    use crate::sim::{simulate, SimMode};
+    use crate::util::prng;
+
+    #[test]
+    fn streamhls_bram_scales_with_input_area() {
+        // Fig. 3: near-linear BRAM growth with input size.
+        let mut brams = Vec::new();
+        for n in [32usize, 64, 128, 224] {
+            let d =
+                StreamHls.compile(&models::conv_relu(n, 8, 8), &DeviceSpec::kv260()).unwrap();
+            brams.push(estimate(&d, &DeviceSpec::kv260()).bram18k);
+        }
+        assert!(brams.windows(2).all(|w| w[0] < w[1]), "monotone: {brams:?}");
+        // 224 blows the 288-slice budget massively (paper: >2000)
+        assert!(brams[3] > 1000, "expected BRAM explosion at 224: {}", brams[3]);
+    }
+
+    #[test]
+    fn streamhls_linear_is_dsp_infeasible() {
+        // Table II: Linear/FeedForward DSP explodes beyond any device.
+        let d = StreamHls.compile(&models::linear(), &DeviceSpec::kv260()).unwrap();
+        let r = estimate(&d, &DeviceSpec::kv260());
+        assert!(r.dsp > 1248, "DSP must exceed KV260: {}", r.dsp);
+        assert!(!r.fits());
+    }
+
+    #[test]
+    fn streamhls_conv_faster_than_vanilla_slower_than_ming() {
+        use crate::baselines::framework::{compile_with, FrameworkKind};
+        let g = models::conv_relu(32, 8, 8);
+        let x: Vec<i32> = prng::det_tensor(prng::SEED_INPUT, g.inputs()[0].ty.numel())
+            .iter()
+            .map(|&v| v as i32)
+            .collect();
+        let mut cyc = std::collections::HashMap::new();
+        for k in [FrameworkKind::Vanilla, FrameworkKind::StreamHls, FrameworkKind::Ming] {
+            let d = compile_with(k, &g, &DeviceSpec::kv260()).unwrap();
+            let rep = simulate(&d, &x, SimMode::of(d.style)).unwrap().expect_complete();
+            cyc.insert(k, rep.cycles);
+        }
+        assert!(cyc[&FrameworkKind::StreamHls] < cyc[&FrameworkKind::Vanilla]);
+        assert!(cyc[&FrameworkKind::Ming] < cyc[&FrameworkKind::StreamHls]);
+    }
+}

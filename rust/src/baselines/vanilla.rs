@@ -1,0 +1,127 @@
+//! Vanilla baseline: what Vitis HLS produces from naive loop-nest C++
+//! with auto-pipelining only (the paper's Table II baseline).
+//!
+//! Characteristics observed in the paper:
+//! * ops run **sequentially**, each materializing its output tensor in
+//!   on-chip BRAM ("inefficient BRAM utilization for large-size input due
+//!   to the allocation of memory for intermediate tensors", >40× BRAM
+//!   growth from 32² to 224²);
+//! * the innermost loop is pipelined at II=1 but nothing is unrolled
+//!   ("absence of loop-level optimizations results in minimal DSP usage").
+
+use anyhow::Result;
+
+use crate::dataflow::buffers::{BufferAlloc, BufferRole, Storage};
+use crate::dataflow::build::build_streaming_design;
+use crate::dataflow::design::{Design, DesignStyle};
+use crate::dataflow::node::NodeTiming;
+use crate::ir::graph::{ModelGraph, TensorKind};
+use crate::resources::device::DeviceSpec;
+
+use super::framework::{Framework, FrameworkKind};
+
+pub struct Vanilla;
+
+impl Framework for Vanilla {
+    fn kind(&self) -> FrameworkKind {
+        FrameworkKind::Vanilla
+    }
+
+    fn compile(&self, g: &ModelGraph, _device: &DeviceSpec) -> Result<Design> {
+        // Reuse the structural lowering (nodes + channels describe the
+        // same computation), then rewrite style / timing / buffers.
+        let mut d = build_streaming_design(g)?;
+        d.framework = self.kind().name().into();
+        d.style = DesignStyle::Sequential;
+        for n in &mut d.nodes {
+            // innermost pipeline II=1, no unrolling, modest depth
+            n.timing = NodeTiming { mac_lanes: 1, ii: 1, depth: 8, unroll_par: 1, unroll_red: 1 };
+        }
+
+        // Buffers: every non-weight tensor lives whole in BRAM; weights
+        // are ROMs. No line buffers, no partitioning.
+        let mut buffers = Vec::new();
+        for t in &d.graph.tensors {
+            match t.kind {
+                TensorKind::Weight => buffers.push(BufferAlloc {
+                    name: t.name.clone(),
+                    role: BufferRole::Weights,
+                    bits: t.ty.bits(),
+                    partitions: 1,
+                    storage: Storage::Rom,
+                    node: None,
+                }),
+                _ => buffers.push(BufferAlloc {
+                    name: t.name.clone(),
+                    role: BufferRole::IntermediateTensor,
+                    bits: t.ty.bits(),
+                    partitions: 1,
+                    storage: Storage::Bram,
+                    node: None,
+                }),
+            }
+        }
+        d.buffers = buffers;
+        Ok(d)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::resources::estimate;
+    use crate::sim::{simulate, SimMode};
+    use crate::util::prng;
+
+    fn input_for(g: &ModelGraph) -> Vec<i32> {
+        prng::det_tensor(prng::SEED_INPUT, g.inputs()[0].ty.numel())
+            .iter()
+            .map(|&v| v as i32)
+            .collect()
+    }
+
+    #[test]
+    fn vanilla_bram_scales_quadratically_with_input() {
+        use crate::ir::builder::models;
+        let d32 = Vanilla.compile(&models::conv_relu(32, 8, 8), &DeviceSpec::kv260()).unwrap();
+        let d224 = Vanilla.compile(&models::conv_relu(224, 8, 8), &DeviceSpec::kv260()).unwrap();
+        let r32 = estimate(&d32, &DeviceSpec::kv260());
+        let r224 = estimate(&d224, &DeviceSpec::kv260());
+        // paper: >40x BRAM growth scaling 32 -> 224 (49x area ratio)
+        assert!(
+            r224.bram18k > 30 * r32.bram18k,
+            "BRAM must scale ~quadratically: {} vs {}",
+            r224.bram18k,
+            r32.bram18k
+        );
+        assert!(!r224.fits(), "vanilla conv at 224 must exceed the KV260");
+    }
+
+    #[test]
+    fn vanilla_dsp_is_minimal() {
+        use crate::ir::builder::models;
+        let d = Vanilla.compile(&models::cascade(32, 8, 8), &DeviceSpec::kv260()).unwrap();
+        let r = estimate(&d, &DeviceSpec::kv260());
+        assert!(r.dsp <= 4, "no unrolling => minimal DSP, got {}", r.dsp);
+    }
+
+    #[test]
+    fn vanilla_simulates_sequentially_and_correctly() {
+        use crate::ir::builder::models;
+        let g = models::conv_relu(16, 8, 8);
+        let d = Vanilla.compile(&g, &DeviceSpec::kv260()).unwrap();
+        let x = input_for(&g);
+        let rep = simulate(&d, &x, SimMode::of(d.style)).unwrap().expect_complete();
+        // ~work cycles: out_tokens × macs_per_token (=576) per conv
+        let approx = 16 * 16 * 576;
+        assert!(
+            rep.cycles as f64 > approx as f64 * 0.8,
+            "sequential vanilla too fast: {} vs {approx}",
+            rep.cycles
+        );
+        // functional agreement with the streaming design
+        let ming = build_streaming_design(&g).unwrap();
+        let rep2 = simulate(&ming, &x, SimMode::Dataflow).unwrap().expect_complete();
+        assert_eq!(rep.output, rep2.output);
+    }
+}

@@ -1,0 +1,121 @@
+//! HLS pragma model (paper §III-C's essential directives).
+
+use std::fmt;
+
+/// Array partition styles.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PartitionKind {
+    Complete,
+    Cyclic,
+    Block,
+}
+
+impl PartitionKind {
+    fn name(self) -> &'static str {
+        match self {
+            PartitionKind::Complete => "complete",
+            PartitionKind::Cyclic => "cyclic",
+            PartitionKind::Block => "block",
+        }
+    }
+}
+
+/// Storage implementations for BIND_STORAGE.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StorageImpl {
+    Bram,
+    Lutram,
+    Srl,
+}
+
+impl StorageImpl {
+    fn name(self) -> &'static str {
+        match self {
+            StorageImpl::Bram => "bram",
+            StorageImpl::Lutram => "lutram",
+            StorageImpl::Srl => "srl",
+        }
+    }
+}
+
+/// The HLS pragmas MING inserts automatically.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Pragma {
+    /// `#pragma HLS DATAFLOW`
+    Dataflow,
+    /// `#pragma HLS PIPELINE II=n`
+    Pipeline { ii: u64 },
+    /// `#pragma HLS UNROLL factor=n` (full unroll when factor omitted)
+    Unroll { factor: Option<u64> },
+    /// `#pragma HLS STREAM variable=v depth=d`
+    Stream { var: String, depth: usize },
+    /// `#pragma HLS ARRAY_PARTITION variable=v <kind> factor=f dim=d`
+    ArrayPartition { var: String, kind: PartitionKind, factor: u64, dim: u32 },
+    /// `#pragma HLS BIND_STORAGE variable=v type=ram_1p impl=<impl>`
+    BindStorage { var: String, storage: StorageImpl },
+    /// `#pragma HLS INTERFACE mode=m port=p`
+    Interface { mode: String, port: String },
+    /// `#pragma HLS INLINE off`
+    InlineOff,
+}
+
+impl fmt::Display for Pragma {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Pragma::Dataflow => write!(f, "#pragma HLS DATAFLOW"),
+            Pragma::Pipeline { ii } => write!(f, "#pragma HLS PIPELINE II={ii}"),
+            Pragma::Unroll { factor: Some(n) } => write!(f, "#pragma HLS UNROLL factor={n}"),
+            Pragma::Unroll { factor: None } => write!(f, "#pragma HLS UNROLL"),
+            Pragma::Stream { var, depth } => {
+                write!(f, "#pragma HLS STREAM variable={var} depth={depth}")
+            }
+            Pragma::ArrayPartition { var, kind, factor, dim } => write!(
+                f,
+                "#pragma HLS ARRAY_PARTITION variable={var} {} factor={factor} dim={dim}",
+                kind.name()
+            ),
+            Pragma::BindStorage { var, storage } => write!(
+                f,
+                "#pragma HLS BIND_STORAGE variable={var} type=ram_1p impl={}",
+                storage.name()
+            ),
+            Pragma::Interface { mode, port } => {
+                write!(f, "#pragma HLS INTERFACE mode={mode} port={port}")
+            }
+            Pragma::InlineOff => write!(f, "#pragma HLS INLINE off"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_match_vitis_syntax() {
+        assert_eq!(Pragma::Dataflow.to_string(), "#pragma HLS DATAFLOW");
+        assert_eq!(Pragma::Pipeline { ii: 1 }.to_string(), "#pragma HLS PIPELINE II=1");
+        assert_eq!(
+            Pragma::Unroll { factor: Some(8) }.to_string(),
+            "#pragma HLS UNROLL factor=8"
+        );
+        assert_eq!(
+            Pragma::Stream { var: "s0".into(), depth: 64 }.to_string(),
+            "#pragma HLS STREAM variable=s0 depth=64"
+        );
+        assert_eq!(
+            Pragma::ArrayPartition {
+                var: "lb".into(),
+                kind: PartitionKind::Cyclic,
+                factor: 8,
+                dim: 2
+            }
+            .to_string(),
+            "#pragma HLS ARRAY_PARTITION variable=lb cyclic factor=8 dim=2"
+        );
+        assert_eq!(
+            Pragma::BindStorage { var: "lb".into(), storage: StorageImpl::Bram }.to_string(),
+            "#pragma HLS BIND_STORAGE variable=lb type=ram_1p impl=bram"
+        );
+    }
+}

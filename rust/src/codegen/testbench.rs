@@ -1,0 +1,109 @@
+//! C++ testbench emission: drives the generated top function with the
+//! deterministic PRNG inputs (same `det_i8` formula as Rust/Python) and
+//! checks against an embedded expected-output vector produced by the
+//! cycle simulator — so csim of the generated design validates against
+//! the same golden data as everything else.
+
+use std::fmt::Write as _;
+
+use crate::dataflow::design::Design;
+
+/// Emit a standalone testbench. `expected` is the simulator's output
+/// (pass `None` to emit a bench that only prints outputs).
+pub fn emit_testbench(d: &Design, input: &[i32], expected: Option<&[i32]>) -> String {
+    let mut o = String::new();
+    let in_ty = d.graph.inputs()[0].ty.dtype.cpp();
+    let out_ty = d.graph.outputs()[0].ty.dtype.cpp();
+    let in_n = d.graph.inputs()[0].ty.numel();
+    let out_n = d.graph.outputs()[0].ty.numel();
+    assert_eq!(input.len(), in_n, "testbench input length mismatch");
+
+    let _ = writeln!(
+        o,
+        "// Auto-generated MING testbench for {}\n\
+         #include <cstdio>\n#include <cstdint>\n#include <cstdlib>\n",
+        d.graph.name
+    );
+    let _ = writeln!(
+        o,
+        "extern \"C\" void {}_top(const {in_ty} *host_in, {out_ty} *host_out);\n",
+        d.graph.name
+    );
+    let _ = write!(o, "static const {in_ty} tb_input[{in_n}] = {{");
+    for (i, v) in input.iter().enumerate() {
+        if i % 24 == 0 {
+            let _ = write!(o, "\n    ");
+        }
+        let _ = write!(o, "{v}, ");
+    }
+    let _ = writeln!(o, "\n}};\n");
+    if let Some(exp) = expected {
+        assert_eq!(exp.len(), out_n, "testbench expected length mismatch");
+        let _ = write!(o, "static const {out_ty} tb_expected[{out_n}] = {{");
+        for (i, v) in exp.iter().enumerate() {
+            if i % 24 == 0 {
+                let _ = write!(o, "\n    ");
+            }
+            let _ = write!(o, "{v}, ");
+        }
+        let _ = writeln!(o, "\n}};\n");
+    }
+    let _ = writeln!(o, "int main() {{");
+    let _ = writeln!(o, "    static {out_ty} out[{out_n}];");
+    let _ = writeln!(o, "    {}_top(tb_input, out);", d.graph.name);
+    if expected.is_some() {
+        let _ = writeln!(
+            o,
+            "    long bad = 0;\n\
+             \x20   for (long i = 0; i < {out_n}; ++i)\n\
+             \x20       if (out[i] != tb_expected[i]) {{ if (bad < 10) printf(\"mismatch @%ld: %d != %d\\n\", i, (int)out[i], (int)tb_expected[i]); ++bad; }}\n\
+             \x20   printf(\"%ld mismatches\\n\", bad);\n\
+             \x20   return bad == 0 ? 0 : 1;"
+        );
+    } else {
+        let _ = writeln!(
+            o,
+            "    for (long i = 0; i < 16 && i < {out_n}; ++i) printf(\"%d \", (int)out[i]);\n\
+             \x20   printf(\"\\n\");\n    return 0;"
+        );
+    }
+    let _ = writeln!(o, "}}");
+    o
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::build::build_streaming_design;
+    use crate::ir::builder::models;
+
+    #[test]
+    fn testbench_embeds_vectors_and_check() {
+        let g = models::conv_relu(8, 2, 2);
+        let d = build_streaming_design(&g).unwrap();
+        let input = vec![1i32; 8 * 8 * 2];
+        let expected = vec![0i32; 8 * 8 * 2];
+        let tb = emit_testbench(&d, &input, Some(&expected));
+        assert!(tb.contains("tb_input[128]"));
+        assert!(tb.contains("tb_expected[128]"));
+        assert!(tb.contains("conv_relu_8_top(tb_input, out)"));
+        assert!(tb.contains("mismatches"));
+    }
+
+    #[test]
+    fn print_only_bench_without_expected() {
+        let g = models::linear();
+        let d = build_streaming_design(&g).unwrap();
+        let tb = emit_testbench(&d, &vec![0i32; 512 * 128], None);
+        assert!(!tb.contains("tb_expected"));
+        assert!(tb.contains("printf"));
+    }
+
+    #[test]
+    #[should_panic(expected = "input length mismatch")]
+    fn wrong_input_length_panics() {
+        let g = models::linear();
+        let d = build_streaming_design(&g).unwrap();
+        emit_testbench(&d, &[1, 2, 3], None);
+    }
+}

@@ -1,0 +1,111 @@
+//! Compile jobs and their results.
+
+use anyhow::Result;
+
+use crate::baselines::framework::{compile_with, FrameworkKind};
+use crate::ir::builder::models;
+use crate::resources::device::DeviceSpec;
+use crate::resources::estimate;
+use crate::resources::report::UtilizationReport;
+use crate::sim::{simulate, SimMode, SimReport};
+use crate::util::prng;
+
+/// One unit of work for the compile service: lower `kernel`@`size` with
+/// `framework` for `device`, estimate resources, simulate.
+#[derive(Debug, Clone)]
+pub struct CompileJob {
+    pub kernel: String,
+    pub size: usize,
+    pub framework: FrameworkKind,
+    pub device: DeviceSpec,
+    /// Skip the (functional) simulation — estimation only.
+    pub estimate_only: bool,
+}
+
+/// Everything a job produces.
+pub struct JobResult {
+    pub job: CompileJob,
+    pub util: UtilizationReport,
+    /// `None` when `estimate_only` or when compilation itself failed
+    /// fatally (recorded in `error`).
+    pub sim: Option<SimReport>,
+    pub cycles: u64,
+    /// MACs in the workload (speedup normalization).
+    pub macs: u64,
+    pub error: Option<String>,
+}
+
+impl CompileJob {
+    pub fn id(&self) -> String {
+        format!("{}_{}@{}", self.kernel, self.size, self.framework.name())
+    }
+
+    /// Execute the job (called from worker threads).
+    pub fn run(&self) -> Result<JobResult> {
+        let g = models::paper_kernel(&self.kernel, self.size)?;
+        let design = compile_with(self.framework, &g, &self.device)?;
+        let util = estimate(&design, &self.device);
+        let macs = design.total_macs();
+        if self.estimate_only {
+            let cycles = design.overlapped_cycles_estimate();
+            return Ok(JobResult { job: self.clone(), util, sim: None, cycles, macs, error: None });
+        }
+        let input: Vec<i32> = prng::det_tensor(prng::SEED_INPUT, g.inputs()[0].ty.numel())
+            .iter()
+            .map(|&v| v as i32)
+            .collect();
+        let rep = simulate(&design, &input, SimMode::of(design.style))?;
+        let (cycles, error) = match &rep.deadlock {
+            Some(blocked) => (0, Some(format!("deadlock: {}", blocked.join("; ")))),
+            None => (rep.cycles, None),
+        };
+        Ok(JobResult { job: self.clone(), util, sim: Some(rep), cycles, macs, error })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn job_runs_end_to_end() {
+        let job = CompileJob {
+            kernel: "conv_relu".into(),
+            size: 32,
+            framework: FrameworkKind::Ming,
+            device: DeviceSpec::kv260(),
+            estimate_only: false,
+        };
+        let r = job.run().unwrap();
+        assert!(r.cycles > 0);
+        assert!(r.util.fits());
+        assert!(r.error.is_none());
+        assert_eq!(r.job.id(), "conv_relu_32@ming");
+    }
+
+    #[test]
+    fn estimate_only_skips_sim() {
+        let job = CompileJob {
+            kernel: "linear".into(),
+            size: 0,
+            framework: FrameworkKind::Vanilla,
+            device: DeviceSpec::kv260(),
+            estimate_only: true,
+        };
+        let r = job.run().unwrap();
+        assert!(r.sim.is_none());
+        assert!(r.cycles > 0, "estimate path still yields cycles");
+    }
+
+    #[test]
+    fn unknown_kernel_errors() {
+        let job = CompileJob {
+            kernel: "transformer".into(),
+            size: 32,
+            framework: FrameworkKind::Ming,
+            device: DeviceSpec::kv260(),
+            estimate_only: true,
+        };
+        assert!(job.run().is_err());
+    }
+}

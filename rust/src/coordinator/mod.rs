@@ -1,0 +1,13 @@
+//! The L3 coordination layer: a multi-threaded compile service that runs
+//! kernel × framework × size sweeps (compile → estimate → simulate →
+//! optionally golden-verify) over a worker pool, plus the report
+//! formatters that regenerate the paper's Tables II–IV and Fig. 3.
+
+pub mod job;
+pub mod queue;
+pub mod service;
+pub mod report;
+
+pub use job::{CompileJob, JobResult};
+pub use queue::WorkerPool;
+pub use service::{CompileService, SweepConfig};

@@ -1,0 +1,115 @@
+//! A small fixed-size worker pool over `std::thread` + `mpsc` (tokio is
+//! not vendored in this environment; the compile service's workload is
+//! CPU-bound, so OS threads are the right tool anyway).
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+/// Fixed-size worker pool executing `FnOnce` jobs; results come back in
+/// completion order through an mpsc channel.
+pub struct WorkerPool {
+    workers: usize,
+}
+
+impl WorkerPool {
+    pub fn new(workers: usize) -> Self {
+        Self { workers: workers.max(1) }
+    }
+
+    /// Pool sized to the machine (leaving one core for the coordinator).
+    pub fn default_size() -> Self {
+        let n = thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+        Self::new(n.saturating_sub(1).max(1))
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Run all jobs, returning `(index, result)` pairs in completion
+    /// order. Panics in jobs are isolated per-thread and surfaced as
+    /// `Err` strings.
+    pub fn run_all<J, R>(&self, jobs: Vec<J>) -> Vec<(usize, Result<R, String>)>
+    where
+        J: FnOnce() -> R + Send + 'static,
+        R: Send + 'static,
+    {
+        let njobs = jobs.len();
+        let queue: Arc<Mutex<Vec<(usize, J)>>> =
+            Arc::new(Mutex::new(jobs.into_iter().enumerate().rev().collect()));
+        let (tx, rx) = mpsc::channel::<(usize, Result<R, String>)>();
+
+        let mut handles = Vec::new();
+        for _ in 0..self.workers.min(njobs.max(1)) {
+            let queue = Arc::clone(&queue);
+            let tx = tx.clone();
+            handles.push(thread::spawn(move || loop {
+                let next = queue.lock().unwrap().pop();
+                let Some((idx, job)) = next else { break };
+                let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job))
+                    .map_err(|e| panic_msg(&*e));
+                if tx.send((idx, out)).is_err() {
+                    break;
+                }
+            }));
+        }
+        drop(tx);
+        let mut results: Vec<(usize, Result<R, String>)> = rx.into_iter().collect();
+        for h in handles {
+            let _ = h.join();
+        }
+        results.sort_by_key(|(i, _)| *i);
+        results
+    }
+}
+
+fn panic_msg(e: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = e.downcast_ref::<&str>() {
+        format!("job panicked: {s}")
+    } else if let Some(s) = e.downcast_ref::<String>() {
+        format!("job panicked: {s}")
+    } else {
+        "job panicked".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_all_jobs_and_orders_results() {
+        let pool = WorkerPool::new(4);
+        let jobs: Vec<Box<dyn FnOnce() -> usize + Send>> =
+            (0usize..32).map(|i| Box::new(move || i * i) as _).collect();
+        let results = pool.run_all(jobs);
+        assert_eq!(results.len(), 32);
+        for (i, r) in results {
+            assert_eq!(*r.as_ref().unwrap(), i * i);
+        }
+    }
+
+    #[test]
+    fn panics_are_isolated() {
+        let pool = WorkerPool::new(2);
+        let jobs: Vec<Box<dyn FnOnce() -> usize + Send>> = vec![
+            Box::new(|| 1),
+            Box::new(|| panic!("boom")),
+            Box::new(|| 3),
+        ];
+        let results = pool.run_all(jobs);
+        assert_eq!(*results[0].1.as_ref().unwrap(), 1);
+        assert!(results[1].1.as_ref().unwrap_err().contains("boom"));
+        assert_eq!(*results[2].1.as_ref().unwrap(), 3);
+    }
+
+    #[test]
+    fn single_worker_degenerates_to_serial() {
+        let pool = WorkerPool::new(1);
+        let jobs: Vec<Box<dyn FnOnce() -> usize + Send>> =
+            (0usize..5).map(|i| Box::new(move || i) as _).collect();
+        let results = pool.run_all(jobs);
+        assert_eq!(results.iter().map(|(_, r)| *r.as_ref().unwrap()).sum::<usize>(), 10);
+    }
+}

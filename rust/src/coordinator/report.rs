@@ -1,0 +1,204 @@
+//! Paper-table formatting: Tables II / III / IV and the Fig. 3 series,
+//! computed from sweep results.
+
+use std::collections::HashMap;
+
+use crate::baselines::framework::FrameworkKind;
+use crate::util::tables::{fnum, TextTable};
+
+use super::job::JobResult;
+
+/// One Table-II cell, reduced from a `JobResult`.
+#[derive(Debug, Clone)]
+pub struct Cell {
+    pub kernel: String,
+    pub size: usize,
+    pub framework: FrameworkKind,
+    pub mcycles: f64,
+    pub bram: u64,
+    pub dsp: u64,
+    pub lut_pct: f64,
+    pub lutram_pct: f64,
+    pub ff_pct: f64,
+    pub fits: bool,
+    pub error: Option<String>,
+}
+
+pub fn cell(r: &JobResult) -> Cell {
+    Cell {
+        kernel: r.job.kernel.clone(),
+        size: r.job.size,
+        framework: r.job.framework,
+        mcycles: r.cycles as f64 / 1e6,
+        bram: r.util.bram18k,
+        dsp: r.util.dsp,
+        lut_pct: r.util.lut_pct(),
+        lutram_pct: r.util.lutram_pct(),
+        ff_pct: r.util.ff_pct(),
+        fits: r.util.fits(),
+        error: r.error.clone(),
+    }
+}
+
+fn workload_key(c: &Cell) -> (String, usize) {
+    (c.kernel.clone(), c.size)
+}
+
+/// Speedup of `c` relative to the Vanilla cell of the same workload.
+pub fn speedup(cells: &[Cell], c: &Cell) -> Option<f64> {
+    let base = cells.iter().find(|b| {
+        workload_key(b) == workload_key(c) && b.framework == FrameworkKind::Vanilla
+    })?;
+    if c.mcycles <= 0.0 || base.mcycles <= 0.0 {
+        return None;
+    }
+    Some(base.mcycles / c.mcycles)
+}
+
+/// DSP efficiency: `E_DSP = Speedup / (DSP_compare / DSP_baseline)`.
+pub fn e_dsp(cells: &[Cell], c: &Cell) -> Option<f64> {
+    let base = cells.iter().find(|b| {
+        workload_key(b) == workload_key(c) && b.framework == FrameworkKind::Vanilla
+    })?;
+    let sp = speedup(cells, c)?;
+    if c.dsp == 0 || base.dsp == 0 {
+        return None;
+    }
+    Some(sp / (c.dsp as f64 / base.dsp as f64))
+}
+
+fn wl_name(kernel: &str, size: usize) -> String {
+    if size == 0 {
+        kernel.to_string()
+    } else {
+        format!("{kernel} {size}x{size}")
+    }
+}
+
+/// Render Table II: per workload × framework — MCycles, BRAM, DSP,
+/// speedup, E_DSP, feasibility.
+pub fn render_table2(cells: &[Cell]) -> String {
+    let mut t = TextTable::new(vec![
+        "kernel", "framework", "MCycles", "BRAM", "DSP", "Speedup", "E_DSP", "fits",
+    ]);
+    for c in cells {
+        let sp = speedup(cells, c);
+        let ed = e_dsp(cells, c);
+        t.row(vec![
+            wl_name(&c.kernel, c.size),
+            c.framework.name().to_string(),
+            if c.error.is_some() { "×".into() } else { fnum(c.mcycles, 4) },
+            c.bram.to_string(),
+            c.dsp.to_string(),
+            sp.map(|v| fnum(v, 2)).unwrap_or_else(|| "—".into()),
+            ed.map(|v| fnum(v, 2)).unwrap_or_else(|| "—".into()),
+            if c.fits { "yes".into() } else { "EXCEEDS".to_string() },
+        ]);
+    }
+    t.render()
+}
+
+/// Render Table III: post-PnR fabric percentages for 32×32 kernels.
+pub fn render_table3(cells: &[Cell]) -> String {
+    let mut t = TextTable::new(vec!["kernel", "framework", "LUT%", "LUTRAM%", "FF%"]);
+    for c in cells {
+        if c.framework == FrameworkKind::Vanilla {
+            continue; // paper compares ScaleHLS / StreamHLS / MING
+        }
+        t.row(vec![
+            wl_name(&c.kernel, c.size),
+            c.framework.name().to_string(),
+            fnum(c.lut_pct, 2),
+            fnum(c.lutram_pct, 2),
+            fnum(c.ff_pct, 2),
+        ]);
+    }
+    t.render()
+}
+
+/// Render Table IV: the DSP-constraint sweep on Conv+ReLU 32×32.
+/// `rows` = (dsp_cap, cell, vanilla_mcycles).
+pub fn render_table4(rows: &[(u64, Cell, f64)]) -> String {
+    let mut t = TextTable::new(vec!["DSP constraint", "Speedup", "DSP", "E_DSP"]);
+    for (cap, c, base_mc) in rows {
+        let sp = base_mc / c.mcycles;
+        // E_DSP vs the unconstrained Vanilla baseline DSP (1 by our model)
+        let ed = sp / c.dsp.max(1) as f64;
+        t.row(vec![
+            format!("{cap}"),
+            fnum(sp, 2),
+            c.dsp.to_string(),
+            fnum(ed, 3),
+        ]);
+    }
+    t.render()
+}
+
+/// Fig. 3 series: input size → BRAM for a single framework.
+pub fn render_fig3(series: &HashMap<&'static str, Vec<(usize, u64)>>) -> String {
+    let mut t = TextTable::new(vec!["input", "framework", "BRAM18K"]);
+    let mut keys: Vec<_> = series.keys().collect();
+    keys.sort();
+    for fw in keys {
+        for (n, bram) in &series[*fw] {
+            t.row(vec![format!("{n}x{n}"), fw.to_string(), bram.to_string()]);
+        }
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(kernel: &str, fw: FrameworkKind, mcycles: f64, dsp: u64) -> Cell {
+        Cell {
+            kernel: kernel.into(),
+            size: 32,
+            framework: fw,
+            mcycles,
+            bram: 10,
+            dsp,
+            lut_pct: 1.0,
+            lutram_pct: 1.0,
+            ff_pct: 1.0,
+            fits: true,
+            error: None,
+        }
+    }
+
+    #[test]
+    fn speedup_and_edsp() {
+        let cells = vec![
+            mk("conv_relu", FrameworkKind::Vanilla, 0.53, 5),
+            mk("conv_relu", FrameworkKind::Ming, 0.00106, 250),
+        ];
+        let sp = speedup(&cells, &cells[1]).unwrap();
+        assert!((sp - 500.0).abs() < 1.0);
+        let ed = e_dsp(&cells, &cells[1]).unwrap();
+        assert!((ed - 10.0).abs() < 0.1, "{ed}");
+    }
+
+    #[test]
+    fn table2_renders_rows() {
+        let cells = vec![
+            mk("conv_relu", FrameworkKind::Vanilla, 0.5, 5),
+            mk("conv_relu", FrameworkKind::Ming, 0.001, 288),
+        ];
+        let s = render_table2(&cells);
+        assert!(s.contains("conv_relu 32x32"));
+        assert!(s.contains("ming"));
+        assert!(s.contains("Speedup"));
+    }
+
+    #[test]
+    fn table3_skips_vanilla() {
+        let cells = vec![
+            mk("conv_relu", FrameworkKind::Vanilla, 0.5, 5),
+            mk("conv_relu", FrameworkKind::ScaleHls, 0.7, 10),
+        ];
+        let s = render_table3(&cells);
+        assert!(!s.contains("vanilla"));
+        assert!(s.contains("scalehls"));
+    }
+}

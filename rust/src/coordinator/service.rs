@@ -1,0 +1,117 @@
+//! The compile service: batch sweeps over kernels × frameworks × sizes.
+
+use anyhow::Result;
+
+use crate::baselines::framework::FrameworkKind;
+use crate::ir::builder::models;
+use crate::resources::device::DeviceSpec;
+
+use super::job::{CompileJob, JobResult};
+use super::queue::WorkerPool;
+
+/// Sweep specification.
+#[derive(Debug, Clone)]
+pub struct SweepConfig {
+    /// `(kernel, size)` workloads; defaults to the paper's Table II set.
+    pub workloads: Vec<(String, usize)>,
+    pub frameworks: Vec<FrameworkKind>,
+    pub device: DeviceSpec,
+    pub estimate_only: bool,
+}
+
+impl SweepConfig {
+    pub fn table2(device: DeviceSpec) -> Self {
+        Self {
+            workloads: models::table2_workloads()
+                .into_iter()
+                .map(|(k, s)| (k.to_string(), s))
+                .collect(),
+            frameworks: FrameworkKind::all().to_vec(),
+            device,
+            estimate_only: false,
+        }
+    }
+}
+
+/// Runs sweeps over a worker pool and collects results.
+pub struct CompileService {
+    pool: WorkerPool,
+}
+
+impl Default for CompileService {
+    fn default() -> Self {
+        Self::new(WorkerPool::default_size())
+    }
+}
+
+impl CompileService {
+    pub fn new(pool: WorkerPool) -> Self {
+        Self { pool }
+    }
+
+    /// Execute every (workload × framework) job; failed jobs yield a
+    /// `JobResult`-free error string, successful ones a full result.
+    pub fn run_sweep(&self, cfg: &SweepConfig) -> Vec<Result<JobResult, String>> {
+        let mut jobs: Vec<CompileJob> = Vec::new();
+        for (kernel, size) in &cfg.workloads {
+            for &fw in &cfg.frameworks {
+                jobs.push(CompileJob {
+                    kernel: kernel.clone(),
+                    size: *size,
+                    framework: fw,
+                    device: cfg.device.clone(),
+                    estimate_only: cfg.estimate_only,
+                });
+            }
+        }
+        let closures: Vec<Box<dyn FnOnce() -> Result<JobResult, String> + Send>> = jobs
+            .into_iter()
+            .map(|j| {
+                Box::new(move || j.run().map_err(|e| format!("{}: {e:#}", j.id()))) as _
+            })
+            .collect();
+        self.pool
+            .run_all(closures)
+            .into_iter()
+            .map(|(_, r)| match r {
+                Ok(inner) => inner,
+                Err(panic) => Err(panic),
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_sweep_runs_all_cells() {
+        let cfg = SweepConfig {
+            workloads: vec![("conv_relu".into(), 16), ("linear".into(), 0)],
+            frameworks: vec![FrameworkKind::Vanilla, FrameworkKind::Ming],
+            device: DeviceSpec::kv260(),
+            estimate_only: false,
+        };
+        let svc = CompileService::new(WorkerPool::new(2));
+        let results = svc.run_sweep(&cfg);
+        assert_eq!(results.len(), 4);
+        for r in &results {
+            let r = r.as_ref().unwrap();
+            assert!(r.cycles > 0, "{}", r.job.id());
+        }
+    }
+
+    #[test]
+    fn ming_beats_vanilla_in_sweep() {
+        let cfg = SweepConfig {
+            workloads: vec![("conv_relu".into(), 32)],
+            frameworks: vec![FrameworkKind::Vanilla, FrameworkKind::Ming],
+            device: DeviceSpec::kv260(),
+            estimate_only: false,
+        };
+        let results = CompileService::new(WorkerPool::new(2)).run_sweep(&cfg);
+        let cycles: Vec<u64> = results.iter().map(|r| r.as_ref().unwrap().cycles).collect();
+        assert!(cycles[1] * 50 < cycles[0], "ming {} vs vanilla {}", cycles[1], cycles[0]);
+    }
+}

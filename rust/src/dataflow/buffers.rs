@@ -1,0 +1,88 @@
+//! On-chip buffer allocations: line buffers, window buffers, weight ROMs,
+//! and (for baseline designs) whole intermediate tensors.
+
+/// Storage binding of a buffer (the BIND_STORAGE pragma target).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Storage {
+    /// Block RAM (RAM18K slices).
+    Bram,
+    /// Distributed LUT RAM.
+    Lutram,
+    /// Flip-flop registers (fully partitioned small arrays).
+    Ff,
+    /// Read-only BRAM (weight constants).
+    Rom,
+}
+
+/// Why a buffer exists — drives resource attribution and reporting.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BufferRole {
+    /// Sliding-window line buffer ((K-1) row arrays).
+    LineBuffer,
+    /// Current compute window (K·K·C values).
+    WindowBuffer,
+    /// Reduction data line (one row).
+    ReductionLine,
+    /// Constant weights.
+    Weights,
+    /// A whole intermediate tensor (baseline designs only — MING never
+    /// allocates these).
+    IntermediateTensor,
+    /// Reorder/double buffer (StreamHLS-style).
+    ReorderBuffer,
+    /// Deep FIFO backing store (skip connections bound to BRAM).
+    FifoBacking,
+}
+
+/// One allocated on-chip array.
+#[derive(Debug, Clone)]
+pub struct BufferAlloc {
+    pub name: String,
+    pub role: BufferRole,
+    /// Total payload bits (before partition rounding).
+    pub bits: u64,
+    /// ARRAY_PARTITION factor: number of independent slices. Each slice
+    /// costs at least one physical RAM of its storage kind.
+    pub partitions: u64,
+    pub storage: Storage,
+    /// Owning node (index into `Design::nodes`), if any.
+    pub node: Option<usize>,
+}
+
+impl BufferAlloc {
+    /// Bits per partition slice (rounded up).
+    pub fn bits_per_slice(&self) -> u64 {
+        self.bits.div_ceil(self.partitions.max(1))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slice_math() {
+        let b = BufferAlloc {
+            name: "lb".into(),
+            role: BufferRole::LineBuffer,
+            bits: 1000,
+            partitions: 3,
+            storage: Storage::Bram,
+            node: Some(0),
+        };
+        assert_eq!(b.bits_per_slice(), 334);
+    }
+
+    #[test]
+    fn zero_partitions_treated_as_one() {
+        let b = BufferAlloc {
+            name: "w".into(),
+            role: BufferRole::Weights,
+            bits: 64,
+            partitions: 0,
+            storage: Storage::Rom,
+            node: None,
+        };
+        assert_eq!(b.bits_per_slice(), 64);
+    }
+}

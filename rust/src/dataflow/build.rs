@@ -1,0 +1,300 @@
+//! MING's streaming-architecture construction (paper §IV-B).
+//!
+//! One KPN node per `linalg.generic` op; FIFO channels for every
+//! producer→consumer edge (fan-out = one channel per consumer, broadcast
+//! writes); line buffers for sliding-window nodes; a single-line buffer
+//! for regular reductions; nothing but streams for pure-parallel nodes.
+//! Large intermediate tensors are **never** materialized.
+
+use std::collections::HashMap;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::analysis::classify::KernelClass;
+use crate::analysis::shapes::{activation_inputs, node_geometry};
+use crate::ir::graph::{ModelGraph, TensorKind};
+
+use super::buffers::{BufferAlloc, BufferRole, Storage};
+use super::channel::{Channel, ChannelId, Endpoint};
+use super::design::{Design, DesignStyle};
+use super::node::{DfgNode, NodeTiming};
+
+/// Default FIFO depth for ordinary producer→consumer streams (tokens).
+/// Skip/diamond channels are re-sized by `dse::fifo`.
+pub const DEFAULT_FIFO_DEPTH: usize = 4;
+
+/// Build the MING streaming design for a validated model graph.
+///
+/// Timing starts at scalar defaults (`mac_lanes = 1`); run the DSE
+/// (`dse::ilp::solve`) to set unroll factors, then
+/// [`refresh_buffers`] to recompute partitioning and storage binding.
+pub fn build_streaming_design(g: &ModelGraph) -> Result<Design> {
+    g.validate().context("building streaming design")?;
+    let order = g.toposort()?;
+
+    // node id per op index
+    let mut node_of_op: HashMap<usize, usize> = HashMap::new();
+    for (nid, &oi) in order.iter().enumerate() {
+        node_of_op.insert(oi, nid);
+    }
+
+    let mut nodes: Vec<DfgNode> = Vec::with_capacity(order.len());
+    let mut channels: Vec<Channel> = Vec::new();
+
+    // First pass: create nodes (geometry only).
+    for (nid, &oi) in order.iter().enumerate() {
+        let op = &g.ops[oi];
+        let geo = node_geometry(g, op)?;
+        nodes.push(DfgNode {
+            id: nid,
+            name: op.name.clone(),
+            op_index: oi,
+            geo,
+            in_channels: Vec::new(),
+            out_channels: Vec::new(),
+            timing: NodeTiming::default(),
+        });
+    }
+
+    // Second pass: wire channels for every activation-input edge.
+    for nid in 0..nodes.len() {
+        let oi = nodes[nid].op_index;
+        let op = &g.ops[oi];
+        let acts = activation_inputs(g, op);
+        for (slot, &ai) in acts.iter().enumerate() {
+            let src_tensor = op.inputs[ai];
+            let t = g.tensor(src_tensor);
+            let (src, src_node) = match t.kind {
+                TensorKind::Input => (Endpoint::GraphInput, None),
+                _ => {
+                    let prod_op = g
+                        .ops
+                        .iter()
+                        .position(|o| o.output == src_tensor)
+                        .with_context(|| format!("no producer for {}", t.name))?;
+                    let pn = node_of_op[&prod_op];
+                    (Endpoint::Node(pn), Some(pn))
+                }
+            };
+            let token_len = nodes[nid].geo.in_token_len[slot];
+            let tokens_total = nodes[nid].geo.in_tokens[slot];
+            let cid = ChannelId(channels.len());
+            channels.push(Channel {
+                id: cid,
+                name: format!("{}_in{}", nodes[nid].name, slot),
+                src,
+                dst: Endpoint::Node(nid),
+                token_len,
+                lanes: token_len, // full width until DSE narrows it
+                depth: DEFAULT_FIFO_DEPTH,
+                tokens_total,
+                elem_bits: t.ty.dtype.bits(),
+                externally_buffered: false,
+            });
+            nodes[nid].in_channels.push(cid);
+            if let Some(pn) = src_node {
+                nodes[pn].out_channels.push(cid);
+            }
+        }
+    }
+
+    // Output channel: from the node producing the graph output tensor.
+    let out_tensor = g.outputs()[0].id;
+    let out_op = g
+        .ops
+        .iter()
+        .position(|o| o.output == out_tensor)
+        .context("output tensor has no producer")?;
+    let out_node = node_of_op[&out_op];
+    let (out_tokens, out_len) = {
+        let n = &nodes[out_node];
+        (n.geo.out_tokens, n.geo.out_token_len)
+    };
+    let cid = ChannelId(channels.len());
+    channels.push(Channel {
+        id: cid,
+        name: "graph_out".into(),
+        src: Endpoint::Node(out_node),
+        dst: Endpoint::GraphOutput,
+        token_len: out_len,
+        lanes: out_len,
+        depth: DEFAULT_FIFO_DEPTH,
+        tokens_total: out_tokens,
+        elem_bits: g.tensor(out_tensor).ty.dtype.bits(),
+        externally_buffered: false,
+    });
+    nodes[out_node].out_channels.push(cid);
+
+    // every node must reach somewhere
+    for n in &nodes {
+        ensure!(!n.out_channels.is_empty(), "node {} has no consumers", n.name);
+    }
+
+    let mut design = Design {
+        graph: g.clone(),
+        framework: "ming".into(),
+        style: DesignStyle::Dataflow,
+        nodes,
+        channels,
+        buffers: Vec::new(),
+        clock_mhz: 300,
+    };
+    refresh_buffers(&mut design);
+    Ok(design)
+}
+
+/// (Re)derive buffer allocations + partitioning + storage binding from the
+/// current node timing. Called at build time and again after the DSE
+/// assigns unroll factors (partition factor = unroll of the accessing
+/// loop, per the paper's BRAM constraint).
+pub fn refresh_buffers(d: &mut Design) {
+    let mut buffers: Vec<BufferAlloc> = Vec::new();
+    for n in &d.nodes {
+        let op = &d.graph.ops[n.op_index];
+        match n.geo.class {
+            KernelClass::SlidingWindow(_) => {
+                if let Some(lb) = n.geo.line_buffer {
+                    // (K-1) independent row arrays, each partitioned by the
+                    // channel-unroll so one window column loads per cycle.
+                    let chans = *d.graph.tensor(op.inputs[0]).ty.shape.last().unwrap_or(&1) as u64;
+                    let part = n.timing.unroll_red.clamp(1, chans);
+                    for r in 0..lb.rows {
+                        buffers.push(BufferAlloc {
+                            name: format!("{}_line{}", n.name, r),
+                            role: BufferRole::LineBuffer,
+                            bits: lb.row_len as u64 * lb.elem_bits,
+                            partitions: part,
+                            storage: Storage::Bram, // BIND_STORAGE=ram_1p
+                            node: Some(n.id),
+                        });
+                    }
+                }
+                if let Some(wv) = n.geo.window_values {
+                    buffers.push(BufferAlloc {
+                        name: format!("{}_window", n.name),
+                        role: BufferRole::WindowBuffer,
+                        bits: wv as u64 * 8,
+                        partitions: wv as u64, // fully partitioned registers
+                        storage: Storage::Ff,
+                        node: Some(n.id),
+                    });
+                }
+            }
+            KernelClass::RegularReduction => {
+                if let Some(lb) = n.geo.line_buffer {
+                    let part = n.timing.unroll_red.clamp(1, lb.row_len as u64);
+                    buffers.push(BufferAlloc {
+                        name: format!("{}_line", n.name),
+                        role: BufferRole::ReductionLine,
+                        bits: lb.total_bits(),
+                        partitions: part,
+                        storage: Storage::Bram,
+                        node: Some(n.id),
+                    });
+                }
+            }
+            KernelClass::PureParallel => {}
+        }
+        // Weight ROMs: resident constants. Highly partitioned small ROMs
+        // are placed in LUTRAM by Vitis; keep them out of the BRAM budget
+        // exactly when slices get register-tiny.
+        for &inp in &op.inputs {
+            let t = d.graph.tensor(inp);
+            if t.kind == TensorKind::Weight {
+                let lanes = n.timing.mac_lanes.max(1);
+                let bits = t.ty.bits();
+                let storage =
+                    if bits / lanes.max(1) < 1024 || lanes >= 32 { Storage::Lutram } else { Storage::Rom };
+                buffers.push(BufferAlloc {
+                    name: format!("{}_{}", n.name, t.name),
+                    role: BufferRole::Weights,
+                    bits,
+                    partitions: lanes.min(t.ty.numel() as u64),
+                    storage,
+                    node: Some(n.id),
+                });
+            }
+        }
+    }
+    d.buffers = buffers;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::builder::models;
+
+    #[test]
+    fn conv_relu_design_shape() {
+        let g = models::conv_relu(32, 8, 8);
+        let d = build_streaming_design(&g).unwrap();
+        assert_eq!(d.nodes.len(), 2);
+        // channels: input->conv, conv->rr, rr->out
+        assert_eq!(d.channels.len(), 3);
+        assert_eq!(d.input_channels().len(), 1);
+        // conv has a 2-row line buffer + window + weights
+        let roles: Vec<_> = d.buffers.iter().map(|b| b.role).collect();
+        assert_eq!(roles.iter().filter(|r| **r == BufferRole::LineBuffer).count(), 2);
+        assert_eq!(roles.iter().filter(|r| **r == BufferRole::WindowBuffer).count(), 1);
+        assert_eq!(roles.iter().filter(|r| **r == BufferRole::Weights).count(), 1);
+        // and crucially: NO intermediate tensors
+        assert!(!roles.contains(&BufferRole::IntermediateTensor));
+    }
+
+    #[test]
+    fn residual_fanout_channels() {
+        let g = models::residual(16, 8, 8);
+        let d = build_streaming_design(&g).unwrap();
+        // graph input feeds conv0 and add0
+        assert_eq!(d.input_channels().len(), 2);
+        // every channel has exactly one consumer node or the graph output
+        for c in &d.channels {
+            match c.dst {
+                Endpoint::Node(n) => assert!(n < d.nodes.len()),
+                Endpoint::GraphOutput => {}
+                Endpoint::GraphInput => panic!("channel into the input"),
+            }
+        }
+    }
+
+    #[test]
+    fn channels_are_toposorted_edges() {
+        let g = models::cascade(16, 8, 8);
+        let d = build_streaming_design(&g).unwrap();
+        for c in &d.channels {
+            if let (Endpoint::Node(s), Endpoint::Node(t)) = (c.src, c.dst) {
+                assert!(s < t, "channel {} goes backwards", c.name);
+            }
+        }
+    }
+
+    #[test]
+    fn refresh_buffers_scales_partitions_with_unroll() {
+        let g = models::conv_relu(32, 8, 8);
+        let mut d = build_streaming_design(&g).unwrap();
+        let before: u64 = d
+            .buffers
+            .iter()
+            .filter(|b| b.role == BufferRole::LineBuffer)
+            .map(|b| b.partitions)
+            .sum();
+        assert_eq!(before, 2, "scalar timing: 1 partition per row array");
+        d.nodes[0].timing.unroll_red = 8;
+        d.nodes[0].timing.mac_lanes = 64;
+        refresh_buffers(&mut d);
+        let after: u64 = d
+            .buffers
+            .iter()
+            .filter(|b| b.role == BufferRole::LineBuffer)
+            .map(|b| b.partitions)
+            .sum();
+        assert_eq!(after, 16, "(K-1) rows × channel unroll 8");
+    }
+
+    #[test]
+    fn linear_design_has_reduction_line() {
+        let g = models::linear();
+        let d = build_streaming_design(&g).unwrap();
+        assert!(d.buffers.iter().any(|b| b.role == BufferRole::ReductionLine));
+    }
+}

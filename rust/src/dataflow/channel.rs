@@ -1,0 +1,89 @@
+//! FIFO channel declarations (the `dfg` dialect's KPN edges).
+
+/// Identifier of a channel within a design.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ChannelId(pub usize);
+
+/// What a channel endpoint attaches to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Endpoint {
+    /// A dataflow node (index into `Design::nodes`).
+    Node(usize),
+    /// The design's external input reader (host memory → stream).
+    GraphInput,
+    /// The design's external output writer (stream → host memory).
+    GraphOutput,
+}
+
+/// One FIFO channel: single producer, single consumer, fixed token shape.
+/// Fan-out is expressed as one channel per consumer with the producer
+/// broadcasting (KPN-legal: every write goes to all out-channels).
+#[derive(Debug, Clone)]
+pub struct Channel {
+    pub id: ChannelId,
+    pub name: String,
+    pub src: Endpoint,
+    pub dst: Endpoint,
+    /// Values per token (e.g. C for a pixel channel).
+    pub token_len: usize,
+    /// Values transferred per cycle (stream width, set by DSE; the HLS
+    /// STREAM pragma's width). `lanes == token_len` ⇒ 1 token/cycle.
+    pub lanes: usize,
+    /// FIFO depth in tokens (the STREAM pragma depth; DSE-sized to avoid
+    /// deadlock on diamonds).
+    pub depth: usize,
+    /// Tokens that flow through per graph execution.
+    pub tokens_total: u64,
+    /// Element bit width.
+    pub elem_bits: u64,
+    /// When true, the channel's storage is represented by explicit
+    /// `BufferAlloc`s in the design (baseline strategies that pass whole
+    /// tensors between nodes); the BRAM/fabric models then skip the FIFO
+    /// itself to avoid double-counting.
+    pub externally_buffered: bool,
+}
+
+impl Channel {
+    /// Cycles to transfer one token at the configured width.
+    pub fn cycles_per_token(&self) -> u64 {
+        (self.token_len as u64).div_ceil(self.lanes as u64)
+    }
+
+    /// Total FIFO storage in bits.
+    pub fn storage_bits(&self) -> u64 {
+        self.depth as u64 * self.token_len as u64 * self.elem_bits
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ch(token_len: usize, lanes: usize, depth: usize) -> Channel {
+        Channel {
+            id: ChannelId(0),
+            name: "t".into(),
+            src: Endpoint::GraphInput,
+            dst: Endpoint::Node(0),
+            token_len,
+            lanes,
+            depth,
+            tokens_total: 100,
+            elem_bits: 8,
+            externally_buffered: false,
+        }
+    }
+
+    #[test]
+    fn cycles_per_token_rounds_up() {
+        assert_eq!(ch(8, 8, 2).cycles_per_token(), 1);
+        assert_eq!(ch(8, 4, 2).cycles_per_token(), 2);
+        assert_eq!(ch(9, 4, 2).cycles_per_token(), 3);
+        assert_eq!(ch(1, 1, 2).cycles_per_token(), 1);
+    }
+
+    #[test]
+    fn storage_bits() {
+        assert_eq!(ch(8, 8, 4).storage_bits(), 4 * 8 * 8);
+    }
+}

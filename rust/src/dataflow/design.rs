@@ -1,0 +1,116 @@
+//! The `Design` — the hardware-design representation shared by every
+//! framework strategy, the resource estimator, the simulator and the code
+//! generator.
+
+use anyhow::Result;
+
+use crate::ir::graph::ModelGraph;
+
+use super::buffers::BufferAlloc;
+use super::channel::{Channel, ChannelId, Endpoint};
+use super::node::DfgNode;
+
+/// Execution discipline of the generated design.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DesignStyle {
+    /// MING / StreamHLS: task-level DATAFLOW — all nodes run concurrently,
+    /// connected by streams; latency is governed by the slowest node plus
+    /// pipeline fill.
+    Dataflow,
+    /// Vanilla Vitis: ops execute one after another, each reading/writing
+    /// full tensors in on-chip memory (no overlap between nodes).
+    Sequential,
+}
+
+/// A complete hardware design for one model graph.
+#[derive(Debug, Clone)]
+pub struct Design {
+    /// The source model (ops, tensors, weights).
+    pub graph: ModelGraph,
+    /// Human-readable provenance, e.g. "ming" / "vanilla" / "streamhls".
+    pub framework: String,
+    pub style: DesignStyle,
+    /// Nodes in topological order (node `id` == index).
+    pub nodes: Vec<DfgNode>,
+    pub channels: Vec<Channel>,
+    /// All on-chip arrays (line buffers, weights, intermediates…).
+    pub buffers: Vec<BufferAlloc>,
+    /// Target clock (MHz) — used only for reporting, cycle counts are the
+    /// primary metric as in the paper.
+    pub clock_mhz: u32,
+}
+
+impl Design {
+    pub fn channel(&self, id: ChannelId) -> &Channel {
+        &self.channels[id.0]
+    }
+
+    /// Channels feeding a node, in input order.
+    pub fn node_inputs(&self, node: usize) -> Vec<&Channel> {
+        self.nodes[node].in_channels.iter().map(|&c| self.channel(c)).collect()
+    }
+
+    /// The channels carrying the design's external input.
+    pub fn input_channels(&self) -> Vec<&Channel> {
+        self.channels.iter().filter(|c| c.src == Endpoint::GraphInput).collect()
+    }
+
+    /// The channel carrying the design's external output.
+    pub fn output_channel(&self) -> Result<&Channel> {
+        self.channels
+            .iter()
+            .find(|c| c.dst == Endpoint::GraphOutput)
+            .ok_or_else(|| anyhow::anyhow!("design has no output channel"))
+    }
+
+    /// Sum of the standalone per-node cycle estimates — the paper ILP's
+    /// objective value (a conservative, non-overlapped latency bound).
+    pub fn sum_node_cycles(&self) -> u64 {
+        self.nodes.iter().map(|n| n.standalone_cycles()).sum()
+    }
+
+    /// Critical-path estimate under DATAFLOW overlap: the slowest node's
+    /// streaming interval dominates, plus every node's warm-up and depth
+    /// along the chain. (The simulator measures this exactly.)
+    pub fn overlapped_cycles_estimate(&self) -> u64 {
+        match self.style {
+            DesignStyle::Sequential => self.sum_node_cycles(),
+            DesignStyle::Dataflow => {
+                let bottleneck = self
+                    .nodes
+                    .iter()
+                    .map(|n| {
+                        let interval = n.compute_interval();
+                        n.geo.out_tokens * interval
+                    })
+                    .max()
+                    .unwrap_or(0);
+                let fills: u64 =
+                    self.nodes.iter().map(|n| n.geo.warmup_tokens + n.timing.depth).sum();
+                bottleneck + fills
+            }
+        }
+    }
+
+    /// Total MACs in the workload (for MAC/cycle efficiency reporting).
+    pub fn total_macs(&self) -> u64 {
+        self.graph.total_macs()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::dataflow::build::build_streaming_design;
+    use crate::ir::builder::models;
+
+    #[test]
+    fn design_accessors() {
+        let g = models::conv_relu(16, 4, 4);
+        let d = build_streaming_design(&g).unwrap();
+        assert_eq!(d.framework, "ming");
+        assert!(!d.input_channels().is_empty());
+        assert!(d.output_channel().is_ok());
+        assert!(d.sum_node_cycles() > 0);
+        assert!(d.overlapped_cycles_estimate() <= d.sum_node_cycles());
+    }
+}

@@ -1,0 +1,23 @@
+//! Streaming dataflow architecture (paper §IV-B).
+//!
+//! A [`design::Design`] is the common hardware-design representation that
+//! every framework strategy (MING and the baselines) lowers a
+//! [`crate::ir::ModelGraph`] into, and that the resource estimator, the
+//! cycle-level simulator, and the HLS code generator all consume. MING's
+//! lowering ([`build::build_streaming_design`]) produces the paper's fully
+//! streaming architecture: one KPN process per `linalg.generic` op, FIFO
+//! channels for every producer→consumer edge, line buffers for
+//! sliding-window nodes and single-line buffers for reductions — no
+//! intermediate tensors, ever.
+
+pub mod design;
+pub mod node;
+pub mod channel;
+pub mod buffers;
+pub mod build;
+pub mod validate;
+
+pub use build::build_streaming_design;
+pub use channel::{Channel, ChannelId, Endpoint};
+pub use design::{Design, DesignStyle};
+pub use node::{DfgNode, NodeTiming};

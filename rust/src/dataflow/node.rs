@@ -1,0 +1,115 @@
+//! Dataflow nodes (KPN processes) and their timing configuration.
+
+use crate::analysis::shapes::NodeGeometry;
+
+use super::channel::ChannelId;
+
+/// Per-node timing/parallelism parameters. For MING these are the DSE
+/// solution (unroll factors → MAC lanes, II); baselines set them to model
+/// their framework's strategy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NodeTiming {
+    /// MAC (or ALU) lanes operating in parallel each cycle — the product
+    /// of the node's loop unroll factors.
+    pub mac_lanes: u64,
+    /// Initiation interval of the node's pipeline. 1 unless the design
+    /// style has memory hazards (WAR ⇒ 2 in ScaleHLS/StreamHLS designs).
+    pub ii: u64,
+    /// Pipeline depth (latency from consuming a token to emitting the
+    /// corresponding result), in cycles.
+    pub depth: u64,
+    /// Unroll factor along the output-feature (parallel) loop.
+    pub unroll_par: u64,
+    /// Unroll factor along the reduction loops.
+    pub unroll_red: u64,
+}
+
+impl Default for NodeTiming {
+    fn default() -> Self {
+        Self { mac_lanes: 1, ii: 1, depth: 4, unroll_par: 1, unroll_red: 1 }
+    }
+}
+
+impl NodeTiming {
+    /// Cycles between consecutive output tokens, given the work one
+    /// output token requires (`work` MACs or ALU ops).
+    pub fn interval_for(&self, work: u64) -> u64 {
+        work.div_ceil(self.mac_lanes).max(1) * self.ii
+    }
+}
+
+/// One dataflow node: an op from the source graph plus its streaming
+/// geometry, channel hookup, and timing parameters.
+#[derive(Debug, Clone)]
+pub struct DfgNode {
+    /// Index into `Design::nodes` (== position).
+    pub id: usize,
+    /// Name (the op's name).
+    pub name: String,
+    /// Index of the originating op in `ModelGraph::ops`.
+    pub op_index: usize,
+    /// Streaming geometry from `analysis::shapes`.
+    pub geo: NodeGeometry,
+    /// Input channels, one per activation input, in op-input order.
+    pub in_channels: Vec<ChannelId>,
+    /// Output channels: one per consumer (broadcast on write).
+    pub out_channels: Vec<ChannelId>,
+    /// Timing/parallelism configuration.
+    pub timing: NodeTiming,
+}
+
+impl DfgNode {
+    /// Cycles between consecutive output tokens for this node's workload
+    /// (compute-bound interval; the simulator additionally applies
+    /// channel transfer and back-pressure effects).
+    ///
+    /// MAC nodes: `work` = MACs per output token, spread over MAC lanes.
+    /// Pure-ALU nodes: each lane applies the whole payload to one element
+    /// per cycle (relu/requant/add are single-cycle combinational), so
+    /// `work` = elements per token — payload complexity costs fabric and
+    /// pipeline depth, not initiation interval.
+    pub fn compute_interval(&self) -> u64 {
+        let work = if self.geo.macs_per_out_token > 0 {
+            self.geo.macs_per_out_token
+        } else {
+            self.geo.out_token_len as u64
+        };
+        self.timing.interval_for(work.max(1))
+    }
+
+    /// Standalone latency estimate: warm-up plus interval times tokens.
+    /// This is the per-node `Cycles(v)` term of the paper's ILP objective.
+    pub fn standalone_cycles(&self) -> u64 {
+        let transfer_in = self
+            .geo
+            .in_token_len
+            .iter()
+            .map(|&l| (l as u64).div_ceil(self.timing.unroll_red.min(l as u64).max(1)))
+            .max()
+            .unwrap_or(1);
+        let interval = self.compute_interval().max(transfer_in);
+        self.geo.warmup_tokens + self.geo.out_tokens * interval + self.timing.depth
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn interval_math() {
+        let t = NodeTiming { mac_lanes: 64, ii: 1, ..Default::default() };
+        assert_eq!(t.interval_for(576), 9);
+        assert_eq!(t.interval_for(64), 1);
+        assert_eq!(t.interval_for(1), 1);
+        let t2 = NodeTiming { mac_lanes: 576, ii: 2, ..Default::default() };
+        assert_eq!(t2.interval_for(576), 2, "II multiplies the interval");
+    }
+
+    #[test]
+    fn default_timing_is_scalar() {
+        let t = NodeTiming::default();
+        assert_eq!(t.mac_lanes, 1);
+        assert_eq!(t.ii, 1);
+    }
+}

@@ -1,0 +1,169 @@
+//! Design well-formedness and deadlock-freedom checks.
+//!
+//! The structural deadlock hazard in a pure streaming architecture is the
+//! *diamond*: two paths from one producer reconverging at one consumer
+//! with different latencies (the paper's residual-block case). The fast
+//! path's FIFO must absorb at least the token-lag difference between the
+//! two paths or both paths stall permanently. `check_diamond_depths`
+//! verifies the declared depths against a conservative lag bound; the
+//! simulator would otherwise detect the deadlock dynamically.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, ensure, Result};
+
+use super::channel::Endpoint;
+use super::design::Design;
+
+/// Structural checks: endpoint sanity, token accounting per channel,
+/// single-producer/single-consumer, connectivity.
+pub fn validate_design(d: &Design) -> Result<()> {
+    ensure!(!d.nodes.is_empty(), "design has no nodes");
+    for (i, n) in d.nodes.iter().enumerate() {
+        ensure!(n.id == i, "node {} id mismatch", n.name);
+        ensure!(
+            n.in_channels.len() == n.geo.in_tokens.len(),
+            "node {}: {} in-channels vs {} activation inputs",
+            n.name,
+            n.in_channels.len(),
+            n.geo.in_tokens.len()
+        );
+        ensure!(!n.out_channels.is_empty(), "node {}: no out channels", n.name);
+        // broadcast consistency: all out channels carry the same token count
+        for &c in &n.out_channels {
+            let ch = d.channel(c);
+            ensure!(
+                ch.tokens_total == n.geo.out_tokens,
+                "node {}: out channel {} carries {} tokens, node produces {}",
+                n.name,
+                ch.name,
+                ch.tokens_total,
+                n.geo.out_tokens
+            );
+        }
+        for (slot, &c) in n.in_channels.iter().enumerate() {
+            let ch = d.channel(c);
+            ensure!(ch.dst == Endpoint::Node(i), "channel {} dst mismatch", ch.name);
+            ensure!(
+                ch.tokens_total == n.geo.in_tokens[slot],
+                "node {}: in channel {} token count mismatch",
+                n.name,
+                ch.name
+            );
+            ensure!(ch.lanes >= 1 && ch.lanes <= ch.token_len.max(1), "channel {} lanes", ch.name);
+            ensure!(ch.depth >= 1, "channel {} has zero depth", ch.name);
+        }
+    }
+    // each channel appears exactly once as input (or graph output)
+    let mut seen = vec![0usize; d.channels.len()];
+    for n in &d.nodes {
+        for &c in &n.in_channels {
+            seen[c.0] += 1;
+        }
+    }
+    for c in &d.channels {
+        match c.dst {
+            Endpoint::Node(_) => ensure!(seen[c.id.0] == 1, "channel {} consumers != 1", c.name),
+            Endpoint::GraphOutput => ensure!(seen[c.id.0] == 0, "output channel consumed"),
+            Endpoint::GraphInput => bail!("channel {} terminates at the input", c.name),
+        }
+    }
+    Ok(())
+}
+
+/// Conservative token-lag bound per node: how many input tokens the node
+/// may consume before emitting its first output token (warm-up), plus
+/// the reconvergence lag accumulated upstream.
+fn first_output_lag(d: &Design, node: usize, memo: &mut HashMap<usize, u64>) -> u64 {
+    if let Some(&v) = memo.get(&node) {
+        return v;
+    }
+    let n = &d.nodes[node];
+    let upstream = n
+        .in_channels
+        .iter()
+        .map(|&c| match d.channel(c).src {
+            Endpoint::Node(p) => first_output_lag(d, p, memo),
+            _ => 0,
+        })
+        .max()
+        .unwrap_or(0);
+    let v = upstream + n.geo.warmup_tokens;
+    memo.insert(node, v);
+    v
+}
+
+/// Check every reconvergent (diamond) input pair: the shallower path's
+/// FIFO depth must cover the lag difference. Returns the list of
+/// `(channel_name, required_depth)` violations.
+pub fn check_diamond_depths(d: &Design) -> Vec<(String, u64)> {
+    let mut memo = HashMap::new();
+    let mut bad = Vec::new();
+    for n in &d.nodes {
+        if n.in_channels.len() < 2 {
+            continue;
+        }
+        // lag of each input path
+        let lags: Vec<u64> = n
+            .in_channels
+            .iter()
+            .map(|&c| match d.channel(c).src {
+                Endpoint::Node(p) => first_output_lag(d, p, &mut memo),
+                _ => 0,
+            })
+            .collect();
+        let max_lag = *lags.iter().max().unwrap();
+        for (slot, &c) in n.in_channels.iter().enumerate() {
+            let ch = d.channel(c);
+            let need = max_lag - lags[slot];
+            if need > 0 && (ch.depth as u64) < need {
+                bad.push((ch.name.clone(), need));
+            }
+        }
+    }
+    bad
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::build::build_streaming_design;
+    use crate::ir::builder::models;
+
+    #[test]
+    fn all_paper_designs_validate() {
+        for (name, size) in models::table2_workloads() {
+            let g = models::paper_kernel(name, size.max(16)).unwrap();
+            let d = build_streaming_design(&g).unwrap();
+            validate_design(&d).unwrap_or_else(|e| panic!("{name}: {e}"));
+        }
+    }
+
+    #[test]
+    fn residual_skip_needs_deep_fifo() {
+        // With default shallow FIFOs, the skip channel of the residual
+        // diamond must be flagged as deadlock-prone.
+        let g = models::residual(32, 8, 8);
+        let d = build_streaming_design(&g).unwrap();
+        let bad = check_diamond_depths(&d);
+        assert!(
+            bad.iter().any(|(name, need)| name.starts_with("add0_in") && *need > 4),
+            "expected skip-FIFO violation, got {bad:?}"
+        );
+    }
+
+    #[test]
+    fn straight_pipelines_have_no_diamond_violations() {
+        let g = models::cascade(32, 8, 8);
+        let d = build_streaming_design(&g).unwrap();
+        assert!(check_diamond_depths(&d).is_empty());
+    }
+
+    #[test]
+    fn tampered_design_fails_validation() {
+        let g = models::conv_relu(16, 4, 4);
+        let mut d = build_streaming_design(&g).unwrap();
+        d.channels[0].tokens_total += 1;
+        assert!(validate_design(&d).is_err());
+    }
+}

@@ -1,0 +1,129 @@
+//! FIFO depth sizing from first-output-cycle estimates (paper §IV-C,
+//! final paragraph): the estimated cycle at which each node emits its
+//! first output token tells the DSE how much lag a reconvergent path can
+//! accumulate; the shallow side of every diamond gets a FIFO deep enough
+//! to absorb that lag, preventing deadlock in residual-style graphs.
+//! Plain producer→consumer chains keep small depths (the paper notes the
+//! estimates are conservative — future work integrates FIFOAdvisor).
+
+use std::collections::HashMap;
+
+use crate::dataflow::channel::Endpoint;
+use crate::dataflow::design::Design;
+
+/// Margin tokens added on top of the computed lag.
+pub const FIFO_MARGIN: usize = 4;
+/// Depth of ordinary (non-diamond) streams.
+pub const FIFO_BASE_DEPTH: usize = 4;
+
+/// Estimated *input-token lag*: how many tokens a node consumes before
+/// its first output appears (warm-up accumulated along the path).
+fn lag(d: &Design, node: usize, memo: &mut HashMap<usize, u64>) -> u64 {
+    if let Some(&v) = memo.get(&node) {
+        return v;
+    }
+    let n = &d.nodes[node];
+    let upstream = n
+        .in_channels
+        .iter()
+        .map(|&c| match d.channel(c).src {
+            Endpoint::Node(p) => lag(d, p, memo),
+            _ => 0,
+        })
+        .max()
+        .unwrap_or(0);
+    let v = upstream + n.geo.warmup_tokens;
+    memo.insert(node, v);
+    v
+}
+
+/// Assign depths to every channel: base depth everywhere, plus diamond
+/// lag absorption on reconvergent inputs. Also aligns channel lanes with
+/// the consuming node's reduction unroll (the stream constraint's width
+/// coupling: streams are read `unroll` values at a time).
+pub fn size_fifos(d: &mut Design) {
+    let mut memo = HashMap::new();
+    // compute all lags first (immutable pass)
+    let lags: Vec<u64> = (0..d.nodes.len()).map(|i| lag(d, i, &mut memo)).collect();
+
+    // Base depth covers the producer's pipeline latency: with II=1 the
+    // producer keeps `depth` results in flight, and the FIFO must absorb
+    // them for back-to-back streaming (this is the paper's "estimated
+    // clock cycles for the first element to appear in the output stream"
+    // sizing rule applied to straight edges).
+    let mut new_depths: Vec<usize> = d
+        .channels
+        .iter()
+        .map(|c| match c.src {
+            Endpoint::Node(p) => {
+                FIFO_BASE_DEPTH + d.nodes[p].timing.depth as usize + FIFO_MARGIN
+            }
+            _ => FIFO_BASE_DEPTH,
+        })
+        .collect();
+    for n in &d.nodes {
+        if n.in_channels.len() < 2 {
+            continue;
+        }
+        let in_lags: Vec<u64> = n
+            .in_channels
+            .iter()
+            .map(|&c| match d.channel(c).src {
+                Endpoint::Node(p) => lags[p],
+                _ => 0,
+            })
+            .collect();
+        let max_lag = *in_lags.iter().max().unwrap();
+        for (slot, &c) in n.in_channels.iter().enumerate() {
+            let need = (max_lag - in_lags[slot]) as usize;
+            if need > 0 {
+                new_depths[c.0] = new_depths[c.0].max(need + FIFO_MARGIN);
+            }
+        }
+    }
+    for (c, depth) in d.channels.iter_mut().zip(new_depths) {
+        c.depth = depth;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::build::build_streaming_design;
+    use crate::dataflow::validate::check_diamond_depths;
+    use crate::ir::builder::models;
+
+    #[test]
+    fn residual_skip_sized_to_cover_conv_lag() {
+        let g = models::residual(32, 8, 8);
+        let mut d = build_streaming_design(&g).unwrap();
+        size_fifos(&mut d);
+        let skip = d.channels.iter().find(|c| c.name == "add0_in0").unwrap();
+        // two conv warm-ups upstream of the deep path ⇒ ≥ 2 rows of lag
+        assert!(skip.depth as u64 >= 2 * 32, "skip depth {}", skip.depth);
+        assert!(check_diamond_depths(&d).is_empty());
+    }
+
+    #[test]
+    fn straight_chains_get_latency_covering_depth() {
+        let g = models::cascade(32, 8, 8);
+        let mut d = build_streaming_design(&g).unwrap();
+        size_fifos(&mut d);
+        for c in &d.channels {
+            // small (latency-order), never tensor-order
+            assert!(c.depth >= FIFO_BASE_DEPTH, "channel {}", c.name);
+            assert!(c.depth < 64, "channel {} depth {} too deep", c.name, c.depth);
+        }
+    }
+
+    #[test]
+    fn sizing_is_idempotent() {
+        let g = models::residual(32, 8, 8);
+        let mut d = build_streaming_design(&g).unwrap();
+        size_fifos(&mut d);
+        let depths: Vec<usize> = d.channels.iter().map(|c| c.depth).collect();
+        size_fifos(&mut d);
+        let again: Vec<usize> = d.channels.iter().map(|c| c.depth).collect();
+        assert_eq!(depths, again);
+    }
+}

@@ -1,0 +1,254 @@
+//! The lightweight ILP of paper Eq. (1), solved exactly.
+//!
+//!   minimize    Σ_v Cycles(v)
+//!   subject to  u_ℓ | trip(ℓ)                    (Unroll)
+//!               Σ u_ℓ·η_ℓd ≤ D_total             (DSP)
+//!               Σ u_ℓ·η_ℓb ≤ B_total             (BRAM)
+//!               κ_src(s),s = κ_dst(s),s          (Stream)
+//!
+//! Variables live on divisor lattices (`space::candidates`), so the
+//! integer program is a finite assignment problem; we solve it with
+//! depth-first branch-and-bound using per-node lower bounds on cycles,
+//! DSP and BRAM for pruning. Exact — no heuristics — and fast: paper
+//! kernels have ≤ 6 nodes × ≤ 96 candidates.
+
+use anyhow::{ensure, Result};
+
+use crate::dataflow::build::refresh_buffers;
+use crate::dataflow::design::Design;
+use crate::resources::device::DeviceSpec;
+
+use super::fifo::size_fifos;
+use super::space::{candidates, Candidate};
+
+/// DSE configuration.
+#[derive(Debug, Clone)]
+pub struct DseConfig {
+    pub device: DeviceSpec,
+    /// Reserve this many BRAM blocks for FIFO backing (refunded by the
+    /// post-solve FIFO sizing pass; see [`solve`] step 3).
+    pub bram_reserve: u64,
+}
+
+impl DseConfig {
+    pub fn new(device: DeviceSpec) -> Self {
+        Self { device, bram_reserve: 8 }
+    }
+}
+
+/// Outcome of the DSE.
+#[derive(Debug, Clone)]
+pub struct DseSolution {
+    /// Chosen candidate per node (same order as `design.nodes`).
+    pub chosen: Vec<Candidate>,
+    /// ILP objective value (Σ standalone node cycles).
+    pub objective: u64,
+    pub dsp_used: u64,
+    pub bram_used: u64,
+    /// Candidate-sets explored (search-effort metric for benches).
+    pub nodes_explored: u64,
+}
+
+/// Solve the ILP for `design`, assign the chosen timing to its nodes,
+/// re-derive buffer partitioning, and size FIFO depths.
+///
+/// Fails if no assignment satisfies the device constraints (the paper's
+/// "infeasible design" case — e.g. StreamHLS's Feed-Forward on KV260).
+pub fn solve(design: &mut Design, cfg: &DseConfig) -> Result<DseSolution> {
+    let cand: Vec<Vec<Candidate>> =
+        (0..design.nodes.len()).map(|i| candidates(design, i)).collect();
+    for (i, c) in cand.iter().enumerate() {
+        ensure!(!c.is_empty(), "node {} has no candidates", design.nodes[i].name);
+    }
+
+    let d_total = cfg.device.dsp;
+    let b_total = cfg.device.bram18k.saturating_sub(cfg.bram_reserve);
+
+    // Per-node minima for lower-bound pruning (suffix sums).
+    let n = cand.len();
+    let mut min_cycles = vec![0u64; n + 1];
+    let mut min_dsp = vec![0u64; n + 1];
+    let mut min_bram = vec![0u64; n + 1];
+    for i in (0..n).rev() {
+        min_cycles[i] =
+            min_cycles[i + 1] + cand[i].iter().map(|c| c.cycles).min().unwrap();
+        min_dsp[i] = min_dsp[i + 1] + cand[i].iter().map(|c| c.dsp).min().unwrap();
+        min_bram[i] = min_bram[i + 1] + cand[i].iter().map(|c| c.bram).min().unwrap();
+    }
+    ensure!(
+        min_dsp[0] <= d_total && min_bram[0] <= b_total,
+        "infeasible: minimal design needs {} DSP / {} BRAM, device allows {} / {}",
+        min_dsp[0],
+        min_bram[0],
+        d_total,
+        b_total
+    );
+
+    struct Search<'a> {
+        cand: &'a [Vec<Candidate>],
+        min_cycles: &'a [u64],
+        min_dsp: &'a [u64],
+        min_bram: &'a [u64],
+        d_total: u64,
+        b_total: u64,
+        best: u64,
+        best_pick: Vec<usize>,
+        pick: Vec<usize>,
+        explored: u64,
+    }
+
+    impl Search<'_> {
+        fn dfs(&mut self, i: usize, cycles: u64, dsp: u64, bram: u64) {
+            self.explored += 1;
+            if i == self.cand.len() {
+                if cycles < self.best {
+                    self.best = cycles;
+                    self.best_pick = self.pick.clone();
+                }
+                return;
+            }
+            for (k, c) in self.cand[i].iter().enumerate() {
+                let cy = cycles + c.cycles;
+                // candidates are cycle-sorted: once even the LB fails, stop
+                if cy + self.min_cycles[i + 1] >= self.best {
+                    break;
+                }
+                let ds = dsp + c.dsp;
+                let br = bram + c.bram;
+                if ds + self.min_dsp[i + 1] > self.d_total
+                    || br + self.min_bram[i + 1] > self.b_total
+                {
+                    continue;
+                }
+                self.pick.push(k);
+                self.dfs(i + 1, cy, ds, br);
+                self.pick.pop();
+            }
+        }
+    }
+
+    let mut s = Search {
+        cand: &cand,
+        min_cycles: &min_cycles,
+        min_dsp: &min_dsp,
+        min_bram: &min_bram,
+        d_total,
+        b_total,
+        best: u64::MAX,
+        best_pick: Vec::new(),
+        pick: Vec::new(),
+        explored: 0,
+    };
+    s.dfs(0, 0, 0, 0);
+    ensure!(s.best < u64::MAX, "DSE found no feasible assignment");
+
+    let chosen: Vec<Candidate> =
+        s.best_pick.iter().enumerate().map(|(i, &k)| cand[i][k]).collect();
+    let dsp_used: u64 = chosen.iter().map(|c| c.dsp).sum();
+    let bram_used: u64 = chosen.iter().map(|c| c.bram).sum();
+
+    // Apply timing, re-derive buffers, size FIFOs (stream constraint is
+    // honoured by construction: one `lanes` per channel).
+    for (node, c) in design.nodes.iter_mut().zip(&chosen) {
+        node.timing = c.timing;
+    }
+    refresh_buffers(design);
+    size_fifos(design);
+
+    Ok(DseSolution {
+        objective: s.best,
+        chosen,
+        dsp_used,
+        bram_used,
+        nodes_explored: s.explored,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::build::build_streaming_design;
+    use crate::dataflow::validate::{check_diamond_depths, validate_design};
+    use crate::ir::builder::models;
+    use crate::resources::estimate;
+
+    fn solve_kernel(name: &str, size: usize, dev: DeviceSpec) -> (Design, DseSolution) {
+        let g = models::paper_kernel(name, size).unwrap();
+        let mut d = build_streaming_design(&g).unwrap();
+        let sol = solve(&mut d, &DseConfig::new(dev)).unwrap();
+        (d, sol)
+    }
+
+    #[test]
+    fn conv_relu_full_unroll_on_kv260() {
+        // DSP budget 1248 admits the full 576-lane unroll (288 DSPs).
+        let (d, sol) = solve_kernel("conv_relu", 32, DeviceSpec::kv260());
+        assert_eq!(d.nodes[0].timing.mac_lanes, 576);
+        assert_eq!(sol.dsp_used, 288);
+        let r = estimate(&d, &DeviceSpec::kv260());
+        assert!(r.fits(), "{r}");
+    }
+
+    #[test]
+    fn dsp_cap_reduces_parallelism_monotonically() {
+        // Table IV: tighter DSP budgets → less unroll, higher objective.
+        let mut last_obj = 0;
+        let mut last_dsp = u64::MAX;
+        for cap in [1248u64, 250, 50] {
+            let (_, sol) =
+                solve_kernel("conv_relu", 32, DeviceSpec::kv260().with_dsp_limit(cap));
+            assert!(sol.dsp_used <= cap);
+            assert!(sol.objective >= last_obj, "objective must not improve with less DSP");
+            assert!(sol.dsp_used <= last_dsp);
+            last_obj = sol.objective;
+            last_dsp = sol.dsp_used;
+        }
+    }
+
+    #[test]
+    fn bram_constraint_limits_linear_partitioning() {
+        // A tiny BRAM budget forces a smaller reduction unroll on the
+        // 128-wide line buffer.
+        let (d, sol) = solve_kernel("linear", 0, DeviceSpec::kv260().with_bram_limit(40));
+        assert!(sol.bram_used <= 32, "bram {}", sol.bram_used);
+        assert!(d.nodes[0].timing.unroll_red <= 32);
+        let r = estimate(&d, &DeviceSpec::kv260().with_bram_limit(40));
+        assert!(r.fits(), "{r}");
+    }
+
+    #[test]
+    fn residual_design_is_deadlock_free_after_dse() {
+        let (d, _) = solve_kernel("residual", 32, DeviceSpec::kv260());
+        validate_design(&d).unwrap();
+        assert!(
+            check_diamond_depths(&d).is_empty(),
+            "DSE must size the skip FIFO: {:?}",
+            check_diamond_depths(&d)
+        );
+    }
+
+    #[test]
+    fn infeasible_when_dsp_below_minimum() {
+        let g = models::conv_relu(32, 8, 8);
+        let mut d = build_streaming_design(&g).unwrap();
+        // scalar conv still needs ≥1 DSP
+        let err = solve(&mut d, &DseConfig::new(DeviceSpec::kv260().with_dsp_limit(0)));
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn all_paper_kernels_solve_on_kv260() {
+        for (name, size) in models::table2_workloads() {
+            let (d, sol) = solve_kernel(name, size.max(32), DeviceSpec::kv260());
+            let r = estimate(&d, &DeviceSpec::kv260());
+            assert!(r.fits(), "{name}: {r}");
+            assert!(sol.objective > 0);
+        }
+    }
+
+    #[test]
+    fn search_effort_is_small() {
+        let (_, sol) = solve_kernel("feedforward", 0, DeviceSpec::kv260());
+        assert!(sol.nodes_explored < 200_000, "explored {}", sol.nodes_explored);
+    }
+}

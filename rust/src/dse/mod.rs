@@ -1,0 +1,23 @@
+//! Automatic design-space exploration (paper §IV-C, Eq. (1)).
+//!
+//! The DSE picks per-node loop unroll factors (and the derived stream
+//! widths, array partitionings and PIPELINE placements) minimizing the
+//! total cycle estimate subject to:
+//!
+//! * **Unroll**: every unroll factor divides its loop trip count;
+//! * **DSP**:  Σ ceil(lanes/2) ≤ D_total (int8 packing, `resources::dsp`);
+//! * **BRAM**: Σ partition-scaled buffer blocks + FIFO blocks ≤ B_total;
+//! * **Stream**: producer and consumer widths of every channel agree —
+//!   enforced *by construction* here, since a [`crate::dataflow::Channel`]
+//!   carries a single `lanes` field shared by both endpoints.
+//!
+//! The space is a product of divisor lattices (unroll | trip), small by
+//! construction, solved exactly with branch-and-bound ([`ilp`]). FIFO
+//! depths are then sized from first-output-cycle estimates ([`fifo`]),
+//! preventing diamond deadlocks (residual blocks).
+
+pub mod space;
+pub mod ilp;
+pub mod fifo;
+
+pub use ilp::{solve, DseConfig, DseSolution};

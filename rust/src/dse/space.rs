@@ -1,0 +1,178 @@
+//! Candidate enumeration over divisor lattices.
+
+use crate::analysis::classify::KernelClass;
+use crate::dataflow::design::Design;
+use crate::dataflow::node::NodeTiming;
+use crate::ir::types::DType;
+use crate::resources::bram::bram_blocks;
+use crate::resources::dsp::dsp_for_macs;
+
+/// All positive divisors of `n`, ascending.
+pub fn divisors(n: u64) -> Vec<u64> {
+    let mut out = Vec::new();
+    let mut i = 1;
+    while i * i <= n {
+        if n % i == 0 {
+            out.push(i);
+            if i != n / i {
+                out.push(n / i);
+            }
+        }
+        i += 1;
+    }
+    out.sort_unstable();
+    out
+}
+
+/// One unroll candidate for a node, with its pre-computed cost/resources.
+#[derive(Debug, Clone, Copy)]
+pub struct Candidate {
+    pub unroll_par: u64,
+    pub unroll_red: u64,
+    pub timing: NodeTiming,
+    /// Standalone cycle estimate with this timing (ILP objective term).
+    pub cycles: u64,
+    /// DSPs this candidate consumes.
+    pub dsp: u64,
+    /// BRAM blocks attributable to this node's partitioned buffers.
+    pub bram: u64,
+}
+
+/// Enumerate candidates for node `nid` of `d`, cheapest-cycles first.
+///
+/// * MAC nodes (conv / matmul): `u_par | out_features`, `u_red | red_trip`;
+///   pipeline depth grows with the log of the adder tree.
+/// * Pure-parallel nodes: fixed full-token-width ALU (no DSPs), II = 1 —
+///   they are never the bottleneck and need no exploration.
+pub fn candidates(d: &Design, nid: usize) -> Vec<Candidate> {
+    let n = &d.nodes[nid];
+    let op = &d.graph.ops[n.op_index];
+    if n.geo.macs_per_out_token == 0 {
+        let lanes = n.geo.out_token_len as u64;
+        let timing = NodeTiming {
+            mac_lanes: lanes,
+            ii: 1,
+            depth: 2,
+            unroll_par: lanes,
+            unroll_red: 1,
+        };
+        let mut node = n.clone();
+        node.timing = timing;
+        return vec![Candidate {
+            unroll_par: lanes,
+            unroll_red: 1,
+            timing,
+            cycles: node.standalone_cycles(),
+            dsp: 0,
+            bram: 0,
+        }];
+    }
+
+    let par_trip = n.geo.out_token_len as u64;
+    let red_trip = op.reduction_space().max(1);
+    let elem_bits = d.graph.tensor(op.inputs[0]).ty.dtype.bits();
+    // channel-dim bound for line-buffer partitioning (conv) — see
+    // dataflow::build::refresh_buffers
+    let chan_bound = *d.graph.tensor(op.inputs[0]).ty.shape.last().unwrap_or(&1) as u64;
+
+    let mut out = Vec::new();
+    for &up in &divisors(par_trip) {
+        for &ur in &divisors(red_trip) {
+            let lanes = up * ur;
+            let depth = 4 + (64 - (lanes.max(1)).leading_zeros() as u64); // log2 adder tree
+            let timing = NodeTiming {
+                mac_lanes: lanes,
+                ii: 1,
+                depth,
+                unroll_par: up,
+                unroll_red: ur,
+            };
+            let mut node = n.clone();
+            node.timing = timing;
+            let cycles = node.standalone_cycles();
+            let dsp = dsp_for_macs(lanes, DType::I8);
+            // BRAM contribution: partitioned line buffers only
+            let bram = match n.geo.class {
+                KernelClass::SlidingWindow(_) => {
+                    if let Some(lb) = n.geo.line_buffer {
+                        let part = ur.clamp(1, chan_bound);
+                        lb.rows as u64 * bram_blocks(lb.row_len as u64 * elem_bits, part)
+                    } else {
+                        0
+                    }
+                }
+                KernelClass::RegularReduction => {
+                    if let Some(lb) = n.geo.line_buffer {
+                        let part = ur.clamp(1, lb.row_len as u64);
+                        bram_blocks(lb.total_bits(), part)
+                    } else {
+                        0
+                    }
+                }
+                KernelClass::PureParallel => 0,
+            };
+            out.push(Candidate { unroll_par: up, unroll_red: ur, timing, cycles, dsp, bram });
+        }
+    }
+    out.sort_by_key(|c| (c.cycles, c.dsp, c.bram));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::build::build_streaming_design;
+    use crate::ir::builder::models;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn divisor_lattices() {
+        assert_eq!(divisors(1), vec![1]);
+        assert_eq!(divisors(8), vec![1, 2, 4, 8]);
+        assert_eq!(divisors(72).len(), 12);
+        forall("divisors divide", 100, |g| g.rng.range(1, 512), |&n| {
+            divisors(n).iter().all(|&d| n % d == 0)
+        });
+    }
+
+    #[test]
+    fn conv_candidates_cover_lattice() {
+        let g = models::conv_relu(32, 8, 8);
+        let d = build_streaming_design(&g).unwrap();
+        let cands = candidates(&d, 0);
+        // div(8)=4 × div(72)=12
+        assert_eq!(cands.len(), 48);
+        // every candidate satisfies the unroll-divides-trip constraint
+        for c in &cands {
+            assert_eq!(8 % c.unroll_par, 0);
+            assert_eq!(72 % c.unroll_red, 0);
+        }
+        // cheapest-first ordering
+        assert!(cands.windows(2).all(|w| w[0].cycles <= w[1].cycles));
+        // full unroll exists and is fastest
+        assert_eq!(cands[0].unroll_par, 8);
+        assert_eq!(cands[0].unroll_red, 72);
+        assert_eq!(cands[0].dsp, 288);
+    }
+
+    #[test]
+    fn pure_parallel_single_candidate() {
+        let g = models::conv_relu(32, 8, 8);
+        let d = build_streaming_design(&g).unwrap();
+        let cands = candidates(&d, 1);
+        assert_eq!(cands.len(), 1);
+        assert_eq!(cands[0].dsp, 0);
+    }
+
+    #[test]
+    fn more_unroll_more_resources_fewer_cycles() {
+        let g = models::linear();
+        let d = build_streaming_design(&g).unwrap();
+        let cands = candidates(&d, 0);
+        let scalar = cands.iter().find(|c| c.unroll_par == 1 && c.unroll_red == 1).unwrap();
+        let full = cands.iter().find(|c| c.unroll_par == 128 && c.unroll_red == 128).unwrap();
+        assert!(full.cycles < scalar.cycles);
+        assert!(full.dsp > scalar.dsp);
+        assert!(full.bram >= scalar.bram);
+    }
+}

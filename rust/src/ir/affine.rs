@@ -1,0 +1,260 @@
+//! Affine expressions and maps — the exact information MING's Algorithm 1
+//! and 2 inspect (paper Fig. 5).
+//!
+//! We support the canonical forms that appear in `linalg` indexing maps of
+//! CNN kernels: single dimensions `d_i`, scaled dims `c * d_i`, constants,
+//! and sums thereof (the sliding-window form `s*d_p + δ*d_r`).
+
+use std::fmt;
+
+/// An affine expression over loop dimensions `d0..dn`.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub enum AffineExpr {
+    /// `d_i`
+    Dim(usize),
+    /// integer constant
+    Const(i64),
+    /// `lhs + rhs`
+    Add(Box<AffineExpr>, Box<AffineExpr>),
+    /// `expr * c` (c constant)
+    Mul(Box<AffineExpr>, i64),
+}
+
+impl AffineExpr {
+    pub fn dim(i: usize) -> Self {
+        AffineExpr::Dim(i)
+    }
+
+    pub fn scaled(i: usize, c: i64) -> Self {
+        if c == 1 {
+            AffineExpr::Dim(i)
+        } else {
+            AffineExpr::Mul(Box::new(AffineExpr::Dim(i)), c)
+        }
+    }
+
+    pub fn add(self, other: AffineExpr) -> Self {
+        AffineExpr::Add(Box::new(self), Box::new(other))
+    }
+
+    /// Is this expression exactly a single bare dimension? Returns it.
+    /// (`IS_SINGLE_DIM` in paper Algorithm 2.)
+    pub fn single_dim(&self) -> Option<usize> {
+        match self {
+            AffineExpr::Dim(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    /// Decompose as a list of `(dim, coefficient)` terms plus a constant
+    /// offset, iff the expression is a linear combination of distinct dims.
+    /// This is the "try to rewrite E as A + B, each term (iterator·const)"
+    /// step in paper Algorithm 1 (generalized to any number of terms).
+    pub fn linear_terms(&self) -> Option<(Vec<(usize, i64)>, i64)> {
+        let mut terms: Vec<(usize, i64)> = Vec::new();
+        let mut konst = 0i64;
+        if !collect(self, 1, &mut terms, &mut konst) {
+            return None;
+        }
+        // merge duplicate dims
+        terms.sort_by_key(|&(d, _)| d);
+        let mut merged: Vec<(usize, i64)> = Vec::new();
+        for (d, c) in terms {
+            if let Some(last) = merged.last_mut() {
+                if last.0 == d {
+                    last.1 += c;
+                    continue;
+                }
+            }
+            merged.push((d, c));
+        }
+        merged.retain(|&(_, c)| c != 0);
+        return Some((merged, konst));
+
+        fn collect(
+            e: &AffineExpr,
+            scale: i64,
+            terms: &mut Vec<(usize, i64)>,
+            konst: &mut i64,
+        ) -> bool {
+            match e {
+                AffineExpr::Dim(i) => {
+                    terms.push((*i, scale));
+                    true
+                }
+                AffineExpr::Const(c) => {
+                    *konst += scale * c;
+                    true
+                }
+                AffineExpr::Add(a, b) => {
+                    collect(a, scale, terms, konst) && collect(b, scale, terms, konst)
+                }
+                AffineExpr::Mul(a, c) => collect(a, scale * c, terms, konst),
+            }
+        }
+    }
+
+    /// All dimensions referenced by this expression.
+    pub fn dims(&self) -> Vec<usize> {
+        let mut out = Vec::new();
+        self.visit_dims(&mut |d| out.push(d));
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+
+    fn visit_dims(&self, f: &mut impl FnMut(usize)) {
+        match self {
+            AffineExpr::Dim(i) => f(*i),
+            AffineExpr::Const(_) => {}
+            AffineExpr::Add(a, b) => {
+                a.visit_dims(f);
+                b.visit_dims(f);
+            }
+            AffineExpr::Mul(a, _) => a.visit_dims(f),
+        }
+    }
+
+    /// Evaluate at a concrete index vector.
+    pub fn eval(&self, idx: &[i64]) -> i64 {
+        match self {
+            AffineExpr::Dim(i) => idx[*i],
+            AffineExpr::Const(c) => *c,
+            AffineExpr::Add(a, b) => a.eval(idx) + b.eval(idx),
+            AffineExpr::Mul(a, c) => a.eval(idx) * c,
+        }
+    }
+}
+
+impl fmt::Display for AffineExpr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            AffineExpr::Dim(i) => write!(f, "d{i}"),
+            AffineExpr::Const(c) => write!(f, "{c}"),
+            AffineExpr::Add(a, b) => write!(f, "{a} + {b}"),
+            AffineExpr::Mul(a, c) => match a.as_ref() {
+                AffineExpr::Dim(i) => write!(f, "d{i} * {c}"),
+                other => write!(f, "({other}) * {c}"),
+            },
+        }
+    }
+}
+
+/// An affine map `(d0, ..., d{n-1}) -> (e0, ..., e{m-1})`.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct AffineMap {
+    pub num_dims: usize,
+    pub results: Vec<AffineExpr>,
+}
+
+impl AffineMap {
+    pub fn new(num_dims: usize, results: Vec<AffineExpr>) -> Self {
+        for r in &results {
+            for d in r.dims() {
+                assert!(d < num_dims, "map result references d{d} >= num_dims {num_dims}");
+            }
+        }
+        Self { num_dims, results }
+    }
+
+    /// The identity map over `n` dims: `(d0..dn) -> (d0..dn)`.
+    pub fn identity(n: usize) -> Self {
+        Self::new(n, (0..n).map(AffineExpr::Dim).collect())
+    }
+
+    /// Projection map selecting the given dims: `(d0..dn) -> (d_sel...)`.
+    pub fn select(num_dims: usize, sel: &[usize]) -> Self {
+        Self::new(num_dims, sel.iter().map(|&i| AffineExpr::Dim(i)).collect())
+    }
+
+    pub fn is_identity(&self) -> bool {
+        self.results.len() == self.num_dims
+            && self
+                .results
+                .iter()
+                .enumerate()
+                .all(|(i, e)| matches!(e, AffineExpr::Dim(d) if *d == i))
+    }
+
+    /// Evaluate the map at a concrete iteration point.
+    pub fn eval(&self, idx: &[i64]) -> Vec<i64> {
+        assert_eq!(idx.len(), self.num_dims);
+        self.results.iter().map(|e| e.eval(idx)).collect()
+    }
+}
+
+impl fmt::Display for AffineMap {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let dims: Vec<String> = (0..self.num_dims).map(|i| format!("d{i}")).collect();
+        let res: Vec<String> = self.results.iter().map(|e| e.to_string()).collect();
+        write!(f, "({}) -> ({})", dims.join(", "), res.join(", "))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_dim_detection() {
+        assert_eq!(AffineExpr::dim(3).single_dim(), Some(3));
+        assert_eq!(AffineExpr::scaled(3, 2).single_dim(), None);
+        assert_eq!(AffineExpr::Const(0).single_dim(), None);
+    }
+
+    #[test]
+    fn linear_terms_of_sliding_window_expr() {
+        // E = 2*d0 + 3*d4 (stride 2, dilation 3)
+        let e = AffineExpr::scaled(0, 2).add(AffineExpr::scaled(4, 3));
+        let (terms, k) = e.linear_terms().unwrap();
+        assert_eq!(terms, vec![(0, 2), (4, 3)]);
+        assert_eq!(k, 0);
+    }
+
+    #[test]
+    fn linear_terms_merges_and_drops_zero() {
+        // d1 + d1 + 0*d2 + 5
+        let e = AffineExpr::dim(1)
+            .add(AffineExpr::dim(1))
+            .add(AffineExpr::scaled(2, 0))
+            .add(AffineExpr::Const(5));
+        let (terms, k) = e.linear_terms().unwrap();
+        assert_eq!(terms, vec![(1, 2)]);
+        assert_eq!(k, 5);
+    }
+
+    #[test]
+    fn identity_map() {
+        let m = AffineMap::identity(4);
+        assert!(m.is_identity());
+        assert_eq!(m.eval(&[1, 2, 3, 4]), vec![1, 2, 3, 4]);
+        assert_eq!(m.to_string(), "(d0, d1, d2, d3) -> (d0, d1, d2, d3)");
+    }
+
+    #[test]
+    fn conv_input_map_eval() {
+        // (d0,d1,d2,d3,d4,d5) -> (d0+d3, d1+d4, d5): the paper's map1 shape
+        let m = AffineMap::new(
+            6,
+            vec![
+                AffineExpr::dim(0).add(AffineExpr::dim(3)),
+                AffineExpr::dim(1).add(AffineExpr::dim(4)),
+                AffineExpr::dim(5),
+            ],
+        );
+        assert!(!m.is_identity());
+        assert_eq!(m.eval(&[10, 20, 0, 1, 2, 3]), vec![11, 22, 3]);
+    }
+
+    #[test]
+    #[should_panic(expected = "references d5")]
+    fn map_rejects_out_of_range_dims() {
+        AffineMap::new(3, vec![AffineExpr::dim(5)]);
+    }
+
+    #[test]
+    fn select_map() {
+        let m = AffineMap::select(6, &[2, 3, 4, 5]);
+        assert_eq!(m.eval(&[0, 0, 7, 8, 9, 10]), vec![7, 8, 9, 10]);
+    }
+}

@@ -1,0 +1,458 @@
+//! Graph builder + the paper's five evaluation kernels.
+//!
+//! The builder plays the role of MING's front-end import path
+//! (ONNX/TensorFlow/PyTorch → IREE → `linalg`): it constructs
+//! `linalg.generic`-shaped ops with the exact indexing maps / iterator
+//! types the paper's Fig. 5 shows for CNN workloads.
+
+use super::affine::{AffineExpr, AffineMap};
+use super::generic::{GenericOp, IterType, Payload};
+use super::graph::{ModelGraph, TensorId, TensorKind};
+use super::types::{DType, TensorType};
+use crate::util::prng;
+
+/// Requantization shift shared with `python/compile/kernels/ref.py`.
+pub const REQUANT_SHIFT: u32 = 6;
+
+/// Incremental graph construction with SSA tensors.
+pub struct GraphBuilder {
+    g: ModelGraph,
+    n_ops: usize,
+}
+
+impl GraphBuilder {
+    pub fn new(name: impl Into<String>) -> Self {
+        Self { g: ModelGraph::new(name), n_ops: 0 }
+    }
+
+    pub fn input(&mut self, name: &str, shape: Vec<usize>, dtype: DType) -> TensorId {
+        self.g.add_tensor(name, TensorType::new(shape, dtype), TensorKind::Input, None)
+    }
+
+    pub fn weight(&mut self, name: &str, shape: Vec<usize>, data: Vec<i8>) -> TensorId {
+        self.g.add_tensor(name, TensorType::new(shape, dtype_i8()), TensorKind::Weight, Some(data))
+    }
+
+    /// Deterministic weight tensor from the PRNG shared with Python.
+    pub fn det_weight(&mut self, name: &str, shape: Vec<usize>, seed: u64) -> TensorId {
+        let n: usize = shape.iter().product();
+        self.weight(name, shape, prng::det_tensor(seed, n))
+    }
+
+    fn intermediate(&mut self, name: String, shape: Vec<usize>, dtype: DType) -> TensorId {
+        self.g.add_tensor(name, TensorType::new(shape, dtype), TensorKind::Intermediate, None)
+    }
+
+    fn push(&mut self, op: GenericOp) -> TensorId {
+        let out = op.output;
+        self.g.ops.push(op);
+        self.n_ops += 1;
+        out
+    }
+
+    /// 2-D convolution, NHWC(-without-N) input `(H, W, C)`, weights
+    /// `(F, K, K, C)`, same- or valid-padding; output `(H_out, W_out, F)`
+    /// int32 accumulators.
+    ///
+    /// Loop dims: `d0=h_out, d1=w_out, d2=f` (parallel),
+    /// `d3=kh, d4=kw, d5=c` (reduction). Input map results are the
+    /// sliding-window form `s·d_p + δ·d_r − pad` of paper Algorithm 1.
+    pub fn conv2d(
+        &mut self,
+        name: &str,
+        x: TensorId,
+        w: TensorId,
+        stride: usize,
+        pad: usize,
+    ) -> TensorId {
+        self.conv2d_dilated(name, x, w, stride, pad, 1)
+    }
+
+    pub fn conv2d_dilated(
+        &mut self,
+        name: &str,
+        x: TensorId,
+        w: TensorId,
+        stride: usize,
+        pad: usize,
+        dilation: usize,
+    ) -> TensorId {
+        let (h, wid, c) = {
+            let t = &self.g.tensor(x).ty;
+            assert_eq!(t.rank(), 3, "conv2d input must be (H,W,C)");
+            (t.shape[0], t.shape[1], t.shape[2])
+        };
+        let (f, k) = {
+            let t = &self.g.tensor(w).ty;
+            assert_eq!(t.rank(), 4, "conv2d weight must be (F,K,K,C)");
+            assert_eq!(t.shape[1], t.shape[2], "square kernels only");
+            assert_eq!(t.shape[3], c, "channel mismatch");
+            (t.shape[0], t.shape[1])
+        };
+        let keff = (k - 1) * dilation + 1;
+        let h_out = (h + 2 * pad - keff) / stride + 1;
+        let w_out = (wid + 2 * pad - keff) / stride + 1;
+        let out = self.intermediate(format!("{name}_acc"), vec![h_out, w_out, f], DType::I32);
+
+        let sw = |p: usize, r: usize| {
+            let e = AffineExpr::scaled(p, stride as i64).add(AffineExpr::scaled(r, dilation as i64));
+            if pad > 0 {
+                e.add(AffineExpr::Const(-(pad as i64)))
+            } else {
+                e
+            }
+        };
+        let x_map = AffineMap::new(6, vec![sw(0, 3), sw(1, 4), AffineExpr::dim(5)]);
+        let w_map = AffineMap::select(6, &[2, 3, 4, 5]);
+        let o_map = AffineMap::select(6, &[0, 1, 2]);
+        self.push(GenericOp {
+            name: name.into(),
+            inputs: vec![x, w],
+            output: out,
+            indexing_maps: vec![x_map, w_map, o_map],
+            iter_types: vec![
+                IterType::Parallel,
+                IterType::Parallel,
+                IterType::Parallel,
+                IterType::Reduction,
+                IterType::Reduction,
+                IterType::Reduction,
+            ],
+            dims: vec![h_out, w_out, f, k, k, c],
+            payload: Payload::MulAcc,
+            pad,
+        })
+    }
+
+    /// Matrix multiply `x (M,K) @ w (K,N) -> (M,N)` int32 accumulators.
+    /// Dims: `d0=m, d1=n` (parallel), `d2=k` (reduction) — the paper's
+    /// regular-reduction kernel.
+    pub fn linear(&mut self, name: &str, x: TensorId, w: TensorId) -> TensorId {
+        let (m, k) = {
+            let t = &self.g.tensor(x).ty;
+            assert_eq!(t.rank(), 2);
+            (t.shape[0], t.shape[1])
+        };
+        let n = {
+            let t = &self.g.tensor(w).ty;
+            assert_eq!(t.rank(), 2);
+            assert_eq!(t.shape[0], k, "contraction mismatch");
+            t.shape[1]
+        };
+        let out = self.intermediate(format!("{name}_acc"), vec![m, n], DType::I32);
+        let x_map = AffineMap::select(3, &[0, 2]);
+        let w_map = AffineMap::select(3, &[2, 1]);
+        let o_map = AffineMap::select(3, &[0, 1]);
+        self.push(GenericOp {
+            name: name.into(),
+            inputs: vec![x, w],
+            output: out,
+            indexing_maps: vec![x_map, w_map, o_map],
+            iter_types: vec![IterType::Parallel, IterType::Parallel, IterType::Reduction],
+            dims: vec![m, n, k],
+            payload: Payload::MulAcc,
+            pad: 0,
+        })
+    }
+
+    fn elementwise(&mut self, name: &str, ins: Vec<TensorId>, payload: Payload, out_dtype: DType) -> TensorId {
+        let shape = self.g.tensor(ins[0]).ty.shape.clone();
+        let rank = shape.len();
+        let out = self.intermediate(format!("{name}_out"), shape.clone(), out_dtype);
+        let maps = vec![AffineMap::identity(rank); ins.len() + 1];
+        self.push(GenericOp {
+            name: name.into(),
+            inputs: ins,
+            output: out,
+            indexing_maps: maps,
+            iter_types: vec![IterType::Parallel; rank],
+            dims: shape,
+            payload,
+            pad: 0,
+        })
+    }
+
+    /// ReLU (keeps the input dtype).
+    pub fn relu(&mut self, name: &str, x: TensorId) -> TensorId {
+        let dt = self.g.tensor(x).ty.dtype;
+        self.elementwise(name, vec![x], Payload::Relu, dt)
+    }
+
+    /// Requantize int32 accumulators to int8 (no ReLU).
+    pub fn requant(&mut self, name: &str, x: TensorId) -> TensorId {
+        self.elementwise(name, vec![x], Payload::Requant { shift: REQUANT_SHIFT }, DType::I8)
+    }
+
+    /// Fused ReLU + requantize: the paper's post-conv activation node.
+    pub fn relu_requant(&mut self, name: &str, x: TensorId) -> TensorId {
+        self.elementwise(name, vec![x], Payload::ReluRequant { shift: REQUANT_SHIFT }, DType::I8)
+    }
+
+    /// Saturating int8 addition (residual skip merge).
+    pub fn add_sat(&mut self, name: &str, a: TensorId, b: TensorId) -> TensorId {
+        assert_eq!(self.g.tensor(a).ty.shape, self.g.tensor(b).ty.shape, "add shape mismatch");
+        self.elementwise(name, vec![a, b], Payload::AddSat, DType::I8)
+    }
+
+    /// 2-D max-pooling `(H,W,C) -> (H/k, W/k, C)` — a sliding-window op
+    /// with a *single-input* window (no weights); used by extension tests.
+    pub fn maxpool2d(&mut self, name: &str, x: TensorId, k: usize, stride: usize) -> TensorId {
+        let (h, w, c) = {
+            let t = &self.g.tensor(x).ty;
+            (t.shape[0], t.shape[1], t.shape[2])
+        };
+        let h_out = (h - k) / stride + 1;
+        let w_out = (w - k) / stride + 1;
+        let dt = self.g.tensor(x).ty.dtype;
+        let out = self.intermediate(format!("{name}_out"), vec![h_out, w_out, c], dt);
+        let sw = |p: usize, r: usize| AffineExpr::scaled(p, stride as i64).add(AffineExpr::dim(r));
+        let x_map = AffineMap::new(5, vec![sw(0, 3), sw(1, 4), AffineExpr::dim(2)]);
+        let o_map = AffineMap::select(5, &[0, 1, 2]);
+        self.push(GenericOp {
+            name: name.into(),
+            inputs: vec![x],
+            output: out,
+            indexing_maps: vec![x_map, o_map],
+            iter_types: vec![
+                IterType::Parallel,
+                IterType::Parallel,
+                IterType::Parallel,
+                IterType::Reduction,
+                IterType::Reduction,
+            ],
+            dims: vec![h_out, w_out, c, k, k],
+            payload: Payload::MaxReduce,
+            pad: 0,
+        })
+    }
+
+    /// Mark a tensor as a graph output.
+    pub fn mark_output(&mut self, t: TensorId) {
+        self.g.tensors[t.0].kind = TensorKind::Output;
+    }
+
+    pub fn finish(self) -> ModelGraph {
+        self.g
+    }
+}
+
+fn dtype_i8() -> DType {
+    DType::I8
+}
+
+/// The five paper evaluation kernels (Table II) plus helpers.
+pub mod models {
+    use super::*;
+
+    /// Conv channel geometry fixed across the paper's size sweep
+    /// (see DESIGN.md; consistent with Table II's Vanilla cycle counts).
+    pub const CONV_C: usize = 8;
+    pub const CONV_F: usize = 8;
+    pub const CONV_K: usize = 3;
+
+    /// Linear geometry: batch-512 activations, 128 features.
+    pub const LIN_M: usize = 512;
+    pub const LIN_K: usize = 128;
+    pub const LIN_N: usize = 128;
+
+    fn conv_weight_shape(c: usize, f: usize) -> Vec<usize> {
+        vec![f, CONV_K, CONV_K, c]
+    }
+
+    /// Conv+ReLU single layer at `n`×`n` input.
+    pub fn conv_relu(n: usize, c: usize, f: usize) -> ModelGraph {
+        let mut b = GraphBuilder::new(format!("conv_relu_{n}"));
+        let x = b.input("x", vec![n, n, c], DType::I8);
+        let w = b.det_weight("w1", conv_weight_shape(c, f), prng::SEED_W1);
+        let acc = b.conv2d("conv0", x, w, 1, 1);
+        let y = b.relu_requant("rr0", acc);
+        b.mark_output(y);
+        b.finish()
+    }
+
+    /// Cascade Conv Block: two Conv+ReLU layers back to back.
+    pub fn cascade(n: usize, c: usize, f: usize) -> ModelGraph {
+        let mut b = GraphBuilder::new(format!("cascade_{n}"));
+        let x = b.input("x", vec![n, n, c], DType::I8);
+        let w1 = b.det_weight("w1", conv_weight_shape(c, f), prng::SEED_W1);
+        let w2 = b.det_weight("w2", conv_weight_shape(f, f), prng::SEED_W2);
+        let a0 = b.conv2d("conv0", x, w1, 1, 1);
+        let t = b.relu_requant("rr0", a0);
+        let a1 = b.conv2d("conv1", t, w2, 1, 1);
+        let y = b.relu_requant("rr1", a1);
+        b.mark_output(y);
+        b.finish()
+    }
+
+    /// Residual Block: `y = relu(x + requant(conv(relu(conv(x)))))` —
+    /// the diamond dataflow whose skip FIFO the DSE must size.
+    pub fn residual(n: usize, c: usize, f: usize) -> ModelGraph {
+        assert_eq!(c, f, "residual needs C == F for the skip add");
+        let mut b = GraphBuilder::new(format!("residual_{n}"));
+        let x = b.input("x", vec![n, n, c], DType::I8);
+        let w1 = b.det_weight("w1", conv_weight_shape(c, f), prng::SEED_W1);
+        let w2 = b.det_weight("w2", conv_weight_shape(f, f), prng::SEED_W2);
+        let a0 = b.conv2d("conv0", x, w1, 1, 1);
+        let t = b.relu_requant("rr0", a0);
+        let a1 = b.conv2d("conv1", t, w2, 1, 1);
+        let u = b.requant("req1", a1);
+        let s = b.add_sat("add0", x, u);
+        let y = b.relu("relu_out", s);
+        b.mark_output(y);
+        b.finish()
+    }
+
+    /// Linear 512x128 (one matmul + activation).
+    pub fn linear() -> ModelGraph {
+        let mut b = GraphBuilder::new("linear_0");
+        let x = b.input("x", vec![LIN_M, LIN_K], DType::I8);
+        let w = b.det_weight("w1", vec![LIN_K, LIN_N], prng::SEED_W1);
+        let acc = b.linear("mm0", x, w);
+        let y = b.relu_requant("rr0", acc);
+        b.mark_output(y);
+        b.finish()
+    }
+
+    /// Feed Forward: two cascaded Linear layers.
+    pub fn feedforward() -> ModelGraph {
+        let mut b = GraphBuilder::new("feedforward_0");
+        let x = b.input("x", vec![LIN_M, LIN_K], DType::I8);
+        let w1 = b.det_weight("w1", vec![LIN_K, LIN_N], prng::SEED_W1);
+        let w2 = b.det_weight("w2", vec![LIN_N, LIN_N], prng::SEED_W2);
+        let a0 = b.linear("mm0", x, w1);
+        let t = b.relu_requant("rr0", a0);
+        let a1 = b.linear("mm1", t, w2);
+        let y = b.relu_requant("rr1", a1);
+        b.mark_output(y);
+        b.finish()
+    }
+
+    /// A small but complete CNN beyond the paper's micro-kernels:
+    /// conv(3x3,C->F) -> maxpool(2x2) -> conv(3x3,F->F) -> maxpool(2x2).
+    /// Exercises stride-2 sliding windows and weight-less window nodes
+    /// through the whole pipeline (extension workload, not in Table II).
+    pub fn tiny_cnn(n: usize, c: usize, f: usize) -> ModelGraph {
+        let mut b = GraphBuilder::new(format!("tiny_cnn_{n}"));
+        let x = b.input("x", vec![n, n, c], DType::I8);
+        let w1 = b.det_weight("w1", conv_weight_shape(c, f), prng::SEED_W1);
+        let w2 = b.det_weight("w2", conv_weight_shape(f, f), prng::SEED_W2);
+        let a0 = b.conv2d("conv0", x, w1, 1, 1);
+        let t0 = b.relu_requant("rr0", a0);
+        let p0 = b.maxpool2d("pool0", t0, 2, 2);
+        let a1 = b.conv2d("conv1", p0, w2, 1, 1);
+        let t1 = b.relu_requant("rr1", a1);
+        let p1 = b.maxpool2d("pool1", t1, 2, 2);
+        b.mark_output(p1);
+        b.finish()
+    }
+
+    /// Paper kernel by name ("conv_relu" | "cascade" | "residual" |
+    /// "linear" | "feedforward") at input size `n` (ignored for linear/ff).
+    pub fn paper_kernel(name: &str, n: usize) -> anyhow::Result<ModelGraph> {
+        Ok(match name {
+            "conv_relu" => conv_relu(n, CONV_C, CONV_F),
+            "cascade" => cascade(n, CONV_C, CONV_F),
+            "residual" => residual(n, CONV_C, CONV_F),
+            "linear" => linear(),
+            "feedforward" => feedforward(),
+            other => anyhow::bail!("unknown paper kernel {other:?}"),
+        })
+    }
+
+    /// All Table II workloads as `(kernel, size)` pairs.
+    pub fn table2_workloads() -> Vec<(&'static str, usize)> {
+        vec![
+            ("conv_relu", 32),
+            ("conv_relu", 224),
+            ("cascade", 32),
+            ("cascade", 224),
+            ("residual", 32),
+            ("residual", 224),
+            ("linear", 0),
+            ("feedforward", 0),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::models::*;
+    use super::*;
+    use crate::ir::generic::IterType;
+
+    #[test]
+    fn all_paper_kernels_validate() {
+        for (name, size) in models::table2_workloads() {
+            let g = models::paper_kernel(name, size.max(8)).unwrap();
+            g.validate().unwrap_or_else(|e| panic!("{name}: {e}"));
+        }
+    }
+
+    #[test]
+    fn conv_maps_have_sliding_window_form() {
+        let g = conv_relu(16, 4, 4);
+        let conv = g.op("conv0").unwrap();
+        let x_map = &conv.indexing_maps[0];
+        // first result: d0 + d3 - 1 (stride 1, dilation 1, pad 1)
+        let (terms, k) = x_map.results[0].linear_terms().unwrap();
+        assert_eq!(terms, vec![(0, 1), (3, 1)]);
+        assert_eq!(k, -1);
+        assert_eq!(conv.iter_types[0], IterType::Parallel);
+        assert_eq!(conv.iter_types[3], IterType::Reduction);
+    }
+
+    #[test]
+    fn strided_dilated_conv_geometry() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", vec![16, 16, 2], DType::I8);
+        let w = b.det_weight("w", vec![2, 3, 3, 2], 1);
+        let acc = b.conv2d_dilated("c", x, w, 2, 0, 2);
+        let g = {
+            b.mark_output(acc);
+            b.finish()
+        };
+        // keff = 5; h_out = (16-5)/2+1 = 6
+        assert_eq!(g.tensor(acc).ty.shape, vec![6, 6, 2]);
+        g.validate().unwrap();
+        let (terms, _) = g.op("c").unwrap().indexing_maps[0].results[0].linear_terms().unwrap();
+        assert_eq!(terms, vec![(0, 2), (3, 2)]); // stride 2, dilation 2
+    }
+
+    #[test]
+    fn linear_is_regular_reduction_shape() {
+        let g = linear();
+        let mm = g.op("mm0").unwrap();
+        assert_eq!(mm.dims, vec![LIN_M, LIN_N, LIN_K]);
+        assert_eq!(mm.reduction_space(), LIN_K as u64);
+        // every input map result is a single dim (no compound exprs)
+        for m in mm.input_maps() {
+            for e in &m.results {
+                assert!(e.single_dim().is_some());
+            }
+        }
+    }
+
+    #[test]
+    fn maxpool_shapes() {
+        let mut b = GraphBuilder::new("mp");
+        let x = b.input("x", vec![8, 8, 4], DType::I8);
+        let y = b.maxpool2d("pool0", x, 2, 2);
+        b.mark_output(y);
+        let g = b.finish();
+        assert_eq!(g.tensor(y).ty.shape, vec![4, 4, 4]);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn feedforward_macs_double_linear() {
+        assert_eq!(feedforward().total_macs(), 2 * linear().total_macs());
+    }
+
+    #[test]
+    fn weights_match_python_prng() {
+        let g = conv_relu(8, CONV_C, CONV_F);
+        let w = g.weights()[0];
+        let expect = prng::det_tensor(prng::SEED_W1, CONV_F * 9 * CONV_C);
+        assert_eq!(w.data.as_ref().unwrap()[..16], expect[..16]);
+    }
+}

@@ -1,0 +1,296 @@
+//! `GenericOp` — the Rust mirror of `linalg.generic`.
+
+use std::fmt;
+
+use super::affine::AffineMap;
+use super::graph::TensorId;
+
+/// Iterator type of a loop dimension (paper Fig. 5 `iterator_types`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum IterType {
+    Parallel,
+    Reduction,
+}
+
+impl IterType {
+    pub fn name(self) -> &'static str {
+        match self {
+            IterType::Parallel => "parallel",
+            IterType::Reduction => "reduction",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "parallel" => Some(IterType::Parallel),
+            "reduction" => Some(IterType::Reduction),
+            _ => None,
+        }
+    }
+}
+
+/// Structured computation payload of a generic op (the `linalg` region
+/// body). MING only needs payloads rich enough for quantized CNNs; each
+/// variant defines bit-exact integer semantics mirrored by the Python
+/// oracle (`ref.py`) and executed by `sim::process`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Payload {
+    /// `out += in0 * in1` over the reduction dims (conv, matmul).
+    /// Accumulates in i32 from i8 operands.
+    MulAcc,
+    /// `out = max(in0, 0)` (ReLU on i32 accumulators or i8 data).
+    Relu,
+    /// `out = clamp(in0 >> shift, -128, 127)` (requantize i32 -> i8).
+    Requant { shift: u32 },
+    /// Fused `relu` then `requant` — produced by op fusion.
+    ReluRequant { shift: u32 },
+    /// `out = sat_i8(in0 + in1)` (residual addition).
+    AddSat,
+    /// `out = max(out, in0)` over reduction dims (maxpool).
+    MaxReduce,
+    /// `out = in0` (reshape-free copy; identity streaming node).
+    Copy,
+}
+
+impl Payload {
+    /// MAC (multiply-accumulate) operations per innermost iteration —
+    /// the quantity the DSP model scales by unroll factors.
+    pub fn macs_per_iter(self) -> u64 {
+        match self {
+            Payload::MulAcc => 1,
+            _ => 0,
+        }
+    }
+
+    /// Non-MAC ALU ops per iteration (adds, compares, shifts) — these map
+    /// to LUT fabric, not DSPs, in the integer-arithmetic resource model.
+    pub fn alu_per_iter(self) -> u64 {
+        match self {
+            Payload::MulAcc => 0,
+            Payload::Relu => 1,
+            Payload::Requant { .. } => 2,
+            Payload::ReluRequant { .. } => 3,
+            Payload::AddSat => 2,
+            Payload::MaxReduce => 1,
+            Payload::Copy => 0,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Payload::MulAcc => "mulacc",
+            Payload::Relu => "relu",
+            Payload::Requant { .. } => "requant",
+            Payload::ReluRequant { .. } => "relu_requant",
+            Payload::AddSat => "add_sat",
+            Payload::MaxReduce => "max_reduce",
+            Payload::Copy => "copy",
+        }
+    }
+}
+
+/// One `linalg.generic`-equivalent operation.
+///
+/// Indexing maps are ordered inputs-then-output: `indexing_maps[i]` is the
+/// map for `inputs[i]`, and `indexing_maps.last()` is the output map.
+#[derive(Debug, Clone)]
+pub struct GenericOp {
+    /// Unique op name within its graph (also the dataflow node name).
+    pub name: String,
+    /// Input tensor operands (activations first, then constants/weights).
+    pub inputs: Vec<TensorId>,
+    /// Single output tensor.
+    pub output: TensorId,
+    /// One map per input plus one for the output (last).
+    pub indexing_maps: Vec<AffineMap>,
+    /// Iterator type per loop dimension.
+    pub iter_types: Vec<IterType>,
+    /// Loop trip counts per dimension (`dims[i]` = trip of `d_i`).
+    pub dims: Vec<usize>,
+    /// The computation body.
+    pub payload: Payload,
+    /// Border padding applied to the first input when gathering windows
+    /// (same-padding conv). 0 for non-windowed ops.
+    pub pad: usize,
+}
+
+impl GenericOp {
+    /// The output indexing map.
+    pub fn output_map(&self) -> &AffineMap {
+        self.indexing_maps.last().expect("op has no maps")
+    }
+
+    /// Indexing maps of the inputs only.
+    pub fn input_maps(&self) -> &[AffineMap] {
+        &self.indexing_maps[..self.indexing_maps.len() - 1]
+    }
+
+    /// Trip count product over all dims (total iteration space).
+    pub fn iter_space(&self) -> u64 {
+        self.dims.iter().map(|&d| d as u64).product()
+    }
+
+    /// Trip count product over reduction dims only.
+    pub fn reduction_space(&self) -> u64 {
+        self.dims
+            .iter()
+            .zip(&self.iter_types)
+            .filter(|(_, t)| **t == IterType::Reduction)
+            .map(|(&d, _)| d as u64)
+            .product()
+    }
+
+    /// Trip count product over parallel dims only.
+    pub fn parallel_space(&self) -> u64 {
+        self.dims
+            .iter()
+            .zip(&self.iter_types)
+            .filter(|(_, t)| **t == IterType::Parallel)
+            .map(|(&d, _)| d as u64)
+            .product()
+    }
+
+    pub fn has_reduction(&self) -> bool {
+        self.iter_types.contains(&IterType::Reduction)
+    }
+
+    /// Structural well-formedness: map count, dim arities, trip counts.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.indexing_maps.len() == self.inputs.len() + 1,
+            "op {}: {} maps for {} inputs (+1 output expected)",
+            self.name,
+            self.indexing_maps.len(),
+            self.inputs.len()
+        );
+        anyhow::ensure!(
+            self.iter_types.len() == self.dims.len(),
+            "op {}: {} iter_types vs {} dims",
+            self.name,
+            self.iter_types.len(),
+            self.dims.len()
+        );
+        anyhow::ensure!(!self.dims.is_empty(), "op {}: empty iteration space", self.name);
+        for (i, m) in self.indexing_maps.iter().enumerate() {
+            anyhow::ensure!(
+                m.num_dims == self.dims.len(),
+                "op {}: map {i} has {} dims, op has {}",
+                self.name,
+                m.num_dims,
+                self.dims.len()
+            );
+        }
+        for (i, &d) in self.dims.iter().enumerate() {
+            anyhow::ensure!(d > 0, "op {}: dim d{i} has trip count 0", self.name);
+        }
+        // Output map of a well-formed linalg op uses only parallel dims.
+        for e in &self.output_map().results {
+            for d in e.dims() {
+                anyhow::ensure!(
+                    self.iter_types[d] == IterType::Parallel,
+                    "op {}: output map references reduction dim d{d}",
+                    self.name
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Display for GenericOp {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let its: Vec<&str> = self.iter_types.iter().map(|t| t.name()).collect();
+        writeln!(f, "linalg.generic \"{}\" {{", self.name)?;
+        writeln!(f, "  iterator_types = [{}]", its.join(", "))?;
+        writeln!(
+            f,
+            "  dims = [{}]",
+            self.dims.iter().map(|d| d.to_string()).collect::<Vec<_>>().join(", ")
+        )?;
+        for (i, m) in self.indexing_maps.iter().enumerate() {
+            let tag = if i + 1 == self.indexing_maps.len() { "out" } else { "in " };
+            writeln!(f, "  map[{tag}] = {m}")?;
+        }
+        writeln!(f, "  payload = {}", self.payload.name())?;
+        write!(f, "}}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::affine::{AffineExpr, AffineMap};
+
+    fn relu_op() -> GenericOp {
+        GenericOp {
+            name: "relu0".into(),
+            inputs: vec![TensorId(0)],
+            output: TensorId(1),
+            indexing_maps: vec![AffineMap::identity(3), AffineMap::identity(3)],
+            iter_types: vec![IterType::Parallel; 3],
+            dims: vec![8, 8, 4],
+            payload: Payload::Relu,
+            pad: 0,
+        }
+    }
+
+    #[test]
+    fn relu_validates_and_spaces() {
+        let op = relu_op();
+        op.validate().unwrap();
+        assert_eq!(op.iter_space(), 256);
+        assert_eq!(op.parallel_space(), 256);
+        assert_eq!(op.reduction_space(), 1);
+        assert!(!op.has_reduction());
+    }
+
+    #[test]
+    fn bad_map_count_rejected() {
+        let mut op = relu_op();
+        op.indexing_maps.pop();
+        assert!(op.validate().is_err());
+    }
+
+    #[test]
+    fn output_map_must_be_parallel() {
+        let mut op = relu_op();
+        op.iter_types[2] = IterType::Reduction;
+        // output identity map now references a reduction dim
+        assert!(op.validate().is_err());
+    }
+
+    #[test]
+    fn zero_trip_rejected() {
+        let mut op = relu_op();
+        op.dims[1] = 0;
+        assert!(op.validate().is_err());
+    }
+
+    #[test]
+    fn payload_cost_model() {
+        assert_eq!(Payload::MulAcc.macs_per_iter(), 1);
+        assert_eq!(Payload::Relu.macs_per_iter(), 0);
+        assert!(Payload::ReluRequant { shift: 6 }.alu_per_iter() > 0);
+    }
+
+    #[test]
+    fn display_is_readable() {
+        let s = relu_op().to_string();
+        assert!(s.contains("iterator_types = [parallel, parallel, parallel]"));
+        assert!(s.contains("payload = relu"));
+    }
+
+    #[test]
+    fn mixed_iters_spaces() {
+        let mut op = relu_op();
+        op.iter_types = vec![IterType::Parallel, IterType::Parallel, IterType::Reduction];
+        op.indexing_maps = vec![
+            AffineMap::identity(3),
+            AffineMap::new(3, vec![AffineExpr::dim(0), AffineExpr::dim(1)]),
+        ];
+        op.payload = Payload::MaxReduce;
+        op.validate().unwrap();
+        assert_eq!(op.parallel_space(), 64);
+        assert_eq!(op.reduction_space(), 4);
+    }
+}

@@ -1,0 +1,290 @@
+//! `ModelGraph` — a DAG of generic ops over SSA tensors.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::generic::GenericOp;
+use super::types::TensorType;
+
+/// Identifier of a tensor value within a graph.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TensorId(pub usize);
+
+/// Role of a tensor in the graph.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TensorKind {
+    /// External input (fed from host memory at run time).
+    Input,
+    /// Constant weights, baked into the design (BRAM/ROM on the FPGA).
+    Weight,
+    /// Produced by one op, consumed by other op(s).
+    Intermediate,
+    /// Graph output (streamed back to host memory).
+    Output,
+}
+
+/// A tensor value: type, role, and (for weights) constant data.
+#[derive(Debug, Clone)]
+pub struct TensorInfo {
+    pub id: TensorId,
+    pub name: String,
+    pub ty: TensorType,
+    pub kind: TensorKind,
+    /// Constant contents for `Weight` tensors (flat, row-major int8).
+    pub data: Option<Vec<i8>>,
+}
+
+/// A model: tensors + ops in (not necessarily sorted) creation order.
+#[derive(Debug, Clone, Default)]
+pub struct ModelGraph {
+    pub name: String,
+    pub tensors: Vec<TensorInfo>,
+    pub ops: Vec<GenericOp>,
+}
+
+impl ModelGraph {
+    pub fn new(name: impl Into<String>) -> Self {
+        Self { name: name.into(), tensors: Vec::new(), ops: Vec::new() }
+    }
+
+    pub fn tensor(&self, id: TensorId) -> &TensorInfo {
+        &self.tensors[id.0]
+    }
+
+    pub fn add_tensor(
+        &mut self,
+        name: impl Into<String>,
+        ty: TensorType,
+        kind: TensorKind,
+        data: Option<Vec<i8>>,
+    ) -> TensorId {
+        let id = TensorId(self.tensors.len());
+        if let Some(d) = &data {
+            assert_eq!(d.len(), ty.numel(), "constant data length mismatch");
+        }
+        self.tensors.push(TensorInfo { id, name: name.into(), ty, kind, data });
+        id
+    }
+
+    /// The op producing `t`, if any.
+    pub fn producer(&self, t: TensorId) -> Option<&GenericOp> {
+        self.ops.iter().find(|op| op.output == t)
+    }
+
+    /// Ops consuming `t` as a (non-weight) input.
+    pub fn consumers(&self, t: TensorId) -> Vec<&GenericOp> {
+        self.ops.iter().filter(|op| op.inputs.contains(&t)).collect()
+    }
+
+    pub fn inputs(&self) -> Vec<&TensorInfo> {
+        self.tensors.iter().filter(|t| t.kind == TensorKind::Input).collect()
+    }
+
+    pub fn outputs(&self) -> Vec<&TensorInfo> {
+        self.tensors.iter().filter(|t| t.kind == TensorKind::Output).collect()
+    }
+
+    pub fn weights(&self) -> Vec<&TensorInfo> {
+        self.tensors.iter().filter(|t| t.kind == TensorKind::Weight).collect()
+    }
+
+    /// Ops in topological (dataflow) order.
+    pub fn toposort(&self) -> Result<Vec<usize>> {
+        // producer index per tensor
+        let mut prod: HashMap<TensorId, usize> = HashMap::new();
+        for (i, op) in self.ops.iter().enumerate() {
+            ensure!(
+                prod.insert(op.output, i).is_none(),
+                "tensor {:?} has two producers",
+                op.output
+            );
+        }
+        let n = self.ops.len();
+        let mut indeg = vec![0usize; n];
+        let mut succ: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for (i, op) in self.ops.iter().enumerate() {
+            for inp in &op.inputs {
+                if let Some(&p) = prod.get(inp) {
+                    succ[p].push(i);
+                    indeg[i] += 1;
+                }
+            }
+        }
+        let mut q: Vec<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
+        let mut out = Vec::with_capacity(n);
+        while let Some(i) = q.pop() {
+            out.push(i);
+            for &s in &succ[i] {
+                indeg[s] -= 1;
+                if indeg[s] == 0 {
+                    q.push(s);
+                }
+            }
+        }
+        ensure!(out.len() == n, "graph {} has a cycle", self.name);
+        // stable order: sort ready sets by original index for determinism
+        // (Kahn above pops LIFO; re-run with deterministic tie-break)
+        let pos: HashMap<usize, usize> = out.iter().enumerate().map(|(k, &v)| (v, k)).collect();
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_by_key(|i| pos[i]);
+        Ok(out)
+    }
+
+    /// Whole-graph validation: op structure, operand existence, type/shape
+    /// agreement between indexing maps and tensor shapes.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(!self.ops.is_empty(), "graph {} has no ops", self.name);
+        for op in &self.ops {
+            op.validate().with_context(|| format!("validating op {}", op.name))?;
+            for (i, &inp) in op.inputs.iter().enumerate() {
+                ensure!(inp.0 < self.tensors.len(), "op {}: input {i} out of range", op.name);
+                let t = self.tensor(inp);
+                let m = &op.indexing_maps[i];
+                ensure!(
+                    m.results.len() == t.ty.rank(),
+                    "op {}: input {i} map arity {} != tensor rank {} ({})",
+                    op.name,
+                    m.results.len(),
+                    t.ty.rank(),
+                    t.name
+                );
+            }
+            ensure!(op.output.0 < self.tensors.len(), "op {}: output out of range", op.name);
+            let out_t = self.tensor(op.output);
+            ensure!(
+                op.output_map().results.len() == out_t.ty.rank(),
+                "op {}: output map arity {} != tensor rank {}",
+                op.name,
+                op.output_map().results.len(),
+                out_t.ty.rank()
+            );
+            ensure!(
+                out_t.kind != TensorKind::Input && out_t.kind != TensorKind::Weight,
+                "op {} writes to input/weight tensor {}",
+                op.name,
+                out_t.name
+            );
+            // Access-bounds check: every map result must stay within the
+            // operand shape at the iteration-space corners (affine => the
+            // extrema are at corners; `pad` relaxes the first input).
+            for (i, &inp) in op.inputs.iter().enumerate() {
+                let t = self.tensor(inp);
+                let pad = if i == 0 { op.pad as i64 } else { 0 };
+                let m = &op.indexing_maps[i];
+                let lo: Vec<i64> = vec![0; op.dims.len()];
+                let hi: Vec<i64> = op.dims.iter().map(|&d| d as i64 - 1).collect();
+                for (ax, e) in m.results.iter().enumerate() {
+                    let (vlo, vhi) = (e.eval(&lo).min(e.eval(&hi)), e.eval(&lo).max(e.eval(&hi)));
+                    ensure!(
+                        vlo >= -pad && vhi < t.ty.shape[ax] as i64 + pad,
+                        "op {}: input {i} axis {ax} accesses [{vlo},{vhi}] outside 0..{} (pad {pad})",
+                        op.name,
+                        t.ty.shape[ax]
+                    );
+                }
+            }
+        }
+        // all weight tensors must have data; all intermediates a producer
+        for t in &self.tensors {
+            match t.kind {
+                TensorKind::Weight => {
+                    ensure!(t.data.is_some(), "weight {} has no data", t.name)
+                }
+                TensorKind::Intermediate | TensorKind::Output => {
+                    ensure!(
+                        self.producer(t.id).is_some(),
+                        "tensor {} ({:?}) has no producer",
+                        t.name,
+                        t.kind
+                    );
+                }
+                TensorKind::Input => {}
+            }
+        }
+        self.toposort()?;
+        // exactly one external input and one output (paper kernels are SISO
+        // at the top level; residual skip reuses the same input tensor)
+        ensure!(!self.inputs().is_empty(), "graph {} has no input", self.name);
+        ensure!(!self.outputs().is_empty(), "graph {} has no output", self.name);
+        Ok(())
+    }
+
+    /// Total MAC count of the whole graph (workload size metric).
+    pub fn total_macs(&self) -> u64 {
+        self.ops.iter().map(|op| op.iter_space() * op.payload.macs_per_iter()).sum()
+    }
+
+    /// Find an op by name.
+    pub fn op(&self, name: &str) -> Result<&GenericOp> {
+        match self.ops.iter().find(|o| o.name == name) {
+            Some(o) => Ok(o),
+            None => bail!("no op named {name} in graph {}", self.name),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::builder::models;
+
+    #[test]
+    fn conv_relu_graph_validates() {
+        let g = models::conv_relu(32, 8, 8);
+        g.validate().unwrap();
+        assert_eq!(g.ops.len(), 2); // conv, relu+requant
+        assert_eq!(g.inputs().len(), 1);
+        assert_eq!(g.outputs().len(), 1);
+    }
+
+    #[test]
+    fn toposort_orders_producers_first() {
+        let g = models::cascade(32, 8, 8);
+        let order = g.toposort().unwrap();
+        let pos: Vec<usize> = {
+            let mut p = vec![0; order.len()];
+            for (k, &i) in order.iter().enumerate() {
+                p[i] = k;
+            }
+            p
+        };
+        for (i, op) in g.ops.iter().enumerate() {
+            for inp in &op.inputs {
+                if let Some(prod) = g.ops.iter().position(|o| o.output == *inp) {
+                    assert!(pos[prod] < pos[i], "op {} before its producer", op.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn residual_is_a_dag_with_fanout() {
+        let g = models::residual(32, 8, 8);
+        g.validate().unwrap();
+        let input = g.inputs()[0].id;
+        assert!(g.consumers(input).len() >= 2, "residual input must fan out");
+    }
+
+    #[test]
+    fn total_macs_conv() {
+        let g = models::conv_relu(32, 8, 8);
+        // conv: 32*32*8 outputs * 3*3*8 reduction = 589824 MACs
+        assert_eq!(g.total_macs(), 32 * 32 * 8 * 9 * 8);
+    }
+
+    #[test]
+    fn double_producer_rejected() {
+        let mut g = models::conv_relu(8, 4, 4);
+        let dup = g.ops[0].clone();
+        g.ops.push(dup);
+        assert!(g.toposort().is_err() || g.validate().is_err());
+    }
+
+    #[test]
+    fn op_lookup() {
+        let g = models::conv_relu(8, 4, 4);
+        assert!(g.op("conv0").is_ok());
+        assert!(g.op("nonexistent").is_err());
+    }
+}

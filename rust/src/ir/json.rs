@@ -1,0 +1,475 @@
+//! Dependency-free JSON (de)serialization for model graphs — the stand-in
+//! for the paper's ONNX/TensorFlow/PyTorch front-ends. A model file lists
+//! layers; `import_model` lowers them through [`GraphBuilder`] into
+//! `linalg.generic` form exactly like the builder API.
+//!
+//! ```json
+//! {
+//!   "name": "tiny",
+//!   "input": {"shape": [32, 32, 8], "dtype": "i8"},
+//!   "layers": [
+//!     {"op": "conv2d", "filters": 8, "kernel": 3, "stride": 1, "pad": 1,
+//!      "seed": 101, "activation": "relu"},
+//!     {"op": "linear", "features": 128, "seed": 202}
+//!   ]
+//! }
+//! ```
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::builder::GraphBuilder;
+use super::graph::ModelGraph;
+use super::types::DType;
+
+/// A JSON value (numbers kept as f64; ints round-trip exactly to 2^53).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(BTreeMap<String, Json>),
+}
+
+impl Json {
+    pub fn as_obj(&self) -> Result<&BTreeMap<String, Json>> {
+        match self {
+            Json::Obj(m) => Ok(m),
+            other => bail!("expected object, got {other:?}"),
+        }
+    }
+
+    pub fn as_arr(&self) -> Result<&[Json]> {
+        match self {
+            Json::Arr(v) => Ok(v),
+            other => bail!("expected array, got {other:?}"),
+        }
+    }
+
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Json::Str(s) => Ok(s),
+            other => bail!("expected string, got {other:?}"),
+        }
+    }
+
+    pub fn as_usize(&self) -> Result<usize> {
+        match self {
+            Json::Num(n) if *n >= 0.0 && n.fract() == 0.0 => Ok(*n as usize),
+            other => bail!("expected non-negative integer, got {other:?}"),
+        }
+    }
+
+    pub fn as_i64(&self) -> Result<i64> {
+        match self {
+            Json::Num(n) if n.fract() == 0.0 => Ok(*n as i64),
+            other => bail!("expected integer, got {other:?}"),
+        }
+    }
+
+    pub fn get(&self, key: &str) -> Result<&Json> {
+        match self.as_obj()?.get(key) {
+            Some(v) => Ok(v),
+            None => bail!("missing key {key:?}"),
+        }
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a Json) -> &'a Json {
+        self.as_obj().ok().and_then(|m| m.get(key)).unwrap_or(default)
+    }
+
+    /// Serialize to a compact string.
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        self.write(&mut s);
+        s
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => {
+                let _ = write!(out, "{b}");
+            }
+            Json::Num(n) => {
+                if n.fract() == 0.0 && n.abs() < 9e15 {
+                    let _ = write!(out, "{}", *n as i64);
+                } else {
+                    let _ = write!(out, "{n}");
+                }
+            }
+            Json::Str(s) => {
+                out.push('"');
+                for c in s.chars() {
+                    match c {
+                        '"' => out.push_str("\\\""),
+                        '\\' => out.push_str("\\\\"),
+                        '\n' => out.push_str("\\n"),
+                        '\t' => out.push_str("\\t"),
+                        '\r' => out.push_str("\\r"),
+                        c if (c as u32) < 0x20 => {
+                            let _ = write!(out, "\\u{:04x}", c as u32);
+                        }
+                        c => out.push(c),
+                    }
+                }
+                out.push('"');
+            }
+            Json::Arr(v) => {
+                out.push('[');
+                for (i, x) in v.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    x.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(m) => {
+                out.push('{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    Json::Str(k.clone()).write(out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+/// Parse a JSON document.
+pub fn parse(text: &str) -> Result<Json> {
+    let mut p = Parser { b: text.as_bytes(), i: 0 };
+    p.ws();
+    let v = p.value()?;
+    p.ws();
+    ensure!(p.i == p.b.len(), "trailing garbage at byte {}", p.i);
+    Ok(v)
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn ws(&mut self) {
+        while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Result<u8> {
+        match self.b.get(self.i) {
+            Some(c) => Ok(*c),
+            None => bail!("unexpected end of input"),
+        }
+    }
+
+    fn expect(&mut self, c: u8) -> Result<()> {
+        ensure!(self.peek()? == c, "expected {:?} at byte {}", c as char, self.i);
+        self.i += 1;
+        Ok(())
+    }
+
+    fn value(&mut self) -> Result<Json> {
+        match self.peek()? {
+            b'{' => self.object(),
+            b'[' => self.array(),
+            b'"' => Ok(Json::Str(self.string()?)),
+            b't' => self.lit("true", Json::Bool(true)),
+            b'f' => self.lit("false", Json::Bool(false)),
+            b'n' => self.lit("null", Json::Null),
+            b'-' | b'0'..=b'9' => self.number(),
+            c => bail!("unexpected char {:?} at byte {}", c as char, self.i),
+        }
+    }
+
+    fn lit(&mut self, s: &str, v: Json) -> Result<Json> {
+        ensure!(
+            self.b[self.i..].starts_with(s.as_bytes()),
+            "bad literal at byte {}",
+            self.i
+        );
+        self.i += s.len();
+        Ok(v)
+    }
+
+    fn number(&mut self) -> Result<Json> {
+        let start = self.i;
+        if self.peek()? == b'-' {
+            self.i += 1;
+        }
+        while self.i < self.b.len()
+            && matches!(self.b[self.i], b'0'..=b'9' | b'.' | b'e' | b'E' | b'+' | b'-')
+        {
+            self.i += 1;
+        }
+        let s = std::str::from_utf8(&self.b[start..self.i])?;
+        Ok(Json::Num(s.parse::<f64>().with_context(|| format!("bad number {s:?}"))?))
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            let c = self.peek()?;
+            self.i += 1;
+            match c {
+                b'"' => return Ok(out),
+                b'\\' => {
+                    let e = self.peek()?;
+                    self.i += 1;
+                    match e {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'n' => out.push('\n'),
+                        b't' => out.push('\t'),
+                        b'r' => out.push('\r'),
+                        b'b' => out.push('\u{8}'),
+                        b'f' => out.push('\u{c}'),
+                        b'u' => {
+                            ensure!(self.i + 4 <= self.b.len(), "bad \\u escape");
+                            let hex = std::str::from_utf8(&self.b[self.i..self.i + 4])?;
+                            let cp = u32::from_str_radix(hex, 16)?;
+                            self.i += 4;
+                            out.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
+                        }
+                        other => bail!("bad escape \\{}", other as char),
+                    }
+                }
+                c if c < 0x20 => bail!("raw control char in string"),
+                c if c < 0x80 => out.push(c as char),
+                _ => {
+                    // multi-byte utf-8: re-decode from the byte slice
+                    let start = self.i - 1;
+                    let s = std::str::from_utf8(&self.b[start..])?;
+                    let ch = s.chars().next().unwrap();
+                    out.push(ch);
+                    self.i = start + ch.len_utf8();
+                }
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json> {
+        self.expect(b'[')?;
+        self.ws();
+        let mut out = Vec::new();
+        if self.peek()? == b']' {
+            self.i += 1;
+            return Ok(Json::Arr(out));
+        }
+        loop {
+            out.push(self.value()?);
+            self.ws();
+            match self.peek()? {
+                b',' => {
+                    self.i += 1;
+                    self.ws();
+                }
+                b']' => {
+                    self.i += 1;
+                    return Ok(Json::Arr(out));
+                }
+                c => bail!("expected , or ] got {:?}", c as char),
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<Json> {
+        self.expect(b'{')?;
+        self.ws();
+        let mut out = BTreeMap::new();
+        if self.peek()? == b'}' {
+            self.i += 1;
+            return Ok(Json::Obj(out));
+        }
+        loop {
+            let k = self.string()?;
+            self.ws();
+            self.expect(b':')?;
+            self.ws();
+            out.insert(k, self.value()?);
+            self.ws();
+            match self.peek()? {
+                b',' => {
+                    self.i += 1;
+                    self.ws();
+                }
+                b'}' => {
+                    self.i += 1;
+                    return Ok(Json::Obj(out));
+                }
+                c => bail!("expected , or }} got {:?}", c as char),
+            }
+        }
+    }
+}
+
+/// Import a layered model description into a `ModelGraph`.
+pub fn import_model(text: &str) -> Result<ModelGraph> {
+    let doc = parse(text)?;
+    let name = doc.get("name")?.as_str()?.to_string();
+    let input = doc.get("input")?;
+    let shape: Vec<usize> = input
+        .get("shape")?
+        .as_arr()?
+        .iter()
+        .map(|v| v.as_usize())
+        .collect::<Result<_>>()?;
+    let dtype = DType::parse(input.get_or("dtype", &Json::Str("i8".into())).as_str()?)
+        .context("bad input dtype")?;
+
+    let relu_default = Json::Str("relu".into());
+    let mut b = GraphBuilder::new(name);
+    let mut cur = b.input("x", shape.clone(), dtype);
+    let mut cur_shape = shape;
+    for (li, layer) in doc.get("layers")?.as_arr()?.iter().enumerate() {
+        let op = layer.get("op")?.as_str()?;
+        let seed = layer.get_or("seed", &Json::Num(100.0 + li as f64)).as_i64()? as u64;
+        match op {
+            "conv2d" => {
+                ensure!(cur_shape.len() == 3, "conv2d needs (H,W,C) input at layer {li}");
+                let f = layer.get("filters")?.as_usize()?;
+                let k = layer.get_or("kernel", &Json::Num(3.0)).as_usize()?;
+                let stride = layer.get_or("stride", &Json::Num(1.0)).as_usize()?;
+                let pad = layer.get_or("pad", &Json::Num((k / 2) as f64)).as_usize()?;
+                let c = cur_shape[2];
+                let w = b.det_weight(&format!("w{li}"), vec![f, k, k, c], seed);
+                let acc = b.conv2d(&format!("conv{li}"), cur, w, stride, pad);
+                let act = layer.get_or("activation", &relu_default).as_str()?;
+                cur = match act {
+                    "relu" => b.relu_requant(&format!("rr{li}"), acc),
+                    "none" => b.requant(&format!("req{li}"), acc),
+                    other => bail!("unknown activation {other:?}"),
+                };
+                let keff = k;
+                cur_shape = vec![
+                    (cur_shape[0] + 2 * pad - keff) / stride + 1,
+                    (cur_shape[1] + 2 * pad - keff) / stride + 1,
+                    f,
+                ];
+            }
+            "maxpool2d" => {
+                let k = layer.get_or("kernel", &Json::Num(2.0)).as_usize()?;
+                let stride = layer.get_or("stride", &Json::Num(k as f64)).as_usize()?;
+                cur = b.maxpool2d(&format!("pool{li}"), cur, k, stride);
+                cur_shape = vec![
+                    (cur_shape[0] - k) / stride + 1,
+                    (cur_shape[1] - k) / stride + 1,
+                    cur_shape[2],
+                ];
+            }
+            "linear" => {
+                ensure!(cur_shape.len() == 2, "linear needs (M,K) input at layer {li}");
+                let n = layer.get("features")?.as_usize()?;
+                let w = b.det_weight(&format!("w{li}"), vec![cur_shape[1], n], seed);
+                let acc = b.linear(&format!("mm{li}"), cur, w);
+                let act = layer.get_or("activation", &relu_default).as_str()?;
+                cur = match act {
+                    "relu" => b.relu_requant(&format!("rr{li}"), acc),
+                    "none" => b.requant(&format!("req{li}"), acc),
+                    other => bail!("unknown activation {other:?}"),
+                };
+                cur_shape = vec![cur_shape[0], n];
+            }
+            other => bail!("unknown layer op {other:?} at layer {li}"),
+        }
+    }
+    b.mark_output(cur);
+    let g = b.finish();
+    g.validate()?;
+    Ok(g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        let src = r#"{"a": [1, 2.5, "x\n", true, null], "b": {"c": -3}}"#;
+        let v = parse(src).unwrap();
+        let v2 = parse(&v.render()).unwrap();
+        assert_eq!(v, v2);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(parse("{").is_err());
+        assert!(parse("[1,]").is_err());
+        assert!(parse("{}extra").is_err());
+        assert!(parse("'single'").is_err());
+    }
+
+    #[test]
+    fn parse_utf8_and_escapes() {
+        let v = parse(r#""Aé\t""#).unwrap();
+        assert_eq!(v, Json::Str("Aé\t".into()));
+    }
+
+    #[test]
+    fn import_two_layer_model() {
+        let g = import_model(
+            r#"{
+              "name": "tiny",
+              "input": {"shape": [16, 16, 4], "dtype": "i8"},
+              "layers": [
+                {"op": "conv2d", "filters": 8, "kernel": 3, "seed": 101},
+                {"op": "conv2d", "filters": 4, "kernel": 3, "seed": 202}
+              ]
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(g.ops.len(), 4); // 2x (conv + relu_requant)
+        assert_eq!(g.outputs()[0].ty.shape, vec![16, 16, 4]);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn import_mlp() {
+        let g = import_model(
+            r#"{
+              "name": "mlp",
+              "input": {"shape": [64, 32]},
+              "layers": [
+                {"op": "linear", "features": 16},
+                {"op": "linear", "features": 8, "activation": "none"}
+              ]
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(g.outputs()[0].ty.shape, vec![64, 8]);
+    }
+
+    #[test]
+    fn import_rejects_bad_layer() {
+        let err = import_model(
+            r#"{"name":"x","input":{"shape":[8,8,2]},
+                "layers":[{"op":"transformer"}]}"#,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("unknown layer op"));
+    }
+
+    #[test]
+    fn import_conv_then_pool() {
+        let g = import_model(
+            r#"{"name":"cp","input":{"shape":[16,16,4]},
+                "layers":[{"op":"conv2d","filters":4},
+                          {"op":"maxpool2d","kernel":2}]}"#,
+        )
+        .unwrap();
+        assert_eq!(g.outputs()[0].ty.shape, vec![8, 8, 4]);
+    }
+}

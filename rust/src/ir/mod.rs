@@ -1,0 +1,26 @@
+//! `linalg.generic`-style IR.
+//!
+//! MING's analyses (paper §IV-A) operate on exactly three pieces of
+//! structural information per op: the **affine indexing maps** of each
+//! operand, the **iterator types** (parallel / reduction) of each loop
+//! dimension, and the loop **trip counts**. This module represents those
+//! faithfully — one [`generic::GenericOp`] corresponds to one
+//! `linalg.generic` in the paper's MLIR input (produced there by IREE).
+//!
+//! A [`graph::ModelGraph`] is an SSA-ish DAG of generic ops over tensors;
+//! [`builder`] provides the CNN op constructors (conv2d, relu, linear,
+//! add, maxpool) and the five paper evaluation kernels; [`json`] is a
+//! dependency-free (de)serializer so models can be loaded from files —
+//! the stand-in for the paper's ONNX/TensorFlow/PyTorch front-ends.
+
+pub mod types;
+pub mod affine;
+pub mod generic;
+pub mod builder;
+pub mod graph;
+pub mod json;
+
+pub use affine::{AffineExpr, AffineMap};
+pub use generic::{GenericOp, IterType, Payload};
+pub use graph::{ModelGraph, TensorId, TensorInfo, TensorKind};
+pub use types::{DType, TensorType};

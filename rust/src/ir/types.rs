@@ -1,0 +1,116 @@
+//! Element types and tensor types.
+
+use std::fmt;
+
+/// Element dtypes supported by the quantized-CNN pipeline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    I8,
+    I16,
+    I32,
+    F32,
+}
+
+impl DType {
+    /// Bit width of one element (for BRAM packing and stream widths).
+    pub fn bits(self) -> u64 {
+        match self {
+            DType::I8 => 8,
+            DType::I16 => 16,
+            DType::I32 | DType::F32 => 32,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::I8 => "i8",
+            DType::I16 => "i16",
+            DType::I32 => "i32",
+            DType::F32 => "f32",
+        }
+    }
+
+    /// The HLS C++ spelling (`ap_int`-free: plain stdint types).
+    pub fn cpp(self) -> &'static str {
+        match self {
+            DType::I8 => "int8_t",
+            DType::I16 => "int16_t",
+            DType::I32 => "int32_t",
+            DType::F32 => "float",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "i8" => Some(DType::I8),
+            "i16" => Some(DType::I16),
+            "i32" => Some(DType::I32),
+            "f32" => Some(DType::F32),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for DType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// A ranked tensor type: shape + element dtype.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct TensorType {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorType {
+    pub fn new(shape: Vec<usize>, dtype: DType) -> Self {
+        Self { shape, dtype }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Total element count.
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// Total size in bits (for resource estimation).
+    pub fn bits(&self) -> u64 {
+        self.numel() as u64 * self.dtype.bits()
+    }
+}
+
+impl fmt::Display for TensorType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let dims: Vec<String> = self.shape.iter().map(|d| d.to_string()).collect();
+        write!(f, "tensor<{}x{}>", dims.join("x"), self.dtype)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dtype_bits_and_roundtrip() {
+        for d in [DType::I8, DType::I16, DType::I32, DType::F32] {
+            assert_eq!(DType::parse(d.name()), Some(d));
+        }
+        assert_eq!(DType::I8.bits(), 8);
+        assert_eq!(DType::I32.bits(), 32);
+        assert_eq!(DType::parse("i64"), None);
+    }
+
+    #[test]
+    fn tensor_type_math() {
+        let t = TensorType::new(vec![32, 32, 8], DType::I8);
+        assert_eq!(t.numel(), 8192);
+        assert_eq!(t.bits(), 65536);
+        assert_eq!(t.to_string(), "tensor<32x32x8xi8>");
+        assert_eq!(t.rank(), 3);
+    }
+}

@@ -1,0 +1,66 @@
+//! # MING — an automated CNN-to-edge HLS framework (paper reproduction)
+//!
+//! Rust re-implementation of *MING: An Automated CNN-to-Edge MLIR HLS
+//! framework* (Bi, Schütze, Castrillon; CS.AR 2026), built as the L3 layer
+//! of a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **`ir`** — a `linalg.generic`-style IR (affine indexing maps, iterator
+//!   types, structured payloads) plus builders for the paper's CNN ops.
+//! * **`analysis`** — the paper's Algorithm 1 (sliding-window detection with
+//!   stride/dilation extraction) and Algorithm 2 (iterator classification
+//!   into P/R/O/W sets), and kernel-class assignment.
+//! * **`dataflow`** — construction of the fully streaming KPN architecture:
+//!   FIFO channels, line buffers, window buffers; no intermediate tensors.
+//! * **`resources`** — the hardware model: BRAM18K packing, DSP-per-MAC for
+//!   integer arithmetic, LUT/LUTRAM/FF fabric estimation, device database
+//!   (Kria KV260 et al.).
+//! * **`dse`** — the lightweight ILP of paper Eq. (1): minimize Σ cycles
+//!   subject to unroll|trip, DSP, BRAM and stream-matching constraints,
+//!   solved exactly by branch-and-bound over divisor lattices; FIFO depth
+//!   sizing from first-output-cycle estimates (deadlock avoidance for
+//!   diamonds).
+//! * **`codegen`** — the `emithls` equivalent: Vitis-HLS C++ emission with
+//!   automatic STREAM / UNROLL / PIPELINE / DATAFLOW / ARRAY_PARTITION /
+//!   BIND_STORAGE pragma insertion.
+//! * **`sim`** — the Vitis-HLS substitute: a timestamped-token KPN simulator
+//!   that executes designs functionally (bit-exact int8 semantics) while
+//!   modeling II, pipeline depth, line-buffer warm-up, FIFO back-pressure
+//!   and DATAFLOW overlap, producing the cycle counts the paper reads from
+//!   HLS reports.
+//! * **`baselines`** — re-implementations of the comparison frameworks'
+//!   design *strategies*: Vanilla (Vitis auto), ScaleHLS-like, and
+//!   StreamHLS-like, all lowered onto the same simulator/estimator.
+//! * **`runtime`** — PJRT execution of the AOT-lowered JAX/Pallas golden
+//!   model (HLO text artifacts) for functional verification.
+//! * **`coordinator`** — a multi-threaded compile service running kernel ×
+//!   framework × size sweeps and formatting the paper's tables.
+//!
+//! See `DESIGN.md` for the substitution map (what the paper ran on Vitis +
+//! a Kria KV260 board vs. what this repo builds) and `EXPERIMENTS.md` for
+//! paper-vs-measured numbers.
+
+pub mod util;
+pub mod ir;
+pub mod analysis;
+pub mod dataflow;
+pub mod resources;
+pub mod dse;
+pub mod codegen;
+pub mod sim;
+pub mod baselines;
+pub mod runtime;
+pub mod coordinator;
+
+/// Convenience prelude re-exporting the types most users need.
+pub mod prelude {
+    pub use crate::analysis::classify::{classify, KernelClass};
+    pub use crate::baselines::framework::{Framework, FrameworkKind};
+    pub use crate::coordinator::service::{CompileService, SweepConfig};
+    pub use crate::dataflow::build::build_streaming_design;
+    pub use crate::dse::ilp::DseConfig;
+    pub use crate::ir::builder::{models, GraphBuilder};
+    pub use crate::ir::graph::ModelGraph;
+    pub use crate::resources::device::DeviceSpec;
+    pub use crate::resources::report::UtilizationReport;
+    pub use crate::sim::engine::{SimMode, SimReport};
+}

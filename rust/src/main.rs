@@ -1,0 +1,342 @@
+//! `ming` — CLI for the MING paper-reproduction stack.
+//!
+//! Subcommands:
+//!   compile   lower one kernel with one framework; print reports, emit HLS C++
+//!   simulate  cycle-level simulation (+ golden verification if artifacts exist)
+//!   sweep     the full Table-II sweep (kernel × framework)
+//!   table2|table3|table4|fig3   regenerate the paper's tables/figure series
+//!   verify    golden-model verification for all kernels with artifacts
+//!   import    compile a JSON model file (the ONNX-stand-in front-end)
+//!
+//! (Hand-rolled argument parsing: clap is not vendored in this environment.)
+
+use std::collections::HashMap;
+use std::process::ExitCode;
+
+use anyhow::{bail, Context, Result};
+
+use ming::baselines::framework::{compile_with, FrameworkKind};
+use ming::codegen::{emit_design, emit_testbench};
+use ming::coordinator::report::{self, Cell};
+use ming::coordinator::service::{CompileService, SweepConfig};
+use ming::dse::ilp::{solve, DseConfig};
+use ming::dataflow::build::build_streaming_design;
+use ming::ir::builder::models;
+use ming::ir::json::import_model;
+use ming::resources::device::DeviceSpec;
+use ming::resources::estimate;
+use ming::runtime::golden::GoldenModel;
+use ming::sim::{simulate, SimMode};
+use ming::sim::trace::render_traces;
+use ming::util::prng;
+
+struct Args {
+    cmd: String,
+    flags: HashMap<String, String>,
+}
+
+fn parse_args() -> Result<Args> {
+    let mut it = std::env::args().skip(1);
+    let cmd = it.next().unwrap_or_else(|| "help".into());
+    let mut flags = HashMap::new();
+    while let Some(a) = it.next() {
+        if let Some(name) = a.strip_prefix("--") {
+            let val = it.next().unwrap_or_else(|| "true".into());
+            flags.insert(name.to_string(), val);
+        } else {
+            bail!("unexpected argument {a:?} (flags are --name value)");
+        }
+    }
+    Ok(Args { cmd, flags })
+}
+
+impl Args {
+    fn get(&self, name: &str, default: &str) -> String {
+        self.flags.get(name).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    fn device(&self) -> Result<DeviceSpec> {
+        let name = self.get("device", "kv260");
+        let mut dev =
+            DeviceSpec::by_name(&name).with_context(|| format!("unknown device {name:?}"))?;
+        if let Some(cap) = self.flags.get("dsp-limit") {
+            dev = dev.with_dsp_limit(cap.parse()?);
+        }
+        if let Some(cap) = self.flags.get("bram-limit") {
+            dev = dev.with_bram_limit(cap.parse()?);
+        }
+        Ok(dev)
+    }
+
+    fn framework(&self) -> Result<FrameworkKind> {
+        let name = self.get("framework", "ming");
+        FrameworkKind::parse(&name).with_context(|| format!("unknown framework {name:?}"))
+    }
+}
+
+fn det_input(g: &ming::ir::graph::ModelGraph) -> Vec<i32> {
+    prng::det_tensor(prng::SEED_INPUT, g.inputs()[0].ty.numel())
+        .iter()
+        .map(|&v| v as i32)
+        .collect()
+}
+
+fn cmd_compile(a: &Args) -> Result<()> {
+    let kernel = a.get("kernel", "conv_relu");
+    let size: usize = a.get("size", "32").parse()?;
+    let dev = a.device()?;
+    let fw = a.framework()?;
+    let g = models::paper_kernel(&kernel, size)?;
+    let d = compile_with(fw, &g, &dev)?;
+    let r = estimate(&d, &dev);
+    println!("kernel {kernel}@{size}  framework {}  device {}", fw.name(), dev.name);
+    println!("resources: {r}");
+    println!("nodes:");
+    for n in &d.nodes {
+        println!(
+            "  {:<12} {:<18} lanes={:<5} II={} up={} ur={}",
+            n.name,
+            n.geo.class.name(),
+            n.timing.mac_lanes,
+            n.timing.ii,
+            n.timing.unroll_par,
+            n.timing.unroll_red
+        );
+    }
+    if let Some(path) = a.flags.get("emit") {
+        std::fs::write(path, emit_design(&d))?;
+        println!("wrote HLS C++ to {path}");
+    }
+    if let Some(path) = a.flags.get("emit-tb") {
+        let x = det_input(&g);
+        let rep = simulate(&d, &x, SimMode::of(d.style))?.expect_complete();
+        std::fs::write(path, emit_testbench(&d, &x, Some(&rep.output)))?;
+        println!("wrote testbench to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_simulate(a: &Args) -> Result<()> {
+    let kernel = a.get("kernel", "conv_relu");
+    let size: usize = a.get("size", "32").parse()?;
+    let dev = a.device()?;
+    let fw = a.framework()?;
+    let g = models::paper_kernel(&kernel, size)?;
+    let d = compile_with(fw, &g, &dev)?;
+    let x = det_input(&g);
+    let rep = simulate(&d, &x, SimMode::of(d.style))?;
+    if let Some(blocked) = &rep.deadlock {
+        println!("DEADLOCK:\n  {}", blocked.join("\n  "));
+        return Ok(());
+    }
+    println!(
+        "cycles: {}  ({:.4} MCycles, {:.2} MAC/cycle)",
+        rep.cycles,
+        rep.cycles as f64 / 1e6,
+        rep.macs_per_cycle(d.total_macs())
+    );
+    println!("{}", render_traces(&rep.traces));
+    // golden verification when artifacts are available
+    if let Ok(gm) = GoldenModel::open_default() {
+        let key = GoldenModel::key(&kernel, size);
+        if gm.available(&key) {
+            let bad = gm.verify(&key, &x, &rep.output)?;
+            println!(
+                "golden check [{key}]: {}",
+                if bad == 0 { "OK (bit-exact)".into() } else { format!("{bad} mismatches") }
+            );
+        }
+    }
+    Ok(())
+}
+
+fn run_table2_cells(dev: &DeviceSpec) -> Vec<Cell> {
+    let svc = CompileService::default();
+    let results = svc.run_sweep(&SweepConfig::table2(dev.clone()));
+    results
+        .iter()
+        .filter_map(|r| match r {
+            Ok(jr) => Some(report::cell(jr)),
+            Err(e) => {
+                eprintln!("job failed: {e}");
+                None
+            }
+        })
+        .collect()
+}
+
+fn cmd_table2(a: &Args) -> Result<()> {
+    let dev = a.device()?;
+    let cells = run_table2_cells(&dev);
+    println!("{}", report::render_table2(&cells));
+    Ok(())
+}
+
+fn cmd_table3(a: &Args) -> Result<()> {
+    let dev = a.device()?;
+    let svc = CompileService::default();
+    let cfg = SweepConfig {
+        workloads: vec![
+            ("conv_relu".into(), 32),
+            ("cascade".into(), 32),
+            ("residual".into(), 32),
+        ],
+        frameworks: FrameworkKind::all().to_vec(),
+        device: dev,
+        estimate_only: true,
+    };
+    let cells: Vec<Cell> = svc
+        .run_sweep(&cfg)
+        .iter()
+        .filter_map(|r| r.as_ref().ok().map(report::cell))
+        .collect();
+    println!("{}", report::render_table3(&cells));
+    Ok(())
+}
+
+fn cmd_table4(a: &Args) -> Result<()> {
+    let base_dev = a.device()?;
+    let g = models::paper_kernel("conv_relu", 32)?;
+    let x = det_input(&g);
+    // vanilla baseline cycles
+    let dv = compile_with(FrameworkKind::Vanilla, &g, &base_dev)?;
+    let base = simulate(&dv, &x, SimMode::of(dv.style))?.expect_complete();
+    let base_mc = base.cycles as f64 / 1e6;
+    let mut rows = Vec::new();
+    for cap in [base_dev.dsp, 250, 50] {
+        let dev = base_dev.with_dsp_limit(cap);
+        let d = compile_with(FrameworkKind::Ming, &g, &dev)?;
+        let rep = simulate(&d, &x, SimMode::Dataflow)?.expect_complete();
+        let r = estimate(&d, &dev);
+        rows.push((
+            cap,
+            Cell {
+                kernel: "conv_relu".into(),
+                size: 32,
+                framework: FrameworkKind::Ming,
+                mcycles: rep.cycles as f64 / 1e6,
+                bram: r.bram18k,
+                dsp: r.dsp,
+                lut_pct: r.lut_pct(),
+                lutram_pct: r.lutram_pct(),
+                ff_pct: r.ff_pct(),
+                fits: r.fits(),
+                error: None,
+            },
+            base_mc,
+        ));
+    }
+    println!("{}", report::render_table4(&rows));
+    Ok(())
+}
+
+fn cmd_fig3(a: &Args) -> Result<()> {
+    let dev = a.device()?;
+    let mut series: HashMap<&'static str, Vec<(usize, u64)>> = HashMap::new();
+    for n in [32usize, 64, 96, 128, 160, 192, 224] {
+        let g = models::conv_relu(n, models::CONV_C, models::CONV_F);
+        for (name, fw) in [("streamhls", FrameworkKind::StreamHls), ("ming", FrameworkKind::Ming)] {
+            let d = compile_with(fw, &g, &dev)?;
+            let r = estimate(&d, &dev);
+            series.entry(name).or_default().push((n, r.bram18k));
+        }
+    }
+    println!("{}", report::render_fig3(&series));
+    Ok(())
+}
+
+fn cmd_verify(_a: &Args) -> Result<()> {
+    let gm = GoldenModel::open_default()?;
+    let dev = DeviceSpec::kv260();
+    let mut all_ok = true;
+    for (kernel, size) in models::table2_workloads() {
+        let key = GoldenModel::key(kernel, size);
+        if !gm.available(&key) {
+            println!("{key:<18} SKIP (artifact missing)");
+            continue;
+        }
+        let g = models::paper_kernel(kernel, size)?;
+        let x = det_input(&g);
+        let d = compile_with(FrameworkKind::Ming, &g, &dev)?;
+        let rep = simulate(&d, &x, SimMode::Dataflow)?.expect_complete();
+        let bad = gm.verify(&key, &x, &rep.output)?;
+        println!("{key:<18} {}", if bad == 0 { "OK".into() } else { format!("{bad} MISMATCHES") });
+        all_ok &= bad == 0;
+    }
+    if !all_ok {
+        bail!("golden verification failed");
+    }
+    Ok(())
+}
+
+fn cmd_import(a: &Args) -> Result<()> {
+    let path = a.flags.get("model").context("--model <file.json> required")?;
+    let text = std::fs::read_to_string(path)?;
+    let g = import_model(&text)?;
+    println!("imported {} ({} ops, {} MACs)", g.name, g.ops.len(), g.total_macs());
+    let dev = a.device()?;
+    let mut d = build_streaming_design(&g)?;
+    solve(&mut d, &DseConfig::new(dev.clone()))?;
+    let r = estimate(&d, &dev);
+    println!("resources: {r}");
+    if let Some(out) = a.flags.get("emit") {
+        std::fs::write(out, emit_design(&d))?;
+        println!("wrote HLS C++ to {out}");
+    }
+    Ok(())
+}
+
+fn help() {
+    println!(
+        "ming — MING CNN-to-edge HLS framework (paper reproduction)\n\n\
+         USAGE: ming <command> [--flag value ...]\n\n\
+         COMMANDS\n\
+         \x20 compile   --kernel K --size N [--framework F] [--device D] [--emit f.cpp] [--emit-tb tb.cpp]\n\
+         \x20 simulate  --kernel K --size N [--framework F] [--device D]\n\
+         \x20 table2    [--device D]        full Table-II sweep\n\
+         \x20 table3    [--device D]        post-PnR fabric table\n\
+         \x20 table4    [--device D]        DSP-constraint sweep\n\
+         \x20 fig3      [--device D]        BRAM-vs-input-size series\n\
+         \x20 verify                        golden-model check (needs `make artifacts`)\n\
+         \x20 import    --model m.json [--emit f.cpp]\n\n\
+         kernels: conv_relu cascade residual linear feedforward\n\
+         frameworks: vanilla scalehls streamhls ming\n\
+         devices: kv260 zcu104 u250  (+ --dsp-limit N, --bram-limit N)"
+    );
+}
+
+fn main() -> ExitCode {
+    let args = match parse_args() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let r = match args.cmd.as_str() {
+        "compile" => cmd_compile(&args),
+        "simulate" => cmd_simulate(&args),
+        "sweep" | "table2" => cmd_table2(&args),
+        "table3" => cmd_table3(&args),
+        "table4" => cmd_table4(&args),
+        "fig3" => cmd_fig3(&args),
+        "verify" => cmd_verify(&args),
+        "import" => cmd_import(&args),
+        "help" | "--help" | "-h" => {
+            help();
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command {other:?}\n");
+            help();
+            return ExitCode::FAILURE;
+        }
+    };
+    match r {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}

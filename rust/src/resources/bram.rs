@@ -1,0 +1,138 @@
+//! BRAM18K packing model (the paper's BRAM constraint: "RAM18K blocks,
+//! each capable of storing up to 18,432 bits").
+//!
+//! An array of `bits` partitioned into `p` slices costs
+//! `p * ceil(bits / p / 18432)` RAM18K blocks — every slice occupies at
+//! least one physical block, which is exactly why high ARRAY_PARTITION
+//! factors inflate BRAM usage (paper §V-B's StreamHLS observation) and
+//! why MING's (K-1)×C-partitioned line buffers cost a constant
+//! `(K-1)·unroll_c` blocks regardless of input size.
+
+use crate::dataflow::buffers::{BufferAlloc, Storage};
+use crate::dataflow::channel::Channel;
+use crate::dataflow::design::Design;
+
+/// Usable bits per RAM18K slice.
+pub const RAM18K_BITS: u64 = 18_432;
+
+/// Per-lane FIFOs at or below this depth (elements per physical lane)
+/// are implemented as shift registers (SRL) in LUT fabric; deeper ones
+/// get BRAM backing. Mirrors Vitis' stream implementation heuristic.
+pub const FIFO_SRL_MAX_DEPTH: u64 = 128;
+
+/// RAM18K blocks for one array of `bits` split into `partitions` slices.
+pub fn bram_blocks(bits: u64, partitions: u64) -> u64 {
+    let p = partitions.max(1);
+    p * bits.div_ceil(p).div_ceil(RAM18K_BITS)
+}
+
+/// RAM18K cost of one buffer allocation (0 for non-BRAM storage).
+pub fn buffer_bram(b: &BufferAlloc) -> u64 {
+    match b.storage {
+        Storage::Bram | Storage::Rom => bram_blocks(b.bits, b.partitions),
+        Storage::Lutram | Storage::Ff => 0,
+    }
+}
+
+/// RAM18K cost of a FIFO channel: shallow FIFOs are SRLs (0 BRAM),
+/// deep ones are packed into BRAM at their element width.
+pub fn channel_bram(c: &Channel) -> u64 {
+    if c.externally_buffered {
+        return 0; // storage accounted by explicit BufferAllocs
+    }
+    // a `lanes`-wide stream is `lanes` physical FIFOs, each holding
+    // depth × token_len / lanes elements
+    let lanes = c.lanes.max(1) as u64;
+    let per_lane = c.depth as u64 * c.token_len as u64 / lanes;
+    if per_lane <= FIFO_SRL_MAX_DEPTH {
+        0
+    } else {
+        lanes * (per_lane * c.elem_bits).div_ceil(RAM18K_BITS)
+    }
+}
+
+/// Total design BRAM: buffers + deep FIFOs.
+pub fn design_bram(d: &Design) -> u64 {
+    let bufs: u64 = d.buffers.iter().map(buffer_bram).sum();
+    let fifos: u64 = d.channels.iter().map(channel_bram).sum();
+    bufs + fifos
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::buffers::BufferRole;
+    use crate::dataflow::build::{build_streaming_design, refresh_buffers};
+    use crate::ir::builder::models;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn packing_basics() {
+        assert_eq!(bram_blocks(1, 1), 1, "any non-empty array needs one block");
+        assert_eq!(bram_blocks(18_432, 1), 1);
+        assert_eq!(bram_blocks(18_433, 1), 2);
+        assert_eq!(bram_blocks(1000, 16), 16, "each slice costs at least 1");
+    }
+
+    #[test]
+    fn partition_cost_lower_bounds() {
+        // Partitioning can REDUCE total blocks when slices drop under 18Kb
+        // boundaries (rounding), but never below either lower bound:
+        // every partition costs >= 1 block, and total storage >= bits.
+        forall(
+            "partition lower bounds",
+            200,
+            |g| (g.rng.range(1, 1 << 24), g.rng.range(1, 128)),
+            |&(bits, p)| {
+                let blocks = bram_blocks(bits, p);
+                blocks >= p && blocks * RAM18K_BITS >= bits
+            },
+        );
+    }
+
+    #[test]
+    fn ming_conv_line_buffer_bram_constant_in_input_size() {
+        // The headline Fig-3 contrast: MING BRAM must not scale with N.
+        let mut got = Vec::new();
+        for n in [32usize, 64, 128, 224] {
+            let g = models::conv_relu(n, 8, 8);
+            let mut d = build_streaming_design(&g).unwrap();
+            d.nodes[0].timing.unroll_red = 8;
+            d.nodes[0].timing.mac_lanes = 576;
+            refresh_buffers(&mut d);
+            let lb: u64 = d
+                .buffers
+                .iter()
+                .filter(|b| b.role == BufferRole::LineBuffer)
+                .map(buffer_bram)
+                .sum();
+            got.push(lb);
+        }
+        assert!(got.windows(2).all(|w| w[0] == w[1]), "line-buffer BRAM varies: {got:?}");
+        assert_eq!(got[0], 16, "(K-1)=2 rows × 8 channel partitions");
+    }
+
+    #[test]
+    fn shallow_fifos_cost_no_bram() {
+        let g = models::cascade(32, 8, 8);
+        let d = build_streaming_design(&g).unwrap();
+        for c in &d.channels {
+            assert_eq!(channel_bram(c), 0, "default-depth FIFO {} should be SRL", c.name);
+        }
+    }
+
+    #[test]
+    fn deep_fifo_costs_bram() {
+        let g = models::residual(224, 8, 8);
+        let mut d = build_streaming_design(&g).unwrap();
+        // size the skip FIFO for the diamond (as the DSE would)
+        let skip = d
+            .channels
+            .iter()
+            .position(|c| c.name == "add0_in0")
+            .expect("skip channel");
+        d.channels[skip].depth = 2 * 224; // two rows of lag
+        let blocks = channel_bram(&d.channels[skip]);
+        assert!(blocks > 0, "deep skip FIFO must use BRAM");
+    }
+}

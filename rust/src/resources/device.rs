@@ -1,0 +1,102 @@
+//! FPGA device database.
+
+/// Resource capacities of a target FPGA.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DeviceSpec {
+    pub name: String,
+    /// BRAM18K slices (two per BRAM36 tile).
+    pub bram18k: u64,
+    pub dsp: u64,
+    pub lut: u64,
+    /// LUTs usable as distributed RAM (subset of `lut`).
+    pub lutram: u64,
+    pub ff: u64,
+}
+
+impl DeviceSpec {
+    /// AMD Kria KV260 (Zynq UltraScale+ K26 SOM) — the paper's evaluation
+    /// board: 288 BRAM18K, 1248 DSP (paper §V).
+    pub fn kv260() -> Self {
+        Self {
+            name: "kv260".into(),
+            bram18k: 288,
+            dsp: 1248,
+            lut: 117_120,
+            lutram: 57_600,
+            ff: 234_240,
+        }
+    }
+
+    /// ZCU104 (ZU7EV) — a mid-range edge board for sweeps.
+    pub fn zcu104() -> Self {
+        Self {
+            name: "zcu104".into(),
+            bram18k: 624,
+            dsp: 1728,
+            lut: 230_400,
+            lutram: 101_760,
+            ff: 460_800,
+        }
+    }
+
+    /// Alveo U250 — a cloud-grade card ("tens of thousands of BRAMs,
+    /// millions of LUTs" in the paper's discussion).
+    pub fn u250() -> Self {
+        Self {
+            name: "u250".into(),
+            bram18k: 5376,
+            dsp: 12_288,
+            lut: 1_728_000,
+            lutram: 791_040,
+            ff: 3_456_000,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "kv260" => Some(Self::kv260()),
+            "zcu104" => Some(Self::zcu104()),
+            "u250" => Some(Self::u250()),
+            _ => None,
+        }
+    }
+
+    /// A copy with a reduced DSP budget (the paper's Table IV sweep).
+    pub fn with_dsp_limit(&self, dsp: u64) -> Self {
+        Self { dsp, name: format!("{}@dsp{}", self.name, dsp), ..self.clone() }
+    }
+
+    /// A copy with a reduced BRAM budget.
+    pub fn with_bram_limit(&self, bram18k: u64) -> Self {
+        Self { bram18k, name: format!("{}@bram{}", self.name, bram18k), ..self.clone() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kv260_matches_paper() {
+        let d = DeviceSpec::kv260();
+        assert_eq!(d.bram18k, 288);
+        assert_eq!(d.dsp, 1248);
+    }
+
+    #[test]
+    fn lookup_and_limits() {
+        assert!(DeviceSpec::by_name("kv260").is_some());
+        assert!(DeviceSpec::by_name("nope").is_none());
+        let d = DeviceSpec::kv260().with_dsp_limit(50);
+        assert_eq!(d.dsp, 50);
+        assert_eq!(d.bram18k, 288);
+        let b = DeviceSpec::kv260().with_bram_limit(64);
+        assert_eq!(b.bram18k, 64);
+    }
+
+    #[test]
+    fn device_ordering_edge_to_cloud() {
+        assert!(DeviceSpec::kv260().bram18k < DeviceSpec::zcu104().bram18k);
+        assert!(DeviceSpec::zcu104().bram18k < DeviceSpec::u250().bram18k);
+    }
+}

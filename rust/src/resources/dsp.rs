@@ -1,0 +1,85 @@
+//! DSP estimation with integer arithmetic (the paper's claimed improvement
+//! over StreamHLS's model).
+//!
+//! On UltraScale+ a DSP48E2 performs a 27×18-bit multiply-accumulate:
+//! * two **int8** MACs pack into one DSP (the well-known INT8 packing),
+//! * one int16 MAC per DSP,
+//! * int32 multiplies need 3 DSPs (27×18 decomposition).
+//!
+//! A node issuing `mac_lanes` int8 MACs per cycle therefore needs
+//! `ceil(mac_lanes / 2)` DSPs. Non-MAC ALU ops (adds, compares, shifts)
+//! go to LUT fabric — that is precisely what "supports integer
+//! arithmetic" buys: float designs would burn DSPs on every add.
+
+use crate::dataflow::design::Design;
+use crate::dataflow::node::DfgNode;
+use crate::ir::types::DType;
+
+/// DSPs required for `lanes` concurrent MACs at the given element dtype.
+pub fn dsp_for_macs(lanes: u64, dtype: DType) -> u64 {
+    if lanes == 0 {
+        return 0;
+    }
+    match dtype {
+        DType::I8 => lanes.div_ceil(2),
+        DType::I16 => lanes,
+        DType::I32 => 3 * lanes,
+        DType::F32 => 5 * lanes, // fadd+fmul DSP cost, for completeness
+    }
+}
+
+/// DSPs of one node: MAC lanes only; pure-ALU nodes cost none.
+pub fn node_dsp(n: &DfgNode) -> u64 {
+    if n.geo.macs_per_out_token == 0 {
+        return 0;
+    }
+    dsp_for_macs(n.timing.mac_lanes, DType::I8)
+}
+
+/// Total design DSP usage.
+pub fn design_dsp(d: &Design) -> u64 {
+    d.nodes.iter().map(node_dsp).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::build::build_streaming_design;
+    use crate::ir::builder::models;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn int8_packing() {
+        assert_eq!(dsp_for_macs(576, DType::I8), 288);
+        assert_eq!(dsp_for_macs(1, DType::I8), 1);
+        assert_eq!(dsp_for_macs(0, DType::I8), 0);
+    }
+
+    #[test]
+    fn wider_types_cost_more() {
+        forall("dtype ordering", 50, |g| g.rng.range(1, 1000), |&lanes| {
+            dsp_for_macs(lanes, DType::I8) <= dsp_for_macs(lanes, DType::I16)
+                && dsp_for_macs(lanes, DType::I16) <= dsp_for_macs(lanes, DType::I32)
+        });
+    }
+
+    #[test]
+    fn relu_nodes_use_no_dsp() {
+        let g = models::conv_relu(16, 8, 8);
+        let mut d = build_streaming_design(&g).unwrap();
+        d.nodes[1].timing.mac_lanes = 8; // even when parallelized
+        assert_eq!(node_dsp(&d.nodes[1]), 0);
+        assert!(node_dsp(&d.nodes[0]) > 0);
+    }
+
+    #[test]
+    fn design_dsp_sums_nodes() {
+        let g = models::cascade(16, 8, 8);
+        let mut d = build_streaming_design(&g).unwrap();
+        for n in &mut d.nodes {
+            n.timing.mac_lanes = 64;
+        }
+        // two conv nodes at 64 lanes → 2 × 32; relu nodes free
+        assert_eq!(design_dsp(&d), 64);
+    }
+}

@@ -1,0 +1,19 @@
+//! Hardware resource models (the paper's contribution #3: a resource
+//! utilization estimator supporting integer arithmetic, claimed more
+//! accurate than the state of the art).
+//!
+//! Numbers are estimated analytically from the design structure exactly
+//! the way MING's compile-time model must (no HDL in the loop):
+//! [`bram`] packs arrays into RAM18K slices respecting ARRAY_PARTITION,
+//! [`dsp`] counts DSP48E2 blocks per integer MAC lane (two int8 MACs per
+//! DSP via INT8 packing), [`fabric`] regresses LUT/LUTRAM/FF from node
+//! structure, and [`report`] aggregates + checks device constraints.
+
+pub mod device;
+pub mod bram;
+pub mod dsp;
+pub mod fabric;
+pub mod report;
+
+pub use device::DeviceSpec;
+pub use report::{estimate, UtilizationReport};

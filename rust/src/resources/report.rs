@@ -1,0 +1,124 @@
+//! Aggregated utilization report + device-constraint checking.
+
+use std::fmt;
+
+use crate::dataflow::design::Design;
+
+use super::bram::design_bram;
+use super::device::DeviceSpec;
+use super::dsp::design_dsp;
+use super::fabric::{design_fabric, Fabric};
+
+/// Estimated utilization of one design on one device.
+#[derive(Debug, Clone)]
+pub struct UtilizationReport {
+    pub bram18k: u64,
+    pub dsp: u64,
+    pub lut: u64,
+    pub lutram: u64,
+    pub ff: u64,
+    pub device: DeviceSpec,
+}
+
+impl UtilizationReport {
+    pub fn fits(&self) -> bool {
+        self.violations().is_empty()
+    }
+
+    /// Human-readable list of exceeded resources.
+    pub fn violations(&self) -> Vec<String> {
+        let mut v = Vec::new();
+        let mut chk = |name: &str, used: u64, avail: u64| {
+            if used > avail {
+                v.push(format!("{name}: {used} > {avail}"));
+            }
+        };
+        chk("BRAM18K", self.bram18k, self.device.bram18k);
+        chk("DSP", self.dsp, self.device.dsp);
+        chk("LUT", self.lut, self.device.lut);
+        chk("LUTRAM", self.lutram, self.device.lutram);
+        chk("FF", self.ff, self.device.ff);
+        v
+    }
+
+    pub fn pct(&self, used: u64, avail: u64) -> f64 {
+        100.0 * used as f64 / avail as f64
+    }
+
+    pub fn lut_pct(&self) -> f64 {
+        self.pct(self.lut, self.device.lut)
+    }
+
+    pub fn lutram_pct(&self) -> f64 {
+        self.pct(self.lutram, self.device.lutram)
+    }
+
+    pub fn ff_pct(&self) -> f64 {
+        self.pct(self.ff, self.device.ff)
+    }
+}
+
+impl fmt::Display for UtilizationReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "BRAM {}/{}  DSP {}/{}  LUT {:.1}%  LUTRAM {:.1}%  FF {:.1}%{}",
+            self.bram18k,
+            self.device.bram18k,
+            self.dsp,
+            self.device.dsp,
+            self.lut_pct(),
+            self.lutram_pct(),
+            self.ff_pct(),
+            if self.fits() { "" } else { "  [EXCEEDS DEVICE]" }
+        )
+    }
+}
+
+/// Estimate a design's utilization on a device.
+pub fn estimate(d: &Design, device: &DeviceSpec) -> UtilizationReport {
+    let Fabric { lut, lutram, ff } = design_fabric(d);
+    UtilizationReport {
+        bram18k: design_bram(d),
+        dsp: design_dsp(d),
+        lut,
+        lutram,
+        ff,
+        device: device.clone(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::build::{build_streaming_design, refresh_buffers};
+    use crate::ir::builder::models;
+
+    #[test]
+    fn scalar_design_fits_easily() {
+        let g = models::conv_relu(32, 8, 8);
+        let d = build_streaming_design(&g).unwrap();
+        let r = estimate(&d, &DeviceSpec::kv260());
+        assert!(r.fits(), "{r}");
+        assert!(r.bram18k > 0, "line buffers must show up");
+    }
+
+    #[test]
+    fn violations_detected() {
+        let g = models::conv_relu(32, 8, 8);
+        let mut d = build_streaming_design(&g).unwrap();
+        d.nodes[0].timing.mac_lanes = 1 << 14; // absurd unroll
+        refresh_buffers(&mut d);
+        let r = estimate(&d, &DeviceSpec::kv260());
+        assert!(!r.fits());
+        assert!(r.violations().iter().any(|v| v.starts_with("DSP")));
+    }
+
+    #[test]
+    fn display_contains_key_fields() {
+        let g = models::linear();
+        let d = build_streaming_design(&g).unwrap();
+        let s = estimate(&d, &DeviceSpec::kv260()).to_string();
+        assert!(s.contains("BRAM") && s.contains("DSP"));
+    }
+}

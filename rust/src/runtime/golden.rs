@@ -1,0 +1,148 @@
+//! The golden model: run an AOT artifact for a paper kernel and compare
+//! against the simulator's functional output, element-exact.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{ensure, Context, Result};
+
+use super::pjrt::{HloExecutable, PjrtRuntime};
+
+/// Artifact metadata (written by `aot.py` as `<key>.meta`).
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub in_shape: Vec<usize>,
+    pub out_shape: Vec<usize>,
+}
+
+fn parse_meta(text: &str) -> Result<ArtifactMeta> {
+    let mut in_shape = None;
+    let mut out_shape = None;
+    for line in text.lines() {
+        let Some((k, v)) = line.split_once('=') else { continue };
+        let shape = || -> Result<Vec<usize>> {
+            v.split(',').map(|s| Ok(s.trim().parse::<usize>()?)).collect()
+        };
+        match k.trim() {
+            "in_shape" => in_shape = Some(shape()?),
+            "out_shape" => out_shape = Some(shape()?),
+            _ => {}
+        }
+    }
+    Ok(ArtifactMeta {
+        in_shape: in_shape.context("meta missing in_shape")?,
+        out_shape: out_shape.context("meta missing out_shape")?,
+    })
+}
+
+/// Loads and caches compiled golden-model executables per artifact key
+/// (`conv_relu_32`, `linear_0`, …).
+pub struct GoldenModel {
+    dir: PathBuf,
+    rt: PjrtRuntime,
+    cache: Mutex<HashMap<String, (ArtifactMeta, HloExecutable)>>,
+}
+
+impl GoldenModel {
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        ensure!(dir.is_dir(), "artifact dir {} missing (run `make artifacts`)", dir.display());
+        Ok(Self { dir, rt: PjrtRuntime::cpu()?, cache: Mutex::new(HashMap::new()) })
+    }
+
+    /// Default location relative to the crate root.
+    pub fn open_default() -> Result<Self> {
+        Self::open(Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+    }
+
+    /// Artifact key for a paper kernel at a given size.
+    pub fn key(kernel: &str, size: usize) -> String {
+        format!("{kernel}_{size}")
+    }
+
+    pub fn available(&self, key: &str) -> bool {
+        self.dir.join(format!("{key}.hlo.txt")).exists()
+    }
+
+    /// Run the golden model for `key` on a flattened i32 input.
+    pub fn run(&self, key: &str, input: &[i32]) -> Result<Vec<i32>> {
+        let mut cache = self.cache.lock().unwrap();
+        if !cache.contains_key(key) {
+            let hlo = self.dir.join(format!("{key}.hlo.txt"));
+            let meta_path = self.dir.join(format!("{key}.meta"));
+            let meta = parse_meta(
+                &std::fs::read_to_string(&meta_path)
+                    .with_context(|| format!("reading {}", meta_path.display()))?,
+            )?;
+            let exe = self.rt.load_hlo_text(&hlo)?;
+            cache.insert(key.to_string(), (meta, exe));
+        }
+        let (meta, exe) = cache.get(key).unwrap();
+        exe.run_i32(input, &meta.in_shape)
+    }
+
+    /// Compare a simulator output against the golden model, returning the
+    /// number of mismatching elements (0 = bit-exact agreement).
+    pub fn verify(&self, key: &str, input: &[i32], sim_output: &[i32]) -> Result<usize> {
+        let want = self.run(key, input)?;
+        ensure!(
+            want.len() == sim_output.len(),
+            "golden output {} values, sim produced {}",
+            want.len(),
+            sim_output.len()
+        );
+        Ok(want.iter().zip(sim_output).filter(|(a, b)| a != b).count())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::framework::{compile_with, FrameworkKind};
+    use crate::ir::builder::models;
+    use crate::resources::device::DeviceSpec;
+    use crate::sim::{simulate, SimMode};
+    use crate::util::prng;
+
+    #[test]
+    fn meta_parsing() {
+        let m = parse_meta("in_shape=32,32,8\nout_shape=32,32,8\nrequant_shift=6\n").unwrap();
+        assert_eq!(m.in_shape, vec![32, 32, 8]);
+        assert_eq!(m.out_shape, vec![32, 32, 8]);
+        assert!(parse_meta("nonsense").is_err());
+    }
+
+    /// The central end-to-end correctness statement: the streaming design
+    /// simulated cycle-by-cycle produces *bit-exactly* what the
+    /// JAX/Pallas golden model computes, for every paper kernel.
+    #[test]
+    fn simulator_matches_golden_model_for_all_small_kernels() {
+        let Ok(gm) = GoldenModel::open_default() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        for (kernel, size) in [
+            ("conv_relu", 32usize),
+            ("cascade", 32),
+            ("residual", 32),
+            ("linear", 0),
+            ("feedforward", 0),
+        ] {
+            let key = GoldenModel::key(kernel, size);
+            if !gm.available(&key) {
+                eprintln!("skipping {key}: artifact missing");
+                continue;
+            }
+            let g = models::paper_kernel(kernel, size).unwrap();
+            let x: Vec<i32> = prng::det_tensor(prng::SEED_INPUT, g.inputs()[0].ty.numel())
+                .iter()
+                .map(|&v| v as i32)
+                .collect();
+            let d = compile_with(FrameworkKind::Ming, &g, &DeviceSpec::kv260()).unwrap();
+            let rep = simulate(&d, &x, SimMode::Dataflow).unwrap().expect_complete();
+            let mismatches = gm.verify(&key, &x, &rep.output).unwrap();
+            assert_eq!(mismatches, 0, "{key}: simulator disagrees with golden model");
+        }
+    }
+}

@@ -1,0 +1,14 @@
+//! PJRT runtime: loads the AOT artifacts produced by `python/compile`
+//! (JAX/Pallas kernels lowered to HLO text) and executes them on the
+//! PJRT CPU client via the `xla` crate. This is the request-path side of
+//! the three-layer architecture — Python never runs here.
+//!
+//! The golden model ([`golden::GoldenModel`]) is MING's substitute for
+//! on-board functional validation: the cycle-level simulator's output is
+//! compared element-exact against the JAX/Pallas computation.
+
+pub mod pjrt;
+pub mod golden;
+
+pub use golden::GoldenModel;
+pub use pjrt::{HloExecutable, PjrtRuntime};

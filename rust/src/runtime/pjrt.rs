@@ -1,0 +1,106 @@
+//! Thin wrapper over the `xla` crate: HLO-text → compiled executable →
+//! i32 tensor in / i32 tensor out.
+//!
+//! Interchange is HLO **text**, not serialized `HloModuleProto`: jax ≥0.5
+//! emits protos with 64-bit instruction ids which xla_extension 0.5.1
+//! rejects; the text parser reassigns ids (see `python/compile/aot.py`).
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// A PJRT CPU client (one per process is plenty).
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+}
+
+impl PjrtRuntime {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text file.
+    pub fn load_hlo_text(&self, path: &Path) -> Result<HloExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(HloExecutable { exe })
+    }
+}
+
+/// One compiled HLO module (single i32 input, 1-tuple i32 output — the
+/// `aot.py` convention).
+pub struct HloExecutable {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl HloExecutable {
+    /// Execute with a row-major i32 input of the given shape; returns the
+    /// flattened i32 output.
+    pub fn run_i32(&self, input: &[i32], shape: &[usize]) -> Result<Vec<i32>> {
+        let numel: usize = shape.iter().product();
+        anyhow::ensure!(input.len() == numel, "input length {} != shape {:?}", input.len(), shape);
+        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+        let lit = xla::Literal::vec1(input).reshape(&dims).context("reshaping input literal")?;
+        let result = self.exe.execute::<xla::Literal>(&[lit]).context("executing HLO")?[0][0]
+            .to_literal_sync()
+            .context("fetching result")?;
+        // aot.py lowers with return_tuple=True ⇒ 1-tuple output.
+        let out = result.to_tuple1().context("unwrapping 1-tuple")?;
+        out.to_vec::<i32>().context("reading output values")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn cpu_client_boots() {
+        let rt = PjrtRuntime::cpu().unwrap();
+        assert_eq!(rt.platform(), "cpu");
+    }
+
+    #[test]
+    fn load_and_run_linear_artifact() {
+        let path = artifacts_dir().join("linear_0.hlo.txt");
+        if !path.exists() {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return;
+        }
+        let rt = PjrtRuntime::cpu().unwrap();
+        let exe = rt.load_hlo_text(&path).unwrap();
+        let input = vec![0i32; 512 * 128];
+        let out = exe.run_i32(&input, &[512, 128]).unwrap();
+        assert_eq!(out.len(), 512 * 128);
+        // zero input through relu+requant is all zeros
+        assert!(out.iter().all(|&v| v == 0));
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let path = artifacts_dir().join("linear_0.hlo.txt");
+        if !path.exists() {
+            return;
+        }
+        let rt = PjrtRuntime::cpu().unwrap();
+        let exe = rt.load_hlo_text(&path).unwrap();
+        assert!(exe.run_i32(&[1, 2, 3], &[512, 128]).is_err());
+    }
+}

@@ -1,0 +1,508 @@
+//! The discrete-event engine: feeder → nodes → sink, at firing
+//! granularity with timestamped tokens.
+
+use anyhow::{ensure, Result};
+
+use crate::dataflow::channel::Endpoint;
+use crate::dataflow::design::{Design, DesignStyle};
+
+use super::fifo::{SimFifo, Token};
+use super::process::{build_proc, NodeProc};
+use super::trace::NodeTrace;
+
+/// Host-interface model: a 128-bit AXI port moves 16 bytes per cycle in
+/// each direction (KV260 DDR4 class). Bounds feeder and sink rates.
+pub const AXI_BYTES_PER_CYCLE: u64 = 16;
+
+/// Scheduling discipline (derived from the design style by default).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimMode {
+    /// Task-level DATAFLOW: all nodes run concurrently.
+    Dataflow,
+    /// Vanilla: a node starts only after all its producers finished;
+    /// channels are backed by full tensors (unbounded FIFOs).
+    Sequential,
+}
+
+impl SimMode {
+    pub fn of(style: DesignStyle) -> Self {
+        match style {
+            DesignStyle::Dataflow => SimMode::Dataflow,
+            DesignStyle::Sequential => SimMode::Sequential,
+        }
+    }
+}
+
+/// Simulation result.
+#[derive(Debug)]
+pub struct SimReport {
+    /// Total cycles until the last output token reached the host.
+    pub cycles: u64,
+    /// Output tensor values (row-major, int8 range unless the graph
+    /// output is an accumulator).
+    pub output: Vec<i32>,
+    pub traces: Vec<NodeTrace>,
+    /// Max occupancy per channel (FIFO sizing diagnostics).
+    pub fifo_high_water: Vec<(String, usize)>,
+    /// `Some(blocked-node descriptions)` if the design deadlocked.
+    pub deadlock: Option<Vec<String>>,
+    /// Total firings across all nodes (simulator throughput metric).
+    pub total_firings: u64,
+}
+
+impl SimReport {
+    /// Panic-with-context helper for tests/examples.
+    pub fn expect_complete(self) -> Self {
+        if let Some(blocked) = &self.deadlock {
+            panic!("simulation deadlocked:\n  {}", blocked.join("\n  "));
+        }
+        self
+    }
+
+    pub fn macs_per_cycle(&self, total_macs: u64) -> f64 {
+        total_macs as f64 / self.cycles.max(1) as f64
+    }
+}
+
+struct NodeState {
+    proc: NodeProc,
+    firings: u64,
+    t_free: u64,
+    complete: u64,
+    trace: NodeTrace,
+    consumed: Vec<u64>,
+    /// Cycle the most recent token finished streaming in, per input —
+    /// tokens are consumed *eagerly* (into the line buffer / pending
+    /// registers) at stream rate, which is exactly what the paper's
+    /// line-buffer architecture buys: the FIFO itself stays shallow.
+    last_in_time: Vec<u64>,
+}
+
+/// Simulate `design` on a host input tensor (row-major int8 values,
+/// widened to i32).
+pub fn simulate(design: &Design, input: &[i32], mode: SimMode) -> Result<SimReport> {
+    let g = &design.graph;
+    let in_t = g.inputs()[0];
+    ensure!(
+        input.len() == in_t.ty.numel(),
+        "input has {} values, graph expects {}",
+        input.len(),
+        in_t.ty.numel()
+    );
+
+    // --- runtime state -------------------------------------------------
+    let mut fifos: Vec<SimFifo> = design
+        .channels
+        .iter()
+        .map(|c| match mode {
+            SimMode::Sequential => SimFifo::unbounded(),
+            SimMode::Dataflow => SimFifo::new(c.depth),
+        })
+        .collect();
+
+    let mut nodes: Vec<NodeState> = (0..design.nodes.len())
+        .map(|i| {
+            Ok(NodeState {
+                proc: build_proc(design, i)?,
+                firings: 0,
+                t_free: 0,
+                complete: 0,
+                trace: NodeTrace { name: design.nodes[i].name.clone(), ..Default::default() },
+                consumed: vec![0; design.nodes[i].in_channels.len()],
+                last_in_time: vec![0; design.nodes[i].in_channels.len()],
+            })
+        })
+        .collect::<Result<_>>()?;
+
+    // Input tokenization (shared by all graph-input channels).
+    let input_chans: Vec<usize> = design
+        .channels
+        .iter()
+        .filter(|c| c.src == Endpoint::GraphInput)
+        .map(|c| c.id.0)
+        .collect();
+    ensure!(!input_chans.is_empty(), "no input channels");
+    let tok_len = design.channels[input_chans[0]].token_len;
+    let in_tokens_total = design.channels[input_chans[0]].tokens_total;
+    ensure!(
+        in_tokens_total as usize * tok_len == input.len(),
+        "input tokenization mismatch"
+    );
+    let token_bytes = (tok_len as u64 * design.channels[input_chans[0]].elem_bits).div_ceil(8);
+    let mut fed: u64 = 0;
+
+    let out_chan = design.output_channel()?.id.0;
+    let out_tokens_total = design.channels[out_chan].tokens_total;
+    let out_token_bytes =
+        (design.channels[out_chan].token_len as u64 * design.channels[out_chan].elem_bits)
+            .div_ceil(8);
+    let mut output: Vec<i32> = Vec::with_capacity(
+        out_tokens_total as usize * design.channels[out_chan].token_len,
+    );
+    let mut drained: u64 = 0;
+    let mut last_drain: u64 = 0;
+    let mut total_firings: u64 = 0;
+
+    // Sequential barrier: node may not start before all producers finish.
+    let preds: Vec<Vec<usize>> = design
+        .nodes
+        .iter()
+        .map(|n| {
+            n.in_channels
+                .iter()
+                .filter_map(|&c| match design.channel(c).src {
+                    Endpoint::Node(p) => Some(p),
+                    _ => None,
+                })
+                .collect()
+        })
+        .collect();
+
+    // --- sweep loop -----------------------------------------------------
+    loop {
+        let mut progress = false;
+
+        // 1) feeder: deliver input tokens (AXI-limited, broadcast).
+        while fed < in_tokens_total {
+            if !input_chans.iter().all(|&c| fifos[c].has_space()) {
+                break;
+            }
+            let axi_t = ((fed + 1) * token_bytes).div_ceil(AXI_BYTES_PER_CYCLE);
+            let t = input_chans
+                .iter()
+                .filter_map(|&c| fifos[c].next_push_ready())
+                .fold(axi_t, u64::max);
+            let base = fed as usize * tok_len;
+            let tok: Token = input[base..base + tok_len].to_vec();
+            for &c in &input_chans {
+                fifos[c].push(t, tok.clone());
+            }
+            fed += 1;
+            progress = true;
+        }
+
+        // 2) nodes, in topological order.
+        for nid in 0..nodes.len() {
+            let dn = &design.nodes[nid];
+            let barrier = match mode {
+                SimMode::Sequential => {
+                    let mut b = 0;
+                    let mut ready = true;
+                    for &p in &preds[nid] {
+                        if nodes[p].firings < design.nodes[p].geo.out_tokens {
+                            ready = false;
+                            break;
+                        }
+                        b = b.max(nodes[p].complete);
+                    }
+                    if !ready {
+                        continue;
+                    }
+                    b
+                }
+                SimMode::Dataflow => 0,
+            };
+
+            'fire: while nodes[nid].firings < dn.geo.out_tokens {
+                let k = nodes[nid].firings;
+                let needed = nodes[nid].proc.needed(k);
+
+                // (a) eagerly stream available tokens in (≤ needed for this
+                // firing), at one token per `cycles_per_token` — the line-
+                // buffer fill. Frees FIFO slots so shallow streams suffice.
+                for (slot, &cid) in dn.in_channels.iter().enumerate() {
+                    let cpt = design.channel(cid).cycles_per_token();
+                    while nodes[nid].consumed[slot] < needed[slot] && !fifos[cid.0].is_empty() {
+                        let arr = fifos[cid.0].arrival(0).unwrap();
+                        let t_pop = (arr + cpt).max(nodes[nid].last_in_time[slot] + cpt);
+                        let (_, tok) = fifos[cid.0].pop(t_pop);
+                        nodes[nid].proc.accept(slot, tok);
+                        nodes[nid].consumed[slot] += 1;
+                        nodes[nid].last_in_time[slot] = t_pop;
+                        progress = true;
+                    }
+                    if nodes[nid].consumed[slot] < needed[slot] {
+                        break 'fire; // blocked on input tokens
+                    }
+                }
+                let t_in: u64 = dn
+                    .in_channels
+                    .iter()
+                    .enumerate()
+                    .map(|(slot, _)| nodes[nid].last_in_time[slot])
+                    .max()
+                    .unwrap_or(0);
+
+                // (b) output space?
+                let mut t_out: u64 = 0;
+                for &cid in &dn.out_channels {
+                    match fifos[cid.0].next_push_ready() {
+                        Some(t) => t_out = t_out.max(t),
+                        None => break 'fire, // blocked on output space
+                    }
+                }
+
+                // (c) fire
+                let base_ready = nodes[nid].t_free.max(barrier);
+                let t = base_ready.max(t_in).max(t_out);
+                // stall attribution
+                if t_in > base_ready.max(t_out) {
+                    nodes[nid].trace.stall_in += t_in - base_ready.max(t_out);
+                }
+                if t_out > base_ready.max(t_in) {
+                    nodes[nid].trace.stall_out += t_out - base_ready.max(t_in);
+                }
+
+                let value = nodes[nid].proc.fire(k);
+                let t_vis = t + dn.timing.depth;
+                // broadcast: clone for all but the last consumer (the
+                // common single-consumer case moves the token)
+                let (last, rest) = dn.out_channels.split_last().unwrap();
+                for &cid in rest {
+                    fifos[cid.0].push(t_vis, value.clone());
+                }
+                fifos[last.0].push(t_vis, value);
+                let interval = dn.compute_interval();
+                nodes[nid].t_free = t + interval;
+                nodes[nid].firings += 1;
+                total_firings += 1;
+                if k == 0 {
+                    nodes[nid].trace.first_fire = t;
+                }
+                nodes[nid].trace.last_fire = t;
+                nodes[nid].complete = t_vis;
+                progress = true;
+            }
+        }
+
+        // 3) sink: drain the output channel (AXI-limited).
+        while !fifos[out_chan].is_empty() {
+            let arr = fifos[out_chan].arrival(0).unwrap();
+            let axi_t = last_drain + out_token_bytes.div_ceil(AXI_BYTES_PER_CYCLE);
+            let t = arr.max(axi_t);
+            let (_, tok) = fifos[out_chan].pop(t);
+            output.extend_from_slice(&tok);
+            drained += 1;
+            last_drain = t;
+            progress = true;
+        }
+
+        if drained == out_tokens_total {
+            break;
+        }
+        if !progress {
+            // deadlock: report who is stuck and why
+            let mut blocked = Vec::new();
+            if fed < in_tokens_total {
+                blocked.push(format!("feeder: {fed}/{in_tokens_total} tokens delivered"));
+            }
+            for (nid, ns) in nodes.iter().enumerate() {
+                let dn = &design.nodes[nid];
+                if ns.firings < dn.geo.out_tokens {
+                    let needed = ns.proc.needed(ns.firings);
+                    let waits: Vec<String> = dn
+                        .in_channels
+                        .iter()
+                        .enumerate()
+                        .map(|(s, &c)| {
+                            format!(
+                                "{}: have {} need {}",
+                                design.channel(c).name,
+                                ns.consumed[s] + fifos[c.0].len() as u64,
+                                needed[s]
+                            )
+                        })
+                        .collect();
+                    let full: Vec<String> = dn
+                        .out_channels
+                        .iter()
+                        .filter(|&&c| !fifos[c.0].has_space())
+                        .map(|&c| format!("{} full", design.channel(c).name))
+                        .collect();
+                    blocked.push(format!(
+                        "{} at firing {}/{} [{} | {}]",
+                        dn.name,
+                        ns.firings,
+                        dn.geo.out_tokens,
+                        waits.join(", "),
+                        full.join(", ")
+                    ));
+                }
+            }
+            return Ok(SimReport {
+                cycles: 0,
+                output,
+                traces: nodes.into_iter().map(|n| n.trace).collect(),
+                fifo_high_water: high_water(design, &fifos),
+                deadlock: Some(blocked),
+                total_firings,
+            });
+        }
+    }
+
+    Ok(SimReport {
+        cycles: last_drain,
+        output,
+        traces: nodes
+            .into_iter()
+            .map(|mut n| {
+                n.trace.firings = n.firings;
+                n.trace.complete = n.complete;
+                n.trace
+            })
+            .collect(),
+        fifo_high_water: high_water(design, &fifos),
+        deadlock: None,
+        total_firings,
+    })
+}
+
+fn high_water(design: &Design, fifos: &[SimFifo]) -> Vec<(String, usize)> {
+    design
+        .channels
+        .iter()
+        .zip(fifos)
+        .map(|(c, f)| (c.name.clone(), f.max_occupancy))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::build::build_streaming_design;
+    use crate::dse::ilp::{solve, DseConfig};
+    use crate::ir::builder::models;
+    use crate::resources::device::DeviceSpec;
+    use crate::util::prng;
+
+    fn det_input(g: &crate::ir::graph::ModelGraph) -> Vec<i32> {
+        let n = g.inputs()[0].ty.numel();
+        prng::det_tensor(prng::SEED_INPUT, n).iter().map(|&v| v as i32).collect()
+    }
+
+    /// Reference conv+relu+requant on (n,n,c) input with (f,3,3,c)
+    /// weights — independent of the simulator's line-buffer machinery.
+    fn ref_conv_relu(n: usize, c: usize, f: usize, x: &[i32], w: &[i8]) -> Vec<i32> {
+        let mut out = vec![0i32; n * n * f];
+        for r in 0..n {
+            for cx in 0..n {
+                for ff in 0..f {
+                    let mut acc = 0i64;
+                    for kh in 0..3 {
+                        for kw in 0..3 {
+                            let (ir, ic) = (r + kh, cx + kw);
+                            if ir < 1 || ic < 1 || ir > n || ic > n {
+                                continue;
+                            }
+                            let (ir, ic) = (ir - 1, ic - 1);
+                            for cc in 0..c {
+                                let xv = x[(ir * n + ic) * c + cc] as i64;
+                                let wv = w[((ff * 3 + kh) * 3 + kw) * c + cc] as i64;
+                                acc += xv * wv;
+                            }
+                        }
+                    }
+                    let v = (acc.max(0) as i32) >> 6;
+                    out[(r * n + cx) * f + ff] = v.clamp(-128, 127);
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn conv_relu_functional_matches_reference() {
+        let g = models::conv_relu(16, 8, 8);
+        let d = build_streaming_design(&g).unwrap();
+        let x = det_input(&g);
+        let rep = simulate(&d, &x, SimMode::Dataflow).unwrap().expect_complete();
+        let w = g.weights()[0].data.clone().unwrap();
+        let want = ref_conv_relu(16, 8, 8, &x, &w);
+        assert_eq!(rep.output, want);
+    }
+
+    #[test]
+    fn dataflow_and_sequential_agree_functionally() {
+        for (name, size) in [("cascade", 16), ("linear", 0)] {
+            let g = models::paper_kernel(name, size).unwrap();
+            let d = build_streaming_design(&g).unwrap();
+            let x = det_input(&g);
+            let a = simulate(&d, &x, SimMode::Dataflow).unwrap().expect_complete();
+            let b = simulate(&d, &x, SimMode::Sequential).unwrap().expect_complete();
+            assert_eq!(a.output, b.output, "{name}: functional mismatch across modes");
+            assert!(
+                a.cycles <= b.cycles,
+                "{name}: dataflow ({}) must not be slower than sequential ({})",
+                a.cycles,
+                b.cycles
+            );
+        }
+    }
+
+    #[test]
+    fn residual_deadlocks_without_fifo_sizing_and_completes_with_it() {
+        let g = models::residual(32, 8, 8);
+        let d = build_streaming_design(&g).unwrap();
+        let x = det_input(&g);
+        // default shallow FIFOs: the skip path must deadlock
+        let rep = simulate(&d, &x, SimMode::Dataflow).unwrap();
+        assert!(rep.deadlock.is_some(), "expected deadlock with unsized FIFOs");
+
+        // after DSE (which sizes FIFOs) it completes
+        let mut d2 = build_streaming_design(&g).unwrap();
+        solve(&mut d2, &DseConfig::new(DeviceSpec::kv260())).unwrap();
+        let rep2 = simulate(&d2, &x, SimMode::Dataflow).unwrap().expect_complete();
+        assert!(rep2.cycles > 0);
+    }
+
+    #[test]
+    fn dse_speeds_up_simulated_design() {
+        let g = models::conv_relu(32, 8, 8);
+        let x = det_input(&g);
+        let d_scalar = build_streaming_design(&g).unwrap();
+        let slow = simulate(&d_scalar, &x, SimMode::Dataflow).unwrap().expect_complete();
+        let mut d_fast = build_streaming_design(&g).unwrap();
+        solve(&mut d_fast, &DseConfig::new(DeviceSpec::kv260())).unwrap();
+        let fast = simulate(&d_fast, &x, SimMode::Dataflow).unwrap().expect_complete();
+        assert_eq!(slow.output, fast.output, "unrolling must not change values");
+        assert!(
+            fast.cycles * 50 < slow.cycles,
+            "DSE speedup too small: {} vs {}",
+            fast.cycles,
+            slow.cycles
+        );
+        // full streaming at II=1: about one output pixel per cycle
+        assert!(fast.cycles < 3 * 32 * 32, "MING conv should be ~pixel-rate");
+    }
+
+    #[test]
+    fn traces_account_all_firings() {
+        let g = models::cascade(16, 8, 8);
+        let d = build_streaming_design(&g).unwrap();
+        let x = det_input(&g);
+        let rep = simulate(&d, &x, SimMode::Dataflow).unwrap().expect_complete();
+        for (tr, n) in rep.traces.iter().zip(&d.nodes) {
+            assert_eq!(tr.firings, n.geo.out_tokens, "node {}", tr.name);
+            assert!(tr.complete >= tr.last_fire);
+        }
+        assert_eq!(rep.total_firings, d.nodes.iter().map(|n| n.geo.out_tokens).sum::<u64>());
+    }
+
+    #[test]
+    fn fifo_high_water_within_capacity() {
+        let g = models::cascade(16, 8, 8);
+        let d = build_streaming_design(&g).unwrap();
+        let x = det_input(&g);
+        let rep = simulate(&d, &x, SimMode::Dataflow).unwrap().expect_complete();
+        for ((name, hw), c) in rep.fifo_high_water.iter().zip(&d.channels) {
+            assert!(*hw <= c.depth, "channel {name} overflowed: {hw} > {}", c.depth);
+        }
+    }
+
+    #[test]
+    fn bad_input_length_rejected() {
+        let g = models::linear();
+        let d = build_streaming_design(&g).unwrap();
+        assert!(simulate(&d, &[0i32; 3], SimMode::Dataflow).is_err());
+    }
+}

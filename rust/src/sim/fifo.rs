@@ -1,0 +1,152 @@
+//! Runtime FIFO with timestamped tokens and occupancy accounting.
+
+use std::collections::VecDeque;
+
+/// A token: the values of one stream element group (e.g. one pixel's C
+/// channels), widened to i32 (int8 payloads stay in int8 range).
+pub type Token = Vec<i32>;
+
+/// Runtime state of one channel.
+#[derive(Debug)]
+pub struct SimFifo {
+    /// Capacity in tokens (∞ for Sequential-style full-tensor buffers).
+    pub capacity: usize,
+    /// Tokens currently in flight: (push_cycle, value).
+    queue: VecDeque<(u64, Token)>,
+    /// Total tokens ever pushed.
+    pub pushed: u64,
+    /// Total tokens ever popped.
+    pub popped: u64,
+    /// Pop cycle of recent tokens, indexed by absolute token number —
+    /// producers consult this for back-pressure (a push of token `i`
+    /// must wait until token `i - capacity` was popped). Only the last
+    /// `capacity + 1` entries are retained.
+    pop_times: VecDeque<(u64, u64)>,
+    /// High-water mark of occupancy (for FIFO sizing diagnostics).
+    pub max_occupancy: usize,
+}
+
+impl SimFifo {
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            capacity: capacity.max(1),
+            queue: VecDeque::new(),
+            pushed: 0,
+            popped: 0,
+            pop_times: VecDeque::new(),
+            max_occupancy: 0,
+        }
+    }
+
+    pub fn unbounded() -> Self {
+        Self::new(usize::MAX)
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Is there space for one more token (structurally)?
+    pub fn has_space(&self) -> bool {
+        self.queue.len() < self.capacity
+    }
+
+    /// Earliest cycle at which the next push may happen given
+    /// back-pressure: the pop time of token `pushed - capacity`.
+    /// `None` while the FIFO is structurally full (consumer hasn't popped
+    /// yet — the producer must re-try after the consumer runs).
+    pub fn next_push_ready(&self) -> Option<u64> {
+        if self.capacity == usize::MAX || self.pushed < self.capacity as u64 {
+            return Some(0);
+        }
+        if !self.has_space() {
+            return None;
+        }
+        let need = self.pushed - self.capacity as u64; // token index that freed our slot
+        self.pop_times
+            .iter()
+            .find(|(idx, _)| *idx == need)
+            .map(|(_, t)| *t)
+            .or(Some(0)) // already trimmed ⇒ long past
+    }
+
+    pub fn push(&mut self, cycle: u64, tok: Token) {
+        debug_assert!(self.has_space(), "push into full FIFO");
+        self.queue.push_back((cycle, tok));
+        self.pushed += 1;
+        self.max_occupancy = self.max_occupancy.max(self.queue.len());
+    }
+
+    /// Arrival cycle of the k-th (0-based, relative to current front)
+    /// queued token, if present.
+    pub fn arrival(&self, k: usize) -> Option<u64> {
+        self.queue.get(k).map(|(t, _)| *t)
+    }
+
+    /// Pop the front token, recording the consumer's `cycle`.
+    pub fn pop(&mut self, cycle: u64) -> (u64, Token) {
+        let (t, tok) = self.queue.pop_front().expect("pop from empty FIFO");
+        let idx = self.popped;
+        self.popped += 1;
+        self.pop_times.push_back((idx, cycle));
+        let keep = if self.capacity == usize::MAX { 4 } else { self.capacity + 1 };
+        while self.pop_times.len() > keep {
+            self.pop_times.pop_front();
+        }
+        (t, tok)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_order_and_counts() {
+        let mut f = SimFifo::new(2);
+        f.push(10, vec![1]);
+        f.push(11, vec![2]);
+        assert!(!f.has_space());
+        let (t, v) = f.pop(20);
+        assert_eq!((t, v), (10, vec![1]));
+        assert_eq!(f.popped, 1);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f.max_occupancy, 2);
+    }
+
+    #[test]
+    fn backpressure_timing() {
+        let mut f = SimFifo::new(2);
+        f.push(0, vec![1]);
+        f.push(0, vec![2]);
+        // full: producer must wait for a pop
+        assert_eq!(f.next_push_ready(), None);
+        f.pop(35);
+        // token 0 popped at 35 ⇒ pushing token 2 is legal from cycle 35
+        assert_eq!(f.next_push_ready(), Some(35));
+    }
+
+    #[test]
+    fn unbounded_never_blocks() {
+        let mut f = SimFifo::unbounded();
+        for i in 0..10_000 {
+            assert_eq!(f.next_push_ready(), Some(0));
+            f.push(i, vec![i as i32]);
+        }
+        assert_eq!(f.pushed, 10_000);
+    }
+
+    #[test]
+    fn arrival_peek() {
+        let mut f = SimFifo::new(8);
+        f.push(5, vec![1]);
+        f.push(9, vec![2]);
+        assert_eq!(f.arrival(0), Some(5));
+        assert_eq!(f.arrival(1), Some(9));
+        assert_eq!(f.arrival(2), None);
+    }
+}

@@ -1,0 +1,24 @@
+//! Cycle-level KPN dataflow simulator — the substitute for Vitis HLS
+//! synthesis reports (DESIGN.md substitution table).
+//!
+//! The simulator executes a [`crate::dataflow::Design`] *functionally*
+//! (bit-exact int8/int32 semantics, same contract as `ref.py`) while
+//! tracking time at **firing granularity**: every node firing gets a
+//! cycle timestamp derived from input-token arrival times, the node's
+//! initiation interval / pipeline depth, FIFO back-pressure (blocking
+//! writes against finite depths) and — in `Sequential` style — a barrier
+//! after every producer. Cycle counts therefore include line-buffer
+//! warm-up, DATAFLOW overlap and diamond stalls exactly where a real
+//! streaming design pays them, at a simulation cost of O(tokens), not
+//! O(cycles).
+//!
+//! Deadlocks (undersized diamond FIFOs) are detected, not hidden: if no
+//! node can make progress and the sink is not done, the engine reports
+//! the blocked nodes and their wait reasons.
+
+pub mod fifo;
+pub mod process;
+pub mod engine;
+pub mod trace;
+
+pub use engine::{simulate, SimMode, SimReport};

@@ -1,0 +1,436 @@
+//! Functional node behaviours — bit-exact int8/int32 semantics matching
+//! `python/compile/kernels/ref.py` (the golden-model contract).
+//!
+//! A [`NodeProc`] answers three questions for the engine:
+//! 1. how many cumulative input tokens each input needs before firing k,
+//! 2. what to do with tokens as they arrive (`accept` — e.g. fill the
+//!    line buffer), and
+//! 3. the value of output token k (`fire`).
+
+use std::collections::VecDeque;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::analysis::classify::KernelClass;
+use crate::dataflow::design::Design;
+use crate::ir::generic::Payload;
+use crate::ir::graph::TensorKind;
+
+use super::fifo::Token;
+
+pub const I8_MIN: i32 = -128;
+pub const I8_MAX: i32 = 127;
+
+fn sat_i8(v: i32) -> i32 {
+    v.clamp(I8_MIN, I8_MAX)
+}
+
+/// Apply a pure-parallel payload to per-lane values.
+pub fn apply_payload(p: Payload, ins: &[&Token]) -> Token {
+    let n = ins[0].len();
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        let a = ins[0][i];
+        let v = match p {
+            Payload::Relu => a.max(0),
+            Payload::Requant { shift } => sat_i8(a >> shift),
+            Payload::ReluRequant { shift } => sat_i8(a.max(0) >> shift),
+            Payload::AddSat => sat_i8(a + ins[1][i]),
+            Payload::Copy => a,
+            Payload::MulAcc | Payload::MaxReduce => unreachable!("not pure-parallel"),
+        };
+        out.push(v);
+    }
+    out
+}
+
+/// Functional behaviour of one dataflow node.
+pub enum NodeProc {
+    Sliding(SlidingProc),
+    Reduction(ReductionProc),
+    Parallel(ParallelProc),
+}
+
+impl NodeProc {
+    /// Cumulative tokens needed on each input before firing `k`.
+    pub fn needed(&self, k: u64) -> Vec<u64> {
+        match self {
+            NodeProc::Sliding(p) => vec![p.needed(k)],
+            NodeProc::Reduction(_) => vec![k + 1],
+            NodeProc::Parallel(p) => vec![k + 1; p.arity],
+        }
+    }
+
+    pub fn accept(&mut self, slot: usize, tok: Token) {
+        match self {
+            NodeProc::Sliding(p) => p.accept(tok),
+            NodeProc::Reduction(p) => p.accept(tok),
+            NodeProc::Parallel(p) => p.accept(slot, tok),
+        }
+    }
+
+    pub fn fire(&mut self, k: u64) -> Token {
+        match self {
+            NodeProc::Sliding(p) => p.fire(k),
+            NodeProc::Reduction(p) => p.fire(),
+            NodeProc::Parallel(p) => p.fire(),
+        }
+    }
+}
+
+/// Transpose conv weights (F,K,K,C) -> (K,K,C,F) for the contiguous
+/// inner loop of `SlidingProc::fire`.
+pub fn transpose_fkkc_to_kkcf(w: &[i32], f: usize, k: usize, c: usize) -> Vec<i32> {
+    if w.is_empty() {
+        return Vec::new(); // weight-less sliding window (maxpool)
+    }
+    debug_assert_eq!(w.len(), f * k * k * c);
+    let mut out = vec![0i32; w.len()];
+    for ff in 0..f {
+        for kh in 0..k {
+            for kw in 0..k {
+                for cc in 0..c {
+                    out[((kh * k + kw) * c + cc) * f + ff] =
+                        w[((ff * k + kh) * k + kw) * c + cc];
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Sliding-window node (conv2d / maxpool): line-buffer fill + window
+/// gather + dot product / max-reduce per output pixel.
+pub struct SlidingProc {
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    pub w_out: usize,
+    pub f: usize,
+    pub k: usize,
+    pub stride: usize,
+    pub dilation: usize,
+    pub pad: usize,
+    /// Flattened weights (F, K, K, C) as i32; empty for maxpool.
+    pub weights: Vec<i32>,
+    /// Weights transposed to (K, K, C, F) so the per-(kh,kw,cc) inner
+    /// loop reads a contiguous F-vector — the simulator's hottest loop
+    /// (see EXPERIMENTS.md §Perf).
+    weights_t: Vec<i32>,
+    pub payload: Payload,
+    /// Consumed input values (row-major (h, w, c)); the engine's FIFO
+    /// back-pressure bounds how far this runs ahead — functionally we
+    /// retain everything for simplicity (simulation memory, not BRAM).
+    buf: Vec<i32>,
+}
+
+impl SlidingProc {
+    fn needed(&self, k: u64) -> u64 {
+        // output pixel (r, cx) needs input through pixel
+        // (r·s + (K-1)·δ − pad, cx·s + (K-1)·δ − pad), clamped into range.
+        let r = (k as usize) / self.w_out;
+        let cx = (k as usize) % self.w_out;
+        let keff = (self.k - 1) * self.dilation;
+        let raw_r = (r * self.stride + keff).saturating_sub(self.pad);
+        if raw_r >= self.h {
+            // bottom zero-padding: the window already hangs off the end,
+            // so the whole input is (and stays) required — keeps needed()
+            // monotone across the clamped final rows.
+            return (self.h * self.w) as u64;
+        }
+        let in_c = (cx * self.stride + keff).saturating_sub(self.pad).min(self.w - 1);
+        (raw_r * self.w + in_c + 1) as u64
+    }
+
+    fn accept(&mut self, tok: Token) {
+        debug_assert_eq!(tok.len(), self.c);
+        self.buf.extend_from_slice(&tok);
+    }
+
+    fn fire(&mut self, k: u64) -> Token {
+        let r = (k as usize) / self.w_out;
+        let cx = (k as usize) % self.w_out;
+        match self.payload {
+            Payload::MulAcc => {
+                let mut out = vec![0i32; self.f];
+                for kh in 0..self.k {
+                    for kw in 0..self.k {
+                        let ir = r * self.stride + kh * self.dilation;
+                        let ic = cx * self.stride + kw * self.dilation;
+                        // padding: indices are offset by `pad`
+                        if ir < self.pad || ic < self.pad {
+                            continue;
+                        }
+                        let (ir, ic) = (ir - self.pad, ic - self.pad);
+                        if ir >= self.h || ic >= self.w {
+                            continue;
+                        }
+                        let base = (ir * self.w + ic) * self.c;
+                        let px = &self.buf[base..base + self.c];
+                        let wbase = (kh * self.k + kw) * self.c * self.f;
+                        // contiguous F-vector per (kh,kw,cc): auto-vectorizes
+                        for (cc, &x) in px.iter().enumerate() {
+                            if x == 0 {
+                                continue;
+                            }
+                            let wrow = &self.weights_t[wbase + cc * self.f..wbase + (cc + 1) * self.f];
+                            for (o, &wv) in out.iter_mut().zip(wrow) {
+                                *o += wv * x;
+                            }
+                        }
+                    }
+                }
+                out
+            }
+            Payload::MaxReduce => {
+                let mut out = vec![i32::MIN; self.f]; // f == c for pooling
+                for kh in 0..self.k {
+                    for kw in 0..self.k {
+                        let ir = r * self.stride + kh * self.dilation;
+                        let ic = cx * self.stride + kw * self.dilation;
+                        if ir < self.pad || ic < self.pad {
+                            continue;
+                        }
+                        let (ir, ic) = (ir - self.pad, ic - self.pad);
+                        if ir >= self.h || ic >= self.w {
+                            continue;
+                        }
+                        let base = (ir * self.w + ic) * self.c;
+                        for cc in 0..self.c {
+                            out[cc] = out[cc].max(self.buf[base + cc]);
+                        }
+                    }
+                }
+                out
+            }
+            other => panic!("sliding node with payload {other:?}"),
+        }
+    }
+}
+
+/// Regular-reduction node (linear): one activation row in, one output
+/// row out, weights resident.
+pub struct ReductionProc {
+    pub k: usize,
+    pub n: usize,
+    /// (K, N) weights as i32.
+    pub weights: Vec<i32>,
+    cur: Option<Token>,
+}
+
+impl ReductionProc {
+    fn accept(&mut self, tok: Token) {
+        debug_assert_eq!(tok.len(), self.k);
+        debug_assert!(self.cur.is_none(), "reduction row overwritten before fire");
+        self.cur = Some(tok);
+    }
+
+    fn fire(&mut self) -> Token {
+        let x = self.cur.take().expect("fire before accept");
+        let mut out = vec![0i32; self.n];
+        for (kk, &xv) in x.iter().enumerate() {
+            if xv == 0 {
+                continue;
+            }
+            let row = &self.weights[kk * self.n..(kk + 1) * self.n];
+            for (o, &wv) in out.iter_mut().zip(row) {
+                *o += xv * wv;
+            }
+        }
+        out
+    }
+}
+
+/// Pure-parallel node: elementwise payload over 1–2 input streams.
+pub struct ParallelProc {
+    pub payload: Payload,
+    pub arity: usize,
+    pending: Vec<VecDeque<Token>>,
+}
+
+impl ParallelProc {
+    fn accept(&mut self, slot: usize, tok: Token) {
+        self.pending[slot].push_back(tok);
+    }
+
+    fn fire(&mut self) -> Token {
+        let toks: Vec<Token> =
+            self.pending.iter_mut().map(|q| q.pop_front().expect("missing token")).collect();
+        let refs: Vec<&Token> = toks.iter().collect();
+        apply_payload(self.payload, &refs)
+    }
+}
+
+/// Build the functional behaviour of node `nid` of a design.
+pub fn build_proc(d: &Design, nid: usize) -> Result<NodeProc> {
+    let node = &d.nodes[nid];
+    let op = &d.graph.ops[node.op_index];
+    match node.geo.class {
+        KernelClass::SlidingWindow(sw) => {
+            let in_t = d.graph.tensor(op.inputs[0]);
+            ensure!(in_t.ty.rank() == 3, "sliding input must be (H,W,C)");
+            let (h, w, c) = (in_t.ty.shape[0], in_t.ty.shape[1], in_t.ty.shape[2]);
+            let out_t = d.graph.tensor(op.output);
+            let w_out = out_t.ty.shape[1];
+            let f = *out_t.ty.shape.last().unwrap();
+            let k = op.dims[sw.reduction_dim];
+            let weights: Vec<i32> = op
+                .inputs
+                .iter()
+                .find(|&&t| d.graph.tensor(t).kind == TensorKind::Weight)
+                .map(|&t| {
+                    d.graph
+                        .tensor(t)
+                        .data
+                        .as_ref()
+                        .expect("weight without data")
+                        .iter()
+                        .map(|&v| v as i32)
+                        .collect()
+                })
+                .unwrap_or_default();
+            if op.payload == Payload::MulAcc {
+                ensure!(weights.len() == f * k * k * c, "conv weight size mismatch");
+            }
+            let weights_t = transpose_fkkc_to_kkcf(&weights, f, k, c);
+            Ok(NodeProc::Sliding(SlidingProc {
+                h,
+                w,
+                c,
+                w_out,
+                f,
+                k,
+                stride: sw.stride as usize,
+                dilation: sw.dilation as usize,
+                pad: op.pad,
+                weights,
+                weights_t,
+                payload: op.payload,
+                buf: Vec::new(),
+            }))
+        }
+        KernelClass::RegularReduction => {
+            let wt = op
+                .inputs
+                .iter()
+                .find(|&&t| d.graph.tensor(t).kind == TensorKind::Weight)
+                .context("reduction node without weights")?;
+            let wt = d.graph.tensor(*wt);
+            ensure!(wt.ty.rank() == 2, "linear weights must be (K,N)");
+            let (k, n) = (wt.ty.shape[0], wt.ty.shape[1]);
+            Ok(NodeProc::Reduction(ReductionProc {
+                k,
+                n,
+                weights: wt.data.as_ref().unwrap().iter().map(|&v| v as i32).collect(),
+                cur: None,
+            }))
+        }
+        KernelClass::PureParallel => {
+            let arity = node.in_channels.len();
+            match op.payload {
+                Payload::Relu
+                | Payload::Requant { .. }
+                | Payload::ReluRequant { .. }
+                | Payload::AddSat
+                | Payload::Copy => {}
+                other => bail!("pure-parallel node with payload {other:?}"),
+            }
+            Ok(NodeProc::Parallel(ParallelProc {
+                payload: op.payload,
+                arity,
+                pending: (0..arity).map(|_| VecDeque::new()).collect(),
+            }))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::build::build_streaming_design;
+    use crate::ir::builder::models;
+
+    #[test]
+    fn payload_semantics_match_ref_contract() {
+        // floor-rounding arithmetic shift and clamping, as in ref.py
+        let acc: Token = vec![-65, -64, -1, 0, 1, 63, 64, 65];
+        let got = apply_payload(Payload::Requant { shift: 6 }, &[&acc]);
+        assert_eq!(got, vec![-2, -1, -1, 0, 0, 0, 1, 1]);
+        let big: Token = vec![1 << 20, -(1 << 20)];
+        assert_eq!(apply_payload(Payload::Requant { shift: 6 }, &[&big]), vec![127, -128]);
+        assert_eq!(
+            apply_payload(Payload::ReluRequant { shift: 6 }, &[&big]),
+            vec![127, 0]
+        );
+        let a: Token = vec![100, -100];
+        let b: Token = vec![100, -100];
+        assert_eq!(apply_payload(Payload::AddSat, &[&a, &b]), vec![127, -128]);
+    }
+
+    #[test]
+    fn sliding_needed_is_monotone_and_bounded() {
+        let g = models::conv_relu(16, 4, 4);
+        let d = build_streaming_design(&g).unwrap();
+        let NodeProc::Sliding(p) = build_proc(&d, 0).unwrap() else { panic!() };
+        let total = 16 * 16;
+        let mut last = 0;
+        for k in 0..total as u64 {
+            let n = p.needed(k);
+            assert!(n >= last, "needed() must be monotone");
+            assert!(n <= total as u64);
+            last = n;
+        }
+        // last pixel needs the whole input
+        assert_eq!(last, total as u64);
+        // first pixel needs one padded row + a bit (pad=1)
+        assert!(p.needed(0) <= 2 * 16);
+    }
+
+    #[test]
+    fn conv_fire_matches_direct_computation() {
+        // 4x4 input, 1 channel, 1 filter of all-ones, pad 1: output (1,1)
+        // (interior) = sum of the 3x3 neighbourhood.
+        let g = models::conv_relu(4, 1, 1);
+        let d = build_streaming_design(&g).unwrap();
+        let NodeProc::Sliding(mut p) = build_proc(&d, 0).unwrap() else { panic!() };
+        p.weights = vec![1; 9];
+        p.weights_t = vec![1; 9];
+        let vals: Vec<i32> = (0..16).collect();
+        for v in &vals {
+            p.accept(vec![*v]);
+        }
+        // output pixel (1,1) covers input rows 0..3, cols 0..3
+        let k = (1 * 4 + 1) as u64;
+        let got = p.fire(k);
+        let want: i32 = [0, 1, 2, 4, 5, 6, 8, 9, 10].iter().map(|&i| vals[i as usize]).sum();
+        assert_eq!(got, vec![want]);
+        // corner pixel (0,0): zero-padded window sums indices {0,1,4,5}
+        let got0 = p.fire(0);
+        assert_eq!(got0, vec![0 + 1 + 4 + 5]);
+    }
+
+    #[test]
+    fn reduction_fire_is_matvec() {
+        let g = models::linear();
+        let d = build_streaming_design(&g).unwrap();
+        let NodeProc::Reduction(mut p) = build_proc(&d, 0).unwrap() else { panic!() };
+        // x = e0 (first unit vector): out = first row of W
+        let mut x = vec![0i32; p.k];
+        x[0] = 1;
+        p.accept(x);
+        let got = p.fire();
+        let want: Vec<i32> = p.weights[..p.n].to_vec();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn build_proc_for_all_paper_nodes() {
+        for (name, size) in models::table2_workloads() {
+            let g = models::paper_kernel(name, size.max(16)).unwrap();
+            let d = build_streaming_design(&g).unwrap();
+            for nid in 0..d.nodes.len() {
+                build_proc(&d, nid).unwrap_or_else(|e| panic!("{name}/{nid}: {e}"));
+            }
+        }
+    }
+}

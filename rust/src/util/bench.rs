@@ -1,0 +1,107 @@
+//! Minimal criterion-style timing harness for the `harness = false` bench
+//! targets (criterion is not vendored in this environment). Provides
+//! warmup + repeated measurement with mean / stddev / min reporting.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark: wall-clock stats over the measured iterations.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub stddev: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl BenchStats {
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<44} {:>10} ± {:>9}  (min {:>10}, max {:>10}, n={})",
+            self.name,
+            fmt_dur(self.mean),
+            fmt_dur(self.stddev),
+            fmt_dur(self.min),
+            fmt_dur(self.max),
+            self.iters
+        )
+    }
+}
+
+pub fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns}ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2}us", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2}ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.3}s", ns as f64 / 1e9)
+    }
+}
+
+/// Time `f` with `warmup` unmeasured runs then `iters` measured runs.
+/// Returns per-iteration stats. `f`'s return value is black-boxed.
+pub fn bench<T>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> BenchStats {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed());
+    }
+    let sum: Duration = samples.iter().sum();
+    let mean = sum / iters as u32;
+    let var = samples
+        .iter()
+        .map(|s| {
+            let d = s.as_secs_f64() - mean.as_secs_f64();
+            d * d
+        })
+        .sum::<f64>()
+        / iters as f64;
+    BenchStats {
+        name: name.to_string(),
+        iters,
+        mean,
+        stddev: Duration::from_secs_f64(var.sqrt()),
+        min: *samples.iter().min().unwrap(),
+        max: *samples.iter().max().unwrap(),
+    }
+}
+
+/// Auto-select iteration count so a bench takes roughly `budget`.
+pub fn bench_auto<T>(name: &str, budget: Duration, mut f: impl FnMut() -> T) -> BenchStats {
+    let t0 = Instant::now();
+    std::hint::black_box(f());
+    let one = t0.elapsed().max(Duration::from_nanos(100));
+    let iters = (budget.as_secs_f64() / one.as_secs_f64()).clamp(3.0, 1000.0) as usize;
+    bench(name, 1, iters, f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        let s = bench("noop-ish", 1, 10, || {
+            std::hint::black_box((0..100).sum::<u64>())
+        });
+        assert_eq!(s.iters, 10);
+        assert!(s.min <= s.mean && s.mean <= s.max);
+    }
+
+    #[test]
+    fn fmt_dur_units() {
+        assert_eq!(fmt_dur(Duration::from_nanos(5)), "5ns");
+        assert!(fmt_dur(Duration::from_micros(5)).ends_with("us"));
+        assert!(fmt_dur(Duration::from_millis(5)).ends_with("ms"));
+        assert!(fmt_dur(Duration::from_secs(5)).ends_with('s'));
+    }
+}

@@ -1,0 +1,9 @@
+//! Small self-contained substrates: deterministic PRNG shared with the
+//! Python layer, a mini property-testing harness (stand-in for proptest —
+//! not vendored in this environment), aligned text tables, and a bench
+//! timing helper used by the `cargo bench` targets.
+
+pub mod prng;
+pub mod prop;
+pub mod tables;
+pub mod bench;

@@ -1,0 +1,105 @@
+//! Mini property-testing harness (proptest is not vendored in this
+//! environment). Runs a property over `cases` PRNG-driven inputs and, on
+//! failure, performs greedy shrinking via a caller-provided shrink step.
+//!
+//! ```no_run
+//! use ming::util::prop::{forall, Gen};
+//! forall("add commutes", 100, |g| (g.rng.range(0, 50), g.rng.range(0, 50)),
+//!        |&(a, b)| a + b == b + a);
+//! ```
+
+use crate::util::prng::XorShift;
+
+/// Generation context handed to input generators.
+pub struct Gen {
+    pub rng: XorShift,
+    /// Index of the current case (0-based); useful for size ramping.
+    pub case: usize,
+}
+
+/// Run `prop` over `cases` generated inputs; panics with a reproducer
+/// message on the first failure.
+pub fn forall<T: std::fmt::Debug>(
+    name: &str,
+    cases: usize,
+    mut gen: impl FnMut(&mut Gen) -> T,
+    mut prop: impl FnMut(&T) -> bool,
+) {
+    for case in 0..cases {
+        // Per-case seed so any failure is reproducible in isolation.
+        let seed = 0x5EED_0000 + case as u64;
+        let mut g = Gen { rng: XorShift::new(seed), case };
+        let input = gen(&mut g);
+        if !prop(&input) {
+            panic!("property '{name}' failed on case {case} (seed {seed:#x}): {input:?}");
+        }
+    }
+}
+
+/// Like [`forall`] but with greedy shrinking: on failure, `shrink` proposes
+/// smaller candidates; the smallest still-failing input is reported.
+pub fn forall_shrink<T: std::fmt::Debug + Clone>(
+    name: &str,
+    cases: usize,
+    mut gen: impl FnMut(&mut Gen) -> T,
+    mut shrink: impl FnMut(&T) -> Vec<T>,
+    mut prop: impl FnMut(&T) -> bool,
+) {
+    for case in 0..cases {
+        let seed = 0x5EED_0000 + case as u64;
+        let mut g = Gen { rng: XorShift::new(seed), case };
+        let input = gen(&mut g);
+        if prop(&input) {
+            continue;
+        }
+        // Greedy descent: keep taking the first failing shrink candidate.
+        let mut worst = input.clone();
+        'outer: loop {
+            for cand in shrink(&worst) {
+                if !prop(&cand) {
+                    worst = cand;
+                    continue 'outer;
+                }
+            }
+            break;
+        }
+        panic!(
+            "property '{name}' failed on case {case} (seed {seed:#x}):\n  original: {input:?}\n  shrunk:   {worst:?}"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        forall("count", 25, |g| g.rng.range(0, 10), |_| {
+            n += 1;
+            true
+        });
+        assert_eq!(n, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_panics_with_input() {
+        forall("fails", 10, |g| g.rng.range(0, 100), |&x| x > 1000);
+    }
+
+    #[test]
+    #[should_panic(expected = "shrunk:   2")]
+    fn shrinking_finds_minimal_counterexample() {
+        // Property "x < 2" fails for any x >= 2; shrinking by decrement
+        // must land exactly on 2.
+        forall_shrink(
+            "min2",
+            5,
+            |g| g.rng.range(50, 100),
+            |&x| if x > 0 { vec![x - 1] } else { vec![] },
+            |&x| x < 2,
+        );
+    }
+}

@@ -1,0 +1,157 @@
+//! Failure injection: malformed IR, undersized devices, corrupted
+//! designs, bad front-end input — every layer must fail loudly and
+//! informatively, never silently mis-compile.
+
+use ming::baselines::framework::{compile_with, FrameworkKind};
+use ming::dataflow::build::build_streaming_design;
+use ming::dataflow::validate::validate_design;
+use ming::dse::ilp::{solve, DseConfig};
+use ming::ir::affine::{AffineExpr, AffineMap};
+use ming::ir::builder::{models, GraphBuilder};
+use ming::ir::generic::{GenericOp, IterType, Payload};
+use ming::ir::graph::TensorId;
+use ming::ir::json::import_model;
+use ming::ir::types::DType;
+use ming::resources::device::DeviceSpec;
+use ming::sim::{simulate, SimMode};
+
+#[test]
+fn graph_with_shape_mismatch_rejected() {
+    let mut b = GraphBuilder::new("bad");
+    let x = b.input("x", vec![8, 8, 4], DType::I8);
+    // weight channel count disagrees with input
+    let w = b.det_weight("w", vec![4, 3, 3, 2], 1);
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        b.conv2d("conv0", x, w, 1, 1)
+    }));
+    assert!(result.is_err(), "channel mismatch must be rejected at build time");
+}
+
+#[test]
+fn op_reading_out_of_bounds_rejected() {
+    // Hand-craft an op whose indexing map walks past the tensor bounds.
+    let mut b = GraphBuilder::new("oob");
+    let x = b.input("x", vec![8, 8], DType::I8);
+    let mut g = b.finish();
+    let out = g.add_tensor(
+        "y",
+        ming::ir::types::TensorType::new(vec![8, 8], DType::I32),
+        ming::ir::graph::TensorKind::Output,
+        None,
+    );
+    g.ops.push(GenericOp {
+        name: "bad".into(),
+        inputs: vec![x],
+        output: out,
+        indexing_maps: vec![
+            // reads (d0 * 2, d1): rows 0..14 of an 8-row tensor
+            AffineMap::new(2, vec![AffineExpr::scaled(0, 2), AffineExpr::dim(1)]),
+            AffineMap::identity(2),
+        ],
+        iter_types: vec![IterType::Parallel; 2],
+        dims: vec![8, 8],
+        payload: Payload::Copy,
+        pad: 0,
+    });
+    let err = g.validate().unwrap_err().to_string();
+    assert!(err.contains("outside"), "got: {err}");
+}
+
+#[test]
+fn dangling_tensor_reference_rejected() {
+    let mut b = GraphBuilder::new("dangling");
+    let x = b.input("x", vec![4, 4, 2], DType::I8);
+    let w = b.det_weight("w", vec![2, 3, 3, 2], 1);
+    let y = b.conv2d("conv0", x, w, 1, 1);
+    b.mark_output(y);
+    let mut g = b.finish();
+    g.ops[0].inputs[0] = TensorId(999);
+    assert!(g.validate().is_err());
+}
+
+#[test]
+fn dse_infeasible_on_starved_devices() {
+    let g = models::conv_relu(32, 8, 8);
+    // zero DSPs: even the scalar design needs one
+    let mut d = build_streaming_design(&g).unwrap();
+    let err = solve(&mut d, &DseConfig::new(DeviceSpec::kv260().with_dsp_limit(0)))
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("infeasible") || err.contains("no feasible"), "got: {err}");
+    // near-zero BRAM: the line buffers alone exceed it
+    let mut d = build_streaming_design(&g).unwrap();
+    assert!(solve(
+        &mut d,
+        &DseConfig { device: DeviceSpec::kv260().with_bram_limit(1), bram_reserve: 0 }
+    )
+    .is_err());
+}
+
+#[test]
+fn corrupted_design_fails_validation_not_simulation() {
+    let g = models::cascade(16, 8, 8);
+    let mut d = build_streaming_design(&g).unwrap();
+    // cut a channel loose
+    d.nodes[1].in_channels.clear();
+    assert!(validate_design(&d).is_err());
+}
+
+#[test]
+fn undersized_diamond_fifo_reports_deadlock_with_blame() {
+    let g = models::residual(32, 8, 8);
+    let d = build_streaming_design(&g).unwrap(); // no FIFO sizing pass
+    let x: Vec<i32> = vec![1; g.inputs()[0].ty.numel()];
+    let rep = simulate(&d, &x, SimMode::Dataflow).unwrap();
+    let blocked = rep.deadlock.expect("must deadlock");
+    // the report must name the blocked node and the starving channel
+    assert!(
+        blocked.iter().any(|b| b.contains("add0")),
+        "deadlock report should blame the join: {blocked:?}"
+    );
+}
+
+#[test]
+fn simulate_rejects_wrong_input_shape() {
+    let g = models::linear();
+    let d = build_streaming_design(&g).unwrap();
+    assert!(simulate(&d, &[1, 2, 3], SimMode::Dataflow).is_err());
+}
+
+#[test]
+fn front_end_rejects_malformed_json() {
+    for src in [
+        "{",                                         // truncated
+        r#"{"name": 3, "input": {}, "layers": []}"#, // wrong types
+        r#"{"name": "x", "input": {"shape": [8, 8]}, "layers": [{"op": "conv2d", "filters": 4}]}"#, // conv on rank-2
+        r#"{"name": "x", "input": {"shape": [8, 8, 2], "dtype": "f64"}, "layers": []}"#, // bad dtype
+    ] {
+        assert!(import_model(src).is_err(), "should reject: {src}");
+    }
+}
+
+#[test]
+fn compile_service_isolates_bad_jobs() {
+    use ming::coordinator::service::{CompileService, SweepConfig};
+    let cfg = SweepConfig {
+        workloads: vec![("conv_relu".into(), 16), ("no_such_kernel".into(), 16)],
+        frameworks: vec![FrameworkKind::Ming],
+        device: DeviceSpec::kv260(),
+        estimate_only: true,
+    };
+    let results = CompileService::default().run_sweep(&cfg);
+    assert_eq!(results.len(), 2);
+    assert!(results[0].is_ok());
+    assert!(results[1].is_err(), "bad kernel must fail in isolation");
+}
+
+#[test]
+fn streamhls_linear_flagged_infeasible_but_still_analyzable() {
+    // The paper marks StreamHLS's Linear design as exceeding resources;
+    // our pipeline must still produce the design + report (not crash).
+    let g = models::linear();
+    let dev = DeviceSpec::kv260();
+    let d = compile_with(FrameworkKind::StreamHls, &g, &dev).unwrap();
+    let r = ming::resources::estimate(&d, &dev);
+    assert!(!r.fits());
+    assert!(r.violations().iter().any(|v| v.starts_with("DSP")));
+}

@@ -1,0 +1,127 @@
+//! Integration: the three-layer contract. The Rust cycle simulator's
+//! functional output must agree **bit-exactly** with the JAX/Pallas
+//! golden model (AOT HLO artifacts, executed via PJRT) for every paper
+//! kernel and for every framework strategy (they all implement the same
+//! math). Skips gracefully when `make artifacts` hasn't run.
+
+use ming::baselines::framework::{compile_with, FrameworkKind};
+use ming::ir::builder::models;
+use ming::resources::device::DeviceSpec;
+use ming::runtime::golden::GoldenModel;
+use ming::sim::{simulate, SimMode};
+use ming::util::prng;
+
+fn golden() -> Option<GoldenModel> {
+    match GoldenModel::open_default() {
+        Ok(gm) => Some(gm),
+        Err(e) => {
+            eprintln!("skipping golden tests: {e:#}");
+            None
+        }
+    }
+}
+
+fn det_input(n: usize) -> Vec<i32> {
+    prng::det_tensor(prng::SEED_INPUT, n).iter().map(|&v| v as i32).collect()
+}
+
+#[test]
+fn ming_matches_golden_on_all_small_kernels() {
+    let Some(gm) = golden() else { return };
+    let dev = DeviceSpec::kv260();
+    for (kernel, size) in
+        [("conv_relu", 32usize), ("cascade", 32), ("residual", 32), ("linear", 0), ("feedforward", 0)]
+    {
+        let key = GoldenModel::key(kernel, size);
+        if !gm.available(&key) {
+            continue;
+        }
+        let g = models::paper_kernel(kernel, size).unwrap();
+        let x = det_input(g.inputs()[0].ty.numel());
+        let d = compile_with(FrameworkKind::Ming, &g, &dev).unwrap();
+        let rep = simulate(&d, &x, SimMode::Dataflow).unwrap().expect_complete();
+        let bad = gm.verify(&key, &x, &rep.output).unwrap();
+        assert_eq!(bad, 0, "{key}: {bad} mismatches");
+    }
+}
+
+/// Extension workload (conv-pool-conv-pool): stride-2 sliding windows
+/// and weight-less max-reduce nodes also verify bit-exact end to end.
+#[test]
+fn tiny_cnn_matches_golden() {
+    let Some(gm) = golden() else { return };
+    if !gm.available("tiny_cnn_32") {
+        return;
+    }
+    let dev = DeviceSpec::kv260();
+    let g = models::tiny_cnn(32, 4, 8);
+    let x = det_input(g.inputs()[0].ty.numel());
+    let d = compile_with(FrameworkKind::Ming, &g, &dev).unwrap();
+    let rep = simulate(&d, &x, SimMode::Dataflow).unwrap().expect_complete();
+    let bad = gm.verify("tiny_cnn_32", &x, &rep.output).unwrap();
+    assert_eq!(bad, 0, "tiny_cnn: {bad} mismatches");
+    assert_eq!(rep.output.len(), 8 * 8 * 8);
+}
+
+#[test]
+fn every_framework_matches_golden_on_conv() {
+    let Some(gm) = golden() else { return };
+    if !gm.available("conv_relu_32") {
+        return;
+    }
+    let dev = DeviceSpec::kv260();
+    let g = models::paper_kernel("conv_relu", 32).unwrap();
+    let x = det_input(g.inputs()[0].ty.numel());
+    for fw in FrameworkKind::all() {
+        let d = compile_with(fw, &g, &dev).unwrap();
+        let rep = simulate(&d, &x, SimMode::of(d.style)).unwrap().expect_complete();
+        let bad = gm.verify("conv_relu_32", &x, &rep.output).unwrap();
+        assert_eq!(bad, 0, "{}: {bad} mismatches vs golden", fw.name());
+    }
+}
+
+#[test]
+fn golden_runs_at_224_scale() {
+    let Some(gm) = golden() else { return };
+    if !gm.available("conv_relu_224") {
+        return;
+    }
+    let dev = DeviceSpec::kv260();
+    let g = models::paper_kernel("conv_relu", 224).unwrap();
+    let x = det_input(g.inputs()[0].ty.numel());
+    let d = compile_with(FrameworkKind::Ming, &g, &dev).unwrap();
+    let rep = simulate(&d, &x, SimMode::Dataflow).unwrap().expect_complete();
+    let bad = gm.verify("conv_relu_224", &x, &rep.output).unwrap();
+    assert_eq!(bad, 0);
+    assert_eq!(rep.output.len(), 224 * 224 * 8);
+}
+
+#[test]
+fn golden_rejects_wrong_inputs() {
+    let Some(gm) = golden() else { return };
+    if !gm.available("linear_0") {
+        return;
+    }
+    // wrong input length must error, not crash
+    assert!(gm.run("linear_0", &[1, 2, 3]).is_err());
+    // wrong output length in verify must error
+    let x = det_input(512 * 128);
+    assert!(gm.verify("linear_0", &x, &[0i32; 7]).is_err());
+}
+
+#[test]
+fn golden_detects_injected_corruption() {
+    let Some(gm) = golden() else { return };
+    if !gm.available("linear_0") {
+        return;
+    }
+    let dev = DeviceSpec::kv260();
+    let g = models::paper_kernel("linear", 0).unwrap();
+    let x = det_input(g.inputs()[0].ty.numel());
+    let d = compile_with(FrameworkKind::Ming, &g, &dev).unwrap();
+    let mut rep = simulate(&d, &x, SimMode::Dataflow).unwrap().expect_complete();
+    // flip one value: verification must catch exactly one mismatch
+    rep.output[1234] ^= 1;
+    let bad = gm.verify("linear_0", &x, &rep.output).unwrap();
+    assert_eq!(bad, 1, "corruption must be detected");
+}

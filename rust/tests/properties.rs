@@ -1,0 +1,204 @@
+//! Property-based integration tests over randomly generated models:
+//! graph invariants, analysis invariants, DSE constraint satisfaction,
+//! simulator/structural agreement — driven by the in-repo property
+//! harness (`ming::util::prop`).
+
+use ming::analysis::classify::{classify, KernelClass};
+use ming::analysis::iters::classify_iterators;
+use ming::analysis::shapes::node_geometry;
+use ming::baselines::framework::{compile_with, FrameworkKind};
+use ming::dataflow::build::build_streaming_design;
+use ming::dataflow::validate::{check_diamond_depths, validate_design};
+use ming::dse::ilp::{solve, DseConfig};
+use ming::ir::builder::GraphBuilder;
+use ming::ir::graph::ModelGraph;
+use ming::ir::types::DType;
+use ming::resources::device::DeviceSpec;
+use ming::resources::estimate;
+use ming::sim::{simulate, SimMode};
+use ming::util::prng::XorShift;
+use ming::util::prop::{forall, Gen};
+
+/// Generate a random small CNN: 1-3 conv layers (+ optional residual
+/// skip when shapes allow) or 1-3 linear layers.
+fn random_graph(g: &mut Gen) -> ModelGraph {
+    let rng = &mut g.rng;
+    let mut b = GraphBuilder::new(format!("rand{}", g.case));
+    if rng.chance(1, 3) {
+        // MLP
+        let m = 8 << rng.below(3); // 8/16/32
+        let mut k = 4 << rng.below(3) as usize;
+        let x = b.input("x", vec![m as usize, k], DType::I8);
+        let mut cur = x;
+        let layers = 1 + rng.below(3);
+        for li in 0..layers {
+            let n = 4 << rng.below(3) as usize;
+            let w = b.det_weight(&format!("w{li}"), vec![k, n], 1000 + li);
+            let acc = b.linear(&format!("mm{li}"), cur, w);
+            cur = b.relu_requant(&format!("rr{li}"), acc);
+            k = n;
+        }
+        b.mark_output(cur);
+    } else {
+        // CNN
+        let n = 8 + 2 * rng.below(9) as usize; // 8..24
+        let c = 1 << rng.below(3) as usize; // 1/2/4
+        let x = b.input("x", vec![n, n, c], DType::I8);
+        let mut cur = x;
+        let mut cc = c;
+        let layers = 1 + rng.below(3);
+        let skip_ok = layers >= 2 && rng.chance(1, 2);
+        let mut first_out = None;
+        for li in 0..layers {
+            let f = if skip_ok { cc } else { 1 << rng.below(3) as usize };
+            let w = b.det_weight(&format!("w{li}"), vec![f, 3, 3, cc], 2000 + li);
+            let acc = b.conv2d(&format!("conv{li}"), cur, w, 1, 1);
+            cur = if li + 1 == layers && skip_ok {
+                b.requant(&format!("req{li}"), acc)
+            } else {
+                b.relu_requant(&format!("rr{li}"), acc)
+            };
+            if li == 0 {
+                first_out = Some(cur);
+            }
+            cc = f;
+        }
+        if skip_ok {
+            let s = b.add_sat("skip_add", first_out.unwrap(), cur);
+            cur = b.relu("relu_out", s);
+        }
+        b.mark_output(cur);
+    }
+    let g = b.finish();
+    g.validate().expect("generator must produce valid graphs");
+    g
+}
+
+fn det_input(g: &ModelGraph, seed: u64) -> Vec<i32> {
+    ming::util::prng::det_tensor(seed, g.inputs()[0].ty.numel())
+        .iter()
+        .map(|&v| v as i32)
+        .collect()
+}
+
+#[test]
+fn prop_algorithm2_sets_partition_dims() {
+    // P, R disjoint; W disjoint from P; every dim of every op appears in
+    // P ∪ R ∪ O ∪ W (CNN ops leave no dim unclassified).
+    forall("algo2 partitions", 60, random_graph, |g| {
+        g.ops.iter().all(|op| {
+            let s = classify_iterators(op);
+            let all: std::collections::BTreeSet<usize> =
+                s.p.iter().chain(&s.r).chain(&s.o).chain(&s.w).copied().collect();
+            s.p.is_disjoint(&s.r)
+                && s.p.is_disjoint(&s.w)
+                && all.len() == op.dims.len()
+        })
+    });
+}
+
+#[test]
+fn prop_classification_consistent_with_structure() {
+    forall("class consistency", 60, random_graph, |g| {
+        g.ops.iter().all(|op| match classify(op) {
+            KernelClass::SlidingWindow(sw) => {
+                op.has_reduction() && sw.stride > 0 && sw.dilation > 0
+            }
+            KernelClass::RegularReduction => op.has_reduction(),
+            KernelClass::PureParallel => !op.has_reduction(),
+        })
+    });
+}
+
+#[test]
+fn prop_geometry_token_conservation() {
+    // Output token count × token length == output tensor numel; ditto for
+    // each activation input.
+    forall("token conservation", 60, random_graph, |g| {
+        g.ops.iter().all(|op| {
+            let geo = node_geometry(g, op).unwrap();
+            let out_numel = g.tensor(op.output).ty.numel() as u64;
+            geo.out_tokens * geo.out_token_len as u64 == out_numel
+        })
+    });
+}
+
+#[test]
+fn prop_designs_validate_and_dse_respects_constraints() {
+    let dev = DeviceSpec::kv260();
+    forall("dse constraints", 40, random_graph, |g| {
+        let mut d = build_streaming_design(g).unwrap();
+        validate_design(&d).unwrap();
+        solve(&mut d, &DseConfig::new(dev.clone())).unwrap();
+        let r = estimate(&d, &dev);
+        // DSE must produce deadlock-free, feasible designs
+        r.fits() && check_diamond_depths(&d).is_empty()
+    });
+}
+
+#[test]
+fn prop_unroll_divides_trip_counts() {
+    let dev = DeviceSpec::kv260();
+    forall("unroll | trip", 40, random_graph, |g| {
+        let mut d = build_streaming_design(g).unwrap();
+        solve(&mut d, &DseConfig::new(dev.clone())).unwrap();
+        d.nodes.iter().all(|n| {
+            let op = &d.graph.ops[n.op_index];
+            let par = n.geo.out_token_len as u64;
+            let red = op.reduction_space().max(1);
+            par % n.timing.unroll_par == 0 && red % n.timing.unroll_red == 0
+        })
+    });
+}
+
+#[test]
+fn prop_simulation_agrees_across_modes_and_unrolls() {
+    // Functional output must be invariant to: scheduling mode, and the
+    // DSE's unroll decisions. Cycle counts must only improve.
+    let dev = DeviceSpec::kv260();
+    forall("sim invariance", 25, random_graph, |g| {
+        let x = det_input(g, 7);
+        let base = build_streaming_design(g).unwrap();
+        let seq = simulate(&base, &x, SimMode::Sequential).unwrap();
+        assert!(seq.deadlock.is_none());
+        let mut tuned = build_streaming_design(g).unwrap();
+        solve(&mut tuned, &DseConfig::new(dev.clone())).unwrap();
+        let df = simulate(&tuned, &x, SimMode::Dataflow).unwrap();
+        assert!(df.deadlock.is_none(), "{:?}", df.deadlock);
+        seq.output == df.output && df.cycles <= seq.cycles
+    });
+}
+
+#[test]
+fn prop_all_frameworks_functionally_identical() {
+    let dev = DeviceSpec::kv260();
+    forall("framework agreement", 15, random_graph, |g| {
+        let x = det_input(g, 11);
+        let mut outs = Vec::new();
+        for fw in FrameworkKind::all() {
+            let d = compile_with(fw, g, &dev).unwrap();
+            let rep = simulate(&d, &x, SimMode::of(d.style)).unwrap();
+            assert!(rep.deadlock.is_none(), "{} deadlock {:?}", fw.name(), rep.deadlock);
+            outs.push(rep.output);
+        }
+        outs.windows(2).all(|w| w[0] == w[1])
+    });
+}
+
+#[test]
+fn prop_input_data_does_not_change_cycles() {
+    // Streaming designs are data-oblivious: cycle counts must not depend
+    // on input values (no data-dependent control flow in hardware).
+    let dev = DeviceSpec::kv260();
+    forall("data-oblivious timing", 15, random_graph, |g| {
+        let mut d = build_streaming_design(g).unwrap();
+        solve(&mut d, &DseConfig::new(dev.clone())).unwrap();
+        let mut rng = XorShift::new(99);
+        let n = g.inputs()[0].ty.numel();
+        let x1: Vec<i32> = (0..n).map(|_| rng.i8() as i32).collect();
+        let x2: Vec<i32> = (0..n).map(|_| rng.i8() as i32).collect();
+        let a = simulate(&d, &x1, SimMode::Dataflow).unwrap();
+        let b = simulate(&d, &x2, SimMode::Dataflow).unwrap();
+        a.cycles == b.cycles
+    });
+}
