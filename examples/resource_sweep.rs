@@ -9,10 +9,13 @@
 use anyhow::Result;
 
 use ming::baselines::framework::{compile_with, FrameworkKind};
+use ming::dataflow::build::build_streaming_design;
+use ming::dse::ilp::{solve, DseConfig};
 use ming::ir::builder::models;
 use ming::resources::device::DeviceSpec;
 use ming::resources::estimate;
 use ming::sim::{simulate, SimMode};
+use ming::tiling::compile_tiled;
 use ming::util::prng;
 use ming::util::tables::TextTable;
 
@@ -82,6 +85,29 @@ fn main() -> Result<()> {
         "Note: at 224x224 the StreamHLS-style design exceeds even the\n\
          cloud-grade U250 — the paper's §V-B remark that the issue\n\
          persists on cloud FPGAs when scaling up."
+    );
+
+    // ---- oversized workload: infeasible untiled, placed by tiling -------
+    println!("\n== oversized: vgg3 (3x conv3x3 @256ch) on a 512x512 input, KV260 ==");
+    let g = models::vgg_block(512, 256, 3);
+    let cfg = DseConfig::new(kv260.clone());
+    let mut flat = build_streaming_design(&g)?;
+    match solve(&mut flat, &cfg) {
+        Ok(_) => println!("unexpected: untiled DSE found a feasible point"),
+        Err(e) => println!("untiled DSE: {e:#}"),
+    }
+    let tc = compile_tiled(&g, &cfg)?;
+    println!("{}", tc.describe());
+    let r = estimate(&tc.strip, &kv260);
+    println!("strip resources: {r}");
+    assert!(
+        r.bram18k <= kv260.bram18k,
+        "tiled strip must fit the stock KV260 BRAM budget"
+    );
+    println!(
+        "estimated tiled latency: {:.2} MCycles across {} strips",
+        tc.estimated_cycles() as f64 / 1e6,
+        tc.plan.tiles.len()
     );
     Ok(())
 }

@@ -20,6 +20,7 @@ than outputs (the Makefile also guards this).
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import sys
 
@@ -59,6 +60,18 @@ def main() -> int:
     ap.add_argument("--out-dir", default="../artifacts")
     ap.add_argument("--only", default=None, help="restrict to one variant key, e.g. conv_relu_32")
     ap.add_argument("--force", action="store_true")
+    ap.add_argument(
+        "--emit-model-json",
+        action="store_true",
+        help="also write <key>.model.json (the Rust `ming import` schema, "
+        "with width-tiling metadata) for chain-shaped kernels",
+    )
+    ap.add_argument(
+        "--tile-width",
+        type=int,
+        default=None,
+        help="tile_width hint carried in the emitted model JSON",
+    )
     args = ap.parse_args()
 
     os.makedirs(args.out_dir, exist_ok=True)
@@ -67,6 +80,16 @@ def main() -> int:
         key = f"{name}_{size}"
         if args.only and key != args.only:
             continue
+        if args.emit_model_json:
+            try:
+                doc = model.json_model(name, size, tile_width=args.tile_width)
+            except ValueError:
+                print(f"[aot] no model json for {key} (not chain-shaped)")
+            else:
+                mpath = os.path.join(args.out_dir, f"{key}.model.json")
+                with open(mpath, "w") as f:
+                    json.dump(doc, f, indent=1, sort_keys=True)
+                print(f"[aot] wrote {mpath}")
         hlo_path = os.path.join(args.out_dir, f"{key}.hlo.txt")
         meta_path = os.path.join(args.out_dir, f"{key}.meta")
         if not args.force and os.path.exists(hlo_path):

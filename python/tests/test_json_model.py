@@ -1,0 +1,71 @@
+"""Round-trip tests for the JSON model schema shared with the Rust
+front-end (rust/src/ir/json.rs::import_model), including the width-tiling
+metadata consumed by the halo-aware tiling subsystem (rust/src/tiling/)."""
+
+import json
+
+import pytest
+
+from compile import model
+
+
+CHAIN_KERNELS = ["conv_relu", "cascade", "tiny_cnn", "linear", "feedforward"]
+
+
+@pytest.mark.parametrize("name", CHAIN_KERNELS)
+def test_json_model_roundtrips_through_json(name):
+    size = 0 if name in ("linear", "feedforward") else 32
+    doc = model.json_model(name, size)
+    again = json.loads(json.dumps(doc))
+    assert again == doc
+
+
+@pytest.mark.parametrize("name", CHAIN_KERNELS)
+def test_json_model_schema_keys(name):
+    size = 0 if name in ("linear", "feedforward") else 32
+    doc = model.json_model(name, size)
+    assert doc["name"] == f"{name}_{size}"
+    assert doc["input"]["dtype"] == "i8"
+    assert doc["input"]["shape"] == list(model.input_shape(name, size))
+    assert "tiling" not in doc, "no hint unless requested"
+    for layer in doc["layers"]:
+        assert layer["op"] in ("conv2d", "maxpool2d", "linear")
+        if layer["op"] == "conv2d":
+            # exactly the keys rust's import_model reads
+            assert {"filters", "kernel", "stride", "pad", "seed"} <= set(layer)
+            assert layer["activation"] in ("relu", "none")
+        if layer["op"] == "linear":
+            assert "features" in layer and "seed" in layer
+
+
+def test_tiling_metadata_carried():
+    doc = model.json_model("conv_relu", 512, tile_width=64, max_tiles=16)
+    assert doc["tiling"] == {"axis": "width", "tile_width": 64, "max_tiles": 16}
+    # survives serialization bit-exactly
+    again = json.loads(json.dumps(doc))
+    assert again["tiling"] == doc["tiling"]
+    # partial hints keep only the given keys
+    doc2 = model.json_model("conv_relu", 512, tile_width=64)
+    assert doc2["tiling"] == {"axis": "width", "tile_width": 64}
+
+
+def test_weight_seeds_match_rust_prng_contract():
+    doc = model.json_model("cascade", 32)
+    convs = [l for l in doc["layers"] if l["op"] == "conv2d"]
+    assert [l["seed"] for l in convs] == [model.SEED_W1, model.SEED_W2]
+    ff = model.json_model("feedforward", 0)
+    assert [l["seed"] for l in ff["layers"]] == [model.SEED_W1, model.SEED_W2]
+
+
+def test_residual_not_expressible():
+    with pytest.raises(ValueError):
+        model.json_model("residual", 32)
+
+
+def test_conv_geometry_matches_kernel_constants():
+    doc = model.json_model("conv_relu", 32)
+    (conv,) = doc["layers"]
+    assert conv["filters"] == model.CONV_F
+    assert conv["kernel"] == model.CONV_K
+    assert conv["pad"] == model.CONV_K // 2
+    assert conv["stride"] == 1

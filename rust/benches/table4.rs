@@ -11,6 +11,7 @@ use ming::ir::builder::models;
 use ming::resources::device::DeviceSpec;
 use ming::resources::estimate;
 use ming::sim::{simulate, SimMode};
+use ming::tiling::compile_tiled;
 use ming::util::bench::bench;
 use ming::util::prng;
 use ming::util::tables::{fnum, TextTable};
@@ -56,4 +57,39 @@ fn main() {
         });
         println!("{}", s.summary());
     }
+
+    // ---- oversized row: only MING-with-tiling places this on the KV260 --
+    println!("\n=== oversized workload: vgg3 @ 512x512x256 on the KV260 ===");
+    let big = models::vgg_block(512, 256, 3);
+    let cfg = DseConfig::new(kv.clone());
+    let mut flat = build_streaming_design(&big).unwrap();
+    assert!(solve(&mut flat, &cfg).is_err(), "untiled DSE must be infeasible at 512");
+    let mut t = TextTable::new(vec!["framework", "feasible", "strips", "BRAM", "DSP", "est MCycles"]);
+    for fw in [FrameworkKind::Vanilla, FrameworkKind::ScaleHls, FrameworkKind::StreamHls] {
+        let d = compile_with(fw, &big, &kv).unwrap();
+        let r = estimate(&d, &kv);
+        t.row(vec![
+            fw.name().to_string(),
+            if r.fits() { "yes".into() } else { "NO".to_string() },
+            "—".into(),
+            r.bram18k.to_string(),
+            r.dsp.to_string(),
+            fnum(d.overlapped_cycles_estimate() as f64 / 1e6, 2),
+        ]);
+    }
+    let tc = compile_tiled(&big, &cfg).unwrap();
+    let r = estimate(&tc.strip, &kv);
+    assert!(r.bram18k <= kv.bram18k, "tiled strip must fit the stock KV260");
+    t.row(vec![
+        "ming (tiled)".to_string(),
+        "yes".to_string(),
+        tc.plan.tiles.len().to_string(),
+        r.bram18k.to_string(),
+        r.dsp.to_string(),
+        fnum(tc.estimated_cycles() as f64 / 1e6, 2),
+    ]);
+    println!("{}", t.render());
+
+    let s = bench("tiling_fallback_vgg3_512", 1, 3, || compile_tiled(&big, &cfg).unwrap());
+    println!("{}", s.summary());
 }

@@ -31,6 +31,16 @@ impl LineBufferShape {
     pub fn total_bits(&self) -> u64 {
         self.rows as u64 * self.row_len as u64 * self.elem_bits
     }
+
+    /// The geometry this line buffer takes on a width-`new_w` strip of a
+    /// feature map that is currently `old_w` columns wide (halo columns
+    /// included in `new_w`). Row storage is `rows × W·C`, so only
+    /// `row_len` rescales — the basis of the tiling subsystem's per-tile
+    /// BRAM accounting (`crate::tiling::cost`).
+    pub fn at_width(&self, old_w: usize, new_w: usize) -> LineBufferShape {
+        let per_col = self.row_len / old_w.max(1);
+        LineBufferShape { rows: self.rows, row_len: per_col * new_w, elem_bits: self.elem_bits }
+    }
 }
 
 /// Everything the dataflow builder / DSE / simulator need to know about
@@ -215,6 +225,18 @@ mod tests {
         assert_eq!(tensor_tokens(&[32, 32, 8]), (1024, 8));
         assert_eq!(tensor_tokens(&[512, 128]), (512, 128));
         assert_eq!(tensor_tokens(&[128]), (1, 128));
+    }
+
+    #[test]
+    fn line_buffer_at_width_rescales_rows_only() {
+        let g = models::conv_relu(32, 8, 8);
+        let lb = node_geometry(&g, g.op("conv0").unwrap()).unwrap().line_buffer.unwrap();
+        let strip = lb.at_width(32, 18);
+        assert_eq!(strip.rows, lb.rows);
+        assert_eq!(strip.row_len, 18 * 8);
+        assert_eq!(strip.elem_bits, lb.elem_bits);
+        // identity at the same width
+        assert_eq!(lb.at_width(32, 32), lb);
     }
 
     #[test]

@@ -13,5 +13,5 @@ pub mod pragmas;
 pub mod emit;
 pub mod testbench;
 
-pub use emit::emit_design;
+pub use emit::{emit_design, emit_tiled_design};
 pub use testbench::emit_testbench;

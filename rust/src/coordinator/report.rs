@@ -21,6 +21,8 @@ pub struct Cell {
     pub lutram_pct: f64,
     pub ff_pct: f64,
     pub fits: bool,
+    /// Width strips the design was tiled into (1 = untiled).
+    pub tiles: usize,
     pub error: Option<String>,
 }
 
@@ -36,7 +38,17 @@ pub fn cell(r: &JobResult) -> Cell {
         lutram_pct: r.util.lutram_pct(),
         ff_pct: r.util.ff_pct(),
         fits: r.util.fits(),
+        tiles: r.tiles,
         error: r.error.clone(),
+    }
+}
+
+/// Framework column label, marking width-tiled designs.
+fn fw_label(c: &Cell) -> String {
+    if c.tiles > 1 {
+        format!("{} (T={})", c.framework.name(), c.tiles)
+    } else {
+        c.framework.name().to_string()
     }
 }
 
@@ -86,7 +98,7 @@ pub fn render_table2(cells: &[Cell]) -> String {
         let ed = e_dsp(cells, c);
         t.row(vec![
             wl_name(&c.kernel, c.size),
-            c.framework.name().to_string(),
+            fw_label(c),
             if c.error.is_some() { "×".into() } else { fnum(c.mcycles, 4) },
             c.bram.to_string(),
             c.dsp.to_string(),
@@ -107,7 +119,7 @@ pub fn render_table3(cells: &[Cell]) -> String {
         }
         t.row(vec![
             wl_name(&c.kernel, c.size),
-            c.framework.name().to_string(),
+            fw_label(c),
             fnum(c.lut_pct, 2),
             fnum(c.lutram_pct, 2),
             fnum(c.ff_pct, 2),
@@ -163,8 +175,19 @@ mod tests {
             lutram_pct: 1.0,
             ff_pct: 1.0,
             fits: true,
+            tiles: 1,
             error: None,
         }
+    }
+
+    #[test]
+    fn tiled_cells_are_labelled() {
+        let mut c = mk("vgg3", FrameworkKind::Ming, 10.0, 1000);
+        assert_eq!(fw_label(&c), "ming");
+        c.tiles = 4;
+        assert_eq!(fw_label(&c), "ming (T=4)");
+        let s = render_table2(&[c]);
+        assert!(s.contains("ming (T=4)"));
     }
 
     #[test]

@@ -103,6 +103,24 @@ mod tests {
     }
 
     #[test]
+    fn sweep_tiles_oversized_workloads_automatically() {
+        // An oversized VGG block rides through the sweep machinery: the
+        // MING cell comes back width-tiled (tiles > 1) instead of erroring
+        // out the way the untiled DSE would.
+        let cfg = SweepConfig {
+            workloads: vec![("vgg3".into(), 512)],
+            frameworks: vec![FrameworkKind::Ming],
+            device: DeviceSpec::kv260(),
+            estimate_only: true,
+        };
+        let results = CompileService::new(WorkerPool::new(1)).run_sweep(&cfg);
+        assert_eq!(results.len(), 1);
+        let r = results[0].as_ref().unwrap();
+        assert!(r.tiles >= 2, "expected a tiled cell, got {} tiles", r.tiles);
+        assert!(r.util.bram18k <= r.util.device.bram18k);
+    }
+
+    #[test]
     fn ming_beats_vanilla_in_sweep() {
         let cfg = SweepConfig {
             workloads: vec![("conv_relu".into(), 32)],

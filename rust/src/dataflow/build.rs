@@ -143,6 +143,15 @@ pub fn build_streaming_design(g: &ModelGraph) -> Result<Design> {
     Ok(design)
 }
 
+/// Build the streaming design for one width strip of `g`'s feature maps
+/// (the outer tile schedule of `crate::tiling` runs this one design per
+/// strip, reusing line buffers and weight ROMs across tiles). `w_local`
+/// is the strip width including halo columns.
+pub fn build_strip_design(g: &ModelGraph, w_local: usize) -> Result<Design> {
+    let strip = crate::tiling::retile_width(g, w_local)?;
+    build_streaming_design(&strip)
+}
+
 /// (Re)derive buffer allocations + partitioning + storage binding from the
 /// current node timing. Called at build time and again after the DSE
 /// assigns unroll factors (partition factor = unroll of the accessing
@@ -289,6 +298,24 @@ mod tests {
             .map(|b| b.partitions)
             .sum();
         assert_eq!(after, 16, "(K-1) rows × channel unroll 8");
+    }
+
+    #[test]
+    fn strip_design_shrinks_line_buffers_only() {
+        let g = models::conv_relu(64, 8, 8);
+        let full = build_streaming_design(&g).unwrap();
+        let strip = build_strip_design(&g, 18).unwrap();
+        assert_eq!(strip.nodes.len(), full.nodes.len());
+        let row_len = |d: &Design| {
+            d.nodes[0].geo.line_buffer.unwrap().row_len
+        };
+        assert_eq!(row_len(&full), 64 * 8);
+        assert_eq!(row_len(&strip), 18 * 8);
+        // weights identical: strips reuse the resident ROMs
+        let wbits = |d: &Design| -> u64 {
+            d.buffers.iter().filter(|b| b.role == BufferRole::Weights).map(|b| b.bits).sum()
+        };
+        assert_eq!(wbits(&full), wbits(&strip));
     }
 
     #[test]

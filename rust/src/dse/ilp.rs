@@ -12,11 +12,13 @@
 //! DSP and BRAM for pruning. Exact — no heuristics — and fast: paper
 //! kernels have ≤ 6 nodes × ≤ 96 candidates.
 
-use anyhow::{ensure, Result};
+use anyhow::{bail, ensure, Result};
 
-use crate::dataflow::build::refresh_buffers;
+use crate::dataflow::build::{build_streaming_design, refresh_buffers};
 use crate::dataflow::design::Design;
+use crate::ir::graph::ModelGraph;
 use crate::resources::device::DeviceSpec;
+use crate::tiling::{compile_tiled_from, TiledCompilation};
 
 use super::fifo::size_fifos;
 use super::space::{candidates, Candidate};
@@ -164,10 +166,40 @@ pub fn solve(design: &mut Design, cfg: &DseConfig) -> Result<DseSolution> {
     })
 }
 
+/// Outcome of [`solve_with_tiling_fallback`].
+#[derive(Debug)]
+pub enum Compiled {
+    /// The whole feature map fits on the device: one streaming design.
+    Flat(Box<Design>, DseSolution),
+    /// The untiled DSE had no feasible point; the workload was width-
+    /// tiled into halo-overlapped strips (`crate::tiling`).
+    Tiled(Box<TiledCompilation>),
+}
+
+/// The feasibility fallback: build and solve the untiled streaming
+/// design; when the ILP has no feasible point (the paper's "infeasible
+/// design" case — oversized line buffers on a small device), fall back
+/// to the halo-aware width-tiling subsystem. Errors only when both
+/// paths fail.
+pub fn solve_with_tiling_fallback(g: &ModelGraph, cfg: &DseConfig) -> Result<Compiled> {
+    let mut design = build_streaming_design(g)?;
+    match solve(&mut design, cfg) {
+        Ok(sol) => Ok(Compiled::Flat(Box::new(design), sol)),
+        // a failed solve leaves the design's scalar timing untouched, so
+        // it can seed the tiling planner's lower bounds directly
+        Err(flat_err) => match compile_tiled_from(g, &design, cfg) {
+            Ok(tc) => Ok(Compiled::Tiled(Box::new(tc))),
+            Err(tile_err) => bail!(
+                "untiled DSE infeasible ({flat_err:#}); width-tiling fallback \
+                 also failed ({tile_err:#})"
+            ),
+        },
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::dataflow::build::build_streaming_design;
     use crate::dataflow::validate::{check_diamond_depths, validate_design};
     use crate::ir::builder::models;
     use crate::resources::estimate;
@@ -244,6 +276,39 @@ mod tests {
             assert!(r.fits(), "{name}: {r}");
             assert!(sol.objective > 0);
         }
+    }
+
+    #[test]
+    fn fallback_returns_flat_when_feasible() {
+        let g = models::conv_relu(32, 8, 8);
+        match solve_with_tiling_fallback(&g, &DseConfig::new(DeviceSpec::kv260())).unwrap() {
+            Compiled::Flat(d, sol) => {
+                assert_eq!(d.nodes[0].timing.mac_lanes, 576);
+                assert!(sol.objective > 0);
+            }
+            Compiled::Tiled(_) => panic!("feasible workload must not tile"),
+        }
+    }
+
+    #[test]
+    fn fallback_tiles_when_bram_starved() {
+        let g = models::conv_relu(80, 32, 8);
+        let cfg = DseConfig::new(DeviceSpec::kv260().with_bram_limit(11));
+        match solve_with_tiling_fallback(&g, &cfg).unwrap() {
+            Compiled::Tiled(tc) => assert!(tc.plan.tiles.len() >= 2),
+            Compiled::Flat(..) => panic!("BRAM-starved workload must tile"),
+        }
+    }
+
+    #[test]
+    fn fallback_errors_when_untilable() {
+        // linear is rank-2: no width axis to tile, and with 0 DSP the
+        // flat solve is infeasible, so both paths fail.
+        let g = models::linear();
+        let cfg = DseConfig::new(DeviceSpec::kv260().with_dsp_limit(0));
+        let err = solve_with_tiling_fallback(&g, &cfg).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("fallback"), "{msg}");
     }
 
     #[test]

@@ -20,4 +20,5 @@ pub mod space;
 pub mod ilp;
 pub mod fifo;
 
-pub use ilp::{solve, DseConfig, DseSolution};
+pub use ilp::{solve, solve_with_tiling_fallback, Compiled, DseConfig, DseSolution};
+pub use space::tile_counts;

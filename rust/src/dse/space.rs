@@ -24,6 +24,17 @@ pub fn divisors(n: u64) -> Vec<u64> {
     out
 }
 
+/// Tile-count candidate axis for the width-tiling feasibility fallback
+/// (`crate::tiling`): divisors of the feature-map width, ascending,
+/// excluding 1 (the untiled case, which the caller has already tried).
+/// `t == width` is a valid last resort — single-column cores with halo
+/// margins — and is the only option for prime widths. The tiling
+/// analogue of the unroll divisor lattice: tile counts that do not
+/// divide the width would need ragged strips and are never enumerated.
+pub fn tile_counts(width: u64) -> Vec<u64> {
+    divisors(width).into_iter().filter(|&t| t > 1).collect()
+}
+
 /// One unroll candidate for a node, with its pre-computed cost/resources.
 #[derive(Debug, Clone, Copy)]
 pub struct Candidate {
@@ -162,6 +173,90 @@ mod tests {
         let cands = candidates(&d, 1);
         assert_eq!(cands.len(), 1);
         assert_eq!(cands[0].dsp, 0);
+    }
+
+    #[test]
+    fn tile_count_axis_is_a_proper_divisor_lattice() {
+        assert_eq!(tile_counts(32), vec![2, 4, 8, 16, 32]);
+        assert_eq!(tile_counts(1), Vec::<u64>::new(), "trip count 1 has no tilings");
+        assert_eq!(tile_counts(2), vec![2]);
+        assert_eq!(tile_counts(13), vec![13], "prime widths tile as 1-column cores");
+        forall("tile counts divide", 100, |g| g.rng.range(1, 4096), |&w| {
+            tile_counts(w).iter().all(|&t| w % t == 0 && t > 1 && t <= w)
+        });
+    }
+
+    #[test]
+    fn trip_count_one_yields_single_candidate_lattice() {
+        // 1x1 "conv" degenerate: a graph whose MAC node has prime/unit
+        // trips still enumerates a full (tiny) lattice.
+        let g = models::conv_relu(8, 1, 1);
+        let d = build_streaming_design(&g).unwrap();
+        let cands = candidates(&d, 0);
+        // par trip 1 (one filter), red trip 9 (3x3x1): div(1) x div(9) = 3
+        assert_eq!(cands.len(), 3);
+        for c in &cands {
+            assert_eq!(c.unroll_par, 1);
+            assert_eq!(9 % c.unroll_red, 0);
+        }
+    }
+
+    #[test]
+    fn prime_trip_candidates_are_one_or_full() {
+        let g = models::conv_relu(8, 7, 5); // C=7, F=5: prime-ish trips
+        let d = build_streaming_design(&g).unwrap();
+        let cands = candidates(&d, 0);
+        // par trip 5 -> {1, 5}; red trip 3*3*7 = 63 -> {1,3,7,9,21,63}
+        assert_eq!(cands.len(), 2 * 6);
+        for c in &cands {
+            assert!(c.unroll_par == 1 || c.unroll_par == 5);
+            assert_eq!(63 % c.unroll_red, 0);
+        }
+    }
+
+    #[test]
+    fn zero_mac_nodes_have_exactly_one_free_candidate() {
+        let g = models::residual(16, 8, 8);
+        let d = build_streaming_design(&g).unwrap();
+        for (nid, n) in d.nodes.iter().enumerate() {
+            if n.geo.macs_per_out_token == 0 {
+                let cands = candidates(&d, nid);
+                assert_eq!(cands.len(), 1, "node {}", n.name);
+                assert_eq!(cands[0].dsp, 0);
+                assert_eq!(cands[0].bram, 0);
+                assert_eq!(cands[0].timing.ii, 1);
+            }
+        }
+    }
+
+    #[test]
+    fn property_every_candidate_respects_unroll_divides_trip() {
+        // Across a family of conv/linear workloads, every enumerated
+        // Candidate satisfies u_par | par_trip and u_red | red_trip.
+        forall(
+            "unroll | trip",
+            25,
+            |g| {
+                let n = 8 << g.rng.below(2); // 8 or 16
+                let c = 1 + g.rng.below(12) as usize;
+                let f = 1 + g.rng.below(12) as usize;
+                (n as usize, c, f)
+            },
+            |&(n, c, f)| {
+                let g = models::conv_relu(n, c, f);
+                let d = build_streaming_design(&g).unwrap();
+                (0..d.nodes.len()).all(|nid| {
+                    let node = &d.nodes[nid];
+                    let par_trip = node.geo.out_token_len as u64;
+                    let red_trip = d.graph.ops[node.op_index].reduction_space().max(1);
+                    candidates(&d, nid).iter().all(|cand| {
+                        par_trip % cand.unroll_par == 0
+                            && red_trip % cand.unroll_red == 0
+                            && cand.timing.mac_lanes == cand.unroll_par * cand.unroll_red
+                    })
+                })
+            },
+        );
     }
 
     #[test]

@@ -327,6 +327,25 @@ pub mod models {
         b.finish()
     }
 
+    /// A VGG-style block: `layers` cascaded 3×3 same-padded Conv+ReLU
+    /// stages at a constant channel count `c` on an `n`×`n` input — the
+    /// oversized-workload generator for the halo-aware tiling subsystem.
+    /// At e.g. 512×512×256×3 on the KV260 the minimal line buffers alone
+    /// exceed the device BRAM, so only MING-with-tiling can place it.
+    pub fn vgg_block(n: usize, c: usize, layers: usize) -> ModelGraph {
+        assert!(layers >= 1, "vgg_block needs at least one layer");
+        let mut b = GraphBuilder::new(format!("vgg{layers}_{n}x{c}"));
+        let x = b.input("x", vec![n, n, c], DType::I8);
+        let mut cur = x;
+        for li in 0..layers {
+            let w = b.det_weight(&format!("w{li}"), vec![c, CONV_K, CONV_K, c], 1000 + li as u64);
+            let acc = b.conv2d(&format!("conv{li}"), cur, w, 1, 1);
+            cur = b.relu_requant(&format!("rr{li}"), acc);
+        }
+        b.mark_output(cur);
+        b.finish()
+    }
+
     /// A small but complete CNN beyond the paper's micro-kernels:
     /// conv(3x3,C->F) -> maxpool(2x2) -> conv(3x3,F->F) -> maxpool(2x2).
     /// Exercises stride-2 sliding windows and weight-less window nodes
@@ -355,6 +374,8 @@ pub mod models {
             "residual" => residual(n, CONV_C, CONV_F),
             "linear" => linear(),
             "feedforward" => feedforward(),
+            // oversized extension workload (tiling showcase, not Table II)
+            "vgg3" => vgg_block(n, 256, 3),
             other => anyhow::bail!("unknown paper kernel {other:?}"),
         })
     }
@@ -446,6 +467,17 @@ mod tests {
     #[test]
     fn feedforward_macs_double_linear() {
         assert_eq!(feedforward().total_macs(), 2 * linear().total_macs());
+    }
+
+    #[test]
+    fn vgg_block_shapes_and_macs() {
+        let g = vgg_block(64, 16, 3);
+        g.validate().unwrap();
+        assert_eq!(g.ops.len(), 6); // 3x (conv + relu_requant)
+        assert_eq!(g.outputs()[0].ty.shape, vec![64, 64, 16]);
+        // 3 layers x N^2 x C_out x K^2 x C_in MACs
+        assert_eq!(g.total_macs(), 3 * 64 * 64 * 16 * 9 * 16);
+        assert_eq!(g.weights().len(), 3);
     }
 
     #[test]

@@ -35,17 +35,31 @@ pub struct TensorInfo {
     pub data: Option<Vec<i8>>,
 }
 
+/// Front-end tiling metadata, carried from the JSON model schema's
+/// optional `"tiling"` object into the halo-aware tiling subsystem
+/// (`crate::tiling`). Hints are advisory: the tiling planner tries them
+/// first and falls back to its own search when they do not fit.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct TilingHint {
+    /// Requested core strip width in columns (halo excluded).
+    pub tile_width: Option<usize>,
+    /// Upper bound on the number of strips the fallback search may try.
+    pub max_tiles: Option<usize>,
+}
+
 /// A model: tensors + ops in (not necessarily sorted) creation order.
 #[derive(Debug, Clone, Default)]
 pub struct ModelGraph {
     pub name: String,
     pub tensors: Vec<TensorInfo>,
     pub ops: Vec<GenericOp>,
+    /// Optional front-end tiling metadata (see [`TilingHint`]).
+    pub tiling: Option<TilingHint>,
 }
 
 impl ModelGraph {
     pub fn new(name: impl Into<String>) -> Self {
-        Self { name: name.into(), tensors: Vec::new(), ops: Vec::new() }
+        Self { name: name.into(), tensors: Vec::new(), ops: Vec::new(), tiling: None }
     }
 
     pub fn tensor(&self, id: TensorId) -> &TensorInfo {

@@ -21,7 +21,7 @@ use std::fmt::Write as _;
 use anyhow::{bail, ensure, Context, Result};
 
 use super::builder::GraphBuilder;
-use super::graph::ModelGraph;
+use super::graph::{ModelGraph, TilingHint};
 use super::types::DType;
 
 /// A JSON value (numbers kept as f64; ints round-trip exactly to 2^53).
@@ -330,6 +330,31 @@ pub fn import_model(text: &str) -> Result<ModelGraph> {
     let dtype = DType::parse(input.get_or("dtype", &Json::Str("i8".into())).as_str()?)
         .context("bad input dtype")?;
 
+    // Optional width-tiling metadata for the halo-aware tiling subsystem
+    // (crate::tiling). Written by python/compile/aot.py --emit-model-json.
+    let tiling = match doc.as_obj()?.get("tiling") {
+        Some(t) => {
+            if let Some(axis) = t.as_obj()?.get("axis") {
+                ensure!(
+                    axis.as_str()? == "width",
+                    "only width-axis tiling is supported, got {:?}",
+                    axis
+                );
+            }
+            Some(TilingHint {
+                tile_width: match t.as_obj()?.get("tile_width") {
+                    Some(v) => Some(v.as_usize()?),
+                    None => None,
+                },
+                max_tiles: match t.as_obj()?.get("max_tiles") {
+                    Some(v) => Some(v.as_usize()?),
+                    None => None,
+                },
+            })
+        }
+        None => None,
+    };
+
     let relu_default = Json::Str("relu".into());
     let mut b = GraphBuilder::new(name);
     let mut cur = b.input("x", shape.clone(), dtype);
@@ -387,7 +412,8 @@ pub fn import_model(text: &str) -> Result<ModelGraph> {
         }
     }
     b.mark_output(cur);
-    let g = b.finish();
+    let mut g = b.finish();
+    g.tiling = tiling;
     g.validate()?;
     Ok(g)
 }
@@ -450,6 +476,40 @@ mod tests {
         )
         .unwrap();
         assert_eq!(g.outputs()[0].ty.shape, vec![64, 8]);
+    }
+
+    #[test]
+    fn import_carries_tiling_metadata() {
+        let g = import_model(
+            r#"{
+              "name": "wide",
+              "input": {"shape": [64, 64, 8], "dtype": "i8"},
+              "tiling": {"axis": "width", "tile_width": 16, "max_tiles": 8},
+              "layers": [
+                {"op": "conv2d", "filters": 8, "kernel": 3, "seed": 101}
+              ]
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(
+            g.tiling,
+            Some(TilingHint { tile_width: Some(16), max_tiles: Some(8) })
+        );
+        // no metadata -> no hint
+        let g2 = import_model(
+            r#"{"name":"x","input":{"shape":[16,16,4]},
+                "layers":[{"op":"conv2d","filters":4}]}"#,
+        )
+        .unwrap();
+        assert_eq!(g2.tiling, None);
+        // only the width axis exists
+        let err = import_model(
+            r#"{"name":"x","input":{"shape":[16,16,4]},
+                "tiling": {"axis": "height"},
+                "layers":[{"op":"conv2d","filters":4}]}"#,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("width"));
     }
 
     #[test]

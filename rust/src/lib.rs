@@ -19,6 +19,11 @@
 //!   solved exactly by branch-and-bound over divisor lattices; FIFO depth
 //!   sizing from first-output-cycle estimates (deadlock avoidance for
 //!   diamonds).
+//! * **`tiling`** — halo-aware width tiling for oversized layers: when
+//!   the DSE has no feasible point (line buffers exceed BRAM even at
+//!   minimal unroll), the workload is decomposed into halo-overlapped
+//!   width strips sharing one reusable strip design, verified bit-exact
+//!   against the untiled/golden computation.
 //! * **`codegen`** — the `emithls` equivalent: Vitis-HLS C++ emission with
 //!   automatic STREAM / UNROLL / PIPELINE / DATAFLOW / ARRAY_PARTITION /
 //!   BIND_STORAGE pragma insertion.
@@ -45,6 +50,7 @@ pub mod analysis;
 pub mod dataflow;
 pub mod resources;
 pub mod dse;
+pub mod tiling;
 pub mod codegen;
 pub mod sim;
 pub mod baselines;
@@ -63,4 +69,5 @@ pub mod prelude {
     pub use crate::resources::device::DeviceSpec;
     pub use crate::resources::report::UtilizationReport;
     pub use crate::sim::engine::{SimMode, SimReport};
+    pub use crate::tiling::{compile_tiled, simulate_tiled, TiledCompilation, TilePlan};
 }

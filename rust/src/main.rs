@@ -16,11 +16,12 @@ use std::process::ExitCode;
 use anyhow::{bail, Context, Result};
 
 use ming::baselines::framework::{compile_with, FrameworkKind};
+use ming::codegen::emit::emit_tiled_design;
 use ming::codegen::{emit_design, emit_testbench};
 use ming::coordinator::report::{self, Cell};
 use ming::coordinator::service::{CompileService, SweepConfig};
-use ming::dse::ilp::{solve, DseConfig};
-use ming::dataflow::build::build_streaming_design;
+use ming::dse::ilp::{solve_with_tiling_fallback, Compiled, DseConfig};
+use ming::dataflow::design::Design;
 use ming::ir::builder::models;
 use ming::ir::json::import_model;
 use ming::resources::device::DeviceSpec;
@@ -28,6 +29,7 @@ use ming::resources::estimate;
 use ming::runtime::golden::GoldenModel;
 use ming::sim::{simulate, SimMode};
 use ming::sim::trace::render_traces;
+use ming::tiling::{simulate_tiled, TiledCompilation};
 use ming::util::prng;
 
 struct Args {
@@ -65,6 +67,13 @@ impl Args {
         if let Some(cap) = self.flags.get("bram-limit") {
             dev = dev.with_bram_limit(cap.parse()?);
         }
+        if let Some(frac) = self.flags.get("max-bram-frac") {
+            let f: f64 = frac.parse()?;
+            if !(f > 0.0 && f <= 1.0) {
+                bail!("--max-bram-frac must be in (0, 1], got {f}");
+            }
+            dev = dev.with_bram_limit((dev.bram18k as f64 * f).round() as u64);
+        }
         Ok(dev)
     }
 
@@ -81,16 +90,7 @@ fn det_input(g: &ming::ir::graph::ModelGraph) -> Vec<i32> {
         .collect()
 }
 
-fn cmd_compile(a: &Args) -> Result<()> {
-    let kernel = a.get("kernel", "conv_relu");
-    let size: usize = a.get("size", "32").parse()?;
-    let dev = a.device()?;
-    let fw = a.framework()?;
-    let g = models::paper_kernel(&kernel, size)?;
-    let d = compile_with(fw, &g, &dev)?;
-    let r = estimate(&d, &dev);
-    println!("kernel {kernel}@{size}  framework {}  device {}", fw.name(), dev.name);
-    println!("resources: {r}");
+fn print_nodes(d: &Design) {
     println!("nodes:");
     for n in &d.nodes {
         println!(
@@ -103,6 +103,51 @@ fn cmd_compile(a: &Args) -> Result<()> {
             n.timing.unroll_red
         );
     }
+}
+
+fn report_tiled_compile(a: &Args, tc: &TiledCompilation, dev: &DeviceSpec) -> Result<()> {
+    println!("untiled DSE infeasible — halo-aware width tiling engaged");
+    println!("{}", tc.describe());
+    let r = estimate(&tc.strip, dev);
+    println!("strip resources: {r}");
+    println!("estimated tiled latency: {} cycles", tc.estimated_cycles());
+    print_nodes(&tc.strip);
+    if let Some(path) = a.flags.get("emit") {
+        std::fs::write(path, emit_tiled_design(tc))?;
+        println!("wrote tiled HLS C++ to {path}");
+    }
+    if a.flags.contains_key("emit-tb") {
+        println!("note: --emit-tb is not supported for tiled designs yet");
+    }
+    Ok(())
+}
+
+fn cmd_compile(a: &Args) -> Result<()> {
+    let kernel = a.get("kernel", "conv_relu");
+    let size: usize = a.get("size", "32").parse()?;
+    let dev = a.device()?;
+    let fw = a.framework()?;
+    let g = models::paper_kernel(&kernel, size)?;
+    // MING gets the width-tiling feasibility fallback; baselines do not.
+    let d = if fw == FrameworkKind::Ming {
+        match solve_with_tiling_fallback(&g, &DseConfig::new(dev.clone()))? {
+            Compiled::Flat(d, _) => *d,
+            Compiled::Tiled(tc) => {
+                println!(
+                    "kernel {kernel}@{size}  framework {}  device {}",
+                    fw.name(),
+                    dev.name
+                );
+                return report_tiled_compile(a, &tc, &dev);
+            }
+        }
+    } else {
+        compile_with(fw, &g, &dev)?
+    };
+    let r = estimate(&d, &dev);
+    println!("kernel {kernel}@{size}  framework {}  device {}", fw.name(), dev.name);
+    println!("resources: {r}");
+    print_nodes(&d);
     if let Some(path) = a.flags.get("emit") {
         std::fs::write(path, emit_design(&d))?;
         println!("wrote HLS C++ to {path}");
@@ -116,13 +161,47 @@ fn cmd_compile(a: &Args) -> Result<()> {
     Ok(())
 }
 
+fn golden_check(kernel: &str, size: usize, x: &[i32], output: &[i32]) -> Result<()> {
+    if let Ok(gm) = GoldenModel::open_default() {
+        let key = GoldenModel::key(kernel, size);
+        if gm.available(&key) {
+            let bad = gm.verify(&key, x, output)?;
+            println!(
+                "golden check [{key}]: {}",
+                if bad == 0 { "OK (bit-exact)".into() } else { format!("{bad} mismatches") }
+            );
+        }
+    }
+    Ok(())
+}
+
 fn cmd_simulate(a: &Args) -> Result<()> {
     let kernel = a.get("kernel", "conv_relu");
     let size: usize = a.get("size", "32").parse()?;
     let dev = a.device()?;
     let fw = a.framework()?;
     let g = models::paper_kernel(&kernel, size)?;
-    let d = compile_with(fw, &g, &dev)?;
+    let d = if fw == FrameworkKind::Ming {
+        match solve_with_tiling_fallback(&g, &DseConfig::new(dev.clone()))? {
+            Compiled::Flat(d, _) => *d,
+            Compiled::Tiled(tc) => {
+                println!("untiled DSE infeasible — simulating the width-tiled design");
+                println!("{}", tc.plan.describe());
+                let x = det_input(&g);
+                let rep = simulate_tiled(&tc, &x)?;
+                println!(
+                    "cycles: {}  ({:.4} MCycles over {} strips, {:.2} MAC/cycle)",
+                    rep.cycles,
+                    rep.cycles as f64 / 1e6,
+                    rep.tile_cycles.len(),
+                    g.total_macs() as f64 / rep.cycles.max(1) as f64
+                );
+                return golden_check(&kernel, size, &x, &rep.output);
+            }
+        }
+    } else {
+        compile_with(fw, &g, &dev)?
+    };
     let x = det_input(&g);
     let rep = simulate(&d, &x, SimMode::of(d.style))?;
     if let Some(blocked) = &rep.deadlock {
@@ -137,17 +216,7 @@ fn cmd_simulate(a: &Args) -> Result<()> {
     );
     println!("{}", render_traces(&rep.traces));
     // golden verification when artifacts are available
-    if let Ok(gm) = GoldenModel::open_default() {
-        let key = GoldenModel::key(&kernel, size);
-        if gm.available(&key) {
-            let bad = gm.verify(&key, &x, &rep.output)?;
-            println!(
-                "golden check [{key}]: {}",
-                if bad == 0 { "OK (bit-exact)".into() } else { format!("{bad} mismatches") }
-            );
-        }
-    }
-    Ok(())
+    golden_check(&kernel, size, &x, &rep.output)
 }
 
 fn run_table2_cells(dev: &DeviceSpec) -> Vec<Cell> {
@@ -221,6 +290,7 @@ fn cmd_table4(a: &Args) -> Result<()> {
                 lutram_pct: r.lutram_pct(),
                 ff_pct: r.ff_pct(),
                 fits: r.fits(),
+                tiles: 1,
                 error: None,
             },
             base_mc,
@@ -274,14 +344,28 @@ fn cmd_import(a: &Args) -> Result<()> {
     let text = std::fs::read_to_string(path)?;
     let g = import_model(&text)?;
     println!("imported {} ({} ops, {} MACs)", g.name, g.ops.len(), g.total_macs());
+    if let Some(hint) = &g.tiling {
+        println!("tiling hint: {hint:?}");
+    }
     let dev = a.device()?;
-    let mut d = build_streaming_design(&g)?;
-    solve(&mut d, &DseConfig::new(dev.clone()))?;
-    let r = estimate(&d, &dev);
-    println!("resources: {r}");
-    if let Some(out) = a.flags.get("emit") {
-        std::fs::write(out, emit_design(&d))?;
-        println!("wrote HLS C++ to {out}");
+    match solve_with_tiling_fallback(&g, &DseConfig::new(dev.clone()))? {
+        Compiled::Flat(d, _) => {
+            let r = estimate(&d, &dev);
+            println!("resources: {r}");
+            if let Some(out) = a.flags.get("emit") {
+                std::fs::write(out, emit_design(&d))?;
+                println!("wrote HLS C++ to {out}");
+            }
+        }
+        Compiled::Tiled(tc) => {
+            println!("{}", tc.describe());
+            let r = estimate(&tc.strip, &dev);
+            println!("strip resources: {r}");
+            if let Some(out) = a.flags.get("emit") {
+                std::fs::write(out, emit_tiled_design(&tc))?;
+                println!("wrote tiled HLS C++ to {out}");
+            }
+        }
     }
     Ok(())
 }
@@ -292,6 +376,7 @@ fn help() {
          USAGE: ming <command> [--flag value ...]\n\n\
          COMMANDS\n\
          \x20 compile   --kernel K --size N [--framework F] [--device D] [--emit f.cpp] [--emit-tb tb.cpp]\n\
+         \x20           MING falls back to halo-aware width tiling when the DSE is infeasible\n\
          \x20 simulate  --kernel K --size N [--framework F] [--device D]\n\
          \x20 table2    [--device D]        full Table-II sweep\n\
          \x20 table3    [--device D]        post-PnR fabric table\n\
@@ -299,9 +384,9 @@ fn help() {
          \x20 fig3      [--device D]        BRAM-vs-input-size series\n\
          \x20 verify                        golden-model check (needs `make artifacts`)\n\
          \x20 import    --model m.json [--emit f.cpp]\n\n\
-         kernels: conv_relu cascade residual linear feedforward\n\
+         kernels: conv_relu cascade residual linear feedforward vgg3\n\
          frameworks: vanilla scalehls streamhls ming\n\
-         devices: kv260 zcu104 u250  (+ --dsp-limit N, --bram-limit N)"
+         devices: kv260 zcu104 u250  (+ --dsp-limit N, --bram-limit N, --max-bram-frac F)"
     );
 }
 

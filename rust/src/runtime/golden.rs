@@ -94,6 +94,19 @@ impl GoldenModel {
         );
         Ok(want.iter().zip(sim_output).filter(|(a, b)| a != b).count())
     }
+
+    /// Verify a width-tiled execution against the untiled golden model:
+    /// the stitched strip outputs must agree element-exact, same as a
+    /// flat design (the tile schedule is an implementation detail the
+    /// golden contract must not see).
+    pub fn verify_tiled(
+        &self,
+        key: &str,
+        input: &[i32],
+        tiled: &crate::tiling::TiledSimReport,
+    ) -> Result<usize> {
+        self.verify(key, input, &tiled.output)
+    }
 }
 
 #[cfg(test)]
@@ -143,6 +156,36 @@ mod tests {
             let rep = simulate(&d, &x, SimMode::Dataflow).unwrap().expect_complete();
             let mismatches = gm.verify(&key, &x, &rep.output).unwrap();
             assert_eq!(mismatches, 0, "{key}: simulator disagrees with golden model");
+        }
+    }
+
+    /// Tiled execution must be transparent to the golden contract: the
+    /// stitched strips of a width-tiled design agree bit-exactly with
+    /// the JAX/Pallas model of the *untiled* kernel.
+    #[test]
+    fn tiled_simulation_matches_golden_model() {
+        use crate::dse::ilp::DseConfig;
+        use crate::tiling::{compile_tiled_fixed, simulate_tiled};
+        let Ok(gm) = GoldenModel::open_default() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        for (kernel, size, tiles) in [("conv_relu", 32usize, 4usize), ("cascade", 32, 2)] {
+            let key = GoldenModel::key(kernel, size);
+            if !gm.available(&key) {
+                eprintln!("skipping {key}: artifact missing");
+                continue;
+            }
+            let g = models::paper_kernel(kernel, size).unwrap();
+            let x: Vec<i32> = prng::det_tensor(prng::SEED_INPUT, g.inputs()[0].ty.numel())
+                .iter()
+                .map(|&v| v as i32)
+                .collect();
+            let tc =
+                compile_tiled_fixed(&g, &DseConfig::new(DeviceSpec::kv260()), tiles).unwrap();
+            let rep = simulate_tiled(&tc, &x).unwrap();
+            let mismatches = gm.verify_tiled(&key, &x, &rep).unwrap();
+            assert_eq!(mismatches, 0, "{key}: tiled execution disagrees with golden model");
         }
     }
 }

@@ -476,6 +476,25 @@ mod tests {
     }
 
     #[test]
+    fn tiled_execution_is_bit_exact_against_untiled() {
+        // The tiling subsystem's core contract at the simulator level:
+        // running the strip design per halo-overlapped window and
+        // stitching cores reproduces the untiled output exactly.
+        use crate::dse::ilp::DseConfig;
+        use crate::tiling::{compile_tiled_fixed, simulate_tiled};
+        for (name, tiles) in [("conv_relu", 4usize), ("cascade", 2), ("residual", 2)] {
+            let g = models::paper_kernel(name, 32).unwrap();
+            let x = det_input(&g);
+            let d = build_streaming_design(&g).unwrap();
+            let want = simulate(&d, &x, SimMode::Dataflow).unwrap().expect_complete().output;
+            let tc =
+                compile_tiled_fixed(&g, &DseConfig::new(DeviceSpec::kv260()), tiles).unwrap();
+            let rep = simulate_tiled(&tc, &x).unwrap();
+            assert_eq!(rep.output, want, "{name} tiled/untiled mismatch");
+        }
+    }
+
+    #[test]
     fn traces_account_all_firings() {
         let g = models::cascade(16, 8, 8);
         let d = build_streaming_design(&g).unwrap();

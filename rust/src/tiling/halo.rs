@@ -1,0 +1,155 @@
+//! Halo (ghost-region) analysis for width-wise strip tiling.
+//!
+//! A strip of a feature map can only be computed independently if it
+//! carries enough *halo* — extra boundary columns — to feed every
+//! sliding window that overlaps the strip edge. The halo a whole graph
+//! needs is the worst-case sum of per-op halos along any producer path:
+//! each stride-1 same-padded K×K convolution widens the dependency cone
+//! of one output column by `(K_eff − 1) / 2 = pad` columns per side,
+//! while pure-parallel (elementwise) ops add nothing.
+//!
+//! Only *width-preserving* chains are tilable this way: stride-1
+//! same-padded sliding windows and identity-map elementwise ops. Strided
+//! convs, pooling and matrix ops are rejected with a descriptive error —
+//! the fallback then simply reports the workload as untilable.
+
+use anyhow::{bail, ensure, Result};
+
+use crate::analysis::classify::{classify, KernelClass};
+use crate::ir::generic::GenericOp;
+use crate::ir::graph::{ModelGraph, TensorKind};
+
+/// Per-side halo columns `op` adds to the dependency cone of one output
+/// column. Errors when the op is not width-preserving.
+pub fn op_halo(op: &GenericOp) -> Result<usize> {
+    match classify(op) {
+        KernelClass::PureParallel => {
+            for m in &op.indexing_maps {
+                ensure!(
+                    m.is_identity(),
+                    "op {}: non-identity elementwise map is not width-tilable",
+                    op.name
+                );
+            }
+            Ok(0)
+        }
+        KernelClass::SlidingWindow(sw) => {
+            ensure!(
+                sw.stride == 1,
+                "op {}: stride-{} sliding window is not width-tilable (stride 1 required)",
+                op.name,
+                sw.stride
+            );
+            let k = op.dims[sw.reduction_dim];
+            let keff = (k - 1) * sw.dilation as usize + 1;
+            ensure!(
+                2 * op.pad + 1 == keff,
+                "op {}: tiling requires same-padding (K_eff {keff}, pad {})",
+                op.name,
+                op.pad
+            );
+            Ok(op.pad)
+        }
+        KernelClass::RegularReduction => {
+            bail!("op {}: regular reductions have no spatial width to tile", op.name)
+        }
+    }
+}
+
+/// Check that `g` is a width-tilable graph — every activation tensor is a
+/// rank-3 `(H, W, C)` feature map with one common height and width, and
+/// every op is width-preserving. Returns `(height, width)`.
+pub fn check_tilable(g: &ModelGraph) -> Result<(usize, usize)> {
+    let mut hw: Option<(usize, usize)> = None;
+    for t in &g.tensors {
+        if t.kind == TensorKind::Weight {
+            continue;
+        }
+        ensure!(
+            t.ty.rank() == 3,
+            "tensor {} is rank {} — width tiling needs (H, W, C) feature maps",
+            t.name,
+            t.ty.rank()
+        );
+        let cur = (t.ty.shape[0], t.ty.shape[1]);
+        match hw {
+            None => hw = Some(cur),
+            Some(prev) => ensure!(
+                prev == cur,
+                "tensor {} is {}x{} but the graph works on {}x{} maps — \
+                 only height/width-preserving chains are tilable",
+                t.name,
+                cur.0,
+                cur.1,
+                prev.0,
+                prev.1
+            ),
+        }
+    }
+    for op in &g.ops {
+        op_halo(op)?;
+    }
+    hw.ok_or_else(|| anyhow::anyhow!("graph {} has no activation tensors", g.name))
+}
+
+/// Total per-side halo the graph output needs: the maximum over all
+/// producer paths of the summed per-op halos (longest-path DP over the
+/// toposorted DAG, so residual diamonds are handled).
+pub fn graph_halo(g: &ModelGraph) -> Result<usize> {
+    let order = g.toposort()?;
+    let mut halo = vec![0usize; g.tensors.len()];
+    for &oi in &order {
+        let op = &g.ops[oi];
+        let h_op = op_halo(op)?;
+        let mut upstream = 0;
+        for &inp in &op.inputs {
+            if g.tensor(inp).kind != TensorKind::Weight {
+                upstream = upstream.max(halo[inp.0]);
+            }
+        }
+        halo[op.output.0] = upstream + h_op;
+    }
+    Ok(halo[g.outputs()[0].id.0])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::builder::models;
+
+    #[test]
+    fn conv_relu_halo_is_one() {
+        let g = models::conv_relu(32, 8, 8);
+        assert_eq!(op_halo(g.op("conv0").unwrap()).unwrap(), 1);
+        assert_eq!(op_halo(g.op("rr0").unwrap()).unwrap(), 0);
+        assert_eq!(graph_halo(&g).unwrap(), 1);
+        assert_eq!(check_tilable(&g).unwrap(), (32, 32));
+    }
+
+    #[test]
+    fn cascade_halo_accumulates_per_conv() {
+        let g = models::cascade(32, 8, 8);
+        assert_eq!(graph_halo(&g).unwrap(), 2);
+    }
+
+    #[test]
+    fn residual_halo_is_deep_path_max() {
+        // skip path contributes 0; conv-conv path contributes 2
+        let g = models::residual(32, 8, 8);
+        assert_eq!(graph_halo(&g).unwrap(), 2);
+    }
+
+    #[test]
+    fn vgg_block_halo_is_layer_count() {
+        let g = models::vgg_block(64, 8, 5);
+        assert_eq!(graph_halo(&g).unwrap(), 5);
+    }
+
+    #[test]
+    fn pooling_and_matmul_rejected() {
+        let g = models::tiny_cnn(32, 4, 8);
+        assert!(graph_halo(&g).is_err(), "stride-2 pooling must not be tilable");
+        let g = models::linear();
+        assert!(check_tilable(&g).is_err(), "rank-2 matrices must not be tilable");
+    }
+}

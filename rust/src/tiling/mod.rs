@@ -1,0 +1,37 @@
+//! Halo-aware width tiling for oversized CNN layers.
+//!
+//! MING's streaming architecture keeps line buffers of `(K-1) × W·C`
+//! values per sliding-window node — linear in the input width, which is
+//! what lets it scale past ScaleHLS/StreamHLS. But a big enough layer
+//! (wide maps × many channels × deep chains) still exceeds an edge
+//! device's BRAM even at minimal unroll, and then the DSE of
+//! [`crate::dse::ilp::solve`] simply has no feasible point. This module
+//! turns that hard infeasibility into a latency/resource trade-off:
+//!
+//! 1. [`halo`] checks the graph is width-preserving and computes the
+//!    per-side halo (dependency-cone radius) of the whole chain;
+//! 2. [`plan`] splits the width into equal cores with inward-shifted
+//!    halo windows, so every strip shares **one** local width and one
+//!    reusable strip design;
+//! 3. [`cost`] prices strips (BRAM lower bounds, tiled latency);
+//! 4. [`schedule`] searches the tile-count axis
+//!    ([`crate::dse::space::tile_counts`]) for the fewest strips whose
+//!    DSE-solved design fits the device, and executes/stitches strips
+//!    bit-exactly on the cycle simulator.
+//!
+//! Entry points: [`compile_tiled`] (automatic fallback, used by
+//! [`crate::dse::ilp::solve_with_tiling_fallback`], the coordinator
+//! sweeps and the `ming` CLI) and [`simulate_tiled`].
+
+pub mod halo;
+pub mod plan;
+pub mod cost;
+pub mod schedule;
+
+pub use cost::TILE_RESTART_CYCLES;
+pub use halo::{check_tilable, graph_halo, op_halo};
+pub use plan::{retile_width, Tile, TilePlan};
+pub use schedule::{
+    compile_tiled, compile_tiled_fixed, compile_tiled_from, simulate_tiled, TiledCompilation,
+    TiledSimReport,
+};

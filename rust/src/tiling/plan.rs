@@ -1,0 +1,252 @@
+//! Tile plans: decompose a feature map's width into halo-overlapped
+//! strips of one uniform local width.
+//!
+//! Every tile owns `tile_width` *core* output columns; its input window
+//! is the core plus `halo` columns per side, **shifted inward** at the
+//! image borders so that all strips share a single local width
+//! `tile_width + 2·halo`. Inward shifting (instead of clamping the
+//! window) is what makes one strip design reusable for every tile: at a
+//! true image border the strip's own zero-padding coincides with the
+//! global padding, and everywhere else the kept core columns sit at
+//! least `halo` columns away from any fake strip edge, outside the
+//! contamination cone of the wrong local padding.
+
+use anyhow::{ensure, Context, Result};
+
+use crate::ir::graph::{ModelGraph, TensorKind};
+
+use super::halo::{check_tilable, graph_halo};
+
+/// One width strip: global output core `[out_lo, out_hi)` computed from
+/// global input columns `[in_lo, in_lo + local_width)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Tile {
+    pub index: usize,
+    pub out_lo: usize,
+    pub out_hi: usize,
+    pub in_lo: usize,
+}
+
+impl Tile {
+    /// Local column of the first kept output value.
+    pub fn crop_lo(&self) -> usize {
+        self.out_lo - self.in_lo
+    }
+
+    /// Kept output columns.
+    pub fn core_width(&self) -> usize {
+        self.out_hi - self.out_lo
+    }
+}
+
+/// A complete width-tiling plan for one graph.
+#[derive(Debug, Clone)]
+pub struct TilePlan {
+    /// Feature-map height (common to all activation tensors).
+    pub height: usize,
+    /// Full feature-map width.
+    pub width: usize,
+    /// Core output columns per tile (`width / tiles.len()`).
+    pub tile_width: usize,
+    /// Per-side halo columns (graph dependency-cone radius).
+    pub halo: usize,
+    /// Uniform strip width: `tile_width + 2·halo`, capped at `width`.
+    pub local_width: usize,
+    pub tiles: Vec<Tile>,
+}
+
+impl TilePlan {
+    /// Build the plan splitting `g`'s width into `n_tiles` strips.
+    /// `n_tiles` must divide the width, and the strips must be narrower
+    /// than the full map for the plan to be useful.
+    pub fn build(g: &ModelGraph, n_tiles: usize) -> Result<TilePlan> {
+        let (height, width) = check_tilable(g)?;
+        let halo = graph_halo(g)?;
+        ensure!(n_tiles >= 1, "tile count must be positive");
+        ensure!(
+            width % n_tiles == 0,
+            "tile count {n_tiles} must divide feature-map width {width}"
+        );
+        let tile_width = width / n_tiles;
+        let local_width = if n_tiles == 1 { width } else { tile_width + 2 * halo };
+        ensure!(
+            local_width <= width,
+            "strips of width {local_width} (core {tile_width} + 2x{halo} halo) \
+             are no narrower than the {width}-wide map"
+        );
+        let tiles = (0..n_tiles)
+            .map(|i| {
+                let out_lo = i * tile_width;
+                let out_hi = out_lo + tile_width;
+                // inward-shifted window: [in_lo, in_lo + local_width) ⊆ [0, width)
+                let in_lo = out_lo.saturating_sub(halo).min(width - local_width);
+                Tile { index: i, out_lo, out_hi, in_lo }
+            })
+            .collect();
+        Ok(TilePlan { height, width, tile_width, halo, local_width, tiles })
+    }
+
+    /// Human-readable plan summary.
+    pub fn describe(&self) -> String {
+        let strips: Vec<String> = self
+            .tiles
+            .iter()
+            .map(|t| {
+                format!(
+                    "  strip {}: in cols [{}, {})  ->  out cols [{}, {})",
+                    t.index,
+                    t.in_lo,
+                    t.in_lo + self.local_width,
+                    t.out_lo,
+                    t.out_hi
+                )
+            })
+            .collect();
+        format!(
+            "tile plan: {} strips of {} cols (core {} + halo {} per side) over a {}x{} map\n{}",
+            self.tiles.len(),
+            self.local_width,
+            self.tile_width,
+            self.halo,
+            self.height,
+            self.width,
+            strips.join("\n")
+        )
+    }
+}
+
+/// Rebuild `g` as a width-`w_local` strip graph: every activation tensor
+/// narrows to `w_local` columns and every op's width-axis trip count
+/// follows. Weights (and therefore per-node compute structure) are
+/// untouched — the strip design reuses the same resident ROMs across
+/// tiles.
+pub fn retile_width(g: &ModelGraph, w_local: usize) -> Result<ModelGraph> {
+    ensure!(w_local >= 1, "strip width must be positive");
+    let (_, width) = check_tilable(g)?;
+    ensure!(w_local <= width, "strip width {w_local} exceeds map width {width}");
+    let mut s = g.clone();
+    s.name = format!("{}_w{}", g.name, w_local);
+    for t in &mut s.tensors {
+        if t.kind != TensorKind::Weight {
+            t.ty.shape[1] = w_local;
+        }
+    }
+    for op in &mut s.ops {
+        // The loop dimension indexing the output's width axis (axis 1 of
+        // the rank-3 map) carries the new trip count.
+        let w_dim = {
+            let out_map = op.indexing_maps.last().context("op without maps")?;
+            ensure!(
+                out_map.results.len() == 3,
+                "op {}: rank-{} output is not a feature map",
+                op.name,
+                out_map.results.len()
+            );
+            out_map.results[1]
+                .single_dim()
+                .with_context(|| format!("op {}: output width axis must be a plain dim", op.name))?
+        };
+        op.dims[w_dim] = w_local;
+    }
+    s.validate()
+        .with_context(|| format!("retiled strip graph (width {w_local}) is inconsistent"))?;
+    Ok(s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::builder::models;
+
+    #[test]
+    fn two_strip_plan_geometry() {
+        let g = models::cascade(32, 8, 8); // halo 2
+        let p = TilePlan::build(&g, 2).unwrap();
+        assert_eq!(p.halo, 2);
+        assert_eq!(p.tile_width, 16);
+        assert_eq!(p.local_width, 20);
+        assert_eq!(p.tiles.len(), 2);
+        // left strip starts at the true border; right strip shifts inward
+        assert_eq!(p.tiles[0].in_lo, 0);
+        assert_eq!(p.tiles[0].crop_lo(), 0);
+        assert_eq!(p.tiles[1].in_lo, 12);
+        assert_eq!(p.tiles[1].crop_lo(), 4);
+        // every window stays inside the map
+        for t in &p.tiles {
+            assert!(t.in_lo + p.local_width <= p.width);
+        }
+    }
+
+    #[test]
+    fn interior_strips_have_full_halo_margin() {
+        let g = models::conv_relu(64, 8, 8); // halo 1
+        let p = TilePlan::build(&g, 4).unwrap();
+        assert_eq!(p.local_width, 18);
+        for t in &p.tiles {
+            // the kept core never sits closer than `halo` to a fake edge
+            let left_true = t.in_lo == 0;
+            let right_true = t.in_lo + p.local_width == p.width;
+            if !left_true {
+                assert!(t.crop_lo() >= p.halo, "tile {}", t.index);
+            }
+            if !right_true {
+                assert!(
+                    p.local_width - (t.crop_lo() + t.core_width()) >= p.halo,
+                    "tile {}",
+                    t.index
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn cores_partition_the_width() {
+        let g = models::conv_relu(32, 8, 8);
+        for n in [1usize, 2, 4, 8] {
+            let p = TilePlan::build(&g, n).unwrap();
+            let mut covered = 0;
+            for t in &p.tiles {
+                assert_eq!(t.out_lo, covered);
+                covered = t.out_hi;
+            }
+            assert_eq!(covered, p.width);
+        }
+    }
+
+    #[test]
+    fn bad_tile_counts_rejected() {
+        let g = models::conv_relu(32, 8, 8);
+        assert!(TilePlan::build(&g, 3).is_err(), "3 does not divide 32");
+        assert!(TilePlan::build(&g, 0).is_err());
+        // 32 strips of core 1 + halo 2 = 3 > ... still narrower than 32; but
+        // 16 tiles: core 2 + 2 = 4 <= 32, fine. Degenerate overlap is allowed
+        // as long as strips are narrower than the map.
+        assert!(TilePlan::build(&g, 16).is_ok());
+    }
+
+    #[test]
+    fn retile_width_rebuilds_consistent_strip() {
+        let g = models::cascade(32, 8, 8);
+        let s = retile_width(&g, 20).unwrap();
+        s.validate().unwrap();
+        assert_eq!(s.inputs()[0].ty.shape, vec![32, 20, 8]);
+        assert_eq!(s.outputs()[0].ty.shape, vec![32, 20, 8]);
+        for op in &s.ops {
+            // conv dims: [h, w, f, k, k, c]; elementwise dims: [h, w, c]
+            assert_eq!(op.dims[1], 20, "op {}", op.name);
+        }
+        // weights untouched
+        assert_eq!(s.weights().len(), g.weights().len());
+        for (a, b) in s.weights().iter().zip(g.weights()) {
+            assert_eq!(a.ty.shape, b.ty.shape);
+        }
+    }
+
+    #[test]
+    fn retile_residual_diamond() {
+        let g = models::residual(16, 8, 8);
+        let s = retile_width(&g, 12).unwrap();
+        s.validate().unwrap();
+        assert_eq!(s.outputs()[0].ty.shape, vec![16, 12, 8]);
+    }
+}

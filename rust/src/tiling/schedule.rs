@@ -1,0 +1,328 @@
+//! The outer tile schedule: search for the cheapest feasible tile count,
+//! compile one uniform strip design, and execute/stitch strips.
+//!
+//! [`compile_tiled`] is the feasibility fallback entry point: when the
+//! untiled DSE has no feasible point (line buffers exceed the BRAM
+//! budget even at minimal unroll), it walks the tile-count candidate
+//! axis ([`crate::dse::space::tile_counts`]) from fewest strips upward,
+//! prunes counts whose strip BRAM lower bound cannot fit, and accepts
+//! the first tile count whose strip design solves the DSE *and* fits
+//! the device BRAM budget end to end. Fewer strips means less halo
+//! recompute and restart overhead, so the first hit is the best.
+//!
+//! [`simulate_tiled`] then runs the strip design once per tile over the
+//! halo-overlapped input windows and stitches the cropped cores — the
+//! result is bit-exact against the untiled design (and therefore against
+//! the JAX/Pallas golden model).
+
+use anyhow::{bail, ensure, Result};
+
+use crate::dataflow::build::build_streaming_design;
+use crate::dataflow::design::Design;
+use crate::dse::ilp::{solve, DseConfig, DseSolution};
+use crate::dse::space::tile_counts;
+use crate::ir::graph::ModelGraph;
+use crate::sim::{simulate, SimMode};
+
+use super::cost::{strip_bram_lower_bound, tiled_cycles_estimate, TILE_RESTART_CYCLES};
+use super::halo::{check_tilable, graph_halo};
+use super::plan::TilePlan;
+
+/// A width-tiled compilation: one DSE-solved strip design reused by
+/// every tile of the plan.
+#[derive(Debug, Clone)]
+pub struct TiledCompilation {
+    /// The original (untiled) model graph.
+    pub graph: ModelGraph,
+    pub plan: TilePlan,
+    /// The solved uniform-width strip design.
+    pub strip: Design,
+    pub solution: DseSolution,
+}
+
+impl TiledCompilation {
+    /// Conservative total latency estimate across all strips.
+    pub fn estimated_cycles(&self) -> u64 {
+        tiled_cycles_estimate(&self.plan, &self.strip)
+    }
+
+    pub fn describe(&self) -> String {
+        format!(
+            "{}\nstrip objective {} cycles, {} DSP / {} BRAM (candidate accounting)",
+            self.plan.describe(),
+            self.solution.objective,
+            self.solution.dsp_used,
+            self.solution.bram_used
+        )
+    }
+}
+
+/// Compile `g` with a fixed tile count (no search). Used by tests, by
+/// front-end tiling hints, and by the automatic search.
+pub fn compile_tiled_fixed(
+    g: &ModelGraph,
+    cfg: &DseConfig,
+    n_tiles: usize,
+) -> Result<TiledCompilation> {
+    let plan = TilePlan::build(g, n_tiles)?;
+    let mut strip = crate::dataflow::build::build_strip_design(g, plan.local_width)?;
+    let solution = solve(&mut strip, cfg)?;
+    let report = crate::resources::estimate(&strip, &cfg.device);
+    ensure!(
+        report.bram18k <= cfg.device.bram18k,
+        "strip width {}: estimated BRAM {} exceeds device budget {}",
+        plan.local_width,
+        report.bram18k,
+        cfg.device.bram18k
+    );
+    Ok(TiledCompilation { graph: g.clone(), plan, strip, solution })
+}
+
+/// Feasibility fallback: find the smallest tile count whose strip design
+/// fits the device, preferring a front-end [`crate::ir::graph::TilingHint`]
+/// when the graph carries one.
+pub fn compile_tiled(g: &ModelGraph, cfg: &DseConfig) -> Result<TiledCompilation> {
+    let base = build_streaming_design(g)?;
+    compile_tiled_from(g, &base, cfg)
+}
+
+/// Like [`compile_tiled`], reusing an already-built untiled design for
+/// the strip BRAM lower bounds — `solve_with_tiling_fallback` hands in
+/// the design whose DSE just failed instead of paying for the (large)
+/// untiled build a second time.
+pub fn compile_tiled_from(
+    g: &ModelGraph,
+    base: &Design,
+    cfg: &DseConfig,
+) -> Result<TiledCompilation> {
+    let (_, width) = check_tilable(g)?;
+    let halo = graph_halo(g)?;
+    let budget = cfg.device.bram18k.saturating_sub(cfg.bram_reserve);
+
+    let mut max_tiles = width as u64;
+    let mut candidates: Vec<u64> = Vec::new();
+    if let Some(hint) = &g.tiling {
+        if let Some(cap) = hint.max_tiles {
+            max_tiles = cap as u64;
+        }
+        if let Some(tw) = hint.tile_width {
+            if tw > 0 && width % tw == 0 {
+                candidates.push((width / tw) as u64);
+            }
+        }
+    }
+    candidates.extend(tile_counts(width as u64));
+    candidates.retain(|&t| t <= max_tiles);
+
+    let mut last_err = anyhow::anyhow!(
+        "no tile count divides width {width} into strips that fit device {} \
+         (halo {halo} per side)",
+        cfg.device.name
+    );
+    let mut tried = std::collections::HashSet::new();
+    for t in candidates {
+        if !tried.insert(t) {
+            continue;
+        }
+        let n_tiles = t as usize;
+        let tile_width = width / n_tiles;
+        let local_width = tile_width + 2 * halo;
+        if local_width >= width {
+            continue; // no narrower than the full map — tiling buys nothing
+        }
+        // cheap prune: even unpartitioned strip line buffers must fit
+        if strip_bram_lower_bound(base, width, local_width) > budget {
+            continue;
+        }
+        match compile_tiled_fixed(g, cfg, n_tiles) {
+            Ok(tc) => return Ok(tc),
+            Err(e) => last_err = e,
+        }
+    }
+    Err(last_err.context(format!("width-tiling fallback failed for graph {}", g.name)))
+}
+
+/// Result of a tiled simulation.
+#[derive(Debug)]
+pub struct TiledSimReport {
+    /// Total cycles across all strips (including restart overhead).
+    pub cycles: u64,
+    /// Stitched full-size output tensor (row-major `(H, W, F)`).
+    pub output: Vec<i32>,
+    /// Per-strip simulated cycle counts.
+    pub tile_cycles: Vec<u64>,
+}
+
+/// Execute every strip of `tc` on the cycle-level simulator and stitch
+/// the cropped cores into the full output feature map.
+pub fn simulate_tiled(tc: &TiledCompilation, input: &[i32]) -> Result<TiledSimReport> {
+    let g = &tc.graph;
+    let plan = &tc.plan;
+    let in_shape = &g.inputs()[0].ty.shape;
+    ensure!(in_shape.len() == 3, "tiled input must be (H, W, C)");
+    let (h, w, c) = (in_shape[0], in_shape[1], in_shape[2]);
+    ensure!(w == plan.width && h == plan.height, "plan does not match graph shape");
+    ensure!(
+        input.len() == h * w * c,
+        "input has {} values, graph expects {}",
+        input.len(),
+        h * w * c
+    );
+    let f = *g.outputs()[0].ty.shape.last().unwrap();
+    let lw = plan.local_width;
+
+    let mut output = vec![0i32; h * w * f];
+    let mut tile_cycles = Vec::with_capacity(plan.tiles.len());
+    let mut cycles = 0u64;
+    for tile in &plan.tiles {
+        // gather the halo-overlapped input window, row by row
+        let mut strip_in = Vec::with_capacity(h * lw * c);
+        for r in 0..h {
+            let base = (r * w + tile.in_lo) * c;
+            strip_in.extend_from_slice(&input[base..base + lw * c]);
+        }
+        let rep = simulate(&tc.strip, &strip_in, SimMode::of(tc.strip.style))?;
+        if let Some(blocked) = &rep.deadlock {
+            bail!("strip {} deadlocked:\n  {}", tile.index, blocked.join("\n  "));
+        }
+        // scatter the cropped core columns into the full output
+        let crop = tile.crop_lo();
+        let keep = tile.core_width();
+        for r in 0..h {
+            let src = (r * lw + crop) * f;
+            let dst = (r * w + tile.out_lo) * f;
+            output[dst..dst + keep * f].copy_from_slice(&rep.output[src..src + keep * f]);
+        }
+        cycles += rep.cycles + TILE_RESTART_CYCLES;
+        tile_cycles.push(rep.cycles);
+    }
+    Ok(TiledSimReport { cycles, output, tile_cycles })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::builder::models;
+    use crate::resources::device::DeviceSpec;
+    use crate::util::prng;
+
+    fn det_input(g: &ModelGraph) -> Vec<i32> {
+        prng::det_tensor(prng::SEED_INPUT, g.inputs()[0].ty.numel())
+            .iter()
+            .map(|&v| v as i32)
+            .collect()
+    }
+
+    fn untiled_output(g: &ModelGraph, x: &[i32]) -> Vec<i32> {
+        let d = build_streaming_design(g).unwrap();
+        simulate(&d, x, SimMode::Dataflow).unwrap().expect_complete().output
+    }
+
+    #[test]
+    fn tiled_conv_relu_is_bit_exact() {
+        let g = models::conv_relu(32, 8, 8);
+        let x = det_input(&g);
+        let want = untiled_output(&g, &x);
+        let cfg = DseConfig::new(DeviceSpec::kv260());
+        for n_tiles in [2usize, 4, 8] {
+            let tc = compile_tiled_fixed(&g, &cfg, n_tiles).unwrap();
+            let rep = simulate_tiled(&tc, &x).unwrap();
+            assert_eq!(rep.output, want, "T={n_tiles} output mismatch");
+            assert_eq!(rep.tile_cycles.len(), n_tiles);
+            assert!(rep.cycles > 0);
+        }
+    }
+
+    #[test]
+    fn tiled_cascade_is_bit_exact() {
+        let g = models::cascade(32, 8, 8);
+        let x = det_input(&g);
+        let want = untiled_output(&g, &x);
+        let tc = compile_tiled_fixed(&g, &DseConfig::new(DeviceSpec::kv260()), 4).unwrap();
+        let rep = simulate_tiled(&tc, &x).unwrap();
+        assert_eq!(rep.output, want);
+    }
+
+    #[test]
+    fn tiled_residual_diamond_is_bit_exact() {
+        let g = models::residual(32, 8, 8);
+        let x = det_input(&g);
+        let want = untiled_output(&g, &x);
+        let tc = compile_tiled_fixed(&g, &DseConfig::new(DeviceSpec::kv260()), 2).unwrap();
+        let rep = simulate_tiled(&tc, &x).unwrap();
+        assert_eq!(rep.output, want);
+    }
+
+    #[test]
+    fn fallback_rescues_bram_starved_conv() {
+        // Full-width line buffers need 4 BRAM18K minimum (2 rows x 2
+        // blocks); budget 3 after the FIFO reserve => untiled DSE is
+        // infeasible, strips of half the width fit in 2 blocks.
+        let g = models::conv_relu(80, 32, 8);
+        let dev = DeviceSpec::kv260().with_bram_limit(11);
+        let cfg = DseConfig::new(dev.clone());
+        let mut flat = build_streaming_design(&g).unwrap();
+        assert!(solve(&mut flat, &cfg).is_err(), "untiled must be infeasible");
+
+        let tc = compile_tiled(&g, &cfg).unwrap();
+        assert!(tc.plan.tiles.len() >= 2);
+        let r = crate::resources::estimate(&tc.strip, &dev);
+        assert!(
+            r.bram18k <= dev.bram18k,
+            "strip BRAM {} must fit budget {}",
+            r.bram18k,
+            dev.bram18k
+        );
+        // and the tiled execution is still bit-exact
+        let x = det_input(&g);
+        let want = untiled_output(&g, &x);
+        let rep = simulate_tiled(&tc, &x).unwrap();
+        assert_eq!(rep.output, want);
+    }
+
+    #[test]
+    fn tiling_hint_is_preferred() {
+        let mut g = models::conv_relu(32, 8, 8);
+        g.tiling = Some(crate::ir::graph::TilingHint {
+            tile_width: Some(8),
+            max_tiles: None,
+        });
+        let tc = compile_tiled(&g, &DseConfig::new(DeviceSpec::kv260())).unwrap();
+        assert_eq!(tc.plan.tiles.len(), 4);
+        assert_eq!(tc.plan.tile_width, 8);
+    }
+
+    #[test]
+    fn untilable_graphs_report_cleanly() {
+        let g = models::linear();
+        let err = compile_tiled(&g, &DseConfig::new(DeviceSpec::kv260())).unwrap_err();
+        assert!(format!("{err:#}").contains("width"), "{err:#}");
+    }
+
+    #[test]
+    fn oversized_vgg_block_compiles_only_tiled_on_kv260() {
+        // The headline scenario: three 3x3 conv layers at 256 channels on
+        // a 512x512 input. Untiled, the minimal line buffers alone need
+        // ~342 BRAM18K > the KV260's 288; width-tiling turns the hard
+        // infeasibility into a latency/resource trade-off. (Estimate
+        // only — 4.6e12 MACs are not simulated here.)
+        let g = models::vgg_block(512, 256, 3);
+        let dev = DeviceSpec::kv260();
+        let cfg = DseConfig::new(dev.clone());
+        let mut flat = build_streaming_design(&g).unwrap();
+        let err = solve(&mut flat, &cfg).unwrap_err();
+        assert!(format!("{err:#}").contains("infeasible"), "{err:#}");
+
+        let tc = compile_tiled(&g, &cfg).unwrap();
+        assert!(tc.plan.tiles.len() >= 2);
+        assert_eq!(tc.plan.halo, 3);
+        let r = crate::resources::estimate(&tc.strip, &dev);
+        assert!(
+            r.bram18k <= dev.bram18k,
+            "tiled BRAM {} must fit the stock KV260 ({})",
+            r.bram18k,
+            dev.bram18k
+        );
+        assert!(tc.estimated_cycles() > 0);
+    }
+}

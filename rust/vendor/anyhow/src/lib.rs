@@ -1,0 +1,191 @@
+//! Minimal vendored stand-in for the `anyhow` crate.
+//!
+//! This build environment is fully offline, so the real crates.io
+//! dependency is unavailable; this crate implements exactly the API
+//! surface the `ming` workspace uses:
+//!
+//! * [`Error`] — a message with a context chain; `{e}` prints the
+//!   outermost message, `{e:#}` the whole chain colon-joined (matching
+//!   anyhow's alternate formatting).
+//! * [`Result<T>`] with `?`-conversion from any `std::error::Error`.
+//! * [`anyhow!`], [`bail!`], [`ensure!`] macros.
+//! * The [`Context`] extension trait for `Result` and `Option`.
+//!
+//! Like the real crate, [`Error`] deliberately does **not** implement
+//! `std::error::Error`, which is what makes the blanket `From` impl
+//! coherent.
+
+use std::fmt;
+
+/// `Result<T, anyhow::Error>` with an overridable error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// An error value: the outermost message first, then successively deeper
+/// causes/contexts.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from a printable message.
+    pub fn msg(m: impl fmt::Display) -> Self {
+        Error { chain: vec![m.to_string()] }
+    }
+
+    /// Wrap with an outer context message (the `anyhow::Error::context`
+    /// inherent method).
+    pub fn context(mut self, c: impl fmt::Display) -> Self {
+        self.chain.insert(0, c.to_string());
+        self
+    }
+
+    /// The deepest (root-cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(String::as_str).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            f.write_str(&self.chain.join(": "))
+        } else {
+            f.write_str(&self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.chain[0])?;
+        for cause in &self.chain[1..] {
+            write!(f, "\n\nCaused by:\n    {cause}")?;
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// Context extension for `Result` and `Option`.
+pub trait Context<T> {
+    /// Wrap the error (or `None`) with a context message.
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    /// Like [`Context::context`], evaluating the message lazily.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| e.into().context(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or printable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            // Error::msg directly: stringify! may contain brace characters
+            // that format! would misread as placeholders.
+            return Err($crate::Error::msg(concat!(
+                "condition failed: `",
+                stringify!($cond),
+                "`"
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        bail!("inner {}", 42)
+    }
+
+    #[test]
+    fn chain_formatting() {
+        let e = fails().context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer");
+        assert_eq!(format!("{e:#}"), "outer: inner 42");
+        assert_eq!(e.root_cause(), "inner 42");
+    }
+
+    #[test]
+    fn ensure_and_question_mark() {
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x > 0, "x must be positive, got {x}");
+            let parsed: i32 = "17".parse()?;
+            Ok(parsed + x)
+        }
+        assert_eq!(f(1).unwrap(), 18);
+        assert!(f(-1).unwrap_err().to_string().contains("positive"));
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<i32> = None;
+        assert!(v.context("missing").is_err());
+        assert_eq!(Some(3).context("missing").unwrap(), 3);
+    }
+
+    #[test]
+    fn std_error_conversion_keeps_source_chain() {
+        let io = std::io::Error::new(std::io::ErrorKind::Other, "disk on fire");
+        let e: Error = io.into();
+        assert!(e.to_string().contains("disk on fire"));
+    }
+}

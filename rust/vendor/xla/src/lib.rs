@@ -1,0 +1,176 @@
+//! Graceful stub of the `xla` crate (PJRT bindings) for environments
+//! where the native `xla_extension` runtime is unavailable.
+//!
+//! The API surface mirrors exactly what `ming::runtime::pjrt` uses. The
+//! CPU client constructs (so runtime plumbing can be exercised), but
+//! loading or compiling HLO returns a descriptive error — callers treat
+//! that the same way as missing artifacts and skip golden verification.
+//! Swap this path dependency for the real `xla` crate to run the
+//! JAX/Pallas golden models through PJRT.
+
+use std::fmt;
+
+/// Stub error type (implements `std::error::Error` so callers can wrap
+/// it with `anyhow::Context`).
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl Error {
+    fn unavailable(what: &str) -> Self {
+        Error(format!(
+            "xla stub: {what} unavailable (vendored offline stub; \
+             link the real xla crate for PJRT execution)"
+        ))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// PJRT client handle. Only the CPU platform exists in the stub.
+pub struct PjRtClient {
+    _priv: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient { _priv: () })
+    }
+
+    pub fn platform_name(&self) -> String {
+        "cpu".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::unavailable("HLO compilation"))
+    }
+}
+
+/// Parsed HLO module (never actually constructed by the stub).
+pub struct HloModuleProto {
+    _priv: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        Err(Error::unavailable(&format!("HLO text parsing ({path})")))
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+pub struct XlaComputation {
+    _priv: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _priv: () }
+    }
+}
+
+/// A compiled executable (never produced by the stub).
+pub struct PjRtLoadedExecutable {
+    _priv: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[T],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable("execution"))
+    }
+}
+
+/// A device buffer holding one execution result.
+pub struct PjRtBuffer {
+    _priv: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::unavailable("device-to-host transfer"))
+    }
+}
+
+/// Element types a [`Literal`] can yield. The stub only carries i32 (the
+/// ming interchange convention).
+pub trait LiteralElem: Copy {
+    fn from_i32(v: i32) -> Self;
+}
+
+impl LiteralElem for i32 {
+    fn from_i32(v: i32) -> i32 {
+        v
+    }
+}
+
+/// Host literal: flat i32 data plus dimensions.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    data: Vec<i32>,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1(values: &[i32]) -> Literal {
+        Literal { data: values.to_vec(), dims: vec![values.len() as i64] }
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let numel: i64 = dims.iter().product();
+        if numel != self.data.len() as i64 {
+            return Err(Error(format!(
+                "reshape: {} elements do not fit shape {dims:?}",
+                self.data.len()
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    /// Unwrap a 1-tuple result literal.
+    pub fn to_tuple1(&self) -> Result<Literal> {
+        Ok(self.clone())
+    }
+
+    pub fn to_vec<T: LiteralElem>(&self) -> Result<Vec<T>> {
+        Ok(self.data.iter().map(|&v| T::from_i32(v)).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_client_constructs() {
+        let c = PjRtClient::cpu().unwrap();
+        assert_eq!(c.platform_name(), "cpu");
+    }
+
+    #[test]
+    fn hlo_loading_reports_stub() {
+        let e = HloModuleProto::from_text_file("x.hlo.txt").unwrap_err();
+        assert!(e.to_string().contains("xla stub"));
+    }
+
+    #[test]
+    fn literal_roundtrip() {
+        let l = Literal::vec1(&[1, 2, 3, 4]).reshape(&[2, 2]).unwrap();
+        assert_eq!(l.dims(), &[2, 2]);
+        assert_eq!(l.to_vec::<i32>().unwrap(), vec![1, 2, 3, 4]);
+        assert!(Literal::vec1(&[1]).reshape(&[7]).is_err());
+    }
+}
