@@ -64,7 +64,8 @@ def main() -> int:
         "--emit-model-json",
         action="store_true",
         help="also write <key>.model.json (the Rust `ming import` schema, "
-        "with width-tiling metadata) for chain-shaped kernels",
+        "with width-tiling metadata and per-layer weight_elems/weight_bits "
+        "for ROM accounting) for chain-shaped kernels",
     )
     ap.add_argument(
         "--tile-width",

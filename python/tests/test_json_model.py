@@ -36,6 +36,36 @@ def test_json_model_schema_keys(name):
             assert layer["activation"] in ("relu", "none")
         if layer["op"] == "linear":
             assert "features" in layer and "seed" in layer
+        if layer["op"] in ("conv2d", "linear"):
+            # ROM-accounting metadata: counts only, never tensor data
+            assert layer["weight_bits"] == 8
+            assert layer["weight_elems"] > 0
+
+
+@pytest.mark.parametrize("name", CHAIN_KERNELS)
+def test_weight_metadata_matches_layer_geometry(name):
+    """weight_elems must equal the element count of the weight tensor the
+    Rust importer derives from the layer chain (its ROM accounting keys
+    off these numbers when no tensor data ships)."""
+    size = 0 if name in ("linear", "feedforward") else 32
+    doc = model.json_model(name, size)
+    shape = list(model.input_shape(name, size))
+    for layer in doc["layers"]:
+        if layer["op"] == "conv2d":
+            f, k, c = layer["filters"], layer["kernel"], shape[2]
+            assert layer["weight_elems"] == f * k * k * c
+            assert layer["weight_bits"] == 8
+            shape = [shape[0], shape[1], f]  # stride-1 same padding
+        elif layer["op"] == "maxpool2d":
+            k, s = layer["kernel"], layer["stride"]
+            shape = [(shape[0] - k) // s + 1, (shape[1] - k) // s + 1, shape[2]]
+        elif layer["op"] == "linear":
+            assert layer["weight_elems"] == shape[1] * layer["features"]
+            assert layer["weight_bits"] == 8
+            shape = [shape[0], layer["features"]]
+    # no layer ever carries raw weight values
+    for layer in doc["layers"]:
+        assert "data" not in layer and "weights" not in layer
 
 
 def test_tiling_metadata_carried():

@@ -1,6 +1,14 @@
 //! HLS pragma model (paper §III-C's essential directives).
+//!
+//! Storage-related pragmas (ARRAY_PARTITION, BIND_STORAGE) are *derived*
+//! from [`BufferAlloc`]s via [`buffer_pragmas`] — the same allocations
+//! the unified resource model prices — rather than recomputed inline by
+//! the emitter, so the pragmas in the generated C++ always describe the
+//! storage the solver charged for.
 
 use std::fmt;
+
+use crate::dataflow::buffers::{BufferAlloc, BufferRole, Storage};
 
 /// Array partition styles.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -51,8 +59,8 @@ pub enum Pragma {
     Stream { var: String, depth: usize },
     /// `#pragma HLS ARRAY_PARTITION variable=v <kind> factor=f dim=d`
     ArrayPartition { var: String, kind: PartitionKind, factor: u64, dim: u32 },
-    /// `#pragma HLS BIND_STORAGE variable=v type=ram_1p impl=<impl>`
-    BindStorage { var: String, storage: StorageImpl },
+    /// `#pragma HLS BIND_STORAGE variable=v type={ram_1p|rom_1p} impl=<impl>`
+    BindStorage { var: String, storage: StorageImpl, rom: bool },
     /// `#pragma HLS INTERFACE mode=m port=p`
     Interface { mode: String, port: String },
     /// `#pragma HLS INLINE off`
@@ -74,9 +82,10 @@ impl fmt::Display for Pragma {
                 "#pragma HLS ARRAY_PARTITION variable={var} {} factor={factor} dim={dim}",
                 kind.name()
             ),
-            Pragma::BindStorage { var, storage } => write!(
+            Pragma::BindStorage { var, storage, rom } => write!(
                 f,
-                "#pragma HLS BIND_STORAGE variable={var} type=ram_1p impl={}",
+                "#pragma HLS BIND_STORAGE variable={var} type={} impl={}",
+                if *rom { "rom_1p" } else { "ram_1p" },
                 storage.name()
             ),
             Pragma::Interface { mode, port } => {
@@ -85,6 +94,38 @@ impl fmt::Display for Pragma {
             Pragma::InlineOff => write!(f, "#pragma HLS INLINE off"),
         }
     }
+}
+
+/// The BIND_STORAGE `impl` for a buffer's storage binding; `None` for
+/// register (FF) arrays, which take no storage pragma.
+pub fn storage_impl(s: Storage) -> Option<StorageImpl> {
+    match s {
+        Storage::Bram | Storage::Rom => Some(StorageImpl::Bram),
+        Storage::Lutram => Some(StorageImpl::Lutram),
+        Storage::Ff => None,
+    }
+}
+
+/// The storage pragmas describing one buffer allocation, applied to the
+/// emitted array `var` along `dim`: a cyclic ARRAY_PARTITION at the
+/// allocation's partition factor plus the BIND_STORAGE binding (ROM type
+/// for weight constants). This is the single path from the resource
+/// model's storage decisions to the generated directives.
+pub fn buffer_pragmas(var: &str, b: &BufferAlloc, dim: u32) -> Vec<Pragma> {
+    let mut out = vec![Pragma::ArrayPartition {
+        var: var.to_string(),
+        kind: PartitionKind::Cyclic,
+        factor: b.partitions.max(1),
+        dim,
+    }];
+    if let Some(imp) = storage_impl(b.storage) {
+        out.push(Pragma::BindStorage {
+            var: var.to_string(),
+            storage: imp,
+            rom: b.role == BufferRole::Weights,
+        });
+    }
+    out
 }
 
 #[cfg(test)]
@@ -114,8 +155,45 @@ mod tests {
             "#pragma HLS ARRAY_PARTITION variable=lb cyclic factor=8 dim=2"
         );
         assert_eq!(
-            Pragma::BindStorage { var: "lb".into(), storage: StorageImpl::Bram }.to_string(),
+            Pragma::BindStorage { var: "lb".into(), storage: StorageImpl::Bram, rom: false }
+                .to_string(),
             "#pragma HLS BIND_STORAGE variable=lb type=ram_1p impl=bram"
         );
+        assert_eq!(
+            Pragma::BindStorage { var: "w1".into(), storage: StorageImpl::Lutram, rom: true }
+                .to_string(),
+            "#pragma HLS BIND_STORAGE variable=w1 type=rom_1p impl=lutram"
+        );
+    }
+
+    #[test]
+    fn buffer_pragmas_follow_the_allocation() {
+        let b = BufferAlloc {
+            name: "conv0_w1".into(),
+            role: BufferRole::Weights,
+            bits: 18_432,
+            partitions: 8,
+            storage: Storage::Rom,
+            node: Some(0),
+        };
+        let ps = buffer_pragmas("w1", &b, 1);
+        let text: Vec<String> = ps.iter().map(|p| p.to_string()).collect();
+        assert_eq!(
+            text,
+            vec![
+                "#pragma HLS ARRAY_PARTITION variable=w1 cyclic factor=8 dim=1",
+                "#pragma HLS BIND_STORAGE variable=w1 type=rom_1p impl=bram",
+            ]
+        );
+        // register arrays bind no storage pragma
+        let ff = BufferAlloc {
+            name: "win".into(),
+            role: BufferRole::WindowBuffer,
+            bits: 64,
+            partitions: 8,
+            storage: Storage::Ff,
+            node: Some(0),
+        };
+        assert_eq!(buffer_pragmas("window", &ff, 0).len(), 1);
     }
 }

@@ -16,6 +16,10 @@ pub struct Cell {
     pub framework: FrameworkKind,
     pub mcycles: f64,
     pub bram: u64,
+    /// Weight-ROM share of `bram` (unified resource model breakdown).
+    pub bram_rom: u64,
+    /// FIFO-backing share of `bram`.
+    pub bram_fifo: u64,
     pub dsp: u64,
     pub lut_pct: f64,
     pub lutram_pct: f64,
@@ -33,6 +37,8 @@ pub fn cell(r: &JobResult) -> Cell {
         framework: r.job.framework,
         mcycles: r.cycles as f64 / 1e6,
         bram: r.util.bram18k,
+        bram_rom: r.util.bram_weights,
+        bram_fifo: r.util.bram_fifos,
         dsp: r.util.dsp,
         lut_pct: r.util.lut_pct(),
         lutram_pct: r.util.lutram_pct(),
@@ -87,11 +93,13 @@ fn wl_name(kernel: &str, size: usize) -> String {
     }
 }
 
-/// Render Table II: per workload × framework — MCycles, BRAM, DSP,
-/// speedup, E_DSP, feasibility.
+/// Render Table II: per workload × framework — MCycles, BRAM (with the
+/// unified model's weight-ROM / FIFO shares), DSP, speedup, E_DSP,
+/// feasibility.
 pub fn render_table2(cells: &[Cell]) -> String {
     let mut t = TextTable::new(vec![
-        "kernel", "framework", "MCycles", "BRAM", "DSP", "Speedup", "E_DSP", "fits",
+        "kernel", "framework", "MCycles", "BRAM", "ROM", "FIFO", "DSP", "Speedup", "E_DSP",
+        "fits",
     ]);
     for c in cells {
         let sp = speedup(cells, c);
@@ -101,6 +109,8 @@ pub fn render_table2(cells: &[Cell]) -> String {
             fw_label(c),
             if c.error.is_some() { "×".into() } else { fnum(c.mcycles, 4) },
             c.bram.to_string(),
+            c.bram_rom.to_string(),
+            c.bram_fifo.to_string(),
             c.dsp.to_string(),
             sp.map(|v| fnum(v, 2)).unwrap_or_else(|| "—".into()),
             ed.map(|v| fnum(v, 2)).unwrap_or_else(|| "—".into()),
@@ -137,7 +147,7 @@ pub fn render_table4(rows: &[(u64, Cell, f64)]) -> String {
         // E_DSP vs the unconstrained Vanilla baseline DSP (1 by our model)
         let ed = sp / c.dsp.max(1) as f64;
         t.row(vec![
-            format!("{cap}"),
+            cap.to_string(),
             fnum(sp, 2),
             c.dsp.to_string(),
             fnum(ed, 3),
@@ -170,6 +180,8 @@ mod tests {
             framework: fw,
             mcycles,
             bram: 10,
+            bram_rom: 2,
+            bram_fifo: 1,
             dsp,
             lut_pct: 1.0,
             lutram_pct: 1.0,
@@ -212,6 +224,13 @@ mod tests {
         assert!(s.contains("conv_relu 32x32"));
         assert!(s.contains("ming"));
         assert!(s.contains("Speedup"));
+    }
+
+    #[test]
+    fn table2_includes_resource_breakdown_columns() {
+        let cells = vec![mk("conv_relu", FrameworkKind::Ming, 0.001, 288)];
+        let s = render_table2(&cells);
+        assert!(s.contains("ROM") && s.contains("FIFO"), "{s}");
     }
 
     #[test]

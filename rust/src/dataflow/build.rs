@@ -13,6 +13,7 @@ use anyhow::{ensure, Context, Result};
 use crate::analysis::classify::KernelClass;
 use crate::analysis::shapes::{activation_inputs, node_geometry};
 use crate::ir::graph::{ModelGraph, TensorKind};
+use crate::resources::model::{weight_partitions, weight_storage};
 
 use super::buffers::{BufferAlloc, BufferRole, Storage};
 use super::channel::{Channel, ChannelId, Endpoint};
@@ -204,22 +205,22 @@ pub fn refresh_buffers(d: &mut Design) {
             }
             KernelClass::PureParallel => {}
         }
-        // Weight ROMs: resident constants. Highly partitioned small ROMs
-        // are placed in LUTRAM by Vitis; keep them out of the BRAM budget
-        // exactly when slices get register-tiny.
+        // Weight ROMs: resident constants. Storage binding and partition
+        // factor come from the unified resource model's policy
+        // (`resources::model::weight_storage`), the same computation the
+        // DSE charges per candidate — allocation and pricing cannot
+        // diverge.
         for &inp in &op.inputs {
             let t = d.graph.tensor(inp);
             if t.kind == TensorKind::Weight {
                 let lanes = n.timing.mac_lanes.max(1);
                 let bits = t.ty.bits();
-                let storage =
-                    if bits / lanes.max(1) < 1024 || lanes >= 32 { Storage::Lutram } else { Storage::Rom };
                 buffers.push(BufferAlloc {
                     name: format!("{}_{}", n.name, t.name),
                     role: BufferRole::Weights,
                     bits,
-                    partitions: lanes.min(t.ty.numel() as u64),
-                    storage,
+                    partitions: weight_partitions(t.ty.numel() as u64, lanes),
+                    storage: weight_storage(bits, lanes),
                     node: Some(n.id),
                 });
             }

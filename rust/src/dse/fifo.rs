@@ -5,6 +5,13 @@
 //! to absorb that lag, preventing deadlock in residual-style graphs.
 //! Plain producer→consumer chains keep small depths (the paper notes the
 //! estimates are conservative — future work integrates FIFOAdvisor).
+//!
+//! The sizing *policy* is exposed as pure functions ([`diamond_mins`],
+//! [`planned_depth`]) so the unified resource model
+//! ([`crate::resources::model`]) can price a channel's BRAM for any
+//! candidate timing **before** the depths are committed — the solver's
+//! per-candidate FIFO accounting and the depths [`size_fifos`] actually
+//! assigns can never disagree, because they are the same computation.
 
 use std::collections::HashMap;
 
@@ -37,30 +44,34 @@ fn lag(d: &Design, node: usize, memo: &mut HashMap<usize, u64>) -> u64 {
     v
 }
 
-/// Assign depths to every channel: base depth everywhere, plus diamond
-/// lag absorption on reconvergent inputs. Also aligns channel lanes with
-/// the consuming node's reduction unroll (the stream constraint's width
-/// coupling: streams are read `unroll` values at a time).
-pub fn size_fifos(d: &mut Design) {
-    let mut memo = HashMap::new();
-    // compute all lags first (immutable pass)
-    let lags: Vec<u64> = (0..d.nodes.len()).map(|i| lag(d, i, &mut memo)).collect();
+/// Base depth of a channel: covers the producer's pipeline latency (with
+/// II=1 the producer keeps `depth` results in flight and the FIFO must
+/// absorb them for back-to-back streaming). Channels fed by the graph
+/// input have no producer pipeline and keep the bare base depth.
+pub fn base_depth(producer_pipeline_depth: Option<u64>) -> usize {
+    match producer_pipeline_depth {
+        Some(depth) => FIFO_BASE_DEPTH + depth as usize + FIFO_MARGIN,
+        None => FIFO_BASE_DEPTH,
+    }
+}
 
-    // Base depth covers the producer's pipeline latency: with II=1 the
-    // producer keeps `depth` results in flight, and the FIFO must absorb
-    // them for back-to-back streaming (this is the paper's "estimated
-    // clock cycles for the first element to appear in the output stream"
-    // sizing rule applied to straight edges).
-    let mut new_depths: Vec<usize> = d
-        .channels
-        .iter()
-        .map(|c| match c.src {
-            Endpoint::Node(p) => {
-                FIFO_BASE_DEPTH + d.nodes[p].timing.depth as usize + FIFO_MARGIN
-            }
-            _ => FIFO_BASE_DEPTH,
-        })
-        .collect();
+/// The depth [`size_fifos`] will assign to a channel whose producer has
+/// the given pipeline depth and whose diamond-absorption floor is
+/// `diamond_min` (0 when the channel is not a reconvergent input).
+pub fn planned_depth(producer_pipeline_depth: Option<u64>, diamond_min: usize) -> usize {
+    base_depth(producer_pipeline_depth).max(diamond_min)
+}
+
+/// Per-channel minimum depths imposed by reconvergent (diamond) joins:
+/// the shallow side of every diamond must buffer the lag difference of
+/// its sibling paths plus margin. Lags are pure streaming geometry
+/// (line-buffer warm-ups), so this floor is independent of the DSE's
+/// unroll choices — the resource model treats it as a per-design
+/// constant.
+pub fn diamond_mins(d: &Design) -> Vec<usize> {
+    let mut memo = HashMap::new();
+    let lags: Vec<u64> = (0..d.nodes.len()).map(|i| lag(d, i, &mut memo)).collect();
+    let mut mins = vec![0usize; d.channels.len()];
     for n in &d.nodes {
         if n.in_channels.len() < 2 {
             continue;
@@ -77,11 +88,30 @@ pub fn size_fifos(d: &mut Design) {
         for (slot, &c) in n.in_channels.iter().enumerate() {
             let need = (max_lag - in_lags[slot]) as usize;
             if need > 0 {
-                new_depths[c.0] = new_depths[c.0].max(need + FIFO_MARGIN);
+                mins[c.0] = mins[c.0].max(need + FIFO_MARGIN);
             }
         }
     }
-    for (c, depth) in d.channels.iter_mut().zip(new_depths) {
+    mins
+}
+
+/// Assign depths to every channel from the shared policy: base depth
+/// covering the producer's pipeline latency, raised to the diamond
+/// absorption floor on reconvergent inputs.
+pub fn size_fifos(d: &mut Design) {
+    let mins = diamond_mins(d);
+    let depths: Vec<usize> = d
+        .channels
+        .iter()
+        .map(|c| {
+            let src_depth = match c.src {
+                Endpoint::Node(p) => Some(d.nodes[p].timing.depth),
+                _ => None,
+            };
+            planned_depth(src_depth, mins[c.id.0])
+        })
+        .collect();
+    for (c, depth) in d.channels.iter_mut().zip(depths) {
         c.depth = depth;
     }
 }
@@ -125,5 +155,28 @@ mod tests {
         size_fifos(&mut d);
         let again: Vec<usize> = d.channels.iter().map(|c| c.depth).collect();
         assert_eq!(depths, again);
+    }
+
+    #[test]
+    fn planned_depth_is_what_size_fifos_assigns() {
+        // The policy functions must predict assigned depths exactly —
+        // the unified resource model's FIFO pricing rests on this.
+        let g = models::residual(32, 8, 8);
+        let mut d = build_streaming_design(&g).unwrap();
+        let mins = diamond_mins(&d);
+        let predicted: Vec<usize> = d
+            .channels
+            .iter()
+            .map(|c| {
+                let src = match c.src {
+                    Endpoint::Node(p) => Some(d.nodes[p].timing.depth),
+                    _ => None,
+                };
+                planned_depth(src, mins[c.id.0])
+            })
+            .collect();
+        size_fifos(&mut d);
+        let assigned: Vec<usize> = d.channels.iter().map(|c| c.depth).collect();
+        assert_eq!(predicted, assigned);
     }
 }

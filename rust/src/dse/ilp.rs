@@ -18,23 +18,27 @@ use crate::dataflow::build::{build_streaming_design, refresh_buffers};
 use crate::dataflow::design::Design;
 use crate::ir::graph::ModelGraph;
 use crate::resources::device::DeviceSpec;
+use crate::resources::model::{ResourceModel, ResourceVec};
 use crate::tiling::{compile_tiled_from, TiledCompilation};
 
 use super::fifo::size_fifos;
-use super::space::{candidates, Candidate};
+use super::space::{candidates_with, Candidate};
 
 /// DSE configuration.
+///
+/// The former `bram_reserve` fudge (a flat block count subtracted from
+/// the budget to approximate FIFO backing) is gone: every candidate's
+/// [`ResourceVec`] prices its weight ROMs and output-FIFO depths
+/// exactly, so the solver charges the true budget and the estimate can
+/// never diverge from the built design.
 #[derive(Debug, Clone)]
 pub struct DseConfig {
     pub device: DeviceSpec,
-    /// Reserve this many BRAM blocks for FIFO backing (refunded by the
-    /// post-solve FIFO sizing pass; see [`solve`] step 3).
-    pub bram_reserve: u64,
 }
 
 impl DseConfig {
     pub fn new(device: DeviceSpec) -> Self {
-        Self { device, bram_reserve: 8 }
+        Self { device }
     }
 }
 
@@ -46,7 +50,12 @@ pub struct DseSolution {
     /// ILP objective value (Σ standalone node cycles).
     pub objective: u64,
     pub dsp_used: u64,
+    /// Exact BRAM of the solved design (line buffers + weight ROMs +
+    /// FIFOs) — equal to `resources::bram::design_bram` of the design
+    /// after the solution is applied (the unified-model invariant).
     pub bram_used: u64,
+    /// Full resource breakdown of the solution.
+    pub resources: ResourceVec,
     /// Candidate-sets explored (search-effort metric for benches).
     pub nodes_explored: u64,
 }
@@ -57,16 +66,31 @@ pub struct DseSolution {
 /// Fails if no assignment satisfies the device constraints (the paper's
 /// "infeasible design" case — e.g. StreamHLS's Feed-Forward on KV260).
 pub fn solve(design: &mut Design, cfg: &DseConfig) -> Result<DseSolution> {
-    let cand: Vec<Vec<Candidate>> =
-        (0..design.nodes.len()).map(|i| candidates(design, i)).collect();
+    // One resource model per design, shared across all nodes' candidate
+    // enumeration. Candidate-independent BRAM — FIFOs hanging off the
+    // graph input (including diamond skip channels) — is charged once up
+    // front; every other FIFO's depth is a function of its producer's
+    // candidate, so its blocks live in that candidate's ResourceVec.
+    // The incremental FIFO re-sizing per partial assignment is exact
+    // because each channel's depth depends only on its producer's
+    // pipeline depth plus a timing-independent diamond floor.
+    let (cand, base_fifo) = {
+        let model = ResourceModel::new(design);
+        let cand: Vec<Vec<Candidate>> = (0..design.nodes.len())
+            .map(|i| candidates_with(&model, design, i))
+            .collect();
+        (cand, model.input_fifo_bram())
+    };
     for (i, c) in cand.iter().enumerate() {
         ensure!(!c.is_empty(), "node {} has no candidates", design.nodes[i].name);
     }
 
     let d_total = cfg.device.dsp;
-    let b_total = cfg.device.bram18k.saturating_sub(cfg.bram_reserve);
+    let b_total = cfg.device.bram18k;
 
-    // Per-node minima for lower-bound pruning (suffix sums).
+    // Per-node minima for lower-bound pruning (suffix sums). Candidate
+    // vectors are separable per node, so per-node minima remain
+    // admissible lower bounds for the full BRAM/DSP sums.
     let n = cand.len();
     let mut min_cycles = vec![0u64; n + 1];
     let mut min_dsp = vec![0u64; n + 1];
@@ -74,14 +98,14 @@ pub fn solve(design: &mut Design, cfg: &DseConfig) -> Result<DseSolution> {
     for i in (0..n).rev() {
         min_cycles[i] =
             min_cycles[i + 1] + cand[i].iter().map(|c| c.cycles).min().unwrap();
-        min_dsp[i] = min_dsp[i + 1] + cand[i].iter().map(|c| c.dsp).min().unwrap();
-        min_bram[i] = min_bram[i + 1] + cand[i].iter().map(|c| c.bram).min().unwrap();
+        min_dsp[i] = min_dsp[i + 1] + cand[i].iter().map(|c| c.res.dsp).min().unwrap();
+        min_bram[i] = min_bram[i + 1] + cand[i].iter().map(|c| c.res.bram()).min().unwrap();
     }
     ensure!(
-        min_dsp[0] <= d_total && min_bram[0] <= b_total,
+        min_dsp[0] <= d_total && base_fifo + min_bram[0] <= b_total,
         "infeasible: minimal design needs {} DSP / {} BRAM, device allows {} / {}",
         min_dsp[0],
-        min_bram[0],
+        base_fifo + min_bram[0],
         d_total,
         b_total
     );
@@ -115,8 +139,8 @@ pub fn solve(design: &mut Design, cfg: &DseConfig) -> Result<DseSolution> {
                 if cy + self.min_cycles[i + 1] >= self.best {
                     break;
                 }
-                let ds = dsp + c.dsp;
-                let br = bram + c.bram;
+                let ds = dsp + c.res.dsp;
+                let br = bram + c.res.bram();
                 if ds + self.min_dsp[i + 1] > self.d_total
                     || br + self.min_bram[i + 1] > self.b_total
                 {
@@ -141,13 +165,15 @@ pub fn solve(design: &mut Design, cfg: &DseConfig) -> Result<DseSolution> {
         pick: Vec::new(),
         explored: 0,
     };
-    s.dfs(0, 0, 0, 0);
+    s.dfs(0, 0, 0, base_fifo);
     ensure!(s.best < u64::MAX, "DSE found no feasible assignment");
 
     let chosen: Vec<Candidate> =
         s.best_pick.iter().enumerate().map(|(i, &k)| cand[i][k]).collect();
-    let dsp_used: u64 = chosen.iter().map(|c| c.dsp).sum();
-    let bram_used: u64 = chosen.iter().map(|c| c.bram).sum();
+    let mut resources = ResourceVec { fifo_bram: base_fifo, ..Default::default() };
+    for c in &chosen {
+        resources += c.res;
+    }
 
     // Apply timing, re-derive buffers, size FIFOs (stream constraint is
     // honoured by construction: one `lanes` per channel).
@@ -156,12 +182,20 @@ pub fn solve(design: &mut Design, cfg: &DseConfig) -> Result<DseSolution> {
     }
     refresh_buffers(design);
     size_fifos(design);
+    // The unified-model invariant: what the solver charged is what the
+    // design allocates — estimate and implementation cannot disagree.
+    debug_assert_eq!(
+        resources,
+        ResourceModel::as_built(design),
+        "solver accounting diverged from the built design"
+    );
 
     Ok(DseSolution {
         objective: s.best,
         chosen,
-        dsp_used,
-        bram_used,
+        dsp_used: resources.dsp,
+        bram_used: resources.bram(),
+        resources,
         nodes_explored: s.explored,
     })
 }
@@ -292,11 +326,57 @@ mod tests {
 
     #[test]
     fn fallback_tiles_when_bram_starved() {
+        // Exact accounting: the cheapest untiled assignment needs 5
+        // blocks (4 line-buffer + 1 weight ROM), so a 4-block budget is
+        // infeasible flat but solvable with half-width strips.
         let g = models::conv_relu(80, 32, 8);
-        let cfg = DseConfig::new(DeviceSpec::kv260().with_bram_limit(11));
+        let cfg = DseConfig::new(DeviceSpec::kv260().with_bram_limit(4));
         match solve_with_tiling_fallback(&g, &cfg).unwrap() {
             Compiled::Tiled(tc) => assert!(tc.plan.tiles.len() >= 2),
             Compiled::Flat(..) => panic!("BRAM-starved workload must tile"),
+        }
+    }
+
+    #[test]
+    fn rom_dominated_linear_no_longer_slips_past_the_budget() {
+        // Regression for the estimate-vs-solve divergence: a weight-heavy
+        // linear layer whose line buffer is tiny (1 block) but whose
+        // weight ROM needs 8 blocks at low unroll. A DSP cap keeps the
+        // solver below 32 lanes so the ROM cannot escape to LUTRAM. With
+        // line-buffer-only accounting this "solved" flat and busted BRAM
+        // in codegen; the unified model reports it infeasible (and the
+        // rank-2 graph has no width axis, so the tiling fallback fails
+        // loudly instead of mis-compiling).
+        let g = models::linear();
+        let dev = DeviceSpec::kv260().with_dsp_limit(8).with_bram_limit(8);
+        let mut d = build_streaming_design(&g).unwrap();
+        let err = solve(&mut d, &DseConfig::new(dev.clone())).unwrap_err();
+        assert!(format!("{err:#}").contains("feasible"), "{err:#}");
+        let err = solve_with_tiling_fallback(&g, &DseConfig::new(dev)).unwrap_err();
+        assert!(format!("{err:#}").contains("fallback"), "{err:#}");
+
+        // With a budget that admits the ROM, the flat solve succeeds and
+        // the reported usage covers it exactly.
+        let dev = DeviceSpec::kv260().with_dsp_limit(8).with_bram_limit(40);
+        let mut d = build_streaming_design(&g).unwrap();
+        let sol = solve(&mut d, &DseConfig::new(dev.clone())).unwrap();
+        assert_eq!(sol.bram_used, crate::resources::bram::design_bram(&d));
+        assert!(sol.resources.weight_bram > 0, "ROM must be charged");
+        assert!(estimate(&d, &dev).fits());
+    }
+
+    #[test]
+    fn solver_bram_equals_design_bram_for_paper_kernels() {
+        // The unified-model invariant, end to end: the ILP's reported
+        // bram_used is the design_bram of the emitted design.
+        for (name, size) in models::table2_workloads() {
+            let (d, sol) = solve_kernel(name, size.max(32), DeviceSpec::kv260());
+            assert_eq!(
+                sol.bram_used,
+                crate::resources::bram::design_bram(&d),
+                "{name}@{size}"
+            );
+            assert_eq!(sol.dsp_used, crate::resources::dsp::design_dsp(&d), "{name}@{size}");
         }
     }
 

@@ -1,11 +1,8 @@
 //! Candidate enumeration over divisor lattices.
 
-use crate::analysis::classify::KernelClass;
 use crate::dataflow::design::Design;
 use crate::dataflow::node::NodeTiming;
-use crate::ir::types::DType;
-use crate::resources::bram::bram_blocks;
-use crate::resources::dsp::dsp_for_macs;
+use crate::resources::model::{ResourceModel, ResourceVec};
 
 /// All positive divisors of `n`, ascending.
 pub fn divisors(n: u64) -> Vec<u64> {
@@ -43,90 +40,73 @@ pub struct Candidate {
     pub timing: NodeTiming,
     /// Standalone cycle estimate with this timing (ILP objective term).
     pub cycles: u64,
-    /// DSPs this candidate consumes.
-    pub dsp: u64,
-    /// BRAM blocks attributable to this node's partitioned buffers.
-    pub bram: u64,
+    /// Full resource vector this candidate consumes: line-buffer BRAM,
+    /// weight-ROM BRAM, output-FIFO BRAM at the depths the sizing pass
+    /// will assign for this timing, and DSPs — priced by the unified
+    /// [`ResourceModel`], so the solver's accounting equals the built
+    /// design's by construction.
+    pub res: ResourceVec,
 }
 
-/// Enumerate candidates for node `nid` of `d`, cheapest-cycles first.
+/// All unroll timings on node `nid`'s divisor lattice, unpriced.
 ///
 /// * MAC nodes (conv / matmul): `u_par | out_features`, `u_red | red_trip`;
 ///   pipeline depth grows with the log of the adder tree.
-/// * Pure-parallel nodes: fixed full-token-width ALU (no DSPs), II = 1 —
-///   they are never the bottleneck and need no exploration.
-pub fn candidates(d: &Design, nid: usize) -> Vec<Candidate> {
+/// * Zero-MAC nodes (elementwise, pooling): fixed full-token-width ALU
+///   (no DSPs), II = 1 — never the bottleneck, so a single timing.
+///
+/// Shared by [`candidates_with`] (which prices each timing into a full
+/// [`Candidate`]) and the tiling lower bound
+/// (`crate::tiling::cost::strip_bram_lower_bound`, which prices the
+/// same lattice at strip width without paying for the full-width
+/// vectors or the cycle sort).
+pub fn unroll_timings(d: &Design, nid: usize) -> Vec<NodeTiming> {
     let n = &d.nodes[nid];
-    let op = &d.graph.ops[n.op_index];
     if n.geo.macs_per_out_token == 0 {
         let lanes = n.geo.out_token_len as u64;
-        let timing = NodeTiming {
-            mac_lanes: lanes,
-            ii: 1,
-            depth: 2,
-            unroll_par: lanes,
-            unroll_red: 1,
-        };
-        let mut node = n.clone();
-        node.timing = timing;
-        return vec![Candidate {
-            unroll_par: lanes,
-            unroll_red: 1,
-            timing,
-            cycles: node.standalone_cycles(),
-            dsp: 0,
-            bram: 0,
-        }];
+        return vec![NodeTiming { mac_lanes: lanes, ii: 1, depth: 2, unroll_par: lanes, unroll_red: 1 }];
     }
-
+    let op = &d.graph.ops[n.op_index];
     let par_trip = n.geo.out_token_len as u64;
     let red_trip = op.reduction_space().max(1);
-    let elem_bits = d.graph.tensor(op.inputs[0]).ty.dtype.bits();
-    // channel-dim bound for line-buffer partitioning (conv) — see
-    // dataflow::build::refresh_buffers
-    let chan_bound = *d.graph.tensor(op.inputs[0]).ty.shape.last().unwrap_or(&1) as u64;
-
     let mut out = Vec::new();
     for &up in &divisors(par_trip) {
         for &ur in &divisors(red_trip) {
             let lanes = up * ur;
             let depth = 4 + (64 - (lanes.max(1)).leading_zeros() as u64); // log2 adder tree
-            let timing = NodeTiming {
-                mac_lanes: lanes,
-                ii: 1,
-                depth,
-                unroll_par: up,
-                unroll_red: ur,
-            };
-            let mut node = n.clone();
-            node.timing = timing;
-            let cycles = node.standalone_cycles();
-            let dsp = dsp_for_macs(lanes, DType::I8);
-            // BRAM contribution: partitioned line buffers only
-            let bram = match n.geo.class {
-                KernelClass::SlidingWindow(_) => {
-                    if let Some(lb) = n.geo.line_buffer {
-                        let part = ur.clamp(1, chan_bound);
-                        lb.rows as u64 * bram_blocks(lb.row_len as u64 * elem_bits, part)
-                    } else {
-                        0
-                    }
-                }
-                KernelClass::RegularReduction => {
-                    if let Some(lb) = n.geo.line_buffer {
-                        let part = ur.clamp(1, lb.row_len as u64);
-                        bram_blocks(lb.total_bits(), part)
-                    } else {
-                        0
-                    }
-                }
-                KernelClass::PureParallel => 0,
-            };
-            out.push(Candidate { unroll_par: up, unroll_red: ur, timing, cycles, dsp, bram });
+            out.push(NodeTiming { mac_lanes: lanes, ii: 1, depth, unroll_par: up, unroll_red: ur });
         }
     }
-    out.sort_by_key(|c| (c.cycles, c.dsp, c.bram));
     out
+}
+
+/// Enumerate candidates for node `nid` of `d`, cheapest-cycles first,
+/// pricing each timing with the caller's [`ResourceModel`] — build the
+/// model once per design and reuse it across nodes (as `dse::ilp::solve`
+/// does) instead of re-deriving the diamond floors per node.
+pub fn candidates_with(model: &ResourceModel, d: &Design, nid: usize) -> Vec<Candidate> {
+    let n = &d.nodes[nid];
+    let mut out: Vec<Candidate> = unroll_timings(d, nid)
+        .into_iter()
+        .map(|timing| {
+            let mut node = n.clone();
+            node.timing = timing;
+            Candidate {
+                unroll_par: timing.unroll_par,
+                unroll_red: timing.unroll_red,
+                timing,
+                cycles: node.standalone_cycles(),
+                res: model.node_vec(nid, &timing),
+            }
+        })
+        .collect();
+    out.sort_by_key(|c| (c.cycles, c.res.dsp, c.res.bram()));
+    out
+}
+
+/// Convenience wrapper over [`candidates_with`] for one-off callers.
+pub fn candidates(d: &Design, nid: usize) -> Vec<Candidate> {
+    candidates_with(&ResourceModel::new(d), d, nid)
 }
 
 #[cfg(test)]
@@ -163,7 +143,7 @@ mod tests {
         // full unroll exists and is fastest
         assert_eq!(cands[0].unroll_par, 8);
         assert_eq!(cands[0].unroll_red, 72);
-        assert_eq!(cands[0].dsp, 288);
+        assert_eq!(cands[0].res.dsp, 288);
     }
 
     #[test]
@@ -172,7 +152,7 @@ mod tests {
         let d = build_streaming_design(&g).unwrap();
         let cands = candidates(&d, 1);
         assert_eq!(cands.len(), 1);
-        assert_eq!(cands[0].dsp, 0);
+        assert_eq!(cands[0].res.dsp, 0);
     }
 
     #[test]
@@ -222,8 +202,8 @@ mod tests {
             if n.geo.macs_per_out_token == 0 {
                 let cands = candidates(&d, nid);
                 assert_eq!(cands.len(), 1, "node {}", n.name);
-                assert_eq!(cands[0].dsp, 0);
-                assert_eq!(cands[0].bram, 0);
+                assert_eq!(cands[0].res.dsp, 0);
+                assert_eq!(cands[0].res.bram(), 0);
                 assert_eq!(cands[0].timing.ii, 1);
             }
         }
@@ -267,7 +247,7 @@ mod tests {
         let scalar = cands.iter().find(|c| c.unroll_par == 1 && c.unroll_red == 1).unwrap();
         let full = cands.iter().find(|c| c.unroll_par == 128 && c.unroll_red == 128).unwrap();
         assert!(full.cycles < scalar.cycles);
-        assert!(full.dsp > scalar.dsp);
-        assert!(full.bram >= scalar.bram);
+        assert!(full.res.dsp > scalar.res.dsp);
+        assert!(full.res.bram() >= scalar.res.bram());
     }
 }

@@ -160,7 +160,7 @@ struct Parser<'a> {
     i: usize,
 }
 
-impl<'a> Parser<'a> {
+impl Parser<'_> {
     fn ws(&mut self) {
         while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
             self.i += 1;
@@ -316,6 +316,35 @@ impl<'a> Parser<'a> {
     }
 }
 
+/// Optional per-layer weight metadata emitted by the Python front-end
+/// (`compile/model.py::json_model`): `weight_elems` (element count) and
+/// `weight_bits` (bits per element). The importer derives the actual
+/// weight tensor from the layer geometry + seed, so the metadata ships
+/// no tensor data — it lets external tooling (and the unified resource
+/// model's ROM accounting) price weight storage without materializing
+/// weights, and is validated here against the derived shape so the two
+/// descriptions cannot drift apart.
+fn check_weight_meta(layer: &Json, li: usize, elems: u64, dtype: DType) -> Result<()> {
+    if let Some(v) = layer.as_obj()?.get("weight_elems") {
+        let got = v.as_usize()? as u64;
+        ensure!(
+            got == elems,
+            "layer {li}: weight_elems {got} does not match the derived weight \
+             shape ({elems} elements)"
+        );
+    }
+    if let Some(v) = layer.as_obj()?.get("weight_bits") {
+        let got = v.as_usize()? as u64;
+        ensure!(
+            got == dtype.bits(),
+            "layer {li}: weight_bits {got} does not match dtype {} ({} bits)",
+            dtype.name(),
+            dtype.bits()
+        );
+    }
+    Ok(())
+}
+
 /// Import a layered model description into a `ModelGraph`.
 pub fn import_model(text: &str) -> Result<ModelGraph> {
     let doc = parse(text)?;
@@ -370,6 +399,7 @@ pub fn import_model(text: &str) -> Result<ModelGraph> {
                 let stride = layer.get_or("stride", &Json::Num(1.0)).as_usize()?;
                 let pad = layer.get_or("pad", &Json::Num((k / 2) as f64)).as_usize()?;
                 let c = cur_shape[2];
+                check_weight_meta(layer, li, (f * k * k * c) as u64, DType::I8)?;
                 let w = b.det_weight(&format!("w{li}"), vec![f, k, k, c], seed);
                 let acc = b.conv2d(&format!("conv{li}"), cur, w, stride, pad);
                 let act = layer.get_or("activation", &relu_default).as_str()?;
@@ -398,6 +428,7 @@ pub fn import_model(text: &str) -> Result<ModelGraph> {
             "linear" => {
                 ensure!(cur_shape.len() == 2, "linear needs (M,K) input at layer {li}");
                 let n = layer.get("features")?.as_usize()?;
+                check_weight_meta(layer, li, (cur_shape[1] * n) as u64, DType::I8)?;
                 let w = b.det_weight(&format!("w{li}"), vec![cur_shape[1], n], seed);
                 let acc = b.linear(&format!("mm{li}"), cur, w);
                 let act = layer.get_or("activation", &relu_default).as_str()?;
@@ -510,6 +541,48 @@ mod tests {
         )
         .unwrap_err();
         assert!(err.to_string().contains("width"));
+    }
+
+    #[test]
+    fn import_weight_metadata_roundtrip() {
+        // weight_elems / weight_bits ride along without shipping weight
+        // data; the importer validates them against the derived shapes.
+        let src = r#"{
+          "name": "meta",
+          "input": {"shape": [16, 16, 4], "dtype": "i8"},
+          "layers": [
+            {"op": "conv2d", "filters": 8, "kernel": 3, "seed": 101,
+             "weight_elems": 288, "weight_bits": 8}
+          ]
+        }"#;
+        let g = import_model(src).unwrap();
+        let w = &g.weights()[0];
+        assert_eq!(w.ty.numel(), 288, "8 filters x 3x3x4");
+        assert_eq!(w.ty.dtype.bits(), 8);
+        // survives a parse -> render -> parse round trip bit-exactly
+        let doc = parse(src).unwrap();
+        let again = parse(&doc.render()).unwrap();
+        assert_eq!(doc, again);
+        import_model(&doc.render()).unwrap();
+    }
+
+    #[test]
+    fn import_rejects_mismatched_weight_metadata() {
+        for (key, val) in [("weight_elems", 999), ("weight_bits", 16)] {
+            let src = format!(
+                r#"{{"name":"x","input":{{"shape":[16,16,4]}},
+                    "layers":[{{"op":"conv2d","filters":8,"{key}":{val}}}]}}"#
+            );
+            let err = import_model(&src).unwrap_err();
+            assert!(err.to_string().contains(key), "{key}: {err}");
+        }
+        // mismatch on linear layers too
+        let err = import_model(
+            r#"{"name":"x","input":{"shape":[64,32]},
+                "layers":[{"op":"linear","features":16,"weight_elems":1}]}"#,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("weight_elems"), "{err}");
     }
 
     #[test]

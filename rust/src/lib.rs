@@ -13,7 +13,10 @@
 //!   FIFO channels, line buffers, window buffers; no intermediate tensors.
 //! * **`resources`** — the hardware model: BRAM18K packing, DSP-per-MAC for
 //!   integer arithmetic, LUT/LUTRAM/FF fabric estimation, device database
-//!   (Kria KV260 et al.).
+//!   (Kria KV260 et al.), and the unified per-candidate resource model
+//!   (line-buffer + weight-ROM + FIFO BRAM) shared by the DSE, the tiling
+//!   subsystem, reports and codegen — solver accounting equals built-design
+//!   accounting by construction.
 //! * **`dse`** — the lightweight ILP of paper Eq. (1): minimize Σ cycles
 //!   subject to unroll|trip, DSP, BRAM and stream-matching constraints,
 //!   solved exactly by branch-and-bound over divisor lattices; FIFO depth
@@ -67,6 +70,7 @@ pub mod prelude {
     pub use crate::ir::builder::{models, GraphBuilder};
     pub use crate::ir::graph::ModelGraph;
     pub use crate::resources::device::DeviceSpec;
+    pub use crate::resources::model::{ResourceModel, ResourceVec};
     pub use crate::resources::report::UtilizationReport;
     pub use crate::sim::engine::{SimMode, SimReport};
     pub use crate::tiling::{compile_tiled, simulate_tiled, TiledCompilation, TilePlan};

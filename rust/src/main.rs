@@ -58,6 +58,15 @@ impl Args {
     }
 
     fn device(&self) -> Result<DeviceSpec> {
+        if self.flags.contains_key("bram-reserve") {
+            // Kept as a no-op so existing invocations don't break: the
+            // unified resource model prices weight-ROM and FIFO BRAM
+            // exactly, so nothing needs to be held back any more.
+            eprintln!(
+                "warning: --bram-reserve is deprecated and ignored (the resource \
+                 model accounts FIFO/ROM BRAM exactly)"
+            );
+        }
         let name = self.get("device", "kv260");
         let mut dev =
             DeviceSpec::by_name(&name).with_context(|| format!("unknown device {name:?}"))?;
@@ -285,6 +294,8 @@ fn cmd_table4(a: &Args) -> Result<()> {
                 framework: FrameworkKind::Ming,
                 mcycles: rep.cycles as f64 / 1e6,
                 bram: r.bram18k,
+                bram_rom: r.bram_weights,
+                bram_fifo: r.bram_fifos,
                 dsp: r.dsp,
                 lut_pct: r.lut_pct(),
                 lutram_pct: r.lutram_pct(),
@@ -386,7 +397,9 @@ fn help() {
          \x20 import    --model m.json [--emit f.cpp]\n\n\
          kernels: conv_relu cascade residual linear feedforward vgg3\n\
          frameworks: vanilla scalehls streamhls ming\n\
-         devices: kv260 zcu104 u250  (+ --dsp-limit N, --bram-limit N, --max-bram-frac F)"
+         devices: kv260 zcu104 u250  (+ --dsp-limit N, --bram-limit N, --max-bram-frac F)\n\
+         \x20 (--bram-reserve N is deprecated and ignored: the unified resource model\n\
+         \x20  prices line-buffer, weight-ROM and FIFO BRAM exactly)"
     );
 }
 

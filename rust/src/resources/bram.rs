@@ -34,21 +34,27 @@ pub fn buffer_bram(b: &BufferAlloc) -> u64 {
     }
 }
 
-/// RAM18K cost of a FIFO channel: shallow FIFOs are SRLs (0 BRAM),
-/// deep ones are packed into BRAM at their element width.
-pub fn channel_bram(c: &Channel) -> u64 {
+/// RAM18K cost of a FIFO channel at a hypothetical `depth` (the unified
+/// resource model prices candidate depths before they are committed).
+pub fn channel_bram_at_depth(c: &Channel, depth: usize) -> u64 {
     if c.externally_buffered {
         return 0; // storage accounted by explicit BufferAllocs
     }
     // a `lanes`-wide stream is `lanes` physical FIFOs, each holding
     // depth × token_len / lanes elements
     let lanes = c.lanes.max(1) as u64;
-    let per_lane = c.depth as u64 * c.token_len as u64 / lanes;
+    let per_lane = depth as u64 * c.token_len as u64 / lanes;
     if per_lane <= FIFO_SRL_MAX_DEPTH {
         0
     } else {
         lanes * (per_lane * c.elem_bits).div_ceil(RAM18K_BITS)
     }
+}
+
+/// RAM18K cost of a FIFO channel: shallow FIFOs are SRLs (0 BRAM),
+/// deep ones are packed into BRAM at their element width.
+pub fn channel_bram(c: &Channel) -> u64 {
+    channel_bram_at_depth(c, c.depth)
 }
 
 /// Total design BRAM: buffers + deep FIFOs.

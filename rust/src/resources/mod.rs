@@ -7,13 +7,18 @@
 //! [`bram`] packs arrays into RAM18K slices respecting ARRAY_PARTITION,
 //! [`dsp`] counts DSP48E2 blocks per integer MAC lane (two int8 MACs per
 //! DSP via INT8 packing), [`fabric`] regresses LUT/LUTRAM/FF from node
-//! structure, and [`report`] aggregates + checks device constraints.
+//! structure, [`model`] is the unified per-candidate/per-design resource
+//! vector (line-buffer + weight-ROM + FIFO BRAM, DSP) shared by the DSE,
+//! the tiling subsystem, reports and codegen, and [`report`] aggregates
+//! + checks device constraints.
 
 pub mod device;
 pub mod bram;
 pub mod dsp;
 pub mod fabric;
+pub mod model;
 pub mod report;
 
 pub use device::DeviceSpec;
+pub use model::{ResourceModel, ResourceVec};
 pub use report::{estimate, UtilizationReport};

@@ -1,0 +1,450 @@
+//! The unified resource model: **one** computation of the full
+//! per-design / per-candidate resource vector, shared by every consumer.
+//!
+//! MING's core claim is that generated designs *respect edge resource
+//! constraints* — which only holds if the solver prices exactly what the
+//! generated design allocates. Historically the DSE counted line-buffer
+//! BRAM only: weight ROMs were baked into codegen without being charged,
+//! and FIFO backing was approximated by a flat reserve. This module
+//! closes that estimate-vs-implementation gap (the failure mode the
+//! toolflow surveys attribute to estimate/implementation divergence):
+//!
+//! * [`ResourceVec`] — the full vector: line-buffer BRAM, weight-ROM
+//!   BRAM, FIFO BRAM, other (baseline-only) BRAM, and DSP.
+//! * [`ResourceModel::node_vec`] — the vector one node contributes under
+//!   a candidate [`NodeTiming`], *including* the FIFO blocks of its
+//!   output channels at the depths `dse::fifo::size_fifos` will assign
+//!   for that timing. Contributions are separable per node (each
+//!   channel's depth depends only on its producer's pipeline depth plus
+//!   a timing-independent diamond floor), so the branch-and-bound can
+//!   price FIFO deltas exactly and incrementally per partial assignment.
+//! * [`ResourceModel::as_built`] — the same vector read back from a
+//!   finished design's concrete allocations (buffers + channels).
+//!
+//! **Invariant** (enforced by tests and a debug assertion in
+//! `dse::ilp::solve`): for every solved design, the summed candidate
+//! vectors equal the as-built vector, i.e.
+//! `solution.bram_used == resources::bram::design_bram(design)`.
+//!
+//! Consumers: `dse::space` (candidate enumeration), `dse::ilp` (ILP
+//! constraint + reported usage), `tiling::cost` (strip lower bounds),
+//! `tiling::schedule` (budget math), `resources::report` /
+//! `coordinator::report` (utilization breakdown columns), and
+//! `codegen` (BIND_STORAGE / ARRAY_PARTITION pragmas derived from the
+//! same storage decisions via `dataflow::build::refresh_buffers`).
+
+use std::ops::{Add, AddAssign};
+
+use crate::analysis::classify::KernelClass;
+use crate::dataflow::buffers::{BufferRole, Storage};
+use crate::dataflow::channel::Endpoint;
+use crate::dataflow::design::Design;
+use crate::dataflow::node::NodeTiming;
+use crate::dse::fifo::{diamond_mins, planned_depth};
+use crate::ir::graph::TensorKind;
+use crate::ir::types::DType;
+
+use super::bram::{bram_blocks, buffer_bram, channel_bram, channel_bram_at_depth};
+use super::dsp::{design_dsp, dsp_for_macs};
+
+/// Weight ROM slices smaller than this many bits are placed in LUTRAM by
+/// the tool (register-tiny BRAM slices would waste whole RAM18Ks).
+pub const WEIGHT_LUTRAM_SLICE_BITS: u64 = 1024;
+/// At or beyond this many MAC lanes the weight array is partitioned so
+/// finely that Vitis places it in distributed LUTRAM regardless of size.
+pub const WEIGHT_LUTRAM_LANES: u64 = 32;
+
+/// Storage binding of a weight ROM accessed by `lanes` parallel MACs —
+/// the single policy shared by `dataflow::build::refresh_buffers` (and
+/// therefore by codegen's BIND_STORAGE pragmas) and the DSE's pricing.
+pub fn weight_storage(bits: u64, lanes: u64) -> Storage {
+    if bits / lanes.max(1) < WEIGHT_LUTRAM_SLICE_BITS || lanes >= WEIGHT_LUTRAM_LANES {
+        Storage::Lutram
+    } else {
+        Storage::Rom
+    }
+}
+
+/// ARRAY_PARTITION factor of a weight ROM: one slice per MAC lane,
+/// capped at the element count.
+pub fn weight_partitions(numel: u64, lanes: u64) -> u64 {
+    lanes.max(1).min(numel.max(1))
+}
+
+/// RAM18K blocks of one weight tensor (`bits` total, `numel` elements)
+/// read by `lanes` parallel MACs. Zero when the ROM lands in LUTRAM.
+pub fn weight_rom_bram(bits: u64, numel: u64, lanes: u64) -> u64 {
+    match weight_storage(bits, lanes) {
+        Storage::Rom => bram_blocks(bits, weight_partitions(numel, lanes)),
+        _ => 0,
+    }
+}
+
+/// The full resource vector of a design (or one node's contribution).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ResourceVec {
+    /// Line-buffer / reduction-line BRAM blocks.
+    pub line_bram: u64,
+    /// Weight-ROM BRAM blocks (0 for LUTRAM-bound ROMs).
+    pub weight_bram: u64,
+    /// FIFO backing BRAM blocks (channels + explicit FifoBacking arrays).
+    pub fifo_bram: u64,
+    /// BRAM of baseline-only structures (whole intermediate tensors,
+    /// reorder buffers). Always 0 for MING streaming designs.
+    pub other_bram: u64,
+    /// DSP48 blocks.
+    pub dsp: u64,
+}
+
+impl ResourceVec {
+    /// Total BRAM18K blocks — the number the device constraint sees.
+    pub fn bram(&self) -> u64 {
+        self.line_bram + self.weight_bram + self.fifo_bram + self.other_bram
+    }
+
+    /// Component-wise `<=` (used by the monotonicity properties).
+    pub fn le(&self, o: &ResourceVec) -> bool {
+        self.line_bram <= o.line_bram
+            && self.weight_bram <= o.weight_bram
+            && self.fifo_bram <= o.fifo_bram
+            && self.other_bram <= o.other_bram
+            && self.dsp <= o.dsp
+    }
+}
+
+impl Add for ResourceVec {
+    type Output = ResourceVec;
+    fn add(self, o: ResourceVec) -> ResourceVec {
+        ResourceVec {
+            line_bram: self.line_bram + o.line_bram,
+            weight_bram: self.weight_bram + o.weight_bram,
+            fifo_bram: self.fifo_bram + o.fifo_bram,
+            other_bram: self.other_bram + o.other_bram,
+            dsp: self.dsp + o.dsp,
+        }
+    }
+}
+
+impl AddAssign for ResourceVec {
+    fn add_assign(&mut self, o: ResourceVec) {
+        *self = *self + o;
+    }
+}
+
+/// Prices candidate timings against one design's streaming structure.
+pub struct ResourceModel<'a> {
+    d: &'a Design,
+    /// Timing-independent diamond depth floors per channel.
+    diamond_min: Vec<usize>,
+}
+
+impl<'a> ResourceModel<'a> {
+    pub fn new(d: &'a Design) -> Self {
+        Self { diamond_min: diamond_mins(d), d }
+    }
+
+    /// Line-buffer / reduction-line BRAM of node `nid` under `timing`,
+    /// optionally rescaled to a `(full_width, strip_width)` pair for the
+    /// tiling subsystem's per-strip accounting.
+    fn storage_bram(&self, nid: usize, timing: &NodeTiming, rescale: Option<(usize, usize)>) -> u64 {
+        let n = &self.d.nodes[nid];
+        let op = &self.d.graph.ops[n.op_index];
+        match n.geo.class {
+            KernelClass::SlidingWindow(_) => match n.geo.line_buffer {
+                Some(lb) => {
+                    let lb = match rescale {
+                        Some((old_w, new_w)) => lb.at_width(old_w, new_w),
+                        None => lb,
+                    };
+                    let chans =
+                        *self.d.graph.tensor(op.inputs[0]).ty.shape.last().unwrap_or(&1) as u64;
+                    let part = timing.unroll_red.clamp(1, chans);
+                    lb.rows as u64 * bram_blocks(lb.row_len as u64 * lb.elem_bits, part)
+                }
+                None => 0,
+            },
+            KernelClass::RegularReduction => match n.geo.line_buffer {
+                Some(lb) => {
+                    let part = timing.unroll_red.clamp(1, lb.row_len as u64);
+                    bram_blocks(lb.total_bits(), part)
+                }
+                None => 0,
+            },
+            KernelClass::PureParallel => 0,
+        }
+    }
+
+    /// Weight-ROM BRAM of node `nid` when its MACs run `lanes` wide.
+    fn node_weight_bram(&self, nid: usize, timing: &NodeTiming) -> u64 {
+        let n = &self.d.nodes[nid];
+        let op = &self.d.graph.ops[n.op_index];
+        op.inputs
+            .iter()
+            .map(|&inp| {
+                let t = self.d.graph.tensor(inp);
+                if t.kind == TensorKind::Weight {
+                    weight_rom_bram(t.ty.bits(), t.ty.numel() as u64, timing.mac_lanes.max(1))
+                } else {
+                    0
+                }
+            })
+            .sum()
+    }
+
+    /// FIFO BRAM of node `nid`'s output channels at the depths
+    /// `size_fifos` will assign for `timing`. With `diamond` false the
+    /// timing-independent diamond floors are dropped — an admissible
+    /// relaxation for strip lower bounds, where lags shrink with width.
+    fn node_fifo_bram(&self, nid: usize, timing: &NodeTiming, diamond: bool) -> u64 {
+        self.d.nodes[nid]
+            .out_channels
+            .iter()
+            .map(|&cid| {
+                let floor = if diamond { self.diamond_min[cid.0] } else { 0 };
+                let c = self.d.channel(cid);
+                channel_bram_at_depth(c, planned_depth(Some(timing.depth), floor))
+            })
+            .sum()
+    }
+
+    /// The full vector node `nid` contributes under `timing`: line
+    /// buffers, weight ROMs, output-FIFO backing, and DSPs.
+    pub fn node_vec(&self, nid: usize, timing: &NodeTiming) -> ResourceVec {
+        ResourceVec {
+            line_bram: self.storage_bram(nid, timing, None),
+            weight_bram: self.node_weight_bram(nid, timing),
+            fifo_bram: self.node_fifo_bram(nid, timing, true),
+            other_bram: 0,
+            dsp: self.node_dsp(nid, timing),
+        }
+    }
+
+    /// Lower-bound vector for running node `nid` on a width-`w_local`
+    /// strip of a `full_w`-wide feature map: line buffers rescale with
+    /// the strip width, weight ROMs and FIFO base depths do not, and the
+    /// diamond floors (which shrink with width) are dropped. Admissible:
+    /// never exceeds the node's contribution in the rebuilt strip design
+    /// under the same timing.
+    pub fn node_vec_at_width(
+        &self,
+        nid: usize,
+        timing: &NodeTiming,
+        full_w: usize,
+        w_local: usize,
+    ) -> ResourceVec {
+        ResourceVec {
+            line_bram: self.storage_bram(nid, timing, Some((full_w, w_local))),
+            weight_bram: self.node_weight_bram(nid, timing),
+            fifo_bram: self.node_fifo_bram(nid, timing, false),
+            other_bram: 0,
+            dsp: self.node_dsp(nid, timing),
+        }
+    }
+
+    fn node_dsp(&self, nid: usize, timing: &NodeTiming) -> u64 {
+        if self.d.nodes[nid].geo.macs_per_out_token == 0 {
+            0
+        } else {
+            dsp_for_macs(timing.mac_lanes, DType::I8)
+        }
+    }
+
+    /// FIFO BRAM of channels fed by the graph input — candidate-
+    /// independent, charged once up front by the solver.
+    pub fn input_fifo_bram(&self) -> u64 {
+        self.d
+            .channels
+            .iter()
+            .filter(|c| !matches!(c.src, Endpoint::Node(_)))
+            .map(|c| channel_bram_at_depth(c, planned_depth(None, self.diamond_min[c.id.0])))
+            .sum()
+    }
+
+    /// Like [`Self::input_fifo_bram`] but without the diamond floors —
+    /// the admissible variant for strip lower bounds.
+    pub fn input_fifo_floor(&self) -> u64 {
+        self.d
+            .channels
+            .iter()
+            .filter(|c| !matches!(c.src, Endpoint::Node(_)))
+            .map(|c| channel_bram_at_depth(c, planned_depth(None, 0)))
+            .sum()
+    }
+
+    /// The predicted full-design vector under the nodes' *current*
+    /// timings. After `refresh_buffers` + `size_fifos` this equals
+    /// [`ResourceModel::as_built`] exactly (see the invariant tests).
+    pub fn design_vec(&self) -> ResourceVec {
+        let mut v = ResourceVec { fifo_bram: self.input_fifo_bram(), ..Default::default() };
+        for (nid, n) in self.d.nodes.iter().enumerate() {
+            v += self.node_vec(nid, &n.timing);
+        }
+        v
+    }
+
+    /// The as-built vector of any design (MING or baseline), read from
+    /// its concrete buffer allocations and channel depths. The total
+    /// equals [`super::bram::design_bram`] / [`design_dsp`] by
+    /// construction.
+    pub fn as_built(d: &Design) -> ResourceVec {
+        let mut v = ResourceVec::default();
+        for b in &d.buffers {
+            let blocks = buffer_bram(b);
+            match b.role {
+                BufferRole::LineBuffer
+                | BufferRole::ReductionLine
+                | BufferRole::WindowBuffer => v.line_bram += blocks,
+                BufferRole::Weights => v.weight_bram += blocks,
+                BufferRole::FifoBacking => v.fifo_bram += blocks,
+                BufferRole::IntermediateTensor | BufferRole::ReorderBuffer => {
+                    v.other_bram += blocks
+                }
+            }
+        }
+        for c in &d.channels {
+            v.fifo_bram += channel_bram(c);
+        }
+        v.dsp = design_dsp(d);
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::build::{build_streaming_design, refresh_buffers};
+    use crate::dse::fifo::size_fifos;
+    use crate::ir::builder::models;
+    use crate::resources::bram::design_bram;
+    use crate::util::prop::forall;
+
+    /// Predicted-vs-as-built equality on a design in its current state.
+    fn assert_model_exact(d: &Design) {
+        let predicted = ResourceModel::new(d).design_vec();
+        let built = ResourceModel::as_built(d);
+        assert_eq!(predicted, built, "model must price exactly what is allocated");
+        assert_eq!(predicted.bram(), design_bram(d));
+    }
+
+    #[test]
+    fn scalar_designs_price_exactly() {
+        for (name, size) in
+            [("conv_relu", 32), ("cascade", 32), ("residual", 32), ("linear", 0), ("feedforward", 0)]
+        {
+            let g = models::paper_kernel(name, size).unwrap();
+            let mut d = build_streaming_design(&g).unwrap();
+            size_fifos(&mut d);
+            assert_model_exact(&d);
+        }
+    }
+
+    #[test]
+    fn unrolled_design_prices_exactly() {
+        let g = models::conv_relu(32, 8, 8);
+        let mut d = build_streaming_design(&g).unwrap();
+        d.nodes[0].timing.unroll_red = 8;
+        d.nodes[0].timing.mac_lanes = 576;
+        d.nodes[0].timing.depth = 14;
+        refresh_buffers(&mut d);
+        size_fifos(&mut d);
+        assert_model_exact(&d);
+    }
+
+    #[test]
+    fn pooling_line_buffers_are_priced() {
+        // Zero-MAC sliding nodes (maxpool) have line buffers too — the
+        // old candidate accounting missed them entirely.
+        let g = models::tiny_cnn(32, 4, 8);
+        let mut d = build_streaming_design(&g).unwrap();
+        size_fifos(&mut d);
+        assert_model_exact(&d);
+        let m = ResourceModel::new(&d);
+        let pool = d
+            .nodes
+            .iter()
+            .position(|n| n.geo.macs_per_out_token == 0 && n.geo.line_buffer.is_some())
+            .expect("tiny_cnn has pooling nodes");
+        assert!(m.node_vec(pool, &d.nodes[pool].timing).line_bram > 0);
+    }
+
+    #[test]
+    fn weight_storage_policy_thresholds() {
+        // big ROM, scalar access: BRAM; tiny or wide-unrolled: LUTRAM
+        assert_eq!(weight_storage(131_072, 1), Storage::Rom);
+        assert_eq!(weight_storage(131_072, 32), Storage::Lutram);
+        assert_eq!(weight_storage(512, 1), Storage::Lutram);
+        assert_eq!(weight_rom_bram(131_072, 16_384, 1), 8);
+        assert_eq!(weight_rom_bram(131_072, 16_384, 32), 0);
+    }
+
+    #[test]
+    fn weight_rom_bram_monotone_in_bits() {
+        // Adding weight bits never decreases the modeled blocks (at any
+        // fixed lane count) — the ROM-accounting monotonicity guarantee.
+        forall(
+            "weight rom monotone",
+            300,
+            |g| {
+                let lanes = 1 + g.rng.below(64);
+                let e1 = 1 + g.rng.below(1 << 16);
+                let e2 = e1 + g.rng.below(1 << 16);
+                (lanes, e1, e2)
+            },
+            |&(lanes, e1, e2)| {
+                weight_rom_bram(8 * e1, e1, lanes) <= weight_rom_bram(8 * e2, e2, lanes)
+            },
+        );
+    }
+
+    #[test]
+    fn node_vec_monotone_in_weight_bits() {
+        // Same guarantee at the vector level: two linear layers that
+        // differ only in weight-tensor size — the bigger one never
+        // models a smaller vector, at any lane count (including across
+        // the ROM→LUTRAM storage flip).
+        let build = |features: usize| {
+            let mut b = crate::ir::builder::GraphBuilder::new(format!("mono{features}"));
+            let x = b.input("x", vec![16, 128], DType::I8);
+            let w = b.det_weight("w", vec![128, features], 1);
+            let acc = b.linear("mm0", x, w);
+            let y = b.relu_requant("rr0", acc);
+            b.mark_output(y);
+            build_streaming_design(&b.finish()).unwrap()
+        };
+        let (small, big) = (build(8), build(64));
+        let (ms, mb) = (ResourceModel::new(&small), ResourceModel::new(&big));
+        for lanes in [1u64, 2, 8, 16] {
+            let timing =
+                crate::dataflow::node::NodeTiming { mac_lanes: lanes, ..Default::default() };
+            let (vs, vb) = (ms.node_vec(0, &timing), mb.node_vec(0, &timing));
+            assert!(vs.le(&vb), "lanes {lanes}: {vs:?} must be <= {vb:?}");
+        }
+    }
+
+    #[test]
+    fn input_fifo_constant_covers_diamond_skip() {
+        // residual @224: the skip FIFO hangs off the graph input and is
+        // deep enough to need BRAM — the solver's constant term must see
+        // it even though no candidate owns that channel.
+        let g = models::residual(224, 8, 8);
+        let mut d = build_streaming_design(&g).unwrap();
+        size_fifos(&mut d);
+        let m = ResourceModel::new(&d);
+        assert!(m.input_fifo_bram() > 0, "deep skip FIFO must be charged");
+        assert!(m.input_fifo_floor() <= m.input_fifo_bram());
+        assert_model_exact(&d);
+    }
+
+    #[test]
+    fn as_built_totals_match_legacy_estimators() {
+        use crate::baselines::framework::{compile_with, FrameworkKind};
+        use crate::resources::device::DeviceSpec;
+        let g = models::conv_relu(32, 8, 8);
+        for fw in FrameworkKind::all() {
+            let d = compile_with(fw, &g, &DeviceSpec::kv260()).unwrap();
+            let v = ResourceModel::as_built(&d);
+            assert_eq!(v.bram(), design_bram(&d), "{}", fw.name());
+            assert_eq!(v.dsp, design_dsp(&d), "{}", fw.name());
+        }
+    }
+}

@@ -4,15 +4,23 @@ use std::fmt;
 
 use crate::dataflow::design::Design;
 
-use super::bram::design_bram;
 use super::device::DeviceSpec;
-use super::dsp::design_dsp;
 use super::fabric::{design_fabric, Fabric};
+use super::model::ResourceModel;
 
 /// Estimated utilization of one design on one device.
 #[derive(Debug, Clone)]
 pub struct UtilizationReport {
+    /// Total BRAM18K blocks — the sum of the breakdown below.
     pub bram18k: u64,
+    /// Line-buffer / reduction-line blocks.
+    pub bram_line: u64,
+    /// Weight-ROM blocks (0 when ROMs land in LUTRAM).
+    pub bram_weights: u64,
+    /// FIFO backing blocks (deep streams + explicit backing arrays).
+    pub bram_fifos: u64,
+    /// Baseline-only structures (whole tensors, reorder buffers).
+    pub bram_other: u64,
     pub dsp: u64,
     pub lut: u64,
     pub lutram: u64,
@@ -62,9 +70,18 @@ impl fmt::Display for UtilizationReport {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         write!(
             f,
-            "BRAM {}/{}  DSP {}/{}  LUT {:.1}%  LUTRAM {:.1}%  FF {:.1}%{}",
+            "BRAM {}/{} (line {} · rom {} · fifo {}{})  DSP {}/{}  LUT {:.1}%  \
+             LUTRAM {:.1}%  FF {:.1}%{}",
             self.bram18k,
             self.device.bram18k,
+            self.bram_line,
+            self.bram_weights,
+            self.bram_fifos,
+            if self.bram_other > 0 {
+                format!(" · other {}", self.bram_other)
+            } else {
+                String::new()
+            },
             self.dsp,
             self.device.dsp,
             self.lut_pct(),
@@ -75,12 +92,19 @@ impl fmt::Display for UtilizationReport {
     }
 }
 
-/// Estimate a design's utilization on a device.
+/// Estimate a design's utilization on a device. BRAM and DSP come from
+/// the unified resource model's as-built vector, so the report's totals
+/// are the same numbers the DSE charged and codegen allocates.
 pub fn estimate(d: &Design, device: &DeviceSpec) -> UtilizationReport {
     let Fabric { lut, lutram, ff } = design_fabric(d);
+    let v = ResourceModel::as_built(d);
     UtilizationReport {
-        bram18k: design_bram(d),
-        dsp: design_dsp(d),
+        bram18k: v.bram(),
+        bram_line: v.line_bram,
+        bram_weights: v.weight_bram,
+        bram_fifos: v.fifo_bram,
+        bram_other: v.other_bram,
+        dsp: v.dsp,
         lut,
         lutram,
         ff,
@@ -112,6 +136,20 @@ mod tests {
         let r = estimate(&d, &DeviceSpec::kv260());
         assert!(!r.fits());
         assert!(r.violations().iter().any(|v| v.starts_with("DSP")));
+    }
+
+    #[test]
+    fn breakdown_sums_to_total() {
+        let g = models::conv_relu(32, 8, 8);
+        let d = build_streaming_design(&g).unwrap();
+        let r = estimate(&d, &DeviceSpec::kv260());
+        assert_eq!(
+            r.bram18k,
+            r.bram_line + r.bram_weights + r.bram_fifos + r.bram_other
+        );
+        assert!(r.bram_line > 0, "line buffers must show up");
+        assert!(r.bram_weights > 0, "the scalar conv keeps its ROM in BRAM");
+        assert_eq!(r.bram_other, 0, "MING designs have no whole-tensor buffers");
     }
 
     #[test]

@@ -47,12 +47,17 @@ impl TiledCompilation {
     }
 
     pub fn describe(&self) -> String {
+        let r = &self.solution.resources;
         format!(
-            "{}\nstrip objective {} cycles, {} DSP / {} BRAM (candidate accounting)",
+            "{}\nstrip objective {} cycles, {} DSP / {} BRAM \
+             ({} line + {} rom + {} fifo; unified resource model)",
             self.plan.describe(),
             self.solution.objective,
             self.solution.dsp_used,
-            self.solution.bram_used
+            self.solution.bram_used,
+            r.line_bram,
+            r.weight_bram,
+            r.fifo_bram
         )
     }
 }
@@ -97,7 +102,9 @@ pub fn compile_tiled_from(
 ) -> Result<TiledCompilation> {
     let (_, width) = check_tilable(g)?;
     let halo = graph_halo(g)?;
-    let budget = cfg.device.bram18k.saturating_sub(cfg.bram_reserve);
+    // The full device budget: the strip lower bound and the strip DSE
+    // charge the same unified resource model (no FIFO reserve fudge).
+    let budget = cfg.device.bram18k;
 
     let mut max_tiles = width as u64;
     let mut candidates: Vec<u64> = Vec::new();
@@ -130,7 +137,9 @@ pub fn compile_tiled_from(
         if local_width >= width {
             continue; // no narrower than the full map — tiling buys nothing
         }
-        // cheap prune: even unpartitioned strip line buffers must fit
+        // cheap prune: the unified-model lower bound (rescaled line
+        // buffers + weight ROMs + FIFO floors, minimized per node over
+        // the unroll lattice) must fit before paying for a strip DSE
         if strip_bram_lower_bound(base, width, local_width) > budget {
             continue;
         }
@@ -255,11 +264,11 @@ mod tests {
 
     #[test]
     fn fallback_rescues_bram_starved_conv() {
-        // Full-width line buffers need 4 BRAM18K minimum (2 rows x 2
-        // blocks); budget 3 after the FIFO reserve => untiled DSE is
-        // infeasible, strips of half the width fit in 2 blocks.
+        // Full-width: the cheapest assignment needs 4 line-buffer blocks
+        // plus 1 weight-ROM block = 5 > 4 => untiled DSE is infeasible;
+        // half-width strips halve the line buffers and fit in 4.
         let g = models::conv_relu(80, 32, 8);
-        let dev = DeviceSpec::kv260().with_bram_limit(11);
+        let dev = DeviceSpec::kv260().with_bram_limit(4);
         let cfg = DseConfig::new(dev.clone());
         let mut flat = build_streaming_design(&g).unwrap();
         assert!(solve(&mut flat, &cfg).is_err(), "untiled must be infeasible");

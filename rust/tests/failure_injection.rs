@@ -80,11 +80,7 @@ fn dse_infeasible_on_starved_devices() {
     assert!(err.contains("infeasible") || err.contains("no feasible"), "got: {err}");
     // near-zero BRAM: the line buffers alone exceed it
     let mut d = build_streaming_design(&g).unwrap();
-    assert!(solve(
-        &mut d,
-        &DseConfig { device: DeviceSpec::kv260().with_bram_limit(1), bram_reserve: 0 }
-    )
-    .is_err());
+    assert!(solve(&mut d, &DseConfig::new(DeviceSpec::kv260().with_bram_limit(1))).is_err());
 }
 
 #[test]

@@ -152,6 +152,87 @@ fn prop_unroll_divides_trip_counts() {
 }
 
 #[test]
+fn prop_solver_bram_is_design_bram() {
+    // The unified-resource-model invariant on random models: the ILP's
+    // reported usage equals the emitted design's accounting, exactly —
+    // estimate and implementation can never disagree.
+    let dev = DeviceSpec::kv260();
+    forall("bram_used == design_bram", 40, random_graph, |g| {
+        let mut d = build_streaming_design(g).unwrap();
+        let sol = solve(&mut d, &DseConfig::new(dev.clone())).unwrap();
+        sol.bram_used == ming::resources::bram::design_bram(&d)
+            && sol.dsp_used == ming::resources::dsp::design_dsp(&d)
+            && sol.resources.bram() == sol.bram_used
+    });
+}
+
+#[test]
+fn prop_paper_kernels_solver_bram_is_design_bram_on_kv260() {
+    // The same invariant pinned on every paper kernel (the acceptance
+    // bar of the unified resource model), plus the tiled oversized
+    // showcase: the strip solution's bram_used is the strip design_bram.
+    use ming::ir::builder::models;
+    let dev = DeviceSpec::kv260();
+    for (name, size) in models::table2_workloads() {
+        let g = models::paper_kernel(name, size.max(32)).unwrap();
+        let mut d = build_streaming_design(&g).unwrap();
+        let sol = solve(&mut d, &DseConfig::new(dev.clone())).unwrap();
+        assert_eq!(
+            sol.bram_used,
+            ming::resources::bram::design_bram(&d),
+            "{name}@{size}: solver and design disagree"
+        );
+    }
+    // tiled vgg3@512 (estimate-only scale): same invariant on the strip
+    let g = models::vgg_block(512, 256, 3);
+    let tc = ming::tiling::compile_tiled(&g, &DseConfig::new(dev.clone())).unwrap();
+    assert_eq!(
+        tc.solution.bram_used,
+        ming::resources::bram::design_bram(&tc.strip),
+        "tiled strip: solver and design disagree"
+    );
+    assert!(tc.solution.bram_used <= dev.bram18k);
+}
+
+#[test]
+fn prop_modeled_vector_monotone_in_weight_bits() {
+    // Adding weight bits never decreases the modeled resource vector:
+    // grow a linear layer's weight tensor and compare the node vectors
+    // under identical timings.
+    use ming::ir::builder::GraphBuilder as GB;
+    use ming::resources::model::ResourceModel;
+    forall(
+        "weight-bit monotonicity",
+        25,
+        |g| {
+            let k = 8 << g.rng.below(3) as usize; // 8/16/32
+            let n1 = 4 << g.rng.below(3) as usize;
+            let n2 = n1 * (1 + g.rng.below(4) as usize); // n2 >= n1
+            (k, n1, n2)
+        },
+        |&(k, n1, n2)| {
+            let build = |n: usize| {
+                let mut b = GB::new(format!("mono{n}"));
+                let x = b.input("x", vec![16, k], DType::I8);
+                let w = b.det_weight("w", vec![k, n], 1);
+                let acc = b.linear("mm0", x, w);
+                let y = b.relu_requant("rr0", acc);
+                b.mark_output(y);
+                let g = b.finish();
+                build_streaming_design(&g).unwrap()
+            };
+            let d1 = build(n1);
+            let d2 = build(n2);
+            let (m1, m2) = (ResourceModel::new(&d1), ResourceModel::new(&d2));
+            // same timing in both designs (scalar defaults)
+            let t = d1.nodes[0].timing;
+            let (v1, v2) = (m1.node_vec(0, &t), m2.node_vec(0, &t));
+            v1.weight_bram <= v2.weight_bram && v1.bram() <= v2.bram()
+        },
+    );
+}
+
+#[test]
 fn prop_simulation_agrees_across_modes_and_unrolls() {
     // Functional output must be invariant to: scheduling mode, and the
     // DSE's unroll decisions. Cycle counts must only improve.
