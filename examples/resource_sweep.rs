@@ -98,16 +98,16 @@ fn main() -> Result<()> {
     }
     let tc = compile_tiled(&g, &cfg)?;
     println!("{}", tc.describe());
-    let r = estimate(&tc.strip, &kv260);
-    println!("strip resources: {r}");
+    let r = estimate(&tc.cell, &kv260);
+    println!("cell resources: {r}");
     assert!(
         r.bram18k <= kv260.bram18k,
-        "tiled strip must fit the stock KV260 BRAM budget"
+        "tiled cell must fit the stock KV260 BRAM budget"
     );
     println!(
-        "estimated tiled latency: {:.2} MCycles across {} strips",
+        "estimated tiled latency: {:.2} MCycles across {} grid cells (gather overlapped)",
         tc.estimated_cycles() as f64 / 1e6,
-        tc.plan.tiles.len()
+        tc.grid.n_cells()
     );
     Ok(())
 }

@@ -64,7 +64,7 @@ def main() -> int:
         "--emit-model-json",
         action="store_true",
         help="also write <key>.model.json (the Rust `ming import` schema, "
-        "with width-tiling metadata and per-layer weight_elems/weight_bits "
+        "with tile-grid metadata and per-layer weight_elems/weight_bits "
         "for ROM accounting) for chain-shaped kernels",
     )
     ap.add_argument(
@@ -72,6 +72,13 @@ def main() -> int:
         type=int,
         default=None,
         help="tile_width hint carried in the emitted model JSON",
+    )
+    ap.add_argument(
+        "--tile-height",
+        type=int,
+        default=None,
+        help="tile_height hint carried in the emitted model JSON "
+        "(upgrades the tiling metadata to the 2-D grid form)",
     )
     args = ap.parse_args()
 
@@ -83,7 +90,11 @@ def main() -> int:
             continue
         if args.emit_model_json:
             try:
-                doc = model.json_model(name, size, tile_width=args.tile_width)
+                doc = model.json_model(
+                    name, size,
+                    tile_width=args.tile_width,
+                    tile_height=args.tile_height,
+                )
             except ValueError:
                 print(f"[aot] no model json for {key} (not chain-shaped)")
             else:

@@ -1,5 +1,5 @@
 """Round-trip tests for the JSON model schema shared with the Rust
-front-end (rust/src/ir/json.rs::import_model), including the width-tiling
+front-end (rust/src/ir/json.rs::import_model), including the tile-grid
 metadata consumed by the halo-aware tiling subsystem (rust/src/tiling/)."""
 
 import json
@@ -77,6 +77,21 @@ def test_tiling_metadata_carried():
     # partial hints keep only the given keys
     doc2 = model.json_model("conv_relu", 512, tile_width=64)
     assert doc2["tiling"] == {"axis": "width", "tile_width": 64}
+
+
+def test_grid_tiling_metadata_carried():
+    # a tile_height upgrades the hint to the 2-D grid form consumed by
+    # the stride-aware tile-grid subsystem
+    doc = model.json_model("conv_relu", 512, tile_width=64, tile_height=128,
+                           max_tiles=32)
+    assert doc["tiling"] == {
+        "axis": "grid", "tile_width": 64, "tile_height": 128, "max_tiles": 32,
+    }
+    again = json.loads(json.dumps(doc))
+    assert again["tiling"] == doc["tiling"]
+    # height-only hints are valid too (row strips)
+    doc2 = model.json_model("tiny_cnn", 32, tile_height=4)
+    assert doc2["tiling"] == {"axis": "grid", "tile_height": 4}
 
 
 def test_weight_seeds_match_rust_prng_contract():

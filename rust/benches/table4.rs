@@ -78,12 +78,12 @@ fn main() {
         ]);
     }
     let tc = compile_tiled(&big, &cfg).unwrap();
-    let r = estimate(&tc.strip, &kv);
-    assert!(r.bram18k <= kv.bram18k, "tiled strip must fit the stock KV260");
+    let r = estimate(&tc.cell, &kv);
+    assert!(r.bram18k <= kv.bram18k, "tiled cell must fit the stock KV260");
     t.row(vec![
         "ming (tiled)".to_string(),
         "yes".to_string(),
-        tc.plan.tiles.len().to_string(),
+        tc.grid.n_cells().to_string(),
         r.bram18k.to_string(),
         r.dsp.to_string(),
         fnum(tc.estimated_cycles() as f64 / 1e6, 2),

@@ -32,11 +32,17 @@ impl LineBufferShape {
         self.rows as u64 * self.row_len as u64 * self.elem_bits
     }
 
-    /// The geometry this line buffer takes on a width-`new_w` strip of a
-    /// feature map that is currently `old_w` columns wide (halo columns
-    /// included in `new_w`). Row storage is `rows × W·C`, so only
-    /// `row_len` rescales — the basis of the tiling subsystem's per-tile
-    /// BRAM accounting (`crate::tiling::cost`).
+    /// The geometry this line buffer takes when its node's input map is
+    /// `new_w` columns wide instead of `old_w` (halo columns included in
+    /// `new_w`). Row storage is `rows × W·C`, so only `row_len` rescales
+    /// — the basis of the tile-grid subsystem's per-cell BRAM accounting
+    /// (`crate::tiling::cost::cell_bram_lower_bound`). For strided
+    /// chains the caller passes each node's *own* local input width
+    /// (from `crate::tiling::local_extents`): downstream of a stride-s
+    /// op the cell width shrinks by `s`, and so does the line buffer.
+    /// Height never enters: row count is `K−1` regardless of how many
+    /// rows a grid cell spans, which is why BRAM-driven grid searches
+    /// prefer width-major splits.
     pub fn at_width(&self, old_w: usize, new_w: usize) -> LineBufferShape {
         let per_col = self.row_len / old_w.max(1);
         LineBufferShape { rows: self.rows, row_len: per_col * new_w, elem_bits: self.elem_bits }

@@ -14,4 +14,4 @@ pub mod emit;
 pub mod testbench;
 
 pub use emit::{emit_design, emit_tiled_design};
-pub use testbench::emit_testbench;
+pub use testbench::{emit_testbench, emit_tiled_testbench};

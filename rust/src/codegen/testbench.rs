@@ -71,6 +71,136 @@ pub fn emit_testbench(d: &Design, input: &[i32], expected: Option<&[i32]>) -> St
     o
 }
 
+fn emit_i32_array(o: &mut String, ty: &str, name: &str, vals: &[i32]) {
+    let _ = write!(o, "static const {ty} {name}[{}] = {{", vals.len());
+    for (i, v) in vals.iter().enumerate() {
+        if i % 24 == 0 {
+            let _ = write!(o, "\n    ");
+        }
+        let _ = write!(o, "{v}, ");
+    }
+    let _ = writeln!(o, "\n}};\n");
+}
+
+/// Emit a testbench for a grid-tiled design (`emit_tiled_design`'s
+/// `*_tiled_top`). Beyond the full-output comparison, the bench checks
+/// every interior halo seam of the grid explicitly: for each boundary
+/// between adjacent cells it sweeps a band of output positions around
+/// the seam — the exact region where inward-shifted windows, crop
+/// offsets, or stride misalignment would corrupt values first — and
+/// reports per-boundary mismatch counts before the global verdict.
+///
+/// `expected` must come from an oracle *independent of the grid plan*
+/// (the untiled design's simulation, or the JAX/Pallas golden model) —
+/// a tiled-simulation output would track the same `Seg` tables the
+/// emitted HLS uses and mask planner bugs. The CLI's `--emit-tb` path
+/// simulates the untiled design for exactly this reason.
+pub fn emit_tiled_testbench(
+    tc: &crate::tiling::TiledCompilation,
+    input: &[i32],
+    expected: &[i32],
+) -> String {
+    let g = &tc.graph;
+    let grid = &tc.grid;
+    let in_ty = g.inputs()[0].ty.dtype.cpp();
+    let out_ty = g.outputs()[0].ty.dtype.cpp();
+    let in_n = g.inputs()[0].ty.numel();
+    let out_n = g.outputs()[0].ty.numel();
+    assert_eq!(input.len(), in_n, "testbench input length mismatch");
+    assert_eq!(expected.len(), out_n, "testbench expected length mismatch");
+
+    let (h_out, w_out) = (grid.h.out_extent, grid.w.out_extent);
+    let f = *g.outputs()[0].ty.shape.last().unwrap();
+    // seam band per axis: the dependency cone radius in output
+    // coordinates (at least one position each side)
+    let band = |a: &crate::tiling::GridAxis| a.cone.radius().div_ceil(a.cone.scale).max(1);
+    let (band_h, band_w) = (band(&grid.h), band(&grid.w));
+    let row_seams: Vec<String> =
+        grid.h.segs.iter().skip(1).map(|s| s.out_lo.to_string()).collect();
+    let col_seams: Vec<String> =
+        grid.w.segs.iter().skip(1).map(|s| s.out_lo.to_string()).collect();
+
+    let mut o = String::new();
+    let _ = writeln!(
+        o,
+        "// Auto-generated MING tiled testbench for {} ({}x{} grid)\n\
+         #include <cstdio>\n#include <cstdint>\n#include <cstdlib>\n",
+        g.name,
+        grid.rows(),
+        grid.cols()
+    );
+    let _ = writeln!(
+        o,
+        "extern \"C\" void {}_tiled_top(const {in_ty} *host_in, {out_ty} *host_out);\n",
+        g.name
+    );
+    emit_i32_array(&mut o, in_ty, "tb_input", input);
+    emit_i32_array(&mut o, out_ty, "tb_expected", expected);
+    let _ = writeln!(
+        o,
+        "static const int row_seams[{}] = {{{}}};",
+        row_seams.len().max(1),
+        if row_seams.is_empty() { "0".to_string() } else { row_seams.join(", ") }
+    );
+    let _ = writeln!(
+        o,
+        "static const int col_seams[{}] = {{{}}};\n",
+        col_seams.len().max(1),
+        if col_seams.is_empty() { "0".to_string() } else { col_seams.join(", ") }
+    );
+    let _ = writeln!(
+        o,
+        "static {out_ty} out[{out_n}];\n\
+         \n\
+         // mismatches inside an output band [r0,r1) x [c0,c1)\n\
+         static long check_band(int r0, int r1, int c0, int c1) {{\n\
+         \x20   long bad = 0;\n\
+         \x20   for (int r = r0 < 0 ? 0 : r0; r < (r1 > {h_out} ? {h_out} : r1); ++r)\n\
+         \x20       for (int c = c0 < 0 ? 0 : c0; c < (c1 > {w_out} ? {w_out} : c1); ++c)\n\
+         \x20           for (int k = 0; k < {f}; ++k) {{\n\
+         \x20               long i = ((long)r * {w_out} + c) * {f} + k;\n\
+         \x20               if (out[i] != tb_expected[i]) ++bad;\n\
+         \x20           }}\n\
+         \x20   return bad;\n\
+         }}\n"
+    );
+    let _ = writeln!(o, "int main() {{");
+    let _ = writeln!(o, "    {}_tiled_top(tb_input, out);", g.name);
+    let _ = writeln!(o, "    long seam_bad = 0;");
+    let _ = writeln!(
+        o,
+        "    // horizontal halo seams (between row cells): +/-{band_h} output rows\n\
+         \x20   for (int s = 0; s < {}; ++s) {{\n\
+         \x20       long bad = check_band(row_seams[s] - {band_h}, row_seams[s] + {band_h}, \
+         0, {w_out});\n\
+         \x20       printf(\"seam row@%d: %ld mismatches in +/-{band_h} band\\n\", \
+         row_seams[s], bad);\n\
+         \x20       seam_bad += bad;\n\
+         \x20   }}",
+        row_seams.len()
+    );
+    let _ = writeln!(
+        o,
+        "    // vertical halo seams (between column cells): +/-{band_w} output cols\n\
+         \x20   for (int s = 0; s < {}; ++s) {{\n\
+         \x20       long bad = check_band(0, {h_out}, col_seams[s] - {band_w}, \
+         col_seams[s] + {band_w});\n\
+         \x20       printf(\"seam col@%d: %ld mismatches in +/-{band_w} band\\n\", \
+         col_seams[s], bad);\n\
+         \x20       seam_bad += bad;\n\
+         \x20   }}",
+        col_seams.len()
+    );
+    let _ = writeln!(
+        o,
+        "    long bad = check_band(0, {h_out}, 0, {w_out});\n\
+         \x20   printf(\"%ld seam mismatches, %ld total mismatches\\n\", seam_bad, bad);\n\
+         \x20   return bad == 0 ? 0 : 1;\n\
+         }}"
+    );
+    o
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -105,5 +235,48 @@ mod tests {
         let g = models::linear();
         let d = build_streaming_design(&g).unwrap();
         emit_testbench(&d, &[1, 2, 3], None);
+    }
+
+    fn untiled_oracle(g: &crate::ir::graph::ModelGraph, x: &[i32]) -> Vec<i32> {
+        use crate::sim::{simulate, SimMode};
+        let d = build_streaming_design(g).unwrap();
+        simulate(&d, x, SimMode::of(d.style)).unwrap().expect_complete().output
+    }
+
+    #[test]
+    fn tiled_testbench_checks_every_halo_seam() {
+        use crate::dse::ilp::DseConfig;
+        use crate::resources::device::DeviceSpec;
+        use crate::tiling::compile_tiled_fixed;
+        let g = models::conv_relu(32, 8, 8);
+        let tc = compile_tiled_fixed(&g, &DseConfig::new(DeviceSpec::kv260()), 2, 4).unwrap();
+        let input: Vec<i32> = (0..32 * 32 * 8).map(|i| (i % 13) as i32 - 6).collect();
+        let want = untiled_oracle(&g, &input);
+        let tb = emit_tiled_testbench(&tc, &input, &want);
+        assert!(tb.contains("conv_relu_32_tiled_top(tb_input, out)"));
+        assert!(tb.contains("tb_expected"));
+        // 2 rows -> 1 interior row seam at out_lo 16; 4 cols -> 3 seams
+        assert!(tb.contains("static const int row_seams[1] = {16};"), "{tb}");
+        assert!(tb.contains("static const int col_seams[3] = {8, 16, 24};"), "{tb}");
+        assert!(tb.contains("seam row@%d"));
+        assert!(tb.contains("seam col@%d"));
+        assert!(tb.contains("check_band"));
+    }
+
+    #[test]
+    fn tiled_testbench_bands_follow_the_stride_cone() {
+        use crate::dse::ilp::DseConfig;
+        use crate::resources::device::DeviceSpec;
+        use crate::tiling::compile_tiled_fixed;
+        let g = models::conv_pool_conv(64, 8);
+        let tc = compile_tiled_fixed(&g, &DseConfig::new(DeviceSpec::kv260()), 1, 2).unwrap();
+        let input: Vec<i32> = (0..64 * 64 * 8).map(|i| (i % 11) as i32 - 5).collect();
+        let want = untiled_oracle(&g, &input);
+        let tb = emit_tiled_testbench(&tc, &input, &want);
+        // cone (3, 4) at stride 2 -> band of ceil(4/2) = 2 output cols
+        assert!(tb.contains("static const int col_seams[1] = {16};"), "{tb}");
+        assert!(tb.contains("+/-2 band"), "{tb}");
+        // no interior row seams: a single filler entry, zero iterations
+        assert!(tb.contains("static const int row_seams[1] = {0};"), "{tb}");
     }
 }

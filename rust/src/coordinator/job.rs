@@ -29,14 +29,14 @@ pub struct CompileJob {
 pub struct JobResult {
     pub job: CompileJob,
     pub util: UtilizationReport,
-    /// `None` when `estimate_only`, when the design was width-tiled (the
+    /// `None` when `estimate_only`, when the design was grid-tiled (the
     /// tiled runner stitches its own report), or when compilation itself
     /// failed fatally (recorded in `error`).
     pub sim: Option<SimReport>,
     pub cycles: u64,
     /// MACs in the workload (speedup normalization).
     pub macs: u64,
-    /// Number of width strips the design was tiled into (1 = untiled).
+    /// Number of grid cells the design was tiled into (1 = untiled).
     pub tiles: usize,
     pub error: Option<String>,
 }
@@ -56,7 +56,7 @@ impl CompileJob {
     /// Execute the job (called from worker threads).
     pub fn run(&self) -> Result<JobResult> {
         let g = models::paper_kernel(&self.kernel, self.size)?;
-        // MING gets the width-tiling feasibility fallback; the baseline
+        // MING gets the tile-grid feasibility fallback; the baseline
         // strategies have no tiling story (the paper's infeasible cells).
         let design = match self.framework {
             FrameworkKind::Ming => {
@@ -91,11 +91,11 @@ impl CompileJob {
         Ok(JobResult { job: self.clone(), util, sim: Some(rep), cycles, macs, tiles: 1, error })
     }
 
-    /// Finish a job whose workload only fits the device width-tiled.
+    /// Finish a job whose workload only fits the device grid-tiled.
     fn finish_tiled(&self, g: &ModelGraph, tc: TiledCompilation) -> Result<JobResult> {
-        let util = estimate(&tc.strip, &self.device);
+        let util = estimate(&tc.cell, &self.device);
         let macs = g.total_macs();
-        let tiles = tc.plan.tiles.len();
+        let tiles = tc.grid.n_cells();
         if self.estimate_only {
             return Ok(JobResult {
                 job: self.clone(),
@@ -169,7 +169,7 @@ mod tests {
     fn ming_job_tiles_oversized_workload() {
         // Estimate-only sweep cell for the oversized VGG block: the
         // untiled DSE has no feasible point on the stock KV260; the job
-        // must come back width-tiled with a BRAM-fitting strip.
+        // must come back grid-tiled with a BRAM-fitting cell.
         let job = CompileJob {
             kernel: "vgg3".into(),
             size: 512,

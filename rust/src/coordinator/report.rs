@@ -25,7 +25,7 @@ pub struct Cell {
     pub lutram_pct: f64,
     pub ff_pct: f64,
     pub fits: bool,
-    /// Width strips the design was tiled into (1 = untiled).
+    /// Grid cells the design was tiled into (1 = untiled).
     pub tiles: usize,
     pub error: Option<String>,
 }
@@ -49,7 +49,7 @@ pub fn cell(r: &JobResult) -> Cell {
     }
 }
 
-/// Framework column label, marking width-tiled designs.
+/// Framework column label, marking grid-tiled designs.
 fn fw_label(c: &Cell) -> String {
     if c.tiles > 1 {
         format!("{} (T={})", c.framework.name(), c.tiles)
@@ -94,12 +94,13 @@ fn wl_name(kernel: &str, size: usize) -> String {
 }
 
 /// Render Table II: per workload × framework — MCycles, BRAM (with the
-/// unified model's weight-ROM / FIFO shares), DSP, speedup, E_DSP,
-/// feasibility.
+/// unified model's weight-ROM / FIFO shares), DSP, LUT/FF fabric
+/// estimates (`resources::fabric`, report-only: the ILP does not
+/// constrain fabric), speedup, E_DSP, feasibility.
 pub fn render_table2(cells: &[Cell]) -> String {
     let mut t = TextTable::new(vec![
-        "kernel", "framework", "MCycles", "BRAM", "ROM", "FIFO", "DSP", "Speedup", "E_DSP",
-        "fits",
+        "kernel", "framework", "MCycles", "BRAM", "ROM", "FIFO", "DSP", "LUT%", "FF%",
+        "Speedup", "E_DSP", "fits",
     ]);
     for c in cells {
         let sp = speedup(cells, c);
@@ -112,6 +113,8 @@ pub fn render_table2(cells: &[Cell]) -> String {
             c.bram_rom.to_string(),
             c.bram_fifo.to_string(),
             c.dsp.to_string(),
+            fnum(c.lut_pct, 1),
+            fnum(c.ff_pct, 1),
             sp.map(|v| fnum(v, 2)).unwrap_or_else(|| "—".into()),
             ed.map(|v| fnum(v, 2)).unwrap_or_else(|| "—".into()),
             if c.fits { "yes".into() } else { "EXCEEDS".to_string() },
@@ -231,6 +234,8 @@ mod tests {
         let cells = vec![mk("conv_relu", FrameworkKind::Ming, 0.001, 288)];
         let s = render_table2(&cells);
         assert!(s.contains("ROM") && s.contains("FIFO"), "{s}");
+        // fabric-estimate columns (report-only; from resources::fabric)
+        assert!(s.contains("LUT%") && s.contains("FF%"), "{s}");
     }
 
     #[test]

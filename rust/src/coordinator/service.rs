@@ -105,7 +105,7 @@ mod tests {
     #[test]
     fn sweep_tiles_oversized_workloads_automatically() {
         // An oversized VGG block rides through the sweep machinery: the
-        // MING cell comes back width-tiled (tiles > 1) instead of erroring
+        // MING cell comes back grid-tiled (tiles > 1) instead of erroring
         // out the way the untiled DSE would.
         let cfg = SweepConfig {
             workloads: vec![("vgg3".into(), 512)],

@@ -144,13 +144,15 @@ pub fn build_streaming_design(g: &ModelGraph) -> Result<Design> {
     Ok(design)
 }
 
-/// Build the streaming design for one width strip of `g`'s feature maps
+/// Build the streaming design for one grid cell of `g`'s feature maps
 /// (the outer tile schedule of `crate::tiling` runs this one design per
-/// strip, reusing line buffers and weight ROMs across tiles). `w_local`
-/// is the strip width including halo columns.
-pub fn build_strip_design(g: &ModelGraph, w_local: usize) -> Result<Design> {
-    let strip = crate::tiling::retile_width(g, w_local)?;
-    build_streaming_design(&strip)
+/// cell, reusing line buffers and weight ROMs across cells). `h_local`
+/// and `w_local` are the cell's input extents, halo included; strided
+/// ops shrink the downstream extents per the window arithmetic of
+/// [`crate::tiling::rewindow`].
+pub fn build_cell_design(g: &ModelGraph, h_local: usize, w_local: usize) -> Result<Design> {
+    let cell = crate::tiling::rewindow(g, h_local, w_local)?;
+    build_streaming_design(&cell)
 }
 
 /// (Re)derive buffer allocations + partitioning + storage binding from the
@@ -302,21 +304,35 @@ mod tests {
     }
 
     #[test]
-    fn strip_design_shrinks_line_buffers_only() {
+    fn cell_design_shrinks_line_buffers_only() {
         let g = models::conv_relu(64, 8, 8);
         let full = build_streaming_design(&g).unwrap();
-        let strip = build_strip_design(&g, 18).unwrap();
-        assert_eq!(strip.nodes.len(), full.nodes.len());
+        let cell = build_cell_design(&g, 64, 18).unwrap();
+        assert_eq!(cell.nodes.len(), full.nodes.len());
         let row_len = |d: &Design| {
             d.nodes[0].geo.line_buffer.unwrap().row_len
         };
         assert_eq!(row_len(&full), 64 * 8);
-        assert_eq!(row_len(&strip), 18 * 8);
-        // weights identical: strips reuse the resident ROMs
+        assert_eq!(row_len(&cell), 18 * 8);
+        // weights identical: cells reuse the resident ROMs
         let wbits = |d: &Design| -> u64 {
             d.buffers.iter().filter(|b| b.role == BufferRole::Weights).map(|b| b.bits).sum()
         };
-        assert_eq!(wbits(&full), wbits(&strip));
+        assert_eq!(wbits(&full), wbits(&cell));
+    }
+
+    #[test]
+    fn cell_design_tracks_strided_downstream_widths() {
+        // conv -> pool -> conv: the second conv's line buffer follows the
+        // pooled (halved) local width, not the cell input width.
+        let g = models::conv_pool_conv(64, 8);
+        let cell = build_cell_design(&g, 64, 40).unwrap();
+        let lb_of = |d: &Design, name: &str| {
+            let nid = d.nodes.iter().position(|n| n.name == name).unwrap();
+            d.nodes[nid].geo.line_buffer.unwrap().row_len
+        };
+        assert_eq!(lb_of(&cell, "conv0"), 40 * 8);
+        assert_eq!(lb_of(&cell, "conv1"), 20 * 8);
     }
 
     #[test]

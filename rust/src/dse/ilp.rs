@@ -205,16 +205,18 @@ pub fn solve(design: &mut Design, cfg: &DseConfig) -> Result<DseSolution> {
 pub enum Compiled {
     /// The whole feature map fits on the device: one streaming design.
     Flat(Box<Design>, DseSolution),
-    /// The untiled DSE had no feasible point; the workload was width-
-    /// tiled into halo-overlapped strips (`crate::tiling`).
+    /// The untiled DSE had no feasible point; the workload was
+    /// decomposed into a rows × cols grid of halo-overlapped cells
+    /// (`crate::tiling`), stride-aware for pooled/strided chains.
     Tiled(Box<TiledCompilation>),
 }
 
 /// The feasibility fallback: build and solve the untiled streaming
 /// design; when the ILP has no feasible point (the paper's "infeasible
 /// design" case — oversized line buffers on a small device), fall back
-/// to the halo-aware width-tiling subsystem. Errors only when both
-/// paths fail.
+/// to the stride-aware tile-grid subsystem, which searches the
+/// (rows × cols) grid lattice for the fewest cells that fit. Errors
+/// only when both paths fail.
 pub fn solve_with_tiling_fallback(g: &ModelGraph, cfg: &DseConfig) -> Result<Compiled> {
     let mut design = build_streaming_design(g)?;
     match solve(&mut design, cfg) {
@@ -224,7 +226,7 @@ pub fn solve_with_tiling_fallback(g: &ModelGraph, cfg: &DseConfig) -> Result<Com
         Err(flat_err) => match compile_tiled_from(g, &design, cfg) {
             Ok(tc) => Ok(Compiled::Tiled(Box::new(tc))),
             Err(tile_err) => bail!(
-                "untiled DSE infeasible ({flat_err:#}); width-tiling fallback \
+                "untiled DSE infeasible ({flat_err:#}); tile-grid fallback \
                  also failed ({tile_err:#})"
             ),
         },
@@ -332,7 +334,7 @@ mod tests {
         let g = models::conv_relu(80, 32, 8);
         let cfg = DseConfig::new(DeviceSpec::kv260().with_bram_limit(4));
         match solve_with_tiling_fallback(&g, &cfg).unwrap() {
-            Compiled::Tiled(tc) => assert!(tc.plan.tiles.len() >= 2),
+            Compiled::Tiled(tc) => assert!(tc.grid.n_cells() >= 2),
             Compiled::Flat(..) => panic!("BRAM-starved workload must tile"),
         }
     }

@@ -21,4 +21,4 @@ pub mod ilp;
 pub mod fifo;
 
 pub use ilp::{solve, solve_with_tiling_fallback, Compiled, DseConfig, DseSolution};
-pub use space::tile_counts;
+pub use space::grid_counts;

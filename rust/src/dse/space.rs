@@ -21,15 +21,26 @@ pub fn divisors(n: u64) -> Vec<u64> {
     out
 }
 
-/// Tile-count candidate axis for the width-tiling feasibility fallback
-/// (`crate::tiling`): divisors of the feature-map width, ascending,
-/// excluding 1 (the untiled case, which the caller has already tried).
-/// `t == width` is a valid last resort — single-column cores with halo
-/// margins — and is the only option for prime widths. The tiling
-/// analogue of the unroll divisor lattice: tile counts that do not
-/// divide the width would need ragged strips and are never enumerated.
-pub fn tile_counts(width: u64) -> Vec<u64> {
-    divisors(width).into_iter().filter(|&t| t > 1).collect()
+/// The 2-D grid candidate lattice for the tile-grid feasibility
+/// fallback (`crate::tiling`): every `(rows, cols)` pair with
+/// `rows | out_h`, `cols | out_w` and more than one cell, ordered by
+/// total cell count (fewer cells = less halo recompute and restart
+/// overhead), then width-major (narrower cells shrink line buffers —
+/// the dominant BRAM term — while shorter cells mostly trade latency).
+/// Counts that do not divide an output extent would need ragged cells
+/// and are never enumerated; `(1, out_w)` — single-column cores with
+/// halo margins — is the last resort for prime widths.
+pub fn grid_counts(out_h: u64, out_w: u64) -> Vec<(u64, u64)> {
+    let mut out = Vec::new();
+    for &r in &divisors(out_h) {
+        for &c in &divisors(out_w) {
+            if r * c > 1 {
+                out.push((r, c));
+            }
+        }
+    }
+    out.sort_by_key(|&(r, c)| (r * c, r));
+    out
 }
 
 /// One unroll candidate for a node, with its pre-computed cost/resources.
@@ -57,9 +68,9 @@ pub struct Candidate {
 ///
 /// Shared by [`candidates_with`] (which prices each timing into a full
 /// [`Candidate`]) and the tiling lower bound
-/// (`crate::tiling::cost::strip_bram_lower_bound`, which prices the
-/// same lattice at strip width without paying for the full-width
-/// vectors or the cycle sort).
+/// (`crate::tiling::cost::cell_bram_lower_bound`, which prices the
+/// same lattice at each node's local cell width without paying for the
+/// full-width vectors or the cycle sort).
 pub fn unroll_timings(d: &Design, nid: usize) -> Vec<NodeTiming> {
     let n = &d.nodes[nid];
     if n.geo.macs_per_out_token == 0 {
@@ -156,14 +167,28 @@ mod tests {
     }
 
     #[test]
-    fn tile_count_axis_is_a_proper_divisor_lattice() {
-        assert_eq!(tile_counts(32), vec![2, 4, 8, 16, 32]);
-        assert_eq!(tile_counts(1), Vec::<u64>::new(), "trip count 1 has no tilings");
-        assert_eq!(tile_counts(2), vec![2]);
-        assert_eq!(tile_counts(13), vec![13], "prime widths tile as 1-column cores");
-        forall("tile counts divide", 100, |g| g.rng.range(1, 4096), |&w| {
-            tile_counts(w).iter().all(|&t| w % t == 0 && t > 1 && t <= w)
-        });
+    fn grid_lattice_orders_cells_then_width_major() {
+        let grids = grid_counts(4, 4);
+        // (1,1) excluded; fewest cells first; width splits before height
+        assert_eq!(grids[0], (1, 2));
+        assert_eq!(grids[1], (2, 1));
+        assert!(grids.contains(&(2, 2)) && grids.contains(&(4, 4)));
+        assert!(!grids.contains(&(1, 1)));
+        assert!(grids.windows(2).all(|w| w[0].0 * w[0].1 <= w[1].0 * w[1].1));
+        // prime extents fall back to 1-wide cores; extent 1 has no splits
+        assert_eq!(grid_counts(1, 13), vec![(1, 13)]);
+        assert_eq!(grid_counts(1, 1), Vec::<(u64, u64)>::new());
+        // rectangular outputs use each axis' own divisor lattice
+        forall(
+            "grid divides",
+            50,
+            |g| (g.rng.range(1, 128), g.rng.range(1, 128)),
+            |&(h, w)| {
+                grid_counts(h, w)
+                    .iter()
+                    .all(|&(r, c)| h % r == 0 && w % c == 0 && r * c > 1)
+            },
+        );
     }
 
     #[test]

@@ -346,6 +346,28 @@ pub mod models {
         b.finish()
     }
 
+    /// Strided showcase for the tile-grid subsystem: a same-padded
+    /// 3×3 conv, a 2×2 stride-2 max-pool, and another 3×3 conv, all at
+    /// a constant channel count `c` on an `n`×`n` input. The pool halves
+    /// the output lattice, so tiling it needs the stride-aware
+    /// coordinate remapping of `tiling::halo` — the width-strip planner
+    /// hard-rejected this chain. At e.g. 512×512×384 on the KV260 the
+    /// minimal line buffers alone exceed the device BRAM, so only the
+    /// grid fallback can place it.
+    pub fn conv_pool_conv(n: usize, c: usize) -> ModelGraph {
+        let mut b = GraphBuilder::new(format!("cpc_{n}x{c}"));
+        let x = b.input("x", vec![n, n, c], DType::I8);
+        let w1 = b.det_weight("w1", vec![c, CONV_K, CONV_K, c], prng::SEED_W1);
+        let w2 = b.det_weight("w2", vec![c, CONV_K, CONV_K, c], prng::SEED_W2);
+        let a0 = b.conv2d("conv0", x, w1, 1, 1);
+        let t0 = b.relu_requant("rr0", a0);
+        let p0 = b.maxpool2d("pool0", t0, 2, 2);
+        let a1 = b.conv2d("conv1", p0, w2, 1, 1);
+        let y = b.relu_requant("rr1", a1);
+        b.mark_output(y);
+        b.finish()
+    }
+
     /// A small but complete CNN beyond the paper's micro-kernels:
     /// conv(3x3,C->F) -> maxpool(2x2) -> conv(3x3,F->F) -> maxpool(2x2).
     /// Exercises stride-2 sliding windows and weight-less window nodes
@@ -374,8 +396,9 @@ pub mod models {
             "residual" => residual(n, CONV_C, CONV_F),
             "linear" => linear(),
             "feedforward" => feedforward(),
-            // oversized extension workload (tiling showcase, not Table II)
+            // oversized extension workloads (tiling showcases, not Table II)
             "vgg3" => vgg_block(n, 256, 3),
+            "conv_pool" => conv_pool_conv(n, 384),
             other => anyhow::bail!("unknown paper kernel {other:?}"),
         })
     }
@@ -478,6 +501,17 @@ mod tests {
         // 3 layers x N^2 x C_out x K^2 x C_in MACs
         assert_eq!(g.total_macs(), 3 * 64 * 64 * 16 * 9 * 16);
         assert_eq!(g.weights().len(), 3);
+    }
+
+    #[test]
+    fn conv_pool_conv_shapes() {
+        let g = conv_pool_conv(64, 8);
+        g.validate().unwrap();
+        assert_eq!(g.ops.len(), 5); // conv, rr, pool, conv, rr
+        assert_eq!(g.outputs()[0].ty.shape, vec![32, 32, 8]);
+        assert_eq!(g.weights().len(), 2);
+        // 64^2·8·9·8 + 32^2·8·9·8 MACs across the two convs
+        assert_eq!(g.total_macs(), (64 * 64 + 32 * 32) * 8 * 9 * 8);
     }
 
     #[test]

@@ -36,14 +36,21 @@ pub struct TensorInfo {
 }
 
 /// Front-end tiling metadata, carried from the JSON model schema's
-/// optional `"tiling"` object into the halo-aware tiling subsystem
+/// optional `"tiling"` object into the tile-grid subsystem
 /// (`crate::tiling`). Hints are advisory: the tiling planner tries them
-/// first and falls back to its own search when they do not fit.
+/// first and falls back to its own grid search when they do not fit.
+/// Core extents are in **final-output** coordinates (halo excluded);
+/// strided/pooled chains scale them back to input windows via the
+/// grid's coordinate remapping.
 #[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct TilingHint {
-    /// Requested core strip width in columns (halo excluded).
+    /// Requested core cell width in output columns.
     pub tile_width: Option<usize>,
-    /// Upper bound on the number of strips the fallback search may try.
+    /// Requested core cell height in output rows (1-row × N-col strips
+    /// when absent — the legacy width-strip behaviour).
+    pub tile_height: Option<usize>,
+    /// Upper bound on the number of grid cells the fallback search may
+    /// try.
     pub max_tiles: Option<usize>,
 }
 

@@ -359,22 +359,40 @@ pub fn import_model(text: &str) -> Result<ModelGraph> {
     let dtype = DType::parse(input.get_or("dtype", &Json::Str("i8".into())).as_str()?)
         .context("bad input dtype")?;
 
-    // Optional width-tiling metadata for the halo-aware tiling subsystem
+    // Optional tile-grid metadata for the tiling subsystem
     // (crate::tiling). Written by python/compile/aot.py --emit-model-json.
+    // axis "width" is the legacy 1 x N strip form; "grid" additionally
+    // carries a tile_height for 2-D rows x cols decompositions.
     let tiling = match doc.as_obj()?.get("tiling") {
         Some(t) => {
-            if let Some(axis) = t.as_obj()?.get("axis") {
-                ensure!(
-                    axis.as_str()? == "width",
-                    "only width-axis tiling is supported, got {:?}",
-                    axis
-                );
-            }
+            let axis = match t.as_obj()?.get("axis") {
+                Some(a) => {
+                    ensure!(
+                        matches!(a.as_str()?, "width" | "grid"),
+                        "tiling axis must be \"width\" or \"grid\", got {:?}",
+                        a
+                    );
+                    Some(a.as_str()?)
+                }
+                None => None,
+            };
+            let tile_height = match t.as_obj()?.get("tile_height") {
+                Some(v) => Some(v.as_usize()?),
+                None => None,
+            };
+            // the legacy "width" axis declares a 1 x N strip plan — a
+            // tile_height would contradict it silently, so reject
+            ensure!(
+                !(axis == Some("width") && tile_height.is_some()),
+                "tiling axis \"width\" cannot carry a tile_height — use \
+                 axis \"grid\" for 2-D rows x cols hints"
+            );
             Some(TilingHint {
                 tile_width: match t.as_obj()?.get("tile_width") {
                     Some(v) => Some(v.as_usize()?),
                     None => None,
                 },
+                tile_height,
                 max_tiles: match t.as_obj()?.get("max_tiles") {
                     Some(v) => Some(v.as_usize()?),
                     None => None,
@@ -524,7 +542,7 @@ mod tests {
         .unwrap();
         assert_eq!(
             g.tiling,
-            Some(TilingHint { tile_width: Some(16), max_tiles: Some(8) })
+            Some(TilingHint { tile_width: Some(16), tile_height: None, max_tiles: Some(8) })
         );
         // no metadata -> no hint
         let g2 = import_model(
@@ -533,7 +551,7 @@ mod tests {
         )
         .unwrap();
         assert_eq!(g2.tiling, None);
-        // only the width axis exists
+        // unknown axes are rejected ("width" and "grid" only)
         let err = import_model(
             r#"{"name":"x","input":{"shape":[16,16,4]},
                 "tiling": {"axis": "height"},
@@ -541,6 +559,39 @@ mod tests {
         )
         .unwrap_err();
         assert!(err.to_string().contains("width"));
+    }
+
+    #[test]
+    fn import_carries_grid_tiling_metadata() {
+        // the 2-D form: axis "grid" with a tile_height for rows x cols
+        let g = import_model(
+            r#"{
+              "name": "tall",
+              "input": {"shape": [64, 64, 8], "dtype": "i8"},
+              "tiling": {"axis": "grid", "tile_width": 16, "tile_height": 32,
+                         "max_tiles": 12},
+              "layers": [
+                {"op": "conv2d", "filters": 8, "kernel": 3, "seed": 101}
+              ]
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(
+            g.tiling,
+            Some(TilingHint {
+                tile_width: Some(16),
+                tile_height: Some(32),
+                max_tiles: Some(12),
+            })
+        );
+        // the legacy "width" axis contradicts a 2-D tile_height
+        let err = import_model(
+            r#"{"name":"x","input":{"shape":[16,16,4]},
+                "tiling": {"axis": "width", "tile_height": 4},
+                "layers":[{"op":"conv2d","filters":4}]}"#,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("tile_height"), "{err}");
     }
 
     #[test]

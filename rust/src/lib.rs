@@ -22,11 +22,13 @@
 //!   solved exactly by branch-and-bound over divisor lattices; FIFO depth
 //!   sizing from first-output-cycle estimates (deadlock avoidance for
 //!   diamonds).
-//! * **`tiling`** — halo-aware width tiling for oversized layers: when
-//!   the DSE has no feasible point (line buffers exceed BRAM even at
-//!   minimal unroll), the workload is decomposed into halo-overlapped
-//!   width strips sharing one reusable strip design, verified bit-exact
-//!   against the untiled/golden computation.
+//! * **`tiling`** — stride-aware 2-D tile grids for oversized layers:
+//!   when the DSE has no feasible point (line buffers exceed BRAM even
+//!   at minimal unroll), the workload is decomposed into a rows × cols
+//!   grid of halo-overlapped cells sharing one reusable cell design,
+//!   with per-op coordinate remapping so strided convs and pooled
+//!   chains propagate halos and crop offsets correctly — verified
+//!   bit-exact against the untiled/golden computation.
 //! * **`codegen`** — the `emithls` equivalent: Vitis-HLS C++ emission with
 //!   automatic STREAM / UNROLL / PIPELINE / DATAFLOW / ARRAY_PARTITION /
 //!   BIND_STORAGE pragma insertion.
@@ -73,5 +75,5 @@ pub mod prelude {
     pub use crate::resources::model::{ResourceModel, ResourceVec};
     pub use crate::resources::report::UtilizationReport;
     pub use crate::sim::engine::{SimMode, SimReport};
-    pub use crate::tiling::{compile_tiled, simulate_tiled, TiledCompilation, TilePlan};
+    pub use crate::tiling::{compile_tiled, simulate_tiled, TileGrid, TiledCompilation};
 }

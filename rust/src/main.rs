@@ -17,10 +17,11 @@ use anyhow::{bail, Context, Result};
 
 use ming::baselines::framework::{compile_with, FrameworkKind};
 use ming::codegen::emit::emit_tiled_design;
-use ming::codegen::{emit_design, emit_testbench};
+use ming::codegen::{emit_design, emit_testbench, emit_tiled_testbench};
 use ming::coordinator::report::{self, Cell};
 use ming::coordinator::service::{CompileService, SweepConfig};
 use ming::dse::ilp::{solve_with_tiling_fallback, Compiled, DseConfig};
+use ming::dataflow::build::build_streaming_design;
 use ming::dataflow::design::Design;
 use ming::ir::builder::models;
 use ming::ir::json::import_model;
@@ -115,18 +116,40 @@ fn print_nodes(d: &Design) {
 }
 
 fn report_tiled_compile(a: &Args, tc: &TiledCompilation, dev: &DeviceSpec) -> Result<()> {
-    println!("untiled DSE infeasible — halo-aware width tiling engaged");
+    println!("untiled DSE infeasible — halo-aware tile-grid fallback engaged");
     println!("{}", tc.describe());
-    let r = estimate(&tc.strip, dev);
-    println!("strip resources: {r}");
-    println!("estimated tiled latency: {} cycles", tc.estimated_cycles());
-    print_nodes(&tc.strip);
+    let r = estimate(&tc.cell, dev);
+    println!("cell resources: {r}");
+    println!("estimated tiled latency: {} cycles (gather overlapped)", tc.estimated_cycles());
+    print_nodes(&tc.cell);
     if let Some(path) = a.flags.get("emit") {
         std::fs::write(path, emit_tiled_design(tc))?;
         println!("wrote tiled HLS C++ to {path}");
     }
-    if a.flags.contains_key("emit-tb") {
-        println!("note: --emit-tb is not supported for tiled designs yet");
+    if let Some(path) = a.flags.get("emit-tb") {
+        // The seam checks need an oracle that is *independent* of the
+        // grid plan: the untiled design is always functionally simulable
+        // (BRAM infeasibility is a resource property, not a simulation
+        // limit), so its output is the expected vector. A planner bug
+        // that corrupts the tiled simulation and the emitted HLS
+        // identically still gets caught. The oracle simulates the whole
+        // map once and the bench embeds full input/expected vectors, so
+        // gate on workload size — the oversized showcases (vgg3@512,
+        // conv_pool@512: 10^12-MAC scale) are estimate-only everywhere.
+        const EMIT_TB_MAX_MACS: u64 = 2_000_000_000;
+        let macs = tc.graph.total_macs();
+        if macs > EMIT_TB_MAX_MACS {
+            println!(
+                "note: --emit-tb skipped — {macs} MACs exceeds the {EMIT_TB_MAX_MACS} \
+                 oracle-simulation limit (use a smaller size for seam testbenches)"
+            );
+        } else {
+            let x = det_input(&tc.graph);
+            let flat = build_streaming_design(&tc.graph)?;
+            let want = simulate(&flat, &x, SimMode::of(flat.style))?.expect_complete();
+            std::fs::write(path, emit_tiled_testbench(tc, &x, &want.output))?;
+            println!("wrote per-boundary tiled testbench to {path}");
+        }
     }
     Ok(())
 }
@@ -137,7 +160,7 @@ fn cmd_compile(a: &Args) -> Result<()> {
     let dev = a.device()?;
     let fw = a.framework()?;
     let g = models::paper_kernel(&kernel, size)?;
-    // MING gets the width-tiling feasibility fallback; baselines do not.
+    // MING gets the tile-grid feasibility fallback; baselines do not.
     let d = if fw == FrameworkKind::Ming {
         match solve_with_tiling_fallback(&g, &DseConfig::new(dev.clone()))? {
             Compiled::Flat(d, _) => *d,
@@ -194,12 +217,12 @@ fn cmd_simulate(a: &Args) -> Result<()> {
         match solve_with_tiling_fallback(&g, &DseConfig::new(dev.clone()))? {
             Compiled::Flat(d, _) => *d,
             Compiled::Tiled(tc) => {
-                println!("untiled DSE infeasible — simulating the width-tiled design");
-                println!("{}", tc.plan.describe());
+                println!("untiled DSE infeasible — simulating the grid-tiled design");
+                println!("{}", tc.grid.describe());
                 let x = det_input(&g);
                 let rep = simulate_tiled(&tc, &x)?;
                 println!(
-                    "cycles: {}  ({:.4} MCycles over {} strips, {:.2} MAC/cycle)",
+                    "cycles: {}  ({:.4} MCycles over {} cells, {:.2} MAC/cycle)",
                     rep.cycles,
                     rep.cycles as f64 / 1e6,
                     rep.tile_cycles.len(),
@@ -370,8 +393,8 @@ fn cmd_import(a: &Args) -> Result<()> {
         }
         Compiled::Tiled(tc) => {
             println!("{}", tc.describe());
-            let r = estimate(&tc.strip, &dev);
-            println!("strip resources: {r}");
+            let r = estimate(&tc.cell, &dev);
+            println!("cell resources: {r}");
             if let Some(out) = a.flags.get("emit") {
                 std::fs::write(out, emit_tiled_design(&tc))?;
                 println!("wrote tiled HLS C++ to {out}");
@@ -387,7 +410,8 @@ fn help() {
          USAGE: ming <command> [--flag value ...]\n\n\
          COMMANDS\n\
          \x20 compile   --kernel K --size N [--framework F] [--device D] [--emit f.cpp] [--emit-tb tb.cpp]\n\
-         \x20           MING falls back to halo-aware width tiling when the DSE is infeasible\n\
+         \x20           MING falls back to stride-aware 2-D tile-grid decomposition when the\n\
+         \x20           DSE is infeasible; --emit-tb then writes a per-boundary seam testbench\n\
          \x20 simulate  --kernel K --size N [--framework F] [--device D]\n\
          \x20 table2    [--device D]        full Table-II sweep\n\
          \x20 table3    [--device D]        post-PnR fabric table\n\
@@ -395,7 +419,7 @@ fn help() {
          \x20 fig3      [--device D]        BRAM-vs-input-size series\n\
          \x20 verify                        golden-model check (needs `make artifacts`)\n\
          \x20 import    --model m.json [--emit f.cpp]\n\n\
-         kernels: conv_relu cascade residual linear feedforward vgg3\n\
+         kernels: conv_relu cascade residual linear feedforward vgg3 conv_pool\n\
          frameworks: vanilla scalehls streamhls ming\n\
          devices: kv260 zcu104 u250  (+ --dsp-limit N, --bram-limit N, --max-bram-frac F)\n\
          \x20 (--bram-reserve N is deprecated and ignored: the unified resource model\n\

@@ -70,8 +70,8 @@ impl fmt::Display for UtilizationReport {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         write!(
             f,
-            "BRAM {}/{} (line {} · rom {} · fifo {}{})  DSP {}/{}  LUT {:.1}%  \
-             LUTRAM {:.1}%  FF {:.1}%{}",
+            "BRAM {}/{} (line {} · rom {} · fifo {}{})  DSP {}/{}  \
+             LUT {} ({:.1}%)  LUTRAM {} ({:.1}%)  FF {} ({:.1}%){}",
             self.bram18k,
             self.device.bram18k,
             self.bram_line,
@@ -84,8 +84,11 @@ impl fmt::Display for UtilizationReport {
             },
             self.dsp,
             self.device.dsp,
+            self.lut,
             self.lut_pct(),
+            self.lutram,
             self.lutram_pct(),
+            self.ff,
             self.ff_pct(),
             if self.fits() { "" } else { "  [EXCEEDS DEVICE]" }
         )
@@ -156,7 +159,12 @@ mod tests {
     fn display_contains_key_fields() {
         let g = models::linear();
         let d = build_streaming_design(&g).unwrap();
-        let s = estimate(&d, &DeviceSpec::kv260()).to_string();
+        let r = estimate(&d, &DeviceSpec::kv260());
+        let s = r.to_string();
         assert!(s.contains("BRAM") && s.contains("DSP"));
+        // the fabric estimate (resources::fabric) is reported in absolute
+        // LUT/FF counts alongside the device percentages
+        assert!(s.contains(&format!("LUT {} (", r.lut)), "{s}");
+        assert!(s.contains(&format!("FF {} (", r.ff)), "{s}");
     }
 }

@@ -95,7 +95,7 @@ impl GoldenModel {
         Ok(want.iter().zip(sim_output).filter(|(a, b)| a != b).count())
     }
 
-    /// Verify a width-tiled execution against the untiled golden model:
+    /// Verify a grid-tiled execution against the untiled golden model:
     /// the stitched strip outputs must agree element-exact, same as a
     /// flat design (the tile schedule is an implementation detail the
     /// golden contract must not see).
@@ -160,7 +160,7 @@ mod tests {
     }
 
     /// Tiled execution must be transparent to the golden contract: the
-    /// stitched strips of a width-tiled design agree bit-exactly with
+    /// stitched cells of a grid-tiled design agree bit-exactly with
     /// the JAX/Pallas model of the *untiled* kernel.
     #[test]
     fn tiled_simulation_matches_golden_model() {
@@ -170,7 +170,9 @@ mod tests {
             eprintln!("skipping: artifacts not built");
             return;
         };
-        for (kernel, size, tiles) in [("conv_relu", 32usize, 4usize), ("cascade", 32, 2)] {
+        for (kernel, size, rows, cols) in
+            [("conv_relu", 32usize, 1usize, 4usize), ("cascade", 32, 2, 2)]
+        {
             let key = GoldenModel::key(kernel, size);
             if !gm.available(&key) {
                 eprintln!("skipping {key}: artifact missing");
@@ -181,8 +183,8 @@ mod tests {
                 .iter()
                 .map(|&v| v as i32)
                 .collect();
-            let tc =
-                compile_tiled_fixed(&g, &DseConfig::new(DeviceSpec::kv260()), tiles).unwrap();
+            let tc = compile_tiled_fixed(&g, &DseConfig::new(DeviceSpec::kv260()), rows, cols)
+                .unwrap();
             let rep = simulate_tiled(&tc, &x).unwrap();
             let mismatches = gm.verify_tiled(&key, &x, &rep).unwrap();
             assert_eq!(mismatches, 0, "{key}: tiled execution disagrees with golden model");

@@ -478,20 +478,34 @@ mod tests {
     #[test]
     fn tiled_execution_is_bit_exact_against_untiled() {
         // The tiling subsystem's core contract at the simulator level:
-        // running the strip design per halo-overlapped window and
-        // stitching cores reproduces the untiled output exactly.
+        // running the cell design per halo-overlapped 2-D window and
+        // stitching cores reproduces the untiled output exactly —
+        // including the stride-2 pooled extension CNN, which needs the
+        // grid's coordinate remapping.
         use crate::dse::ilp::DseConfig;
         use crate::tiling::{compile_tiled_fixed, simulate_tiled};
-        for (name, tiles) in [("conv_relu", 4usize), ("cascade", 2), ("residual", 2)] {
+        for (name, rows, cols) in [
+            ("conv_relu", 1usize, 4usize),
+            ("cascade", 2, 2),
+            ("residual", 1, 2),
+        ] {
             let g = models::paper_kernel(name, 32).unwrap();
             let x = det_input(&g);
             let d = build_streaming_design(&g).unwrap();
             let want = simulate(&d, &x, SimMode::Dataflow).unwrap().expect_complete().output;
             let tc =
-                compile_tiled_fixed(&g, &DseConfig::new(DeviceSpec::kv260()), tiles).unwrap();
+                compile_tiled_fixed(&g, &DseConfig::new(DeviceSpec::kv260()), rows, cols)
+                    .unwrap();
             let rep = simulate_tiled(&tc, &x).unwrap();
             assert_eq!(rep.output, want, "{name} tiled/untiled mismatch");
         }
+        let g = models::tiny_cnn(32, 4, 8);
+        let x = det_input(&g);
+        let d = build_streaming_design(&g).unwrap();
+        let want = simulate(&d, &x, SimMode::Dataflow).unwrap().expect_complete().output;
+        let tc = compile_tiled_fixed(&g, &DseConfig::new(DeviceSpec::kv260()), 2, 2).unwrap();
+        let rep = simulate_tiled(&tc, &x).unwrap();
+        assert_eq!(rep.output, want, "tiny_cnn tiled/untiled mismatch");
     }
 
     #[test]

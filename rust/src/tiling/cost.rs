@@ -1,35 +1,48 @@
-//! Cost models for tiled execution: per-strip BRAM lower bounds (used to
-//! prune the tile-count search before paying for a full strip DSE) and
-//! the tiled latency estimate.
+//! Cost models for tiled execution: per-cell BRAM lower bounds (used to
+//! prune the grid search before paying for a full cell DSE) and the
+//! tiled latency estimate with gather/drain overlap.
 
+use crate::analysis::shapes::tensor_tokens;
 use crate::dataflow::design::Design;
 use crate::dse::space::unroll_timings;
 use crate::resources::model::ResourceModel;
 
-use super::plan::TilePlan;
+use super::plan::TileGrid;
 
-/// Control overhead charged per strip launch: draining the DATAFLOW
+/// Control overhead charged per cell launch: draining the DATAFLOW
 /// region, resetting line-buffer fill counters and re-arming the host
-/// DMA. Line buffers and weight ROMs themselves stay resident — strips
-/// reuse the same storage, which is the whole point of the uniform strip
-/// width.
+/// DMA. Line buffers and weight ROMs themselves stay resident — cells
+/// reuse the same storage, which is the whole point of the uniform cell
+/// extent.
 pub const TILE_RESTART_CYCLES: u64 = 64;
 
-/// BRAM lower bound for running `d`'s workload on a width-`w_local`
-/// strip: the same unified [`ResourceModel`] the strip DSE will charge,
-/// minimized per node over its unroll lattice — line buffers rescaled to
-/// the strip width, weight ROMs and FIFO base depths unchanged, diamond
-/// depth floors dropped (they shrink with width). `full_w` is the
-/// feature-map width `d` was built for. Admissible: no strip assignment
-/// can use fewer blocks, so pruning on this bound agrees with the
-/// solver's feasibility verdict.
-pub fn strip_bram_lower_bound(d: &Design, full_w: usize, w_local: usize) -> u64 {
+/// BRAM lower bound for running `d`'s workload on a grid cell whose
+/// per-tensor local extents are `local_ext` (as computed by
+/// [`crate::tiling::plan::local_extents`] for the cell's input window):
+/// the same unified [`ResourceModel`] the cell DSE will charge,
+/// minimized per node over its unroll lattice — line buffers rescaled
+/// to each node's *own* local input width (strided chains shrink
+/// downstream widths by the cumulative stride), weight ROMs and FIFO
+/// base depths unchanged, diamond depth floors dropped (they shrink
+/// with the cell extent). Admissible: no cell assignment can use fewer
+/// blocks, so pruning on this bound agrees with the solver's
+/// feasibility verdict.
+pub fn cell_bram_lower_bound(d: &Design, local_ext: &[Option<[usize; 2]>]) -> u64 {
     let model = ResourceModel::new(d);
     let nodes: u64 = (0..d.nodes.len())
         .map(|nid| {
+            let op = &d.graph.ops[d.nodes[nid].op_index];
+            let t = d.graph.tensor(op.inputs[0]);
+            // rank-3 sliding/elementwise inputs rescale by their local
+            // width; rank-2 (regular reduction) inputs have no width axis
+            let full_w = t.ty.shape.get(1).copied().unwrap_or(1);
+            let new_w = local_ext
+                .get(t.id.0)
+                .and_then(|e| e.map(|e| e[1]))
+                .unwrap_or(full_w);
             unroll_timings(d, nid)
                 .iter()
-                .map(|t| model.node_vec_at_width(nid, t, full_w, w_local).bram())
+                .map(|tm| model.node_vec_at_width(nid, tm, full_w, new_w).bram())
                 .min()
                 .unwrap_or(0)
         })
@@ -37,51 +50,81 @@ pub fn strip_bram_lower_bound(d: &Design, full_w: usize, w_local: usize) -> u64 
     model.input_fifo_floor() + nodes
 }
 
-/// Total tiled-execution latency estimate: every strip pays the strip
-/// design's overlapped estimate plus the restart overhead. Conservative:
-/// no overlap between consecutive strips is assumed (the host gathers
-/// strip `t+1` only after strip `t` drains).
-pub fn tiled_cycles_estimate(plan: &TilePlan, strip: &Design) -> u64 {
-    plan.tiles.len() as u64 * (strip.overlapped_cycles_estimate() + TILE_RESTART_CYCLES)
+/// Host gather cost for one cell: the outer tile loop streams one input
+/// token (pixel) per cycle into the cell's input window.
+pub fn cell_gather_cycles(cell: &Design) -> u64 {
+    let (tokens, _) = tensor_tokens(&cell.graph.inputs()[0].ty.shape);
+    tokens
+}
+
+/// Serialized tiled latency (the pre-overlap model): every cell pays
+/// its gather, its full execution, and the restart overhead back to
+/// back — the host only gathers cell `t+1` after cell `t` drains.
+pub fn serialized_tiled_cycles(grid: &TileGrid, cell: &Design) -> u64 {
+    grid.n_cells() as u64
+        * (cell_gather_cycles(cell) + cell.overlapped_cycles_estimate() + TILE_RESTART_CYCLES)
+}
+
+/// Overlapped tiled latency estimate: with a double-buffered input
+/// window, the gather of cell `t+1` hides behind cell `t`'s execution
+/// and drain, so only the first gather is exposed. Strictly below
+/// [`serialized_tiled_cycles`] for any multi-cell grid.
+pub fn tiled_cycles_estimate(grid: &TileGrid, cell: &Design) -> u64 {
+    cell_gather_cycles(cell)
+        + grid.n_cells() as u64 * (cell.overlapped_cycles_estimate() + TILE_RESTART_CYCLES)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::dataflow::build::build_streaming_design;
+    use crate::dataflow::build::{build_cell_design, build_streaming_design};
     use crate::dse::ilp::DseConfig;
     use crate::ir::builder::models;
     use crate::resources::bram::{bram_blocks, design_bram};
     use crate::resources::device::DeviceSpec;
-    use crate::tiling::plan::{retile_width, TilePlan};
+    use crate::tiling::plan::{local_extents, TileGrid};
     use crate::tiling::schedule::compile_tiled_fixed;
 
     #[test]
-    fn lower_bound_admissible_against_solved_strips() {
+    fn lower_bound_admissible_against_solved_cells() {
         // The bound must never exceed the BRAM of the actually solved
-        // strip design for any tile count the search would accept.
+        // cell design for any grid the search would accept.
         let g = models::conv_relu(64, 8, 8);
         let base = build_streaming_design(&g).unwrap();
         let cfg = DseConfig::new(DeviceSpec::kv260());
-        for n_tiles in [2usize, 4] {
-            let tc = compile_tiled_fixed(&g, &cfg, n_tiles).unwrap();
-            let bound = strip_bram_lower_bound(&base, 64, tc.plan.local_width);
+        for (rows, cols) in [(1usize, 2usize), (1, 4), (2, 2)] {
+            let tc = compile_tiled_fixed(&g, &cfg, rows, cols).unwrap();
+            let ext = local_extents(&g, tc.grid.h.local_in, tc.grid.w.local_in).unwrap();
+            let bound = cell_bram_lower_bound(&base, &ext);
             assert!(
-                bound <= design_bram(&tc.strip),
-                "T={n_tiles}: bound {bound} exceeds solved strip {}",
-                design_bram(&tc.strip)
+                bound <= design_bram(&tc.cell),
+                "{rows}x{cols}: bound {bound} exceeds solved cell {}",
+                design_bram(&tc.cell)
             );
         }
     }
 
     #[test]
+    fn lower_bound_admissible_for_strided_chains() {
+        // Strided chains shrink downstream widths by the cumulative
+        // stride; the bound must track each node's own local width.
+        let g = models::conv_pool_conv(64, 8);
+        let base = build_streaming_design(&g).unwrap();
+        let cfg = DseConfig::new(DeviceSpec::kv260());
+        let tc = compile_tiled_fixed(&g, &cfg, 1, 2).unwrap();
+        let ext = local_extents(&g, tc.grid.h.local_in, tc.grid.w.local_in).unwrap();
+        let bound = cell_bram_lower_bound(&base, &ext);
+        assert!(bound <= design_bram(&tc.cell), "{bound} > {}", design_bram(&tc.cell));
+    }
+
+    #[test]
     fn lower_bound_covers_at_least_unpartitioned_line_buffers() {
-        // The unified bound subsumes the old line-buffer-only bound: the
-        // rescaled, partition-1 line buffers are a floor on every node's
-        // vector, so the new bound can only be tighter (larger).
+        // The unified bound subsumes a line-buffer-only bound: the
+        // rescaled, partition-1 line buffers floor every node's vector.
         let g = models::cascade(256, 16, 16);
         let d = build_streaming_design(&g).unwrap();
         for w_local in [256usize, 130, 66] {
+            let ext = local_extents(&g, 256, w_local).unwrap();
             let line_only: u64 = d
                 .nodes
                 .iter()
@@ -91,11 +134,11 @@ mod tests {
                     s.rows as u64 * bram_blocks(s.row_len as u64 * s.elem_bits, 1)
                 })
                 .sum();
-            let bound = strip_bram_lower_bound(&d, 256, w_local);
+            let bound = cell_bram_lower_bound(&d, &ext);
             assert!(bound >= line_only, "width {w_local}: {bound} < {line_only}");
-            // and the rescale is exact: rebuilding the strip graph gives
+            // and the rescale is exact: rebuilding the cell graph gives
             // the same line-buffer geometry the bound assumed
-            let sd = build_streaming_design(&retile_width(&g, w_local).unwrap()).unwrap();
+            let sd = build_cell_design(&g, 256, w_local).unwrap();
             let rebuilt: u64 = sd
                 .nodes
                 .iter()
@@ -107,26 +150,53 @@ mod tests {
     }
 
     #[test]
-    fn lower_bound_shrinks_with_strip_width() {
+    fn lower_bound_shrinks_with_cell_width() {
         let g = models::conv_relu(512, 8, 8);
         let d = build_streaming_design(&g).unwrap();
-        let full = strip_bram_lower_bound(&d, 512, 512);
-        let half = strip_bram_lower_bound(&d, 512, 258);
-        assert!(half < full, "strip line buffers must shrink: {half} vs {full}");
+        let full = cell_bram_lower_bound(&d, &local_extents(&g, 512, 512).unwrap());
+        let half = cell_bram_lower_bound(&d, &local_extents(&g, 512, 258).unwrap());
+        assert!(half < full, "cell line buffers must shrink: {half} vs {full}");
     }
 
     #[test]
-    fn tiled_estimate_scales_with_tile_count() {
+    fn overlapped_estimate_beats_serialized_for_multi_cell_grids() {
+        // The gather-overlap regression: hiding cell t+1's gather behind
+        // cell t's drain must be strictly cheaper than serializing, for
+        // any plan with more than one cell.
         let g = models::conv_relu(32, 8, 8);
-        let p2 = TilePlan::build(&g, 2).unwrap();
-        let p4 = TilePlan::build(&g, 4).unwrap();
-        let s2 = build_streaming_design(&retile_width(&g, p2.local_width).unwrap()).unwrap();
-        let s4 = build_streaming_design(&retile_width(&g, p4.local_width).unwrap()).unwrap();
-        let e2 = tiled_cycles_estimate(&p2, &s2);
-        let e4 = tiled_cycles_estimate(&p4, &s4);
+        for (r, c) in [(1usize, 2usize), (2, 2), (1, 4)] {
+            let grid = TileGrid::build(&g, r, c).unwrap();
+            let cell = build_cell_design(&g, grid.h.local_in, grid.w.local_in).unwrap();
+            let overlapped = tiled_cycles_estimate(&grid, &cell);
+            let serialized = serialized_tiled_cycles(&grid, &cell);
+            assert!(
+                overlapped < serialized,
+                "{r}x{c}: overlapped {overlapped} must beat serialized {serialized}"
+            );
+            // exactly (n_cells - 1) gathers are hidden
+            assert_eq!(
+                serialized - overlapped,
+                (grid.n_cells() as u64 - 1) * cell_gather_cycles(&cell)
+            );
+        }
+        // a single-cell grid has nothing to overlap
+        let grid = TileGrid::build(&g, 1, 1).unwrap();
+        let cell = build_cell_design(&g, 32, 32).unwrap();
+        assert_eq!(tiled_cycles_estimate(&grid, &cell), serialized_tiled_cycles(&grid, &cell));
+    }
+
+    #[test]
+    fn tiled_estimate_scales_with_cell_count() {
+        let g = models::conv_relu(32, 8, 8);
+        let g2 = TileGrid::build(&g, 1, 2).unwrap();
+        let g4 = TileGrid::build(&g, 1, 4).unwrap();
+        let s2 = build_cell_design(&g, g2.h.local_in, g2.w.local_in).unwrap();
+        let s4 = build_cell_design(&g, g4.h.local_in, g4.w.local_in).unwrap();
+        let e2 = tiled_cycles_estimate(&g2, &s2);
+        let e4 = tiled_cycles_estimate(&g4, &s4);
         assert!(e2 > 0 && e4 > 0);
-        // more, narrower strips process more total halo columns and pay
-        // more restart overhead, so the estimate must grow with T
+        // more, narrower cells process more total halo columns and pay
+        // more restart overhead, so the estimate must grow with the count
         assert!(e4 > e2, "e4 {e4} vs e2 {e2}");
     }
 }

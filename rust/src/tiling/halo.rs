@@ -1,115 +1,322 @@
-//! Halo (ghost-region) analysis for width-wise strip tiling.
+//! Halo (ghost-region) analysis for 2-D tile-grid decomposition, with
+//! per-op stride-aware coordinate remapping.
 //!
-//! A strip of a feature map can only be computed independently if it
-//! carries enough *halo* — extra boundary columns — to feed every
-//! sliding window that overlaps the strip edge. The halo a whole graph
-//! needs is the worst-case sum of per-op halos along any producer path:
-//! each stride-1 same-padded K×K convolution widens the dependency cone
-//! of one output column by `(K_eff − 1) / 2 = pad` columns per side,
-//! while pure-parallel (elementwise) ops add nothing.
+//! A cell of a feature map can only be computed independently if its
+//! input window carries enough *halo* — extra boundary rows/columns —
+//! to feed every sliding window that overlaps a cell edge. Because ops
+//! may be strided (strided conv, 2×2 pooling), the dependency cone of
+//! one final-output position is an *affine interval* in every upstream
+//! tensor's own coordinate system, not a fixed radius: a final output
+//! index `o` needs tensor positions `[S·o − A, S·o + B]`, where `S` is
+//! the product of the strides downstream of that tensor and `(A, B)`
+//! accumulate kernel extents and paddings along the deepest path.
 //!
-//! Only *width-preserving* chains are tilable this way: stride-1
-//! same-padded sliding windows and identity-map elementwise ops. Strided
-//! convs, pooling and matrix ops are rejected with a descriptive error —
-//! the fallback then simply reports the workload as untilable.
+//! Composing one sliding op `(s, K_eff, pad)` onto a downstream cone
+//! `(S, A, B)` gives the input-side cone
+//! `(s·S, s·A + pad, s·B + K_eff − 1 − pad)` — the coordinate remapping
+//! rule the whole tile-grid subsystem is built on. Elementwise identity
+//! ops leave the cone unchanged; residual diamonds take the
+//! elementwise max over paths (`AxisCone::join`).
+//!
+//! Tilable graphs are rank-3 `(H, W, C)` chains/DAGs of sliding-window
+//! and identity elementwise ops whose window arithmetic is *exact* at
+//! every stage (`(extent + 2·pad − K_eff) % stride == 0`) — floor-
+//! truncating windows would make cells disagree with the full map at
+//! the right/bottom borders and are rejected with a descriptive error.
+//! Matrix ops (rank-2) are rejected: they have no spatial axes.
 
-use anyhow::{bail, ensure, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use crate::analysis::classify::{classify, KernelClass};
 use crate::ir::generic::GenericOp;
 use crate::ir::graph::{ModelGraph, TensorKind};
 
-/// Per-side halo columns `op` adds to the dependency cone of one output
-/// column. Errors when the op is not width-preserving.
-pub fn op_halo(op: &GenericOp) -> Result<usize> {
+/// Spatial axes of an `(H, W, C)` feature map.
+pub const AXIS_H: usize = 0;
+pub const AXIS_W: usize = 1;
+
+/// Per-axis sliding-window parameters of one op: output index `q` reads
+/// input positions `[stride·q − pad, stride·q − pad + keff − 1]`.
+/// Identity (elementwise) ops are `stride = 1, keff = 1, pad = 0`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AxisWindow {
+    pub stride: usize,
+    /// Effective kernel extent `(K − 1)·dilation + 1` along this axis.
+    pub keff: usize,
+    pub pad: usize,
+}
+
+impl AxisWindow {
+    pub fn identity() -> Self {
+        AxisWindow { stride: 1, keff: 1, pad: 0 }
+    }
+
+    pub fn is_identity(&self) -> bool {
+        *self == Self::identity()
+    }
+
+    /// Output extent produced from `in_extent` input positions. Errors
+    /// unless the window arithmetic is exact (no floor truncation) —
+    /// the tilability requirement.
+    pub fn out_extent(&self, in_extent: usize) -> Result<usize> {
+        let padded = in_extent + 2 * self.pad;
+        ensure!(
+            padded >= self.keff,
+            "extent {in_extent} (+2x{} pad) is smaller than the {} window",
+            self.pad,
+            self.keff
+        );
+        let span = padded - self.keff;
+        ensure!(
+            span % self.stride == 0,
+            "stride {} does not tile extent {in_extent} exactly \
+             (K_eff {}, pad {}) — floor-truncating windows are not tilable",
+            self.stride,
+            self.keff,
+            self.pad
+        );
+        Ok(span / self.stride + 1)
+    }
+}
+
+/// Dependency cone of the graph output into one tensor, along one axis:
+/// final output index `o` needs tensor positions `[scale·o − lo, scale·o + hi]`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AxisCone {
+    /// Product of the strides downstream of the tensor.
+    pub scale: usize,
+    pub lo: usize,
+    pub hi: usize,
+}
+
+impl AxisCone {
+    /// The output tensor's own cone.
+    pub fn identity() -> Self {
+        AxisCone { scale: 1, lo: 0, hi: 0 }
+    }
+
+    /// Cone of an op's *input*, given the cone of its output and the
+    /// op's window on this axis — the stride-aware coordinate remap.
+    pub fn through(&self, w: &AxisWindow) -> AxisCone {
+        AxisCone {
+            scale: w.stride * self.scale,
+            lo: w.stride * self.lo + w.pad,
+            hi: w.stride * self.hi + w.keff - 1 - w.pad,
+        }
+    }
+
+    /// Worst-case union at a fan-out tensor (residual diamonds): the
+    /// deepest path per side wins. Scales must agree — all paths from a
+    /// tensor to the output cross the same strided ops.
+    pub fn join(&self, o: &AxisCone) -> Result<AxisCone> {
+        ensure!(
+            self.scale == o.scale,
+            "inconsistent downstream stride products {} vs {} — paths with \
+             different cumulative strides cannot reconverge on a valid DAG",
+            self.scale,
+            o.scale
+        );
+        Ok(AxisCone { scale: self.scale, lo: self.lo.max(o.lo), hi: self.hi.max(o.hi) })
+    }
+
+    /// Per-side radius in the tensor's own coordinates (max of the two
+    /// sides) — the scalar "halo" summary.
+    pub fn radius(&self) -> usize {
+        self.lo.max(self.hi)
+    }
+}
+
+/// Per-axis window of `op` for spatial axis `ax` (0 = height,
+/// 1 = width). Errors when the op has no grid-tilable form on that axis.
+pub fn op_axis_window(op: &GenericOp, ax: usize) -> Result<AxisWindow> {
     match classify(op) {
         KernelClass::PureParallel => {
             for m in &op.indexing_maps {
                 ensure!(
                     m.is_identity(),
-                    "op {}: non-identity elementwise map is not width-tilable",
+                    "op {}: non-identity elementwise map is not grid-tilable",
                     op.name
                 );
             }
-            Ok(0)
+            Ok(AxisWindow::identity())
         }
-        KernelClass::SlidingWindow(sw) => {
-            ensure!(
-                sw.stride == 1,
-                "op {}: stride-{} sliding window is not width-tilable (stride 1 required)",
-                op.name,
-                sw.stride
-            );
-            let k = op.dims[sw.reduction_dim];
-            let keff = (k - 1) * sw.dilation as usize + 1;
-            ensure!(
-                2 * op.pad + 1 == keff,
-                "op {}: tiling requires same-padding (K_eff {keff}, pad {})",
-                op.name,
-                op.pad
-            );
-            Ok(op.pad)
+        KernelClass::SlidingWindow(_) => {
+            let out_dim = op.output_map().results[ax]
+                .single_dim()
+                .with_context(|| format!("op {}: output axis {ax} is not a plain dim", op.name))?;
+            // input 0 is the streamed activation by construction
+            let expr = &op.indexing_maps[0].results[ax];
+            let (terms, konst) = expr
+                .linear_terms()
+                .with_context(|| format!("op {}: non-linear access on axis {ax}", op.name))?;
+            match terms.len() {
+                1 => {
+                    let (d, c) = terms[0];
+                    ensure!(
+                        d == out_dim && c == 1 && konst == 0,
+                        "op {}: axis {ax} access {expr} is neither identity nor a \
+                         sliding window",
+                        op.name
+                    );
+                    Ok(AxisWindow::identity())
+                }
+                2 => {
+                    let (d_a, c_a) = terms[0];
+                    let (d_b, c_b) = terms[1];
+                    let (stride, r, dil) = if d_a == out_dim {
+                        (c_a, d_b, c_b)
+                    } else if d_b == out_dim {
+                        (c_b, d_a, c_a)
+                    } else {
+                        bail!(
+                            "op {}: axis {ax} access {expr} does not use the \
+                             output's axis iterator d{out_dim}",
+                            op.name
+                        );
+                    };
+                    ensure!(
+                        stride > 0 && dil > 0 && konst <= 0,
+                        "op {}: axis {ax} window needs positive stride/dilation \
+                         and non-positive pad offset, got {expr}",
+                        op.name
+                    );
+                    ensure!(
+                        crate::ir::generic::IterType::Reduction == op.iter_types[r],
+                        "op {}: axis {ax} window dim d{r} is not a reduction iterator",
+                        op.name
+                    );
+                    let k = op.dims[r];
+                    let keff = (k - 1) * dil as usize + 1;
+                    let pad = (-konst) as usize;
+                    ensure!(
+                        pad < keff,
+                        "op {}: axis {ax} pad {pad} is not smaller than the \
+                         effective window {keff}",
+                        op.name
+                    );
+                    Ok(AxisWindow { stride: stride as usize, keff, pad })
+                }
+                n => bail!("op {}: axis {ax} access {expr} has {n} terms", op.name),
+            }
         }
         KernelClass::RegularReduction => {
-            bail!("op {}: regular reductions have no spatial width to tile", op.name)
+            bail!("op {}: regular reductions have no spatial axes to tile", op.name)
         }
     }
 }
 
-/// Check that `g` is a width-tilable graph — every activation tensor is a
-/// rank-3 `(H, W, C)` feature map with one common height and width, and
-/// every op is width-preserving. Returns `(height, width)`.
-pub fn check_tilable(g: &ModelGraph) -> Result<(usize, usize)> {
-    let mut hw: Option<(usize, usize)> = None;
+/// Grid geometry of a tilable graph: per-axis input/output extents and
+/// the input-space dependency cone.
+#[derive(Debug, Clone, Copy)]
+pub struct GridGeom {
+    /// Graph-input extent per axis `[H, W]`.
+    pub in_extent: [usize; 2],
+    /// Graph-output extent per axis `[H_out, W_out]`.
+    pub out_extent: [usize; 2],
+    /// Graph-input dependency cone per axis.
+    pub cone: [AxisCone; 2],
+}
+
+/// The graph-output cone into every tensor along axis `ax` (`None` for
+/// weights). Reverse-toposort DP, so residual diamonds take the deepest
+/// path per side.
+pub fn tensor_cones(g: &ModelGraph, ax: usize) -> Result<Vec<Option<AxisCone>>> {
+    let order = g.toposort()?;
+    let mut cones: Vec<Option<AxisCone>> = vec![None; g.tensors.len()];
+    cones[g.outputs()[0].id.0] = Some(AxisCone::identity());
+    for &oi in order.iter().rev() {
+        let op = &g.ops[oi];
+        let out = cones[op.output.0].with_context(|| {
+            format!("op {} does not reach the graph output", op.name)
+        })?;
+        let w = op_axis_window(op, ax)?;
+        let inc = out.through(&w);
+        for &inp in &op.inputs {
+            if g.tensor(inp).kind == TensorKind::Weight {
+                continue;
+            }
+            cones[inp.0] = Some(match cones[inp.0] {
+                Some(prev) => prev.join(&inc)?,
+                None => inc,
+            });
+        }
+    }
+    Ok(cones)
+}
+
+/// Check that `g` is grid-tilable — every activation tensor is a rank-3
+/// `(H, W, C)` feature map, every op is an exact sliding window or
+/// identity elementwise op on both spatial axes, and the declared tensor
+/// shapes agree with the window arithmetic. Returns the grid geometry.
+pub fn check_tilable(g: &ModelGraph) -> Result<GridGeom> {
     for t in &g.tensors {
         if t.kind == TensorKind::Weight {
             continue;
         }
         ensure!(
             t.ty.rank() == 3,
-            "tensor {} is rank {} — width tiling needs (H, W, C) feature maps",
+            "tensor {} is rank {} — grid tiling needs rank-3 (height, width, \
+             channels) feature maps",
             t.name,
             t.ty.rank()
         );
-        let cur = (t.ty.shape[0], t.ty.shape[1]);
-        match hw {
-            None => hw = Some(cur),
-            Some(prev) => ensure!(
-                prev == cur,
-                "tensor {} is {}x{} but the graph works on {}x{} maps — \
-                 only height/width-preserving chains are tilable",
-                t.name,
-                cur.0,
-                cur.1,
-                prev.0,
-                prev.1
-            ),
-        }
     }
     for op in &g.ops {
-        op_halo(op)?;
+        let out_t = g.tensor(op.output);
+        for ax in [AXIS_H, AXIS_W] {
+            let w = op_axis_window(op, ax)?;
+            let mut in_extent = None;
+            for &inp in &op.inputs {
+                let t = g.tensor(inp);
+                if t.kind == TensorKind::Weight {
+                    continue;
+                }
+                match in_extent {
+                    None => in_extent = Some(t.ty.shape[ax]),
+                    Some(prev) => ensure!(
+                        prev == t.ty.shape[ax],
+                        "op {}: activation inputs disagree on axis {ax} \
+                         ({prev} vs {})",
+                        op.name,
+                        t.ty.shape[ax]
+                    ),
+                }
+            }
+            let in_extent = in_extent
+                .with_context(|| format!("op {} has no activation input", op.name))?;
+            let got = w
+                .out_extent(in_extent)
+                .with_context(|| format!("op {} axis {ax}", op.name))?;
+            ensure!(
+                got == out_t.ty.shape[ax],
+                "op {}: axis {ax} window arithmetic gives {got} but tensor {} \
+                 declares {}",
+                op.name,
+                out_t.name,
+                out_t.ty.shape[ax]
+            );
+        }
     }
-    hw.ok_or_else(|| anyhow::anyhow!("graph {} has no activation tensors", g.name))
+    let inp = g.inputs()[0];
+    let out = g.outputs()[0];
+    let mut cone = [AxisCone::identity(), AxisCone::identity()];
+    for ax in [AXIS_H, AXIS_W] {
+        cone[ax] = tensor_cones(g, ax)?[inp.id.0]
+            .with_context(|| format!("graph input does not reach the output on axis {ax}"))?;
+    }
+    Ok(GridGeom {
+        in_extent: [inp.ty.shape[0], inp.ty.shape[1]],
+        out_extent: [out.ty.shape[0], out.ty.shape[1]],
+        cone,
+    })
 }
 
-/// Total per-side halo the graph output needs: the maximum over all
-/// producer paths of the summed per-op halos (longest-path DP over the
-/// toposorted DAG, so residual diamonds are handled).
+/// Per-side width-axis halo radius of the whole graph, in *input*
+/// columns — the scalar summary the CLI and reports print. For stride-1
+/// same-padded chains this is the classic summed-pads halo; for strided
+/// chains it is the (asymmetric) input-space cone's larger side.
 pub fn graph_halo(g: &ModelGraph) -> Result<usize> {
-    let order = g.toposort()?;
-    let mut halo = vec![0usize; g.tensors.len()];
-    for &oi in &order {
-        let op = &g.ops[oi];
-        let h_op = op_halo(op)?;
-        let mut upstream = 0;
-        for &inp in &op.inputs {
-            if g.tensor(inp).kind != TensorKind::Weight {
-                upstream = upstream.max(halo[inp.0]);
-            }
-        }
-        halo[op.output.0] = upstream + h_op;
-    }
-    Ok(halo[g.outputs()[0].id.0])
+    Ok(check_tilable(g)?.cone[AXIS_W].radius())
 }
 
 #[cfg(test)]
@@ -118,12 +325,16 @@ mod tests {
     use crate::ir::builder::models;
 
     #[test]
-    fn conv_relu_halo_is_one() {
+    fn conv_relu_windows_and_halo() {
         let g = models::conv_relu(32, 8, 8);
-        assert_eq!(op_halo(g.op("conv0").unwrap()).unwrap(), 1);
-        assert_eq!(op_halo(g.op("rr0").unwrap()).unwrap(), 0);
+        let w = op_axis_window(g.op("conv0").unwrap(), AXIS_W).unwrap();
+        assert_eq!(w, AxisWindow { stride: 1, keff: 3, pad: 1 });
+        assert!(op_axis_window(g.op("rr0").unwrap(), AXIS_W).unwrap().is_identity());
         assert_eq!(graph_halo(&g).unwrap(), 1);
-        assert_eq!(check_tilable(&g).unwrap(), (32, 32));
+        let geom = check_tilable(&g).unwrap();
+        assert_eq!(geom.in_extent, [32, 32]);
+        assert_eq!(geom.out_extent, [32, 32]);
+        assert_eq!(geom.cone[AXIS_H], AxisCone { scale: 1, lo: 1, hi: 1 });
     }
 
     #[test]
@@ -146,10 +357,73 @@ mod tests {
     }
 
     #[test]
-    fn pooling_and_matmul_rejected() {
+    fn strided_pooled_chain_remaps_coordinates() {
+        // conv(3x3,p1) -> pool(2x2,s2) -> conv(3x3,p1) -> pool(2x2,s2):
+        // composing backward from the output,
+        //   conv1..pool1: (2, 2, 3); conv1: (2, 3, 4) is the mid chain;
+        // the full tiny_cnn input cone is (4, 3, 6).
         let g = models::tiny_cnn(32, 4, 8);
-        assert!(graph_halo(&g).is_err(), "stride-2 pooling must not be tilable");
+        let geom = check_tilable(&g).expect("stride-2 pooled chains are now tilable");
+        for ax in [AXIS_H, AXIS_W] {
+            assert_eq!(geom.cone[ax], AxisCone { scale: 4, lo: 3, hi: 6 }, "axis {ax}");
+        }
+        assert_eq!(geom.in_extent, [32, 32]);
+        assert_eq!(geom.out_extent, [8, 8]);
+        assert_eq!(graph_halo(&g).unwrap(), 6);
+    }
+
+    #[test]
+    fn conv_pool_conv_cone() {
+        let g = models::conv_pool_conv(512, 8);
+        let geom = check_tilable(&g).unwrap();
+        assert_eq!(geom.cone[AXIS_W], AxisCone { scale: 2, lo: 3, hi: 4 });
+        assert_eq!(geom.out_extent, [256, 256]);
+    }
+
+    #[test]
+    fn matmul_and_non_exact_windows_rejected() {
         let g = models::linear();
-        assert!(check_tilable(&g).is_err(), "rank-2 matrices must not be tilable");
+        let err = check_tilable(&g).unwrap_err();
+        assert!(format!("{err:#}").contains("width"), "{err:#}");
+
+        // 2x2/2 pooling over an odd extent floor-truncates -> rejected
+        use crate::ir::builder::GraphBuilder;
+        use crate::ir::types::DType;
+        let mut b = GraphBuilder::new("odd");
+        let x = b.input("x", vec![9, 9, 2], DType::I8);
+        let y = b.maxpool2d("pool", x, 2, 2);
+        b.mark_output(y);
+        let g = b.finish();
+        let err = check_tilable(&g).unwrap_err();
+        assert!(format!("{err:#}").contains("exactly"), "{err:#}");
+    }
+
+    #[test]
+    fn cone_composition_rules() {
+        let out = AxisCone::identity();
+        let conv = AxisWindow { stride: 1, keff: 3, pad: 1 };
+        let pool = AxisWindow { stride: 2, keff: 2, pad: 0 };
+        let c1 = out.through(&conv);
+        assert_eq!(c1, AxisCone { scale: 1, lo: 1, hi: 1 });
+        let c2 = c1.through(&pool);
+        assert_eq!(c2, AxisCone { scale: 2, lo: 2, hi: 3 });
+        let c3 = c2.through(&conv);
+        assert_eq!(c3, AxisCone { scale: 2, lo: 3, hi: 4 });
+        // join takes the per-side max and keeps the scale
+        let j = c3.join(&AxisCone { scale: 2, lo: 5, hi: 1 }).unwrap();
+        assert_eq!(j, AxisCone { scale: 2, lo: 5, hi: 4 });
+        assert!(c3.join(&AxisCone { scale: 4, lo: 0, hi: 0 }).is_err());
+    }
+
+    #[test]
+    fn exact_window_extent_math() {
+        let conv = AxisWindow { stride: 1, keff: 3, pad: 1 };
+        assert_eq!(conv.out_extent(32).unwrap(), 32);
+        let pool = AxisWindow { stride: 2, keff: 2, pad: 0 };
+        assert_eq!(pool.out_extent(32).unwrap(), 16);
+        assert!(pool.out_extent(9).is_err(), "odd extents floor-truncate");
+        let strided = AxisWindow { stride: 2, keff: 3, pad: 0 };
+        assert_eq!(strided.out_extent(9).unwrap(), 4);
+        assert!(strided.out_extent(10).is_err());
     }
 }

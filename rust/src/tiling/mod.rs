@@ -1,4 +1,4 @@
-//! Halo-aware width tiling for oversized CNN layers.
+//! Stride-aware 2-D tile-grid decomposition for oversized CNN layers.
 //!
 //! MING's streaming architecture keeps line buffers of `(K-1) × W·C`
 //! values per sliding-window node — linear in the input width, which is
@@ -8,15 +8,19 @@
 //! [`crate::dse::ilp::solve`] simply has no feasible point. This module
 //! turns that hard infeasibility into a latency/resource trade-off:
 //!
-//! 1. [`halo`] checks the graph is width-preserving and computes the
-//!    per-side halo (dependency-cone radius) of the whole chain;
-//! 2. [`plan`] splits the width into equal cores with inward-shifted
-//!    halo windows, so every strip shares **one** local width and one
-//!    reusable strip design;
-//! 3. [`cost`] prices strips (BRAM lower bounds, tiled latency);
-//! 4. [`schedule`] searches the tile-count axis
-//!    ([`crate::dse::space::tile_counts`]) for the fewest strips whose
-//!    DSE-solved design fits the device, and executes/stitches strips
+//! 1. [`halo`] checks the graph is grid-tilable and computes per-axis
+//!    dependency cones with **stride-aware coordinate remapping** —
+//!    strided convolutions and pooled chains propagate halos and crop
+//!    offsets through the chain instead of being rejected;
+//! 2. [`plan`] splits the final output into a `rows × cols`
+//!    [`plan::TileGrid`] of equal cores with inward-shifted,
+//!    stride-aligned input windows, so every cell shares **one** local
+//!    extent and one reusable cell design ([`plan::rewindow`]);
+//! 3. [`cost`] prices cells (BRAM lower bounds at each node's local
+//!    width, tiled latency with gather/drain overlap);
+//! 4. [`schedule`] searches the grid lattice
+//!    ([`crate::dse::space::grid_counts`]) for the fewest cells whose
+//!    DSE-solved design fits the device, and executes/stitches cells
 //!    bit-exactly on the cycle simulator.
 //!
 //! Entry points: [`compile_tiled`] (automatic fallback, used by
@@ -28,9 +32,9 @@ pub mod plan;
 pub mod cost;
 pub mod schedule;
 
-pub use cost::TILE_RESTART_CYCLES;
-pub use halo::{check_tilable, graph_halo, op_halo};
-pub use plan::{retile_width, Tile, TilePlan};
+pub use cost::{serialized_tiled_cycles, tiled_cycles_estimate, TILE_RESTART_CYCLES};
+pub use halo::{check_tilable, graph_halo, op_axis_window, AxisCone, AxisWindow, GridGeom};
+pub use plan::{local_extents, rewindow, GridAxis, Seg, TileGrid};
 pub use schedule::{
     compile_tiled, compile_tiled_fixed, compile_tiled_from, simulate_tiled, TiledCompilation,
     TiledSimReport,

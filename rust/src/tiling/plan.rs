@@ -1,155 +1,365 @@
-//! Tile plans: decompose a feature map's width into halo-overlapped
-//! strips of one uniform local width.
+//! Tile grids: decompose a feature map into a `rows × cols` grid of
+//! halo-overlapped cells of one uniform local size.
 //!
-//! Every tile owns `tile_width` *core* output columns; its input window
-//! is the core plus `halo` columns per side, **shifted inward** at the
-//! image borders so that all strips share a single local width
-//! `tile_width + 2·halo`. Inward shifting (instead of clamping the
-//! window) is what makes one strip design reusable for every tile: at a
-//! true image border the strip's own zero-padding coincides with the
-//! global padding, and everywhere else the kept core columns sit at
-//! least `halo` columns away from any fake strip edge, outside the
-//! contamination cone of the wrong local padding.
+//! The grid is planned in the **final-output** coordinate system: every
+//! cell owns a `core_h × core_w` block of output positions; its input
+//! window is the backward image of that block under the graph's
+//! dependency cone ([`crate::tiling::halo::AxisCone`]), padded per side
+//! and **shifted inward** at the image borders so that all cells share
+//! a single local input extent per axis. Inward shifting (instead of
+//! clamping the window) is what makes one cell design reusable for
+//! every cell: at a true image border the cell's own zero-padding
+//! coincides with the global padding, and everywhere else the kept core
+//! sits outside the contamination cone of the wrong local padding.
+//!
+//! Stride-awareness adds two constraints the stride-1 planner never
+//! saw: window origins must be multiples of the cumulative stride
+//! `scale` (so cell-local outputs land on the global output lattice),
+//! and the local extent must be congruent to the full extent modulo
+//! `scale` (so every sliding stage divides exactly in the cell graph
+//! too). Both are handled per axis by [`GridAxis::build`]; the two axes
+//! are independent, so a 2-D cell is just the cross product of one row
+//! segment and one column segment.
 
-use anyhow::{ensure, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use crate::ir::graph::{ModelGraph, TensorKind};
 
-use super::halo::{check_tilable, graph_halo};
+use super::halo::{check_tilable, op_axis_window, AxisCone, AXIS_H, AXIS_W};
 
-/// One width strip: global output core `[out_lo, out_hi)` computed from
-/// global input columns `[in_lo, in_lo + local_width)`.
+/// One 1-D grid segment along an axis: global output core
+/// `[out_lo, out_lo + core)` computed from global input positions
+/// `[in_lo, in_lo + local_in)`, keeping local outputs starting at
+/// `crop_lo`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub struct Tile {
+pub struct Seg {
     pub index: usize,
+    /// First global final-output position of this segment's core.
     pub out_lo: usize,
-    pub out_hi: usize,
+    /// Global input position of the window origin (multiple of `scale`).
     pub in_lo: usize,
+    /// Cell-local final-output position of the first kept value
+    /// (`out_lo − in_lo / scale`).
+    pub crop_lo: usize,
 }
 
-impl Tile {
-    /// Local column of the first kept output value.
-    pub fn crop_lo(&self) -> usize {
-        self.out_lo - self.in_lo
-    }
-
-    /// Kept output columns.
-    pub fn core_width(&self) -> usize {
-        self.out_hi - self.out_lo
-    }
-}
-
-/// A complete width-tiling plan for one graph.
+/// Grid decomposition of one spatial axis.
 #[derive(Debug, Clone)]
-pub struct TilePlan {
-    /// Feature-map height (common to all activation tensors).
-    pub height: usize,
-    /// Full feature-map width.
-    pub width: usize,
-    /// Core output columns per tile (`width / tiles.len()`).
-    pub tile_width: usize,
-    /// Per-side halo columns (graph dependency-cone radius).
-    pub halo: usize,
-    /// Uniform strip width: `tile_width + 2·halo`, capped at `width`.
-    pub local_width: usize,
-    pub tiles: Vec<Tile>,
+pub struct GridAxis {
+    /// Axis label for diagnostics ("rows" / "cols").
+    pub label: &'static str,
+    /// Global input extent on this axis.
+    pub in_extent: usize,
+    /// Global final-output extent.
+    pub out_extent: usize,
+    /// Input-space dependency cone (scale = cumulative stride).
+    pub cone: AxisCone,
+    /// Final-output positions per cell (`out_extent / segs.len()`).
+    pub core: usize,
+    /// Uniform local input extent (halo included).
+    pub local_in: usize,
+    /// Local final-output extent the cell graph produces.
+    pub local_out: usize,
+    pub segs: Vec<Seg>,
 }
 
-impl TilePlan {
-    /// Build the plan splitting `g`'s width into `n_tiles` strips.
-    /// `n_tiles` must divide the width, and the strips must be narrower
-    /// than the full map for the plan to be useful.
-    pub fn build(g: &ModelGraph, n_tiles: usize) -> Result<TilePlan> {
-        let (height, width) = check_tilable(g)?;
-        let halo = graph_halo(g)?;
-        ensure!(n_tiles >= 1, "tile count must be positive");
+impl GridAxis {
+    /// Split an axis into `n` segments. The local extent starts at the
+    /// cone-derived minimum and grows in `scale` steps until every
+    /// segment satisfies the halo-coverage invariants (first fit wins).
+    pub fn build(
+        label: &'static str,
+        in_extent: usize,
+        out_extent: usize,
+        cone: AxisCone,
+        n: usize,
+    ) -> Result<GridAxis> {
+        ensure!(n >= 1, "{label}: cell count must be positive");
         ensure!(
-            width % n_tiles == 0,
-            "tile count {n_tiles} must divide feature-map width {width}"
+            out_extent % n == 0,
+            "{label}: cell count {n} must divide output extent {out_extent}"
         );
-        let tile_width = width / n_tiles;
-        let local_width = if n_tiles == 1 { width } else { tile_width + 2 * halo };
-        ensure!(
-            local_width <= width,
-            "strips of width {local_width} (core {tile_width} + 2x{halo} halo) \
-             are no narrower than the {width}-wide map"
-        );
-        let tiles = (0..n_tiles)
-            .map(|i| {
-                let out_lo = i * tile_width;
-                let out_hi = out_lo + tile_width;
-                // inward-shifted window: [in_lo, in_lo + local_width) ⊆ [0, width)
-                let in_lo = out_lo.saturating_sub(halo).min(width - local_width);
-                Tile { index: i, out_lo, out_hi, in_lo }
-            })
-            .collect();
-        Ok(TilePlan { height, width, tile_width, halo, local_width, tiles })
+        let core = out_extent / n;
+        if n == 1 {
+            return Ok(GridAxis {
+                label,
+                in_extent,
+                out_extent,
+                cone,
+                core,
+                local_in: in_extent,
+                local_out: out_extent,
+                segs: vec![Seg { index: 0, out_lo: 0, in_lo: 0, crop_lo: 0 }],
+            });
+        }
+        let s = cone.scale;
+        // round the halo sides up to stride multiples, and keep
+        // local_in ≡ in_extent (mod scale) so every sliding stage
+        // divides exactly inside the cell graph
+        let a_bar = cone.lo.div_ceil(s) * s;
+        let b_bar = cone.hi.div_ceil(s) * s;
+        let base = s * core + a_bar + b_bar + in_extent % s;
+        let mut local_in = base;
+        while local_in <= in_extent {
+            if let Some(segs) = Self::try_segs(in_extent, out_extent, &cone, core, n, local_in) {
+                let local_out = out_extent - (in_extent - local_in) / s;
+                return Ok(GridAxis {
+                    label,
+                    in_extent,
+                    out_extent,
+                    cone,
+                    core,
+                    local_in,
+                    local_out,
+                    segs,
+                });
+            }
+            local_in += s;
+        }
+        bail!(
+            "{label}: no local extent ≤ {in_extent} covers {n} cores of {core} \
+             with halo ({}, {}) at stride {s}",
+            cone.lo,
+            cone.hi
+        )
     }
 
-    /// Human-readable plan summary.
+    /// Place the `n` segments for candidate extent `local_in`, verifying
+    /// the halo-coverage invariants; `None` when any segment fails.
+    fn try_segs(
+        in_extent: usize,
+        out_extent: usize,
+        cone: &AxisCone,
+        core: usize,
+        n: usize,
+        local_in: usize,
+    ) -> Option<Vec<Seg>> {
+        let s = cone.scale as i64;
+        let a_bar = (cone.lo.div_ceil(cone.scale) * cone.scale) as i64;
+        let local_out = out_extent.checked_sub((in_extent - local_in) / cone.scale)?;
+        let mut segs = Vec::with_capacity(n);
+        for i in 0..n {
+            let out_lo = i * core;
+            let desired = s * out_lo as i64 - a_bar;
+            let in_lo = desired.clamp(0, (in_extent - local_in) as i64) as usize;
+            // multiples of scale in, multiples of scale out of the clamp
+            debug_assert_eq!(in_lo % cone.scale, 0);
+            let origin = in_lo / cone.scale;
+            if origin > out_lo {
+                return None;
+            }
+            let crop_lo = out_lo - origin;
+            if crop_lo + core > local_out {
+                return None;
+            }
+            // fake-edge contamination margins: the kept core's cone must
+            // stay inside the genuinely loaded window
+            let fake_left = in_lo > 0;
+            if fake_left && cone.scale * crop_lo < cone.lo {
+                return None;
+            }
+            let fake_right = in_lo + local_in < in_extent;
+            if fake_right && cone.scale * (crop_lo + core - 1) + cone.hi > local_in - 1 {
+                return None;
+            }
+            segs.push(Seg { index: i, out_lo, in_lo, crop_lo });
+        }
+        Some(segs)
+    }
+
+    /// Number of segments.
+    pub fn len(&self) -> usize {
+        self.segs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.segs.is_empty()
+    }
+
+    /// Whether splitting this axis actually shrank the local extent.
+    pub fn shrinks(&self) -> bool {
+        self.local_in < self.in_extent
+    }
+}
+
+/// A complete 2-D tile grid for one graph: independent row/column axes;
+/// the cells are the cross product of the two segment lists.
+#[derive(Debug, Clone)]
+pub struct TileGrid {
+    /// Height (row) axis.
+    pub h: GridAxis,
+    /// Width (column) axis.
+    pub w: GridAxis,
+}
+
+impl TileGrid {
+    /// Build the `rows × cols` grid for `g` (cell counts in final-output
+    /// coordinates; each must divide the respective output extent).
+    pub fn build(g: &ModelGraph, rows: usize, cols: usize) -> Result<TileGrid> {
+        let geom = check_tilable(g)?;
+        let h = GridAxis::build(
+            "rows",
+            geom.in_extent[AXIS_H],
+            geom.out_extent[AXIS_H],
+            geom.cone[AXIS_H],
+            rows,
+        )?;
+        let w = GridAxis::build(
+            "cols",
+            geom.in_extent[AXIS_W],
+            geom.out_extent[AXIS_W],
+            geom.cone[AXIS_W],
+            cols,
+        )?;
+        Ok(TileGrid { h, w })
+    }
+
+    pub fn rows(&self) -> usize {
+        self.h.len()
+    }
+
+    pub fn cols(&self) -> usize {
+        self.w.len()
+    }
+
+    /// Total cell count.
+    pub fn n_cells(&self) -> usize {
+        self.rows() * self.cols()
+    }
+
+    /// Human-readable grid summary.
     pub fn describe(&self) -> String {
-        let strips: Vec<String> = self
-            .tiles
-            .iter()
-            .map(|t| {
-                format!(
-                    "  strip {}: in cols [{}, {})  ->  out cols [{}, {})",
-                    t.index,
-                    t.in_lo,
-                    t.in_lo + self.local_width,
-                    t.out_lo,
-                    t.out_hi
-                )
-            })
-            .collect();
+        let axis = |a: &GridAxis| -> String {
+            let segs: Vec<String> = a
+                .segs
+                .iter()
+                .map(|sg| {
+                    format!(
+                        "[in {}..{} -> out {}..{} crop {}]",
+                        sg.in_lo,
+                        sg.in_lo + a.local_in,
+                        sg.out_lo,
+                        sg.out_lo + a.core,
+                        sg.crop_lo
+                    )
+                })
+                .collect();
+            format!(
+                "  {}: {} x core {} (local {} of {}, stride x{}, halo -{}/+{}) {}",
+                a.label,
+                a.len(),
+                a.core,
+                a.local_in,
+                a.in_extent,
+                a.cone.scale,
+                a.cone.lo,
+                a.cone.hi,
+                segs.join(" ")
+            )
+        };
         format!(
-            "tile plan: {} strips of {} cols (core {} + halo {} per side) over a {}x{} map\n{}",
-            self.tiles.len(),
-            self.local_width,
-            self.tile_width,
-            self.halo,
-            self.height,
-            self.width,
-            strips.join("\n")
+            "tile grid: {}x{} cells of {}x{} input ({}x{} -> {}x{} map)\n{}\n{}",
+            self.rows(),
+            self.cols(),
+            self.h.local_in,
+            self.w.local_in,
+            self.h.in_extent,
+            self.w.in_extent,
+            self.h.out_extent,
+            self.w.out_extent,
+            axis(&self.h),
+            axis(&self.w)
         )
     }
 }
 
-/// Rebuild `g` as a width-`w_local` strip graph: every activation tensor
-/// narrows to `w_local` columns and every op's width-axis trip count
-/// follows. Weights (and therefore per-node compute structure) are
-/// untouched — the strip design reuses the same resident ROMs across
-/// tiles.
-pub fn retile_width(g: &ModelGraph, w_local: usize) -> Result<ModelGraph> {
-    ensure!(w_local >= 1, "strip width must be positive");
-    let (_, width) = check_tilable(g)?;
-    ensure!(w_local <= width, "strip width {w_local} exceeds map width {width}");
+/// Per-tensor local `[H, W]` extents of the cell graph whose input is
+/// `local_h × local_w` — forward window arithmetic over the op DAG
+/// (`None` for weights). Shared by [`rewindow`] and the tiling cost
+/// model's per-cell BRAM bounds.
+pub fn local_extents(
+    g: &ModelGraph,
+    local_h: usize,
+    local_w: usize,
+) -> Result<Vec<Option<[usize; 2]>>> {
+    let order = g.toposort()?;
+    let mut ext: Vec<Option<[usize; 2]>> = vec![None; g.tensors.len()];
+    for t in &g.tensors {
+        if t.kind == TensorKind::Input {
+            ext[t.id.0] = Some([local_h, local_w]);
+        }
+    }
+    for &oi in &order {
+        let op = &g.ops[oi];
+        let mut in_ext = None;
+        for &inp in &op.inputs {
+            if g.tensor(inp).kind == TensorKind::Weight {
+                continue;
+            }
+            let e = ext[inp.0]
+                .with_context(|| format!("op {}: input extent unknown", op.name))?;
+            match in_ext {
+                None => in_ext = Some(e),
+                Some(prev) => ensure!(
+                    prev == e,
+                    "op {}: activation inputs disagree on local extents",
+                    op.name
+                ),
+            }
+        }
+        let in_ext = in_ext.with_context(|| format!("op {} has no activation input", op.name))?;
+        let mut out = [0usize; 2];
+        for ax in [AXIS_H, AXIS_W] {
+            let w = op_axis_window(op, ax)?;
+            out[ax] = w
+                .out_extent(in_ext[ax])
+                .with_context(|| format!("op {} axis {ax} at local extents", op.name))?;
+        }
+        ext[op.output.0] = Some(out);
+    }
+    Ok(ext)
+}
+
+/// Rebuild `g` as a cell graph on a `local_h × local_w` input window:
+/// every activation tensor's spatial extents follow the per-op window
+/// arithmetic, and every op's spatial trip counts follow its output
+/// tensor. Weights (and therefore per-node compute structure) are
+/// untouched — the cell design reuses the same resident ROMs across all
+/// grid cells.
+pub fn rewindow(g: &ModelGraph, local_h: usize, local_w: usize) -> Result<ModelGraph> {
+    ensure!(local_h >= 1 && local_w >= 1, "cell extents must be positive");
+    let geom = check_tilable(g)?;
+    ensure!(
+        local_h <= geom.in_extent[AXIS_H] && local_w <= geom.in_extent[AXIS_W],
+        "cell {local_h}x{local_w} exceeds the {}x{} map",
+        geom.in_extent[AXIS_H],
+        geom.in_extent[AXIS_W]
+    );
+    let ext = local_extents(g, local_h, local_w)?;
     let mut s = g.clone();
-    s.name = format!("{}_w{}", g.name, w_local);
+    s.name = format!("{}_c{}x{}", g.name, local_h, local_w);
     for t in &mut s.tensors {
         if t.kind != TensorKind::Weight {
-            t.ty.shape[1] = w_local;
+            let e = ext[t.id.0].with_context(|| format!("tensor {} unreached", t.name))?;
+            t.ty.shape[0] = e[0];
+            t.ty.shape[1] = e[1];
         }
     }
     for op in &mut s.ops {
-        // The loop dimension indexing the output's width axis (axis 1 of
-        // the rank-3 map) carries the new trip count.
-        let w_dim = {
-            let out_map = op.indexing_maps.last().context("op without maps")?;
-            ensure!(
-                out_map.results.len() == 3,
-                "op {}: rank-{} output is not a feature map",
-                op.name,
-                out_map.results.len()
-            );
-            out_map.results[1]
+        let e = ext[op.output.0].context("op output unreached")?;
+        for ax in [AXIS_H, AXIS_W] {
+            let d = op
+                .indexing_maps
+                .last()
+                .context("op without maps")?
+                .results[ax]
                 .single_dim()
-                .with_context(|| format!("op {}: output width axis must be a plain dim", op.name))?
-        };
-        op.dims[w_dim] = w_local;
+                .with_context(|| format!("op {}: output axis {ax} not a plain dim", op.name))?;
+            op.dims[d] = e[ax];
+        }
     }
     s.validate()
-        .with_context(|| format!("retiled strip graph (width {w_local}) is inconsistent"))?;
+        .with_context(|| format!("cell graph ({local_h}x{local_w}) is inconsistent"))?;
     Ok(s)
 }
 
@@ -159,80 +369,104 @@ mod tests {
     use crate::ir::builder::models;
 
     #[test]
-    fn two_strip_plan_geometry() {
-        let g = models::cascade(32, 8, 8); // halo 2
-        let p = TilePlan::build(&g, 2).unwrap();
-        assert_eq!(p.halo, 2);
-        assert_eq!(p.tile_width, 16);
-        assert_eq!(p.local_width, 20);
-        assert_eq!(p.tiles.len(), 2);
+    fn width_strip_grid_matches_stride1_geometry() {
+        // 1 x 2 grid over the stride-1 cascade (halo 2 per side): the
+        // classic width-strip plan falls out of the grid machinery.
+        let g = models::cascade(32, 8, 8);
+        let grid = TileGrid::build(&g, 1, 2).unwrap();
+        assert_eq!(grid.n_cells(), 2);
+        assert_eq!(grid.h.local_in, 32, "single row segment spans the map");
+        assert_eq!(grid.w.core, 16);
+        assert_eq!(grid.w.local_in, 20);
+        assert_eq!(grid.w.local_out, 20);
         // left strip starts at the true border; right strip shifts inward
-        assert_eq!(p.tiles[0].in_lo, 0);
-        assert_eq!(p.tiles[0].crop_lo(), 0);
-        assert_eq!(p.tiles[1].in_lo, 12);
-        assert_eq!(p.tiles[1].crop_lo(), 4);
-        // every window stays inside the map
-        for t in &p.tiles {
-            assert!(t.in_lo + p.local_width <= p.width);
+        assert_eq!(grid.w.segs[0].in_lo, 0);
+        assert_eq!(grid.w.segs[0].crop_lo, 0);
+        assert_eq!(grid.w.segs[1].in_lo, 12);
+        assert_eq!(grid.w.segs[1].crop_lo, 4);
+        for sg in &grid.w.segs {
+            assert!(sg.in_lo + grid.w.local_in <= grid.w.in_extent);
         }
     }
 
     #[test]
-    fn interior_strips_have_full_halo_margin() {
+    fn interior_segments_have_full_halo_margin() {
         let g = models::conv_relu(64, 8, 8); // halo 1
-        let p = TilePlan::build(&g, 4).unwrap();
-        assert_eq!(p.local_width, 18);
-        for t in &p.tiles {
-            // the kept core never sits closer than `halo` to a fake edge
-            let left_true = t.in_lo == 0;
-            let right_true = t.in_lo + p.local_width == p.width;
+        let grid = TileGrid::build(&g, 1, 4).unwrap();
+        let a = &grid.w;
+        assert_eq!(a.local_in, 18);
+        for sg in &a.segs {
+            let left_true = sg.in_lo == 0;
+            let right_true = sg.in_lo + a.local_in == a.in_extent;
             if !left_true {
-                assert!(t.crop_lo() >= p.halo, "tile {}", t.index);
+                assert!(a.cone.scale * sg.crop_lo >= a.cone.lo, "seg {}", sg.index);
             }
             if !right_true {
                 assert!(
-                    p.local_width - (t.crop_lo() + t.core_width()) >= p.halo,
-                    "tile {}",
-                    t.index
+                    a.cone.scale * (sg.crop_lo + a.core - 1) + a.cone.hi <= a.local_in - 1,
+                    "seg {}",
+                    sg.index
                 );
             }
         }
     }
 
     #[test]
-    fn cores_partition_the_width() {
+    fn cores_partition_both_axes() {
         let g = models::conv_relu(32, 8, 8);
-        for n in [1usize, 2, 4, 8] {
-            let p = TilePlan::build(&g, n).unwrap();
-            let mut covered = 0;
-            for t in &p.tiles {
-                assert_eq!(t.out_lo, covered);
-                covered = t.out_hi;
+        for (r, c) in [(1usize, 2usize), (2, 1), (2, 2), (4, 8), (8, 8)] {
+            let grid = TileGrid::build(&g, r, c).unwrap();
+            for a in [&grid.h, &grid.w] {
+                let mut covered = 0;
+                for sg in &a.segs {
+                    assert_eq!(sg.out_lo, covered, "{}", a.label);
+                    covered += a.core;
+                }
+                assert_eq!(covered, a.out_extent, "{}", a.label);
             }
-            assert_eq!(covered, p.width);
         }
     }
 
     #[test]
-    fn bad_tile_counts_rejected() {
-        let g = models::conv_relu(32, 8, 8);
-        assert!(TilePlan::build(&g, 3).is_err(), "3 does not divide 32");
-        assert!(TilePlan::build(&g, 0).is_err());
-        // 32 strips of core 1 + halo 2 = 3 > ... still narrower than 32; but
-        // 16 tiles: core 2 + 2 = 4 <= 32, fine. Degenerate overlap is allowed
-        // as long as strips are narrower than the map.
-        assert!(TilePlan::build(&g, 16).is_ok());
+    fn strided_grid_aligns_windows_to_the_stride_lattice() {
+        // conv -> pool(2) -> conv at 64: scale 2, cone (3, 4).
+        let g = models::conv_pool_conv(64, 8);
+        let grid = TileGrid::build(&g, 1, 2).unwrap();
+        let a = &grid.w;
+        assert_eq!(a.cone.scale, 2);
+        assert_eq!((a.cone.lo, a.cone.hi), (3, 4));
+        assert_eq!(a.out_extent, 32);
+        assert_eq!(a.core, 16);
+        // local_in = 2*16 + 4 + 4 (halo rounded to stride multiples)
+        assert_eq!(a.local_in, 40);
+        assert_eq!(a.local_out, 32 - (64 - 40) / 2);
+        for sg in &a.segs {
+            assert_eq!(sg.in_lo % 2, 0, "origin off the stride lattice");
+            assert!(sg.in_lo + a.local_in <= a.in_extent);
+        }
+        // the right segment shifts inward and crops past the fake edge
+        assert_eq!(a.segs[1].in_lo, 64 - 40);
+        assert_eq!(a.segs[1].crop_lo, 16 - (64 - 40) / 2);
     }
 
     #[test]
-    fn retile_width_rebuilds_consistent_strip() {
+    fn bad_cell_counts_rejected() {
+        let g = models::conv_relu(32, 8, 8);
+        assert!(TileGrid::build(&g, 1, 3).is_err(), "3 does not divide 32");
+        assert!(TileGrid::build(&g, 3, 1).is_err());
+        assert!(TileGrid::build(&g, 0, 2).is_err());
+        assert!(TileGrid::build(&g, 16, 16).is_ok());
+    }
+
+    #[test]
+    fn rewindow_rebuilds_consistent_cell_graph() {
         let g = models::cascade(32, 8, 8);
-        let s = retile_width(&g, 20).unwrap();
+        let s = rewindow(&g, 24, 20).unwrap();
         s.validate().unwrap();
-        assert_eq!(s.inputs()[0].ty.shape, vec![32, 20, 8]);
-        assert_eq!(s.outputs()[0].ty.shape, vec![32, 20, 8]);
+        assert_eq!(s.inputs()[0].ty.shape, vec![24, 20, 8]);
+        assert_eq!(s.outputs()[0].ty.shape, vec![24, 20, 8]);
         for op in &s.ops {
-            // conv dims: [h, w, f, k, k, c]; elementwise dims: [h, w, c]
+            assert_eq!(op.dims[0], 24, "op {}", op.name);
             assert_eq!(op.dims[1], 20, "op {}", op.name);
         }
         // weights untouched
@@ -243,10 +477,35 @@ mod tests {
     }
 
     #[test]
-    fn retile_residual_diamond() {
+    fn rewindow_propagates_strided_shapes() {
+        let g = models::tiny_cnn(32, 4, 8);
+        let s = rewindow(&g, 20, 12).unwrap();
+        s.validate().unwrap();
+        assert_eq!(s.inputs()[0].ty.shape, vec![20, 12, 4]);
+        // 20x12 -> conv (same) -> pool/2 -> 10x6 -> conv -> pool/2 -> 5x3
+        assert_eq!(s.outputs()[0].ty.shape, vec![5, 3, 8]);
+        // odd local extents that break pool divisibility are rejected
+        assert!(rewindow(&g, 20, 13).is_err());
+    }
+
+    #[test]
+    fn rewindow_residual_diamond() {
         let g = models::residual(16, 8, 8);
-        let s = retile_width(&g, 12).unwrap();
+        let s = rewindow(&g, 16, 12).unwrap();
         s.validate().unwrap();
         assert_eq!(s.outputs()[0].ty.shape, vec![16, 12, 8]);
+    }
+
+    #[test]
+    fn local_extents_follow_the_window_chain() {
+        let g = models::conv_pool_conv(64, 8);
+        let ext = local_extents(&g, 64, 40).unwrap();
+        let at = |name: &str| {
+            let op = g.op(name).unwrap();
+            ext[op.output.0].unwrap()
+        };
+        assert_eq!(at("conv0"), [64, 40]);
+        assert_eq!(at("pool0"), [32, 20]);
+        assert_eq!(at("conv1"), [32, 20]);
     }
 }

@@ -183,13 +183,13 @@ fn prop_paper_kernels_solver_bram_is_design_bram_on_kv260() {
             "{name}@{size}: solver and design disagree"
         );
     }
-    // tiled vgg3@512 (estimate-only scale): same invariant on the strip
+    // tiled vgg3@512 (estimate-only scale): same invariant on the cell
     let g = models::vgg_block(512, 256, 3);
     let tc = ming::tiling::compile_tiled(&g, &DseConfig::new(dev.clone())).unwrap();
     assert_eq!(
         tc.solution.bram_used,
-        ming::resources::bram::design_bram(&tc.strip),
-        "tiled strip: solver and design disagree"
+        ming::resources::bram::design_bram(&tc.cell),
+        "tiled cell: solver and design disagree"
     );
     assert!(tc.solution.bram_used <= dev.bram18k);
 }
@@ -263,6 +263,117 @@ fn prop_all_frameworks_functionally_identical() {
             outs.push(rep.output);
         }
         outs.windows(2).all(|w| w[0] == w[1])
+    });
+}
+
+/// Generate a random grid-tilable stride/kernel chain: 1-3 same-padded
+/// 3x3 conv stages interleaved with up to two 2x2 stride-2 max-pools on
+/// a power-of-two input (so every pool divides exactly).
+fn random_stride_chain(g: &mut Gen) -> ModelGraph {
+    let rng = &mut g.rng;
+    // 32 keeps simulation cheap while guaranteeing that even the deepest
+    // chain's halo (two pools + three convs -> up to ~20 input columns)
+    // leaves at least one buildable grid (1x4 over the 8-wide output)
+    let n = 32usize;
+    let c = 1usize << rng.below(3); // 1/2/4
+    let mut b = GraphBuilder::new(format!("chain{}", g.case));
+    let x = b.input("x", vec![n, n, c], DType::I8);
+    let mut cur = x;
+    let mut cc = c;
+    let mut extent = n;
+    let mut pools = 0;
+    let stages = 1 + rng.below(3);
+    for li in 0..stages {
+        let f = 1usize << rng.below(3);
+        let w = b.det_weight(&format!("w{li}"), vec![f, 3, 3, cc], 3000 + li);
+        let acc = b.conv2d(&format!("conv{li}"), cur, w, 1, 1);
+        cur = b.relu_requant(&format!("rr{li}"), acc);
+        cc = f;
+        if pools < 2 && extent >= 8 && rng.chance(1, 2) {
+            cur = b.maxpool2d(&format!("pool{li}"), cur, 2, 2);
+            extent /= 2;
+            pools += 1;
+        }
+    }
+    b.mark_output(cur);
+    let g = b.finish();
+    g.validate().expect("generator must produce valid graphs");
+    g
+}
+
+/// Candidate grids for a chain's output extents: small divisors first.
+fn candidate_grids(g: &ModelGraph) -> Vec<(usize, usize)> {
+    let out = &g.outputs()[0].ty.shape;
+    let (h, w) = (out[0], out[1]);
+    [(1usize, 2usize), (2, 1), (2, 2), (1, 4), (4, 4)]
+        .into_iter()
+        .filter(|&(r, c)| h % r == 0 && w % c == 0)
+        .collect()
+}
+
+#[test]
+fn prop_grid_halos_cover_every_dependency_cone() {
+    // For every cell of every buildable grid over random stride/kernel
+    // chains: each kept output's dependency cone either lies entirely
+    // inside the genuinely loaded input window, or pokes out only past
+    // a *true* image border (where local zero-padding equals global
+    // padding). This is the invariant that makes tiled execution exact.
+    use ming::tiling::{check_tilable, TileGrid};
+    forall("grid halo coverage", 40, random_stride_chain, |g| {
+        let geom = check_tilable(g).expect("generated chains are tilable");
+        for (rows, cols) in candidate_grids(g) {
+            let Ok(grid) = TileGrid::build(g, rows, cols) else {
+                continue; // halo too fat for this split: rejection is safe
+            };
+            for (ax, a) in [(0usize, &grid.h), (1usize, &grid.w)] {
+                let cone = geom.cone[ax];
+                for sg in &a.segs {
+                    for o in sg.out_lo..sg.out_lo + a.core {
+                        let need_lo = (cone.scale * o) as i64 - cone.lo as i64;
+                        let need_hi = (cone.scale * o + cone.hi) as i64;
+                        let win_lo = sg.in_lo as i64;
+                        let win_hi = (sg.in_lo + a.local_in) as i64 - 1;
+                        let left_ok = need_lo >= win_lo || sg.in_lo == 0;
+                        let right_ok = need_hi <= win_hi
+                            || sg.in_lo + a.local_in == a.in_extent;
+                        if !(left_ok && right_ok) {
+                            return false;
+                        }
+                    }
+                }
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_tiled_stride2_chains_are_bit_exact() {
+    // Random pooled chains: the grid-tiled simulation must reproduce
+    // the untiled output bit-exactly for every buildable grid. (The old
+    // width-strip subsystem *rejected* stride-2 pooling outright; this
+    // is the inverted contract.)
+    use ming::dse::ilp::DseConfig;
+    use ming::tiling::{compile_tiled_fixed, simulate_tiled};
+    let dev = DeviceSpec::kv260();
+    forall("tiled stride chains bit-exact", 12, random_stride_chain, |g| {
+        let x = det_input(g, 7);
+        let d = build_streaming_design(g).unwrap();
+        let want = simulate(&d, &x, SimMode::Dataflow).unwrap().expect_complete().output;
+        let mut checked = 0;
+        for (rows, cols) in candidate_grids(g) {
+            let Ok(tc) = compile_tiled_fixed(g, &DseConfig::new(dev.clone()), rows, cols)
+            else {
+                continue;
+            };
+            let rep = simulate_tiled(&tc, &x).unwrap();
+            if rep.output != want {
+                return false;
+            }
+            checked += 1;
+        }
+        // at least one grid must be buildable for every generated chain
+        checked > 0
     });
 }
 
