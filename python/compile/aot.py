@@ -30,6 +30,47 @@ from jax._src.lib import xla_client as xc
 from . import model
 
 
+def scale_out_args(design_cache=None, workers=None, shard=None, spool=None):
+    """The scale-out flag tail shared by every emitted `ming` command:
+    pass-through of the Rust CLI's design-cache / worker-pool / shard /
+    spool flags (see `rust/src/main.rs`). Returns a flat argv fragment.
+    """
+    argv = []
+    if design_cache:
+        argv += ["--design-cache", str(design_cache)]
+    if workers:
+        argv += ["--workers", str(workers)]
+    if shard:
+        argv += ["--shard", str(shard)]
+    if spool:
+        argv += ["--spool", str(spool)]
+    return argv
+
+
+def ming_import_argv(model_path, device=None, **scale_out):
+    """`ming import` invocation for one emitted model JSON, carrying the
+    scale-out flags through (the design cache makes repeat imports of
+    the same model/device pair skip the DSE entirely)."""
+    argv = ["ming", "import", "--model", str(model_path)]
+    if device:
+        argv += ["--device", device]
+    argv += scale_out_args(**scale_out)
+    return argv
+
+
+def ming_sweep_argv(device=None, estimate_only=False, **scale_out):
+    """`ming table2` sweep invocation with the scale-out flags passed
+    through; with --shard/--spool this is one fan-out slice of the sweep
+    (stitch with `ming merge-sweep --spool <dir>`)."""
+    argv = ["ming", "table2"]
+    if device:
+        argv += ["--device", device]
+    if estimate_only:
+        argv += ["--estimate-only"]
+    argv += scale_out_args(**scale_out)
+    return argv
+
+
 def to_hlo_text(lowered) -> str:
     mlir_mod = lowered.compiler_ir("stablehlo")
     comp = xc._xla.mlir.mlir_module_to_xla_computation(
@@ -80,7 +121,35 @@ def main() -> int:
         help="tile_height hint carried in the emitted model JSON "
         "(upgrades the tiling metadata to the 2-D grid form)",
     )
+    ap.add_argument(
+        "--design-cache",
+        default=None,
+        help="pass-through: --design-cache dir for the printed `ming` "
+        "commands (content-addressed design reuse across runs/shards)",
+    )
+    ap.add_argument(
+        "--workers",
+        type=int,
+        default=None,
+        help="pass-through: --workers N for the printed `ming` sweep command",
+    )
+    ap.add_argument(
+        "--shard",
+        default=None,
+        help="pass-through: --shard i/n for the printed `ming` sweep command",
+    )
+    ap.add_argument(
+        "--spool",
+        default=None,
+        help="pass-through: --spool dir for the printed `ming` sweep command",
+    )
     args = ap.parse_args()
+    scale_out = dict(
+        design_cache=args.design_cache,
+        workers=args.workers,
+        shard=args.shard,
+        spool=args.spool,
+    )
 
     os.makedirs(args.out_dir, exist_ok=True)
     wrote = 0
@@ -102,6 +171,9 @@ def main() -> int:
                 with open(mpath, "w") as f:
                     json.dump(doc, f, indent=1, sort_keys=True)
                 print(f"[aot] wrote {mpath}")
+                print("[aot] compile with: "
+                      + " ".join(ming_import_argv(
+                          mpath, design_cache=args.design_cache)))
         hlo_path = os.path.join(args.out_dir, f"{key}.hlo.txt")
         meta_path = os.path.join(args.out_dir, f"{key}.meta")
         if not args.force and os.path.exists(hlo_path):
@@ -131,6 +203,11 @@ def main() -> int:
             )
         print(f"[aot] wrote {hlo_path} ({len(text)} chars)")
         wrote += 1
+    if args.shard or args.spool or args.design_cache:
+        print("[aot] sweep with:   "
+              + " ".join(ming_sweep_argv(estimate_only=True, **scale_out)))
+        if args.spool:
+            print(f"[aot] then merge:   ming merge-sweep --spool {args.spool}")
     print(f"[aot] done ({wrote} lowered)")
     return 0
 

@@ -114,3 +114,36 @@ def test_conv_geometry_matches_kernel_constants():
     assert conv["kernel"] == model.CONV_K
     assert conv["pad"] == model.CONV_K // 2
     assert conv["stride"] == 1
+
+
+def test_scale_out_flag_passthrough():
+    # The aot driver forwards the Rust CLI's scale-out flags verbatim
+    # (rust/src/main.rs: --design-cache / --workers / --shard / --spool).
+    from compile import aot
+
+    assert aot.scale_out_args() == []
+    argv = aot.scale_out_args(
+        design_cache="/tmp/dc", workers=4, shard="1/2", spool="/tmp/spool"
+    )
+    assert argv == [
+        "--design-cache", "/tmp/dc",
+        "--workers", "4",
+        "--shard", "1/2",
+        "--spool", "/tmp/spool",
+    ]
+
+    imp = aot.ming_import_argv(
+        "out/conv_relu_32.model.json", device="kv260", design_cache="/tmp/dc"
+    )
+    assert imp[:4] == ["ming", "import", "--model", "out/conv_relu_32.model.json"]
+    assert imp[4:] == ["--device", "kv260", "--design-cache", "/tmp/dc"]
+
+    sweep = aot.ming_sweep_argv(
+        estimate_only=True, shard="0/2", spool="/tmp/spool", design_cache="/tmp/dc"
+    )
+    assert sweep[:2] == ["ming", "table2"]
+    assert "--estimate-only" in sweep
+    # shard/spool/cache ride through in the documented order
+    assert sweep[-6:] == [
+        "--design-cache", "/tmp/dc", "--shard", "0/2", "--spool", "/tmp/spool",
+    ]

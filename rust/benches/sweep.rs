@@ -1,0 +1,76 @@
+//! Bench: sweep wall-time with and without the content-addressed design
+//! cache, emitting `BENCH_sweep.json` (wall-time + cache hit rate) for
+//! CI tracking.
+//!
+//! Run: `cargo bench --bench sweep`
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use ming::coordinator::cache::DesignCache;
+use ming::coordinator::service::{CompileService, SweepConfig};
+use ming::coordinator::WorkerPool;
+use ming::resources::device::DeviceSpec;
+use ming::util::bench::fmt_dur;
+
+fn main() {
+    let mut cfg = SweepConfig::table2(DeviceSpec::kv260());
+    cfg.estimate_only = true; // wall-time here is compile+DSE, not simulation
+
+    // cold: empty cache, every problem solved for real
+    let cache = Arc::new(DesignCache::in_memory());
+    let svc = CompileService::new(WorkerPool::default_size()).with_cache(cache.clone());
+    let t0 = Instant::now();
+    let cold_results = svc.run_sweep(&cfg);
+    let cold = t0.elapsed();
+    let cold_stats = cache.stats();
+    assert!(cold_results.iter().all(|r| r.is_ok()), "table2 estimate sweep must succeed");
+    assert!(cold_stats.solves > 0, "cold sweep must solve");
+
+    // warm: same cache, the acceptance invariant is zero ILP solves
+    let t1 = Instant::now();
+    let warm_results = svc.run_sweep(&cfg);
+    let warm = t1.elapsed();
+    let warm_stats = cache.stats();
+    assert_eq!(warm_results.len(), cold_results.len());
+    assert_eq!(
+        warm_stats.solves, cold_stats.solves,
+        "warm sweep must perform zero ILP solves"
+    );
+
+    let speedup = cold.as_secs_f64() / warm.as_secs_f64().max(1e-9);
+    // hit rate of the *warm run alone* (counter deltas) — the cumulative
+    // lifetime rate would be diluted by the cold run's mandatory misses
+    let warm_hits = warm_stats.hits - cold_stats.hits;
+    let warm_misses = warm_stats.misses - cold_stats.misses;
+    let hit_rate = warm_hits as f64 / (warm_hits + warm_misses).max(1) as f64;
+    println!(
+        "sweep (table2, estimate-only, {} jobs, {} workers):",
+        cold_results.len(),
+        svc.workers()
+    );
+    println!("  cold: {:>10}  (ilp solves: {})", fmt_dur(cold), cold_stats.solves);
+    println!(
+        "  warm: {:>10}  (ilp solves: +{}, {warm_hits} hits / {warm_misses} misses, \
+         cache speedup {speedup:.1}x)",
+        fmt_dur(warm),
+        warm_stats.solves - cold_stats.solves
+    );
+    println!("  {}", cache.summary());
+
+    let json = format!(
+        "{{\"bench\":\"sweep\",\"jobs\":{},\"workers\":{},\
+         \"cold_ms\":{:.3},\"warm_ms\":{:.3},\"cache_speedup\":{speedup:.2},\
+         \"warm_hits\":{warm_hits},\"warm_misses\":{warm_misses},\
+         \"stores\":{},\"ilp_solves_cold\":{},\
+         \"ilp_solves_warm\":0,\"warm_hit_rate\":{hit_rate:.4}}}",
+        cold_results.len(),
+        svc.workers(),
+        cold.as_secs_f64() * 1e3,
+        warm.as_secs_f64() * 1e3,
+        warm_stats.stores,
+        cold_stats.solves,
+    );
+    std::fs::write("BENCH_sweep.json", format!("{json}\n")).expect("writing BENCH_sweep.json");
+    println!("wrote BENCH_sweep.json");
+}

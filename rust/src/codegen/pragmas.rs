@@ -57,6 +57,10 @@ pub enum Pragma {
     Unroll { factor: Option<u64> },
     /// `#pragma HLS STREAM variable=v depth=d`
     Stream { var: String, depth: usize },
+    /// `#pragma HLS STREAM variable=v off` — pin an array crossing
+    /// DATAFLOW processes to a PIPO (ping-pong two-bank) buffer instead
+    /// of a FIFO, so whole-window producers/consumers overlap.
+    StreamOff { var: String },
     /// `#pragma HLS ARRAY_PARTITION variable=v <kind> factor=f dim=d`
     ArrayPartition { var: String, kind: PartitionKind, factor: u64, dim: u32 },
     /// `#pragma HLS BIND_STORAGE variable=v type={ram_1p|rom_1p} impl=<impl>`
@@ -76,6 +80,9 @@ impl fmt::Display for Pragma {
             Pragma::Unroll { factor: None } => write!(f, "#pragma HLS UNROLL"),
             Pragma::Stream { var, depth } => {
                 write!(f, "#pragma HLS STREAM variable={var} depth={depth}")
+            }
+            Pragma::StreamOff { var } => {
+                write!(f, "#pragma HLS STREAM variable={var} off")
             }
             Pragma::ArrayPartition { var, kind, factor, dim } => write!(
                 f,

@@ -1,0 +1,626 @@
+//! The design cache: content-addressed reuse of solved designs.
+//!
+//! Every DSE problem — a `(ModelGraph, DeviceSpec, DseConfig)` triple —
+//! is keyed by its [`crate::ir::fingerprint::problem_fingerprint`]. A
+//! cache entry stores the *solution*, not the design: the per-node
+//! [`NodeTiming`] assignment (plus the winning grid shape for tiled
+//! outcomes). Rebuilding from a hit is deterministic and cheap — apply
+//! the timings, re-derive buffers, size FIFOs — and reproduces the
+//! solved design byte-for-byte (the determinism property tests in
+//! `tests/scale_out.rs` compare `Debug` renderings and emitted HLS), so
+//! storing timings instead of megabytes of design is both smaller and
+//! safer: a cache can never hand back storage the resource model would
+//! not re-derive.
+//!
+//! Two tiers:
+//! * **in-memory** — a mutexed map, shared by all worker threads of one
+//!   process (one sweep solves each distinct problem once);
+//! * **JSON-on-disk** (`--design-cache <dir>`) — one file per entry
+//!   named by the hex fingerprint, written atomically (tmp + rename),
+//!   so shards on different processes/machines share solutions and a
+//!   re-run sweep performs **zero** ILP solves.
+//!
+//! Failure policy: a corrupt/truncated/stale cache file, a timing that
+//! is not on the node's unroll lattice, or a rebuilt design that busts
+//! the device budget all *degrade to a miss* (counted in
+//! [`CacheStats::corrupt`]) and the solver runs normally — the cache
+//! can slow a run down, never wrong it.
+//!
+//! Layering note: this module lives in the coordinator (it is sweep
+//! infrastructure) but is consulted from `dse::ilp` and
+//! `tiling::schedule` — a deliberate upward module reference, mirroring
+//! the pre-existing `dse ↔ tiling` mutual dependency. If a future
+//! refactor wants strict layering, the solver-facing half
+//! ([`solve_cached`] / [`apply_cached_timings`] / [`rebuild_compiled`])
+//! can split into a `dse::cache` with this module re-exporting it.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::dataflow::build::{build_cell_design, build_streaming_design, refresh_buffers};
+use crate::dataflow::design::Design;
+use crate::dataflow::node::NodeTiming;
+use crate::dse::fifo::size_fifos;
+use crate::dse::ilp::{solve, Compiled, DseConfig, DseSolution};
+use crate::dse::space::{unroll_timings, Candidate};
+use crate::ir::fingerprint::{hex, problem_fingerprint};
+use crate::ir::graph::ModelGraph;
+use crate::ir::json::Json;
+use crate::resources::model::ResourceModel;
+use crate::tiling::{TileGrid, TiledCompilation};
+
+/// On-disk schema version; entries with another version are misses.
+const CACHE_VERSION: u64 = 1;
+
+/// One cached solution, keyed by a problem fingerprint.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CachedDesign {
+    /// The untiled streaming design was feasible: per-node timings in
+    /// node (= topological) order.
+    Flat { timings: Vec<NodeTiming> },
+    /// The workload only fit grid-tiled: the winning grid shape plus
+    /// the cell design's per-node timings.
+    Tiled { rows: usize, cols: usize, timings: Vec<NodeTiming> },
+}
+
+/// Counters accumulated over a cache's lifetime.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Lookups that found a usable entry.
+    pub hits: u64,
+    /// Lookups that found nothing.
+    pub misses: u64,
+    /// Entries written (memory and, when configured, disk).
+    pub stores: u64,
+    /// Entries that existed but could not be used (parse error, lattice
+    /// mismatch, budget violation) — each also ran the solver.
+    pub corrupt: u64,
+    /// Real ILP solves performed through the cached entry points. A
+    /// fully warm cache keeps this at zero across an entire sweep.
+    pub solves: u64,
+}
+
+impl CacheStats {
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// Thread-safe design cache (wrap in `Arc` to share across workers).
+pub struct DesignCache {
+    dir: Option<PathBuf>,
+    mem: Mutex<HashMap<u64, CachedDesign>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    stores: AtomicU64,
+    corrupt: AtomicU64,
+    solves: AtomicU64,
+}
+
+impl std::fmt::Debug for DesignCache {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("DesignCache")
+            .field("dir", &self.dir)
+            .field("stats", &self.stats())
+            .finish()
+    }
+}
+
+impl DesignCache {
+    /// Process-local cache (no persistence).
+    pub fn in_memory() -> Self {
+        Self {
+            dir: None,
+            mem: Mutex::new(HashMap::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            stores: AtomicU64::new(0),
+            corrupt: AtomicU64::new(0),
+            solves: AtomicU64::new(0),
+        }
+    }
+
+    /// Disk-backed cache rooted at `dir` (created if absent). Entries
+    /// are shared with every other process pointed at the same dir.
+    pub fn at_dir(dir: impl Into<PathBuf>) -> Result<Self> {
+        let dir = dir.into();
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating design cache dir {}", dir.display()))?;
+        let mut c = Self::in_memory();
+        c.dir = Some(dir);
+        Ok(c)
+    }
+
+    pub fn dir(&self) -> Option<&Path> {
+        self.dir.as_deref()
+    }
+
+    fn entry_path(&self, fp: u64) -> Option<PathBuf> {
+        self.dir.as_ref().map(|d| d.join(format!("{}.json", hex(fp))))
+    }
+
+    /// Look up a fingerprint: memory first, then disk. Counts a hit or
+    /// a miss; unreadable disk entries additionally count as corrupt.
+    pub fn lookup(&self, fp: u64) -> Option<CachedDesign> {
+        if let Some(e) = self.mem.lock().unwrap().get(&fp).cloned() {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Some(e);
+        }
+        if let Some(path) = self.entry_path(fp) {
+            match std::fs::read_to_string(&path) {
+                Ok(text) => match entry_from_json(&text) {
+                    Ok(e) => {
+                        self.mem.lock().unwrap().insert(fp, e.clone());
+                        self.hits.fetch_add(1, Ordering::Relaxed);
+                        return Some(e);
+                    }
+                    Err(_) => {
+                        // corrupt on disk: degrade to a miss
+                        self.corrupt.fetch_add(1, Ordering::Relaxed);
+                    }
+                },
+                // absent: a plain miss; any *other* IO error (permissions,
+                // disk fault) is a health signal operators need to see
+                Err(e) => {
+                    if e.kind() != std::io::ErrorKind::NotFound {
+                        self.corrupt.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        None
+    }
+
+    /// Insert an entry (memory + disk when configured). Disk writes are
+    /// atomic — a concurrent reader sees the old file or the new one,
+    /// never a torn line — and write failures are ignored: persistence
+    /// is an optimization, not a correctness requirement. The tmp name
+    /// carries a process-wide counter on top of the pid so concurrent
+    /// worker threads inserting the same fingerprint (recurring cell
+    /// geometries do collide by design) never share a tmp file.
+    pub fn insert(&self, fp: u64, entry: CachedDesign) {
+        static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
+        if let Some(path) = self.entry_path(fp) {
+            let tmp = path.with_extension(format!(
+                "tmp.{}.{}",
+                std::process::id(),
+                TMP_SEQ.fetch_add(1, Ordering::Relaxed)
+            ));
+            let text = entry_to_json(&entry).render();
+            if std::fs::write(&tmp, text).is_ok() {
+                let _ = std::fs::rename(&tmp, &path);
+            }
+        }
+        self.mem.lock().unwrap().insert(fp, entry);
+        self.stores.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record an entry that a [`Self::lookup`] returned (counting a
+    /// hit) but that could not be applied: demotes that hit to a miss,
+    /// so hit-rate metrics reflect only entries that actually served a
+    /// design. Callers must invoke this at most once per failed lookup.
+    pub fn note_corrupt(&self) {
+        self.corrupt.fetch_add(1, Ordering::Relaxed);
+        self.hits.fetch_sub(1, Ordering::Relaxed);
+        self.misses.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one real ILP solve behind a cached entry point.
+    pub fn count_solve(&self) {
+        self.solves.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            stores: self.stores.load(Ordering::Relaxed),
+            corrupt: self.corrupt.load(Ordering::Relaxed),
+            solves: self.solves.load(Ordering::Relaxed),
+        }
+    }
+
+    /// One-line summary for sweep footers.
+    pub fn summary(&self) -> String {
+        let s = self.stats();
+        format!(
+            "design cache: {} hits / {} misses ({:.0}% hit rate), {} stores, \
+             {} ilp solves, {} corrupt entries",
+            s.hits,
+            s.misses,
+            100.0 * s.hit_rate(),
+            s.stores,
+            s.solves,
+            s.corrupt
+        )
+    }
+}
+
+// ---- JSON encoding ------------------------------------------------------
+
+fn timing_to_json(t: &NodeTiming) -> Json {
+    Json::Arr(vec![
+        Json::Num(t.mac_lanes as f64),
+        Json::Num(t.ii as f64),
+        Json::Num(t.depth as f64),
+        Json::Num(t.unroll_par as f64),
+        Json::Num(t.unroll_red as f64),
+    ])
+}
+
+fn timing_from_json(v: &Json) -> Result<NodeTiming> {
+    let a = v.as_arr()?;
+    ensure!(a.len() == 5, "timing must have 5 fields, got {}", a.len());
+    let f = |i: usize| -> Result<u64> { Ok(a[i].as_usize()? as u64) };
+    Ok(NodeTiming {
+        mac_lanes: f(0)?,
+        ii: f(1)?,
+        depth: f(2)?,
+        unroll_par: f(3)?,
+        unroll_red: f(4)?,
+    })
+}
+
+/// Serialize an entry to its on-disk JSON document.
+pub fn entry_to_json(e: &CachedDesign) -> Json {
+    let mut m = std::collections::BTreeMap::new();
+    m.insert("version".into(), Json::Num(CACHE_VERSION as f64));
+    let timings = |ts: &[NodeTiming]| Json::Arr(ts.iter().map(timing_to_json).collect());
+    match e {
+        CachedDesign::Flat { timings: ts } => {
+            m.insert("kind".into(), Json::Str("flat".into()));
+            m.insert("timings".into(), timings(ts));
+        }
+        CachedDesign::Tiled { rows, cols, timings: ts } => {
+            m.insert("kind".into(), Json::Str("tiled".into()));
+            m.insert("rows".into(), Json::Num(*rows as f64));
+            m.insert("cols".into(), Json::Num(*cols as f64));
+            m.insert("timings".into(), timings(ts));
+        }
+    }
+    Json::Obj(m)
+}
+
+/// Parse an on-disk entry; any deviation from the schema is an error
+/// (which the cache treats as a miss).
+pub fn entry_from_json(text: &str) -> Result<CachedDesign> {
+    let doc = crate::ir::json::parse(text)?;
+    ensure!(
+        doc.get("version")?.as_usize()? as u64 == CACHE_VERSION,
+        "cache entry has an unknown version"
+    );
+    let timings: Vec<NodeTiming> = doc
+        .get("timings")?
+        .as_arr()?
+        .iter()
+        .map(timing_from_json)
+        .collect::<Result<_>>()?;
+    ensure!(!timings.is_empty(), "cache entry has no timings");
+    match doc.get("kind")?.as_str()? {
+        "flat" => Ok(CachedDesign::Flat { timings }),
+        "tiled" => Ok(CachedDesign::Tiled {
+            rows: doc.get("rows")?.as_usize()?,
+            cols: doc.get("cols")?.as_usize()?,
+            timings,
+        }),
+        other => bail!("unknown cache entry kind {other:?}"),
+    }
+}
+
+// ---- applying cached solutions ------------------------------------------
+
+/// Apply a cached per-node timing assignment to a freshly built design,
+/// reproducing exactly what `dse::ilp::solve` would have left behind:
+/// timings set, buffers re-derived, FIFOs sized. Validates the timings
+/// against each node's unroll lattice and the result against the device
+/// budget, so a stale or foreign entry fails here (and the caller
+/// degrades to a real solve) instead of mis-compiling.
+pub fn apply_cached_timings(
+    design: &mut Design,
+    timings: &[NodeTiming],
+    cfg: &DseConfig,
+) -> Result<DseSolution> {
+    ensure!(
+        timings.len() == design.nodes.len(),
+        "cached entry has {} timings for {} nodes",
+        timings.len(),
+        design.nodes.len()
+    );
+    // Reconstruct the solution's per-node candidates (and validate each
+    // timing actually lies on the node's divisor lattice) before any
+    // mutation, while the pristine design can still price them.
+    let (chosen, objective) = {
+        let model = ResourceModel::new(design);
+        let mut chosen = Vec::with_capacity(timings.len());
+        let mut objective = 0u64;
+        for (nid, t) in timings.iter().enumerate() {
+            ensure!(
+                unroll_timings(design, nid).iter().any(|u| u == t),
+                "cached timing for node {} is not on its unroll lattice",
+                design.nodes[nid].name
+            );
+            let mut node = design.nodes[nid].clone();
+            node.timing = *t;
+            let cycles = node.standalone_cycles();
+            objective += cycles;
+            chosen.push(Candidate {
+                unroll_par: t.unroll_par,
+                unroll_red: t.unroll_red,
+                timing: *t,
+                cycles,
+                res: model.node_vec(nid, t),
+            });
+        }
+        (chosen, objective)
+    };
+    for (node, t) in design.nodes.iter_mut().zip(timings) {
+        node.timing = *t;
+    }
+    refresh_buffers(design);
+    size_fifos(design);
+    let resources = ResourceModel::as_built(design);
+    ensure!(
+        resources.dsp <= cfg.device.dsp && resources.bram() <= cfg.device.bram18k,
+        "cached design needs {} DSP / {} BRAM but device {} allows {} / {}",
+        resources.dsp,
+        resources.bram(),
+        cfg.device.name,
+        cfg.device.dsp,
+        cfg.device.bram18k
+    );
+    Ok(DseSolution {
+        chosen,
+        objective,
+        dsp_used: resources.dsp,
+        bram_used: resources.bram(),
+        resources,
+        nodes_explored: 0,
+    })
+}
+
+/// Rebuild a full [`Compiled`] outcome from a cached entry for graph
+/// `g`: the cheap deterministic tail of the pipeline (build + apply),
+/// with **zero** ILP solves and zero grid-lattice search.
+pub fn rebuild_compiled(
+    g: &ModelGraph,
+    cfg: &DseConfig,
+    entry: &CachedDesign,
+) -> Result<Compiled> {
+    match entry {
+        CachedDesign::Flat { timings } => {
+            let mut design = build_streaming_design(g)?;
+            let sol = apply_cached_timings(&mut design, timings, cfg)?;
+            Ok(Compiled::Flat(Box::new(design), sol))
+        }
+        CachedDesign::Tiled { rows, cols, timings } => {
+            let grid = TileGrid::build(g, *rows, *cols)?;
+            let mut cell = build_cell_design(g, grid.h.local_in, grid.w.local_in)?;
+            let out = &cell.graph.outputs()[0].ty.shape;
+            ensure!(
+                out[0] == grid.h.local_out && out[1] == grid.w.local_out,
+                "cached grid {}x{} no longer matches the cell graph",
+                rows,
+                cols
+            );
+            let solution = apply_cached_timings(&mut cell, timings, cfg)?;
+            Ok(Compiled::Tiled(Box::new(TiledCompilation {
+                graph: g.clone(),
+                grid,
+                cell,
+                solution,
+            })))
+        }
+    }
+}
+
+/// The cache entry describing an already-compiled outcome.
+pub fn compiled_entry(c: &Compiled) -> CachedDesign {
+    match c {
+        Compiled::Flat(d, _) => {
+            CachedDesign::Flat { timings: d.nodes.iter().map(|n| n.timing).collect() }
+        }
+        Compiled::Tiled(tc) => CachedDesign::Tiled {
+            rows: tc.grid.rows(),
+            cols: tc.grid.cols(),
+            timings: tc.cell.nodes.iter().map(|n| n.timing).collect(),
+        },
+    }
+}
+
+/// Solve one design's DSE through the config's cache: a hit applies the
+/// cached timings (no ILP run), a miss runs the real solver and stores
+/// the solution under the design's graph fingerprint. With no cache
+/// configured this is exactly [`crate::dse::ilp::solve`].
+///
+/// This is the entry point the tile-grid search uses per candidate
+/// cell: identical cell geometries — which recur across grid candidates
+/// of one search *and* across workloads sharing a chain shape — are
+/// solved once ever.
+pub fn solve_cached(design: &mut Design, cfg: &DseConfig) -> Result<DseSolution> {
+    let Some(cache) = &cfg.cache else {
+        return solve(design, cfg);
+    };
+    let fp = problem_fingerprint(&design.graph, &cfg.device);
+    if let Some(entry) = cache.lookup(fp) {
+        match &entry {
+            CachedDesign::Flat { timings } => {
+                match apply_cached_timings(design, timings, cfg) {
+                    Ok(sol) => return Ok(sol),
+                    Err(_) => cache.note_corrupt(),
+                }
+            }
+            // a tiled entry can never satisfy a flat solve request
+            CachedDesign::Tiled { .. } => cache.note_corrupt(),
+        }
+    }
+    cache.count_solve();
+    let sol = solve(design, cfg)?;
+    cache.insert(
+        fp,
+        CachedDesign::Flat { timings: design.nodes.iter().map(|n| n.timing).collect() },
+    );
+    Ok(sol)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::builder::models;
+    use crate::resources::device::DeviceSpec;
+    use std::sync::Arc;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("ming-cache-test-{}-{}", tag, std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn entry_json_roundtrip() {
+        let flat = CachedDesign::Flat {
+            timings: vec![
+                NodeTiming { mac_lanes: 576, ii: 1, depth: 14, unroll_par: 8, unroll_red: 72 },
+                NodeTiming::default(),
+            ],
+        };
+        let tiled = CachedDesign::Tiled {
+            rows: 2,
+            cols: 4,
+            timings: vec![NodeTiming::default()],
+        };
+        for e in [flat, tiled] {
+            let text = entry_to_json(&e).render();
+            assert_eq!(entry_from_json(&text).unwrap(), e);
+        }
+    }
+
+    #[test]
+    fn corrupt_entries_parse_to_errors_not_panics() {
+        for text in [
+            "",
+            "{",
+            "null",
+            r#"{"version":1}"#,
+            r#"{"version":99,"kind":"flat","timings":[[1,1,4,1,1]]}"#,
+            r#"{"version":1,"kind":"flat","timings":[]}"#,
+            r#"{"version":1,"kind":"warped","timings":[[1,1,4,1,1]]}"#,
+            r#"{"version":1,"kind":"flat","timings":[[1,1,4,1]]}"#,
+            r#"{"version":1,"kind":"tiled","timings":[[1,1,4,1,1]]}"#,
+        ] {
+            assert!(entry_from_json(text).is_err(), "{text:?} must not parse");
+        }
+    }
+
+    #[test]
+    fn hit_miss_and_store_counters() {
+        let c = DesignCache::in_memory();
+        assert!(c.lookup(42).is_none());
+        c.insert(42, CachedDesign::Flat { timings: vec![NodeTiming::default()] });
+        assert!(c.lookup(42).is_some());
+        assert!(c.lookup(43).is_none());
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.stores), (1, 2, 1));
+        assert!((s.hit_rate() - 1.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn note_corrupt_demotes_the_hit_to_a_miss() {
+        let c = DesignCache::in_memory();
+        c.insert(1, CachedDesign::Flat { timings: vec![NodeTiming::default()] });
+        assert!(c.lookup(1).is_some()); // counted as a hit...
+        c.note_corrupt(); // ...until it turns out to be unusable
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.corrupt), (0, 1, 1));
+        assert_eq!(s.hit_rate(), 0.0, "unusable entries serve nothing");
+    }
+
+    #[test]
+    fn disk_cache_roundtrips_across_instances() {
+        let dir = tmp_dir("roundtrip");
+        let timing = NodeTiming { mac_lanes: 8, ii: 1, depth: 7, unroll_par: 8, unroll_red: 1 };
+        let entry = CachedDesign::Tiled { rows: 1, cols: 4, timings: vec![timing] };
+        {
+            let c = DesignCache::at_dir(&dir).unwrap();
+            c.insert(7, entry.clone());
+        }
+        // a *fresh* instance (empty memory tier) must find it on disk
+        let c2 = DesignCache::at_dir(&dir).unwrap();
+        assert_eq!(c2.lookup(7), Some(entry));
+        assert_eq!(c2.stats().hits, 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_disk_entry_degrades_to_miss() {
+        let dir = tmp_dir("corrupt");
+        let c = DesignCache::at_dir(&dir).unwrap();
+        std::fs::write(dir.join(format!("{}.json", hex(9))), "{definitely not json").unwrap();
+        assert!(c.lookup(9).is_none(), "corrupt file must read as a miss");
+        let s = c.stats();
+        assert_eq!(s.misses, 1);
+        assert_eq!(s.corrupt, 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn solve_cached_hits_reproduce_the_solution() {
+        let g = models::conv_relu(32, 8, 8);
+        let cache = Arc::new(DesignCache::in_memory());
+        let cfg = DseConfig::new(DeviceSpec::kv260()).with_cache(cache.clone());
+
+        let mut fresh = build_streaming_design(&g).unwrap();
+        let sol1 = solve_cached(&mut fresh, &cfg).unwrap();
+        assert_eq!(cache.stats().solves, 1);
+
+        let mut cached = build_streaming_design(&g).unwrap();
+        let sol2 = solve_cached(&mut cached, &cfg).unwrap();
+        assert_eq!(cache.stats().solves, 1, "second solve must be a pure hit");
+        assert_eq!(cache.stats().hits, 1);
+        assert_eq!(sol1.objective, sol2.objective);
+        assert_eq!(sol1.resources, sol2.resources);
+        assert_eq!(sol2.nodes_explored, 0, "a hit explores nothing");
+        // byte-identical designs, the determinism property
+        assert_eq!(format!("{fresh:?}"), format!("{cached:?}"));
+    }
+
+    #[test]
+    fn lattice_validation_rejects_foreign_timings() {
+        let g = models::conv_relu(32, 8, 8);
+        let mut d = build_streaming_design(&g).unwrap();
+        let cfg = DseConfig::new(DeviceSpec::kv260());
+        // unroll 5 divides neither the 8-wide parallel trip nor 72
+        let bogus = vec![
+            NodeTiming { mac_lanes: 5, ii: 1, depth: 6, unroll_par: 5, unroll_red: 1 },
+            NodeTiming::default(),
+        ];
+        assert!(apply_cached_timings(&mut d, &bogus, &cfg).is_err());
+        // wrong arity is rejected before anything is applied
+        assert!(apply_cached_timings(&mut d, &[NodeTiming::default()], &cfg).is_err());
+    }
+
+    #[test]
+    fn budget_validation_rejects_oversized_cached_designs() {
+        // A full-unroll timing is on the lattice but cannot fit a
+        // 1-DSP device: the cached apply must refuse, so a cache
+        // populated against a big device never leaks designs onto a
+        // small one (their fingerprints differ anyway — this is the
+        // defense-in-depth layer).
+        let g = models::conv_relu(32, 8, 8);
+        let mut d = build_streaming_design(&g).unwrap();
+        let full = solve(&mut d.clone(), &DseConfig::new(DeviceSpec::kv260())).unwrap();
+        let timings: Vec<NodeTiming> = full.chosen.iter().map(|c| c.timing).collect();
+        let tiny = DseConfig::new(DeviceSpec::kv260().with_dsp_limit(1));
+        assert!(apply_cached_timings(&mut d, &timings, &tiny).is_err());
+    }
+}

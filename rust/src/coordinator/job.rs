@@ -1,8 +1,24 @@
-//! Compile jobs and their results.
+//! Compile jobs and their results, as an explicit staged pipeline:
+//!
+//! ```text
+//!   lower  ──▶  solve  ──▶  estimate  ──▶  simulate
+//!  (graph)    (design,      (utilization,   (cycle-exact run,
+//!             cache-aware)   cycle model)    skipped if estimate-only)
+//! ```
+//!
+//! The stages are public so callers can stop anywhere (the CLI's
+//! `compile` is lower+solve+estimate; sweeps run all four), and so the
+//! solve stage can consult the coordinator's content-addressed design
+//! cache ([`super::cache`]): a job whose `(graph, device)` problem was
+//! already solved — this run, a previous run, or another shard's
+//! process — reuses the design with zero ILP solves.
+
+use std::sync::Arc;
 
 use anyhow::Result;
 
 use crate::baselines::framework::{compile_with, FrameworkKind};
+use crate::dataflow::design::Design;
 use crate::dse::ilp::{solve_with_tiling_fallback, Compiled, DseConfig};
 use crate::ir::builder::models;
 use crate::ir::graph::ModelGraph;
@@ -12,6 +28,8 @@ use crate::resources::report::UtilizationReport;
 use crate::sim::{simulate, SimMode, SimReport};
 use crate::tiling::{simulate_tiled, TiledCompilation};
 use crate::util::prng;
+
+use super::cache::DesignCache;
 
 /// One unit of work for the compile service: lower `kernel`@`size` with
 /// `framework` for `device`, estimate resources, simulate.
@@ -29,9 +47,10 @@ pub struct CompileJob {
 pub struct JobResult {
     pub job: CompileJob,
     pub util: UtilizationReport,
-    /// `None` when `estimate_only`, when the design was grid-tiled (the
-    /// tiled runner stitches its own report), or when compilation itself
-    /// failed fatally (recorded in `error`).
+    /// `None` when `estimate_only` or when compilation itself failed
+    /// fatally (recorded in `error`). Grid-tiled simulations stitch
+    /// their per-cell runs into one report, so flat and tiled cells
+    /// have output parity here.
     pub sim: Option<SimReport>,
     pub cycles: u64,
     /// MACs in the workload (speedup normalization).
@@ -39,6 +58,24 @@ pub struct JobResult {
     /// Number of grid cells the design was tiled into (1 = untiled).
     pub tiles: usize,
     pub error: Option<String>,
+}
+
+/// Output of the solve stage: the design an estimate/simulate stage
+/// consumes. Mirrors [`Compiled`] but also covers baseline strategies
+/// (which have no tiling story and always come back flat).
+pub enum SolvedDesign {
+    Flat(Box<Design>),
+    Tiled(Box<TiledCompilation>),
+}
+
+impl SolvedDesign {
+    /// Grid cells (1 = untiled).
+    pub fn tiles(&self) -> usize {
+        match self {
+            SolvedDesign::Flat(_) => 1,
+            SolvedDesign::Tiled(tc) => tc.grid.n_cells(),
+        }
+    }
 }
 
 impl CompileJob {
@@ -53,68 +90,99 @@ impl CompileJob {
             .collect()
     }
 
-    /// Execute the job (called from worker threads).
-    pub fn run(&self) -> Result<JobResult> {
-        let g = models::paper_kernel(&self.kernel, self.size)?;
-        // MING gets the tile-grid feasibility fallback; the baseline
-        // strategies have no tiling story (the paper's infeasible cells).
-        let design = match self.framework {
-            FrameworkKind::Ming => {
-                let cfg = DseConfig::new(self.device.clone());
-                match solve_with_tiling_fallback(&g, &cfg)? {
-                    Compiled::Flat(d, _) => *d,
-                    Compiled::Tiled(tc) => return self.finish_tiled(&g, *tc),
-                }
-            }
-            fw => compile_with(fw, &g, &self.device)?,
-        };
-        let util = estimate(&design, &self.device);
-        let macs = design.total_macs();
-        if self.estimate_only {
-            let cycles = design.overlapped_cycles_estimate();
-            return Ok(JobResult {
-                job: self.clone(),
-                util,
-                sim: None,
-                cycles,
-                macs,
-                tiles: 1,
-                error: None,
-            });
-        }
-        let input = Self::det_input(&g);
-        let rep = simulate(&design, &input, SimMode::of(design.style))?;
-        let (cycles, error) = match &rep.deadlock {
-            Some(blocked) => (0, Some(format!("deadlock: {}", blocked.join("; ")))),
-            None => (rep.cycles, None),
-        };
-        Ok(JobResult { job: self.clone(), util, sim: Some(rep), cycles, macs, tiles: 1, error })
+    /// Stage 1 — lower the workload to a model graph.
+    pub fn lower(&self) -> Result<ModelGraph> {
+        models::paper_kernel(&self.kernel, self.size)
     }
 
-    /// Finish a job whose workload only fits the device grid-tiled.
-    fn finish_tiled(&self, g: &ModelGraph, tc: TiledCompilation) -> Result<JobResult> {
-        let util = estimate(&tc.cell, &self.device);
+    /// Stage 2 — solve. MING gets the tile-grid feasibility fallback
+    /// (and, when `cache` is present, content-addressed design reuse);
+    /// the baseline strategies have no tiling story (the paper's
+    /// infeasible cells) and never consult the cache — their "solve" is
+    /// a fixed strategy, not a search worth memoizing.
+    pub fn solve(
+        &self,
+        g: &ModelGraph,
+        cache: Option<&Arc<DesignCache>>,
+    ) -> Result<SolvedDesign> {
+        match self.framework {
+            FrameworkKind::Ming => {
+                let mut cfg = DseConfig::new(self.device.clone());
+                if let Some(c) = cache {
+                    cfg = cfg.with_cache(Arc::clone(c));
+                }
+                match solve_with_tiling_fallback(g, &cfg)? {
+                    Compiled::Flat(d, _) => Ok(SolvedDesign::Flat(d)),
+                    Compiled::Tiled(tc) => Ok(SolvedDesign::Tiled(tc)),
+                }
+            }
+            fw => Ok(SolvedDesign::Flat(Box::new(compile_with(fw, g, &self.device)?))),
+        }
+    }
+
+    /// Stage 3 — estimate: utilization report plus the cycle-model
+    /// latency (overlapped for flat designs, gather-overlapped tiled
+    /// estimate for grids).
+    pub fn estimate(&self, solved: &SolvedDesign) -> (UtilizationReport, u64) {
+        match solved {
+            SolvedDesign::Flat(d) => (estimate(d, &self.device), d.overlapped_cycles_estimate()),
+            SolvedDesign::Tiled(tc) => (estimate(&tc.cell, &self.device), tc.estimated_cycles()),
+        }
+    }
+
+    /// Stage 4 — simulate (cycle-exact, bit-exact). A deadlocking
+    /// design is a job *result* (rendered as × in the tables), not a
+    /// job failure, on both the flat and the tiled path.
+    pub fn simulate(
+        &self,
+        g: &ModelGraph,
+        solved: &SolvedDesign,
+    ) -> Result<(Option<SimReport>, u64, Option<String>)> {
+        let input = Self::det_input(g);
+        match solved {
+            SolvedDesign::Flat(d) => {
+                let rep = simulate(d, &input, SimMode::of(d.style))?;
+                let (cycles, error) = match &rep.deadlock {
+                    Some(blocked) => (0, Some(format!("deadlock: {}", blocked.join("; ")))),
+                    None => (rep.cycles, None),
+                };
+                Ok((Some(rep), cycles, error))
+            }
+            SolvedDesign::Tiled(tc) => match simulate_tiled(tc, &input) {
+                Ok(rep) => {
+                    let cycles = rep.cycles;
+                    Ok((Some(rep.into_sim_report()), cycles, None))
+                }
+                Err(e) => Ok((None, 0, Some(format!("{e:#}")))),
+            },
+        }
+    }
+
+    /// Execute all stages (called from worker threads).
+    pub fn run_with(&self, cache: Option<&Arc<DesignCache>>) -> Result<JobResult> {
+        let g = self.lower()?;
+        let solved = self.solve(&g, cache)?;
+        let (util, est_cycles) = self.estimate(&solved);
         let macs = g.total_macs();
-        let tiles = tc.grid.n_cells();
+        let tiles = solved.tiles();
         if self.estimate_only {
             return Ok(JobResult {
                 job: self.clone(),
                 util,
                 sim: None,
-                cycles: tc.estimated_cycles(),
+                cycles: est_cycles,
                 macs,
                 tiles,
                 error: None,
             });
         }
-        let input = Self::det_input(g);
-        // A deadlocking strip is a job *result* (rendered as × in the
-        // tables), not a job failure — same contract as the flat path.
-        let (cycles, error) = match simulate_tiled(&tc, &input) {
-            Ok(rep) => (rep.cycles, None),
-            Err(e) => (0, Some(format!("{e:#}"))),
-        };
-        Ok(JobResult { job: self.clone(), util, sim: None, cycles, macs, tiles, error })
+        let (sim, cycles, error) = self.simulate(&g, &solved)?;
+        Ok(JobResult { job: self.clone(), util, sim, cycles, macs, tiles, error })
+    }
+
+    /// Execute the job without a design cache.
+    pub fn run(&self) -> Result<JobResult> {
+        self.run_with(None)
     }
 }
 
@@ -199,5 +267,53 @@ mod tests {
         if let Ok(r) = job.run() {
             assert!(!r.util.fits());
         }
+    }
+
+    #[test]
+    fn tiled_simulated_job_carries_a_stitched_sim_report() {
+        // Regression: tiled non-estimate jobs used to drop their
+        // SimReport (`sim` was always None on the tiled path), breaking
+        // sweep output parity between flat and tiled cells.
+        // conv_relu@400: the untiled line buffers alone need 2 blocks per
+        // row (400·8·8 bits > 18K) × 2 rows = 4 at any unroll — infeasible
+        // under a 3-block budget — while a half-width cell (1 block per
+        // row + the weight ROM) fits.
+        let job = CompileJob {
+            kernel: "conv_relu".into(),
+            size: 400,
+            framework: FrameworkKind::Ming,
+            device: DeviceSpec::kv260().with_bram_limit(3),
+            estimate_only: false,
+        };
+        let r = job.run().unwrap();
+        assert!(r.tiles >= 2, "workload must tile under a 3-block budget");
+        let sim = r.sim.expect("tiled sim report must be carried through");
+        assert_eq!(sim.cycles, r.cycles);
+        assert!(sim.total_firings > 0);
+        // the stitched output covers the full feature map
+        let g = job.lower().unwrap();
+        assert_eq!(sim.output.len(), g.outputs()[0].ty.numel());
+        assert!(r.error.is_none());
+    }
+
+    #[test]
+    fn staged_run_matches_composed_stages() {
+        // The staged API and run_with() agree end to end.
+        let job = CompileJob {
+            kernel: "cascade".into(),
+            size: 32,
+            framework: FrameworkKind::Ming,
+            device: DeviceSpec::kv260(),
+            estimate_only: false,
+        };
+        let g = job.lower().unwrap();
+        let solved = job.solve(&g, None).unwrap();
+        let (util, _est) = job.estimate(&solved);
+        let (sim, cycles, error) = job.simulate(&g, &solved).unwrap();
+        let r = job.run().unwrap();
+        assert_eq!(r.util.bram18k, util.bram18k);
+        assert_eq!(r.cycles, cycles);
+        assert_eq!(r.error, error);
+        assert_eq!(r.sim.unwrap().output, sim.unwrap().output);
     }
 }

@@ -1,13 +1,23 @@
-//! The L3 coordination layer: a multi-threaded compile service that runs
-//! kernel × framework × size sweeps (compile → estimate → simulate →
-//! optionally golden-verify) over a worker pool, plus the report
-//! formatters that regenerate the paper's Tables II–IV and Fig. 3.
+//! The L3 coordination layer: a staged, cache-backed compile service.
+//!
+//! [`job`] runs one compile as explicit stages (lower → solve →
+//! estimate → simulate); [`service`] sweeps kernel × framework × size
+//! job lists over a worker pool ([`queue`]), with deterministic
+//! round-robin sharding across processes; [`cache`] memoizes solved
+//! designs content-addressed by `(graph, device, config)` fingerprint,
+//! in memory and as JSON on disk; [`spool`] persists shard results as
+//! mergeable, resumable JSONL; [`report`] formats the paper's Tables
+//! II–IV and Fig. 3 from sweep cells (stitched back together by the
+//! `merge-sweep` CLI subcommand for sharded runs).
 
+pub mod cache;
 pub mod job;
 pub mod queue;
-pub mod service;
 pub mod report;
+pub mod service;
+pub mod spool;
 
+pub use cache::{CacheStats, CachedDesign, DesignCache};
 pub use job::{CompileJob, JobResult};
 pub use queue::WorkerPool;
-pub use service::{CompileService, SweepConfig};
+pub use service::{CompileService, Shard, SweepConfig};

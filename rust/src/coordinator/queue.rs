@@ -27,10 +27,27 @@ impl WorkerPool {
         self.workers
     }
 
-    /// Run all jobs, returning `(index, result)` pairs in completion
-    /// order. Panics in jobs are isolated per-thread and surfaced as
-    /// `Err` strings.
+    /// Run all jobs, returning `(index, result)` pairs sorted by index.
+    /// Panics in jobs are isolated per-thread and surfaced as `Err`
+    /// strings.
     pub fn run_all<J, R>(&self, jobs: Vec<J>) -> Vec<(usize, Result<R, String>)>
+    where
+        J: FnOnce() -> R + Send + 'static,
+        R: Send + 'static,
+    {
+        self.run_all_streaming(jobs, |_, _| {})
+    }
+
+    /// Like [`Self::run_all`], additionally invoking `on_done` on the
+    /// coordinator thread as each job finishes, in completion order.
+    /// The sweep spool streams records to disk through this hook, so a
+    /// crash mid-sweep loses at most the jobs still in flight — not the
+    /// whole run.
+    pub fn run_all_streaming<J, R>(
+        &self,
+        jobs: Vec<J>,
+        mut on_done: impl FnMut(usize, &Result<R, String>),
+    ) -> Vec<(usize, Result<R, String>)>
     where
         J: FnOnce() -> R + Send + 'static,
         R: Send + 'static,
@@ -55,7 +72,11 @@ impl WorkerPool {
             }));
         }
         drop(tx);
-        let mut results: Vec<(usize, Result<R, String>)> = rx.into_iter().collect();
+        let mut results: Vec<(usize, Result<R, String>)> = Vec::with_capacity(njobs);
+        for (idx, out) in rx.iter() {
+            on_done(idx, &out);
+            results.push((idx, out));
+        }
         for h in handles {
             let _ = h.join();
         }
@@ -102,6 +123,21 @@ mod tests {
         assert_eq!(*results[0].1.as_ref().unwrap(), 1);
         assert!(results[1].1.as_ref().unwrap_err().contains("boom"));
         assert_eq!(*results[2].1.as_ref().unwrap(), 3);
+    }
+
+    #[test]
+    fn streaming_callback_sees_every_completion_once() {
+        let pool = WorkerPool::new(3);
+        let jobs: Vec<Box<dyn FnOnce() -> usize + Send>> =
+            (0usize..16).map(|i| Box::new(move || i + 1) as _).collect();
+        let mut seen = Vec::new();
+        let results = pool.run_all_streaming(jobs, |i, r| {
+            seen.push((i, *r.as_ref().unwrap()));
+        });
+        assert_eq!(results.len(), 16);
+        assert_eq!(seen.len(), 16, "one callback per job");
+        seen.sort_unstable();
+        assert_eq!(seen, (0usize..16).map(|i| (i, i + 1)).collect::<Vec<_>>());
     }
 
     #[test]

@@ -1,11 +1,25 @@
-//! The compile service: batch sweeps over kernels × frameworks × sizes.
+//! The compile service: batch sweeps over kernels × frameworks × sizes,
+//! shardable across processes and backed by the content-addressed
+//! design cache.
+//!
+//! The job list of a sweep is **deterministic** (workloads × frameworks
+//! in declaration order), so a global sequence number identifies a job
+//! across processes. Sharding partitions that list round-robin
+//! (`seq % count == index`): every shard sees an interleaved slice of
+//! the sweep, the shards are disjoint, and their union is exactly the
+//! unsharded job list — which is what lets `merge-sweep` stitch shard
+//! spools back into row-identical reports.
 
-use anyhow::Result;
+use std::collections::BTreeSet;
+use std::sync::Arc;
+
+use anyhow::{bail, ensure, Result};
 
 use crate::baselines::framework::FrameworkKind;
 use crate::ir::builder::models;
 use crate::resources::device::DeviceSpec;
 
+use super::cache::DesignCache;
 use super::job::{CompileJob, JobResult};
 use super::queue::WorkerPool;
 
@@ -33,9 +47,52 @@ impl SweepConfig {
     }
 }
 
+/// One shard of a sweep: this process owns every job whose global
+/// sequence number is `index` modulo `count`. `Shard::full()` (0/1) is
+/// the unsharded sweep.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Shard {
+    pub index: usize,
+    pub count: usize,
+}
+
+impl Shard {
+    /// The whole sweep in one process.
+    pub fn full() -> Self {
+        Shard { index: 0, count: 1 }
+    }
+
+    /// Parse the CLI form `i/n` (e.g. `0/2`).
+    pub fn parse(s: &str) -> Result<Self> {
+        let Some((i, n)) = s.split_once('/') else {
+            bail!("--shard must be i/n (e.g. 0/2), got {s:?}");
+        };
+        let (index, count): (usize, usize) = (i.trim().parse()?, n.trim().parse()?);
+        ensure!(count >= 1, "shard count must be >= 1");
+        ensure!(index < count, "shard index {index} out of range for {count} shards");
+        Ok(Shard { index, count })
+    }
+
+    /// Does this shard own global job `seq`?
+    pub fn owns(&self, seq: usize) -> bool {
+        seq % self.count == self.index
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.count == 1
+    }
+}
+
+impl std::fmt::Display for Shard {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}/{}", self.index, self.count)
+    }
+}
+
 /// Runs sweeps over a worker pool and collects results.
 pub struct CompileService {
     pool: WorkerPool,
+    cache: Option<Arc<DesignCache>>,
 }
 
 impl Default for CompileService {
@@ -46,13 +103,49 @@ impl Default for CompileService {
 
 impl CompileService {
     pub fn new(pool: WorkerPool) -> Self {
-        Self { pool }
+        Self { pool, cache: None }
     }
 
-    /// Execute every (workload × framework) job; failed jobs yield a
-    /// `JobResult`-free error string, successful ones a full result.
-    pub fn run_sweep(&self, cfg: &SweepConfig) -> Vec<Result<JobResult, String>> {
-        let mut jobs: Vec<CompileJob> = Vec::new();
+    /// Attach a design cache shared by every job of every sweep this
+    /// service runs (and, when disk-backed, by other processes too).
+    pub fn with_cache(mut self, cache: Arc<DesignCache>) -> Self {
+        self.cache = Some(cache);
+        self
+    }
+
+    pub fn cache(&self) -> Option<&Arc<DesignCache>> {
+        self.cache.as_ref()
+    }
+
+    pub fn workers(&self) -> usize {
+        self.pool.workers()
+    }
+
+    /// Stable identity of a sweep: the device's capacities and name,
+    /// the estimate flag, and the deterministic job list. Spool records
+    /// carry it so resume and `merge-sweep` refuse to mix records from
+    /// different sweeps that happen to share a spool directory (same
+    /// shard filename, overlapping sequence numbers).
+    pub fn sweep_id(cfg: &SweepConfig) -> u64 {
+        use crate::ir::fingerprint::Fnv64;
+        let mut h = Fnv64::new();
+        h.write_u8(cfg.estimate_only as u8);
+        let d = &cfg.device;
+        for v in [d.bram18k, d.dsp, d.lut, d.lutram, d.ff] {
+            h.write_u64(v);
+        }
+        h.write_str(&d.name);
+        for j in Self::jobs(cfg) {
+            h.write_str(&j.id());
+        }
+        h.finish()
+    }
+
+    /// The deterministic global job list of a sweep. Sequence numbers
+    /// (= indices into this list) are stable across processes, which is
+    /// the contract sharding and spool resume depend on.
+    pub fn jobs(cfg: &SweepConfig) -> Vec<CompileJob> {
+        let mut jobs = Vec::with_capacity(cfg.workloads.len() * cfg.frameworks.len());
         for (kernel, size) in &cfg.workloads {
             for &fw in &cfg.frameworks {
                 jobs.push(CompileJob {
@@ -64,18 +157,68 @@ impl CompileService {
                 });
             }
         }
-        let closures: Vec<Box<dyn FnOnce() -> Result<JobResult, String> + Send>> = jobs
+        jobs
+    }
+
+    /// Execute every (workload × framework) job; failed jobs yield a
+    /// `JobResult`-free error string, successful ones a full result.
+    pub fn run_sweep(&self, cfg: &SweepConfig) -> Vec<Result<JobResult, String>> {
+        self.run_shard(cfg, Shard::full(), &BTreeSet::new())
             .into_iter()
-            .map(|j| {
-                Box::new(move || j.run().map_err(|e| format!("{}: {e:#}", j.id()))) as _
+            .map(|(_, r)| r)
+            .collect()
+    }
+
+    /// Execute one shard of a sweep, skipping the global sequence
+    /// numbers in `done` (jobs already present in a spool). Results are
+    /// tagged with their global sequence numbers, in global order.
+    pub fn run_shard(
+        &self,
+        cfg: &SweepConfig,
+        shard: Shard,
+        done: &BTreeSet<usize>,
+    ) -> Vec<(usize, Result<JobResult, String>)> {
+        self.run_shard_streaming(cfg, shard, done, |_, _| {})
+    }
+
+    /// Like [`Self::run_shard`], invoking `on_done(seq, outcome)` as
+    /// each job finishes (completion order, coordinator thread) — the
+    /// spool appends records through this hook so a crash loses at most
+    /// the jobs in flight, keeping sweeps genuinely resumable.
+    pub fn run_shard_streaming(
+        &self,
+        cfg: &SweepConfig,
+        shard: Shard,
+        done: &BTreeSet<usize>,
+        mut on_done: impl FnMut(usize, &Result<JobResult, String>),
+    ) -> Vec<(usize, Result<JobResult, String>)> {
+        let mine: Vec<(usize, CompileJob)> = Self::jobs(cfg)
+            .into_iter()
+            .enumerate()
+            .filter(|(seq, _)| shard.owns(*seq) && !done.contains(seq))
+            .collect();
+        let seqs: Vec<usize> = mine.iter().map(|(s, _)| *s).collect();
+        let closures: Vec<Box<dyn FnOnce() -> Result<JobResult, String> + Send>> = mine
+            .into_iter()
+            .map(|(_, j)| {
+                let cache = self.cache.clone();
+                Box::new(move || {
+                    j.run_with(cache.as_ref()).map_err(|e| format!("{}: {e:#}", j.id()))
+                }) as _
             })
             .collect();
         self.pool
-            .run_all(closures)
+            .run_all_streaming(closures, |i, r| match r {
+                Ok(inner) => on_done(seqs[i], inner),
+                Err(panic) => on_done(seqs[i], &Err(panic.clone())),
+            })
             .into_iter()
-            .map(|(_, r)| match r {
-                Ok(inner) => inner,
-                Err(panic) => Err(panic),
+            .map(|(i, r)| {
+                let outcome = match r {
+                    Ok(inner) => inner,
+                    Err(panic) => Err(panic),
+                };
+                (seqs[i], outcome)
             })
             .collect()
     }
@@ -131,5 +274,78 @@ mod tests {
         let results = CompileService::new(WorkerPool::new(2)).run_sweep(&cfg);
         let cycles: Vec<u64> = results.iter().map(|r| r.as_ref().unwrap().cycles).collect();
         assert!(cycles[1] * 50 < cycles[0], "ming {} vs vanilla {}", cycles[1], cycles[0]);
+    }
+
+    #[test]
+    fn shard_parse_and_ownership() {
+        let s = Shard::parse("1/3").unwrap();
+        assert_eq!((s.index, s.count), (1, 3));
+        assert!(!s.is_full());
+        assert!(s.owns(1) && s.owns(4));
+        assert!(!s.owns(0) && !s.owns(2));
+        assert_eq!(s.to_string(), "1/3");
+        assert!(Shard::parse("3/3").is_err(), "index out of range");
+        assert!(Shard::parse("0/0").is_err(), "zero shards");
+        assert!(Shard::parse("nope").is_err());
+        assert!(Shard::full().owns(17), "the full shard owns everything");
+    }
+
+    #[test]
+    fn shards_partition_the_job_list() {
+        let cfg = SweepConfig {
+            workloads: vec![("conv_relu".into(), 16), ("linear".into(), 0)],
+            frameworks: vec![FrameworkKind::Vanilla, FrameworkKind::Ming],
+            device: DeviceSpec::kv260(),
+            estimate_only: true,
+        };
+        let svc = CompileService::new(WorkerPool::new(2));
+        let all: Vec<usize> =
+            (0..CompileService::jobs(&cfg).len()).collect();
+        let mut seen = Vec::new();
+        for index in 0..2 {
+            let part = svc.run_shard(&cfg, Shard { index, count: 2 }, &BTreeSet::new());
+            for (seq, r) in part {
+                assert!(r.is_ok(), "seq {seq}");
+                seen.push(seq);
+            }
+        }
+        seen.sort_unstable();
+        assert_eq!(seen, all, "shards must partition the sweep exactly");
+    }
+
+    #[test]
+    fn sweep_id_distinguishes_sweeps() {
+        let base = SweepConfig {
+            workloads: vec![("conv_relu".into(), 16)],
+            frameworks: vec![FrameworkKind::Ming],
+            device: DeviceSpec::kv260(),
+            estimate_only: true,
+        };
+        let id = CompileService::sweep_id(&base);
+        assert_eq!(id, CompileService::sweep_id(&base.clone()), "stable");
+        let mut other = base.clone();
+        other.estimate_only = false;
+        assert_ne!(id, CompileService::sweep_id(&other), "estimate flag");
+        let mut other = base.clone();
+        other.device = DeviceSpec::zcu104();
+        assert_ne!(id, CompileService::sweep_id(&other), "device");
+        let mut other = base.clone();
+        other.workloads.push(("linear".into(), 0));
+        assert_ne!(id, CompileService::sweep_id(&other), "job list");
+    }
+
+    #[test]
+    fn run_shard_skips_done_jobs() {
+        let cfg = SweepConfig {
+            workloads: vec![("linear".into(), 0)],
+            frameworks: vec![FrameworkKind::Vanilla, FrameworkKind::Ming],
+            device: DeviceSpec::kv260(),
+            estimate_only: true,
+        };
+        let svc = CompileService::new(WorkerPool::new(1));
+        let done: BTreeSet<usize> = [0usize].into_iter().collect();
+        let rest = svc.run_shard(&cfg, Shard::full(), &done);
+        assert_eq!(rest.len(), 1);
+        assert_eq!(rest[0].0, 1, "seq 0 was already spooled and must be skipped");
     }
 }

@@ -1,0 +1,410 @@
+//! Sweep spooling: durable, mergeable JSONL shard outputs.
+//!
+//! A sharded sweep (`--shard i/n --spool <dir>`) appends one JSON line
+//! per finished job to `<dir>/shard-<i>-of-<n>.jsonl`. Each line is
+//! self-describing — the sweep's identity hash and report kind, the
+//! job's global sequence number, the total job count of the sweep, the
+//! job id, and either the reduced Table-II [`Cell`] or the failure
+//! message — so shard files can be:
+//!
+//! * **merged**: `ming merge-sweep --spool <dir>` reads every
+//!   `*.jsonl` in the directory, orders records by global sequence
+//!   number, and renders the exact rows an unsharded sweep would have
+//!   printed (row-identity is covered by tests and the CI smoke job);
+//! * **resumed**: a re-run shard reads its own spool first and skips
+//!   every *successfully completed* sequence number, so a crashed sweep
+//!   continues where it stopped instead of starting over. Failed jobs
+//!   are retried on resume (a transient panic should not poison the
+//!   table forever); [`merge`] dedupes per sequence number preferring
+//!   the successful record.
+//!
+//! Torn trailing lines (a crash mid-write) parse as errors and are
+//! skipped with a count, never aborting a resume or a merge.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::baselines::framework::FrameworkKind;
+use crate::ir::json::{parse, Json};
+
+use super::job::JobResult;
+use super::report::{self, Cell};
+use super::service::Shard;
+
+/// On-disk schema version of a spool line.
+const SPOOL_VERSION: u64 = 1;
+
+/// One spooled job outcome.
+#[derive(Debug, Clone)]
+pub struct SpoolRecord {
+    /// Sweep identity ([`crate::coordinator::CompileService::sweep_id`])
+    /// — resume and merge refuse records from a different sweep.
+    pub sweep: u64,
+    /// Report kind the sweep was run for (`table2` / `table3`), so
+    /// `merge-sweep` picks the right renderer without the user having
+    /// to remember it.
+    pub report: String,
+    /// Global job index in the sweep's deterministic job list.
+    pub seq: usize,
+    /// Total jobs in the sweep (for completeness checks at merge time).
+    pub total: usize,
+    /// Human-readable job id (`kernel_size@framework`).
+    pub id: String,
+    /// `Ok(cell)` for a finished job, `Err(msg)` for a failed one.
+    pub outcome: Result<Cell, String>,
+}
+
+/// Spool file path of one shard.
+pub fn shard_file(dir: &Path, shard: Shard) -> PathBuf {
+    dir.join(format!("shard-{}-of-{}.jsonl", shard.index, shard.count))
+}
+
+fn num(v: u64) -> Json {
+    Json::Num(v as f64)
+}
+
+fn cell_to_json(c: &Cell) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("kernel".into(), Json::Str(c.kernel.clone()));
+    m.insert("size".into(), num(c.size as u64));
+    m.insert("framework".into(), Json::Str(c.framework.name().into()));
+    m.insert("mcycles".into(), Json::Num(c.mcycles));
+    m.insert("bram".into(), num(c.bram));
+    m.insert("bram_rom".into(), num(c.bram_rom));
+    m.insert("bram_fifo".into(), num(c.bram_fifo));
+    m.insert("dsp".into(), num(c.dsp));
+    m.insert("lut_pct".into(), Json::Num(c.lut_pct));
+    m.insert("lutram_pct".into(), Json::Num(c.lutram_pct));
+    m.insert("ff_pct".into(), Json::Num(c.ff_pct));
+    m.insert("fits".into(), Json::Bool(c.fits));
+    m.insert("tiles".into(), num(c.tiles as u64));
+    m.insert(
+        "error".into(),
+        match &c.error {
+            Some(e) => Json::Str(e.clone()),
+            None => Json::Null,
+        },
+    );
+    Json::Obj(m)
+}
+
+fn cell_from_json(v: &Json) -> Result<Cell> {
+    let fw_name = v.get("framework")?.as_str()?;
+    let framework = FrameworkKind::parse(fw_name)
+        .with_context(|| format!("unknown framework {fw_name:?} in spool record"))?;
+    let f = |key: &str| -> Result<f64> {
+        match v.get(key)? {
+            Json::Num(n) => Ok(*n),
+            other => bail!("field {key:?} must be a number, got {other:?}"),
+        }
+    };
+    Ok(Cell {
+        kernel: v.get("kernel")?.as_str()?.to_string(),
+        size: v.get("size")?.as_usize()?,
+        framework,
+        mcycles: f("mcycles")?,
+        bram: v.get("bram")?.as_usize()? as u64,
+        bram_rom: v.get("bram_rom")?.as_usize()? as u64,
+        bram_fifo: v.get("bram_fifo")?.as_usize()? as u64,
+        dsp: v.get("dsp")?.as_usize()? as u64,
+        lut_pct: f("lut_pct")?,
+        lutram_pct: f("lutram_pct")?,
+        ff_pct: f("ff_pct")?,
+        fits: match v.get("fits")? {
+            Json::Bool(b) => *b,
+            other => bail!("field \"fits\" must be a bool, got {other:?}"),
+        },
+        tiles: v.get("tiles")?.as_usize()?,
+        error: match v.get("error")? {
+            Json::Null => None,
+            Json::Str(s) => Some(s.clone()),
+            other => bail!("field \"error\" must be a string or null, got {other:?}"),
+        },
+    })
+}
+
+/// Serialize one job outcome as a single JSONL line (no trailing `\n`).
+/// The sweep id is rendered as a 16-hex string — `Json::Num` is an f64
+/// and cannot hold all u64 fingerprints losslessly.
+pub fn record_line(
+    sweep: u64,
+    report: &str,
+    seq: usize,
+    total: usize,
+    id: &str,
+    outcome: &Result<JobResult, String>,
+) -> String {
+    let mut m = BTreeMap::new();
+    m.insert("v".into(), num(SPOOL_VERSION));
+    m.insert("sweep".into(), Json::Str(crate::ir::fingerprint::hex(sweep)));
+    m.insert("report".into(), Json::Str(report.to_string()));
+    m.insert("seq".into(), num(seq as u64));
+    m.insert("total".into(), num(total as u64));
+    m.insert("id".into(), Json::Str(id.to_string()));
+    match outcome {
+        Ok(jr) => {
+            m.insert("cell".into(), cell_to_json(&report::cell(jr)));
+        }
+        Err(msg) => {
+            m.insert("failed".into(), Json::Str(msg.clone()));
+        }
+    }
+    Json::Obj(m).render()
+}
+
+/// Parse one spool line.
+pub fn parse_line(line: &str) -> Result<SpoolRecord> {
+    let doc = parse(line)?;
+    ensure!(
+        doc.get("v")?.as_usize()? as u64 == SPOOL_VERSION,
+        "unknown spool record version"
+    );
+    let sweep = u64::from_str_radix(doc.get("sweep")?.as_str()?, 16)
+        .context("bad sweep id in spool record")?;
+    let report = doc.get("report")?.as_str()?.to_string();
+    let seq = doc.get("seq")?.as_usize()?;
+    let total = doc.get("total")?.as_usize()?;
+    let id = doc.get("id")?.as_str()?.to_string();
+    let outcome = match doc.as_obj()?.get("failed") {
+        Some(msg) => Err(msg.as_str()?.to_string()),
+        None => Ok(cell_from_json(doc.get("cell")?)?),
+    };
+    Ok(SpoolRecord { sweep, report, seq, total, id, outcome })
+}
+
+/// Read one spool file. A missing file is an empty spool (fresh shard);
+/// unparseable lines (torn writes) are skipped and counted. Returns
+/// `(records, skipped_lines)`.
+pub fn read_spool_file(path: &Path) -> Result<(Vec<SpoolRecord>, usize)> {
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok((Vec::new(), 0)),
+        Err(e) => {
+            return Err(e).with_context(|| format!("reading spool {}", path.display()))
+        }
+    };
+    let mut records = Vec::new();
+    let mut skipped = 0usize;
+    for line in text.lines() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        match parse_line(line) {
+            Ok(r) => records.push(r),
+            Err(_) => skipped += 1,
+        }
+    }
+    Ok((records, skipped))
+}
+
+/// Read every `*.jsonl` spool in a directory (any shard layout), in
+/// deterministic (sorted-path) order.
+pub fn read_spool_dir(dir: &Path) -> Result<(Vec<SpoolRecord>, usize)> {
+    let mut paths: Vec<PathBuf> = std::fs::read_dir(dir)
+        .with_context(|| format!("reading spool dir {}", dir.display()))?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.extension().is_some_and(|x| x == "jsonl"))
+        .collect();
+    paths.sort();
+    ensure!(!paths.is_empty(), "no *.jsonl spool files in {}", dir.display());
+    let mut records = Vec::new();
+    let mut skipped = 0;
+    for p in paths {
+        let (mut r, s) = read_spool_file(&p)?;
+        records.append(&mut r);
+        skipped += s;
+    }
+    Ok((records, skipped))
+}
+
+/// The stitched view of a spooled sweep.
+#[derive(Debug, Default)]
+pub struct MergedSweep {
+    /// Successful cells in global job order — exactly the rows the
+    /// unsharded sweep would have rendered.
+    pub cells: Vec<Cell>,
+    /// Failed jobs as `(seq, id, message)`, in global job order.
+    pub failures: Vec<(usize, String, String)>,
+    /// Sequence numbers no shard reported (incomplete sweep).
+    pub missing: Vec<usize>,
+    /// Report kind recorded by the sweep (`None` only for an empty
+    /// record set; uniform otherwise — mixed sweeps are rejected).
+    pub report: Option<String>,
+}
+
+/// Merge spool records: dedupe by sequence number, order globally, and
+/// report gaps against the recorded sweep size. Refuses to stitch
+/// records from different sweeps (a spool dir reused across commands,
+/// devices or configs would otherwise silently mix rows).
+pub fn merge(records: Vec<SpoolRecord>) -> Result<MergedSweep> {
+    let mut sweeps: Vec<u64> = records.iter().map(|r| r.sweep).collect();
+    sweeps.sort_unstable();
+    sweeps.dedup();
+    ensure!(
+        sweeps.len() <= 1,
+        "spool holds records from {} different sweeps ({}) — use one spool \
+         dir per sweep",
+        sweeps.len(),
+        sweeps
+            .iter()
+            .map(|s| crate::ir::fingerprint::hex(*s))
+            .collect::<Vec<_>>()
+            .join(", ")
+    );
+    let mut by_seq: BTreeMap<usize, SpoolRecord> = BTreeMap::new();
+    let mut total = 0usize;
+    let mut report = None;
+    for r in records {
+        total = total.max(r.total);
+        report.get_or_insert_with(|| r.report.clone());
+        // dedupe preferring success: a resume retries failed jobs, so a
+        // seq can carry an old failure record and a newer success — the
+        // success is the row the unsharded sweep would have printed
+        let keep_existing =
+            matches!(by_seq.get(&r.seq), Some(prev) if prev.outcome.is_ok() || r.outcome.is_err());
+        if !keep_existing {
+            by_seq.insert(r.seq, r);
+        }
+    }
+    let mut out = MergedSweep { report, ..Default::default() };
+    for (seq, r) in &by_seq {
+        match &r.outcome {
+            Ok(cell) => out.cells.push(cell.clone()),
+            Err(msg) => out.failures.push((*seq, r.id.clone(), msg.clone())),
+        }
+    }
+    out.missing = (0..total).filter(|s| !by_seq.contains_key(s)).collect();
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::job::CompileJob;
+    use crate::resources::device::DeviceSpec;
+
+    fn sample_result() -> Result<JobResult, String> {
+        CompileJob {
+            kernel: "linear".into(),
+            size: 0,
+            framework: FrameworkKind::Ming,
+            device: DeviceSpec::kv260(),
+            estimate_only: true,
+        }
+        .run()
+        .map_err(|e| format!("{e:#}"))
+    }
+
+    const SWEEP: u64 = 0xdead_beef_cafe_f00d;
+
+    #[test]
+    fn record_roundtrips_cells_exactly() {
+        let r = sample_result();
+        let line = record_line(SWEEP, "table2", 3, 8, "linear_0@ming", &r);
+        assert!(!line.contains('\n'), "one record per line");
+        let rec = parse_line(&line).unwrap();
+        assert_eq!(rec.sweep, SWEEP, "u64 sweep ids round-trip via hex");
+        assert_eq!((rec.seq, rec.total), (3, 8));
+        assert_eq!(rec.id, "linear_0@ming");
+        let cell = rec.outcome.unwrap();
+        let orig = report::cell(r.as_ref().unwrap());
+        // f64 fields round-trip exactly (Rust prints shortest-roundtrip)
+        assert_eq!(cell.mcycles, orig.mcycles);
+        assert_eq!(cell.bram, orig.bram);
+        assert_eq!(cell.dsp, orig.dsp);
+        assert_eq!(cell.framework, orig.framework);
+        assert_eq!(cell.fits, orig.fits);
+        assert_eq!(cell.error, orig.error);
+        // and the rendered table rows are byte-identical
+        assert_eq!(
+            report::render_table2(&[cell]),
+            report::render_table2(&[orig])
+        );
+    }
+
+    #[test]
+    fn failed_jobs_spool_and_merge_as_failures() {
+        let err = Err("unknown kernel".into());
+        let line = record_line(SWEEP, "table2", 5, 8, "transformer_32@ming", &err);
+        let rec = parse_line(&line).unwrap();
+        assert_eq!(rec.outcome.as_ref().unwrap_err(), "unknown kernel");
+        let merged = merge(vec![rec]).unwrap();
+        assert!(merged.cells.is_empty());
+        assert_eq!(merged.failures.len(), 1);
+        assert_eq!(merged.failures[0].0, 5);
+    }
+
+    #[test]
+    fn merge_orders_dedupes_and_finds_gaps() {
+        let r = sample_result();
+        let mk = |seq: usize| {
+            parse_line(&record_line(SWEEP, "table2", seq, 4, "linear_0@ming", &r)).unwrap()
+        };
+        // out of order, one duplicate, seq 2 missing
+        let merged = merge(vec![mk(3), mk(0), mk(1), mk(1)]).unwrap();
+        assert_eq!(merged.cells.len(), 3);
+        assert_eq!(merged.missing, vec![2]);
+        assert!(merged.failures.is_empty());
+    }
+
+    #[test]
+    fn merge_prefers_success_over_a_retried_failure() {
+        // seq 0 failed once (transient panic), then a resume retried it
+        // successfully: the merged table must carry the success, in
+        // either record order.
+        let ok = sample_result();
+        let failed: Result<JobResult, String> = Err("job panicked: transient".into());
+        let mk = |outcome: &Result<JobResult, String>| {
+            parse_line(&record_line(SWEEP, "table2", 0, 1, "linear_0@ming", outcome)).unwrap()
+        };
+        for records in [vec![mk(&failed), mk(&ok)], vec![mk(&ok), mk(&failed)]] {
+            let merged = merge(records).unwrap();
+            assert_eq!(merged.cells.len(), 1);
+            assert!(merged.failures.is_empty());
+            assert!(merged.missing.is_empty());
+        }
+    }
+
+    #[test]
+    fn merge_refuses_mixed_sweeps() {
+        // Two sweeps sharing a spool dir (e.g. table2 then table3, or a
+        // device change) must not silently stitch into one table.
+        let r = sample_result();
+        let a = parse_line(&record_line(1, "table2", 0, 2, "linear_0@ming", &r)).unwrap();
+        let b = parse_line(&record_line(2, "table3", 1, 2, "linear_0@ming", &r)).unwrap();
+        let err = merge(vec![a, b]).unwrap_err();
+        assert!(format!("{err:#}").contains("different sweeps"), "{err:#}");
+    }
+
+    #[test]
+    fn torn_lines_are_skipped_not_fatal() {
+        let dir = std::env::temp_dir()
+            .join(format!("ming-spool-test-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let r = sample_result();
+        let good = record_line(SWEEP, "table2", 0, 2, "linear_0@ming", &r);
+        let torn = &good[..good.len() / 2];
+        let path = dir.join("shard-0-of-1.jsonl");
+        std::fs::write(&path, format!("{good}\n{torn}")).unwrap();
+        let (records, skipped) = read_spool_file(&path).unwrap();
+        assert_eq!(records.len(), 1);
+        assert_eq!(skipped, 1);
+        // a missing file is an empty spool, not an error
+        let (none, s) = read_spool_file(&dir.join("absent.jsonl")).unwrap();
+        assert!(none.is_empty());
+        assert_eq!(s, 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn shard_file_names_are_stable() {
+        let s = Shard { index: 1, count: 4 };
+        assert_eq!(
+            shard_file(Path::new("/tmp/spool"), s),
+            PathBuf::from("/tmp/spool/shard-1-of-4.jsonl")
+        );
+    }
+}

@@ -12,10 +12,14 @@
 //! DSP and BRAM for pruning. Exact — no heuristics — and fast: paper
 //! kernels have ≤ 6 nodes × ≤ 96 candidates.
 
+use std::sync::Arc;
+
 use anyhow::{bail, ensure, Result};
 
+use crate::coordinator::cache::{self, DesignCache};
 use crate::dataflow::build::{build_streaming_design, refresh_buffers};
 use crate::dataflow::design::Design;
+use crate::ir::fingerprint::problem_fingerprint;
 use crate::ir::graph::ModelGraph;
 use crate::resources::device::DeviceSpec;
 use crate::resources::model::{ResourceModel, ResourceVec};
@@ -34,11 +38,23 @@ use super::space::{candidates_with, Candidate};
 #[derive(Debug, Clone)]
 pub struct DseConfig {
     pub device: DeviceSpec,
+    /// Optional content-addressed design cache
+    /// ([`crate::coordinator::cache`]). When present,
+    /// [`solve_with_tiling_fallback`] reuses whole compiled outcomes
+    /// and the tile-grid search reuses per-cell solutions — the solver
+    /// itself ([`solve`]) stays cache-oblivious.
+    pub cache: Option<Arc<DesignCache>>,
 }
 
 impl DseConfig {
     pub fn new(device: DeviceSpec) -> Self {
-        Self { device }
+        Self { device, cache: None }
+    }
+
+    /// Attach a (shared) design cache to this configuration.
+    pub fn with_cache(mut self, cache: Arc<DesignCache>) -> Self {
+        self.cache = Some(cache);
+        self
     }
 }
 
@@ -217,20 +233,42 @@ pub enum Compiled {
 /// to the stride-aware tile-grid subsystem, which searches the
 /// (rows × cols) grid lattice for the fewest cells that fit. Errors
 /// only when both paths fail.
+///
+/// When `cfg` carries a design cache, the whole outcome — flat *or*
+/// tiled, grid shape included — is keyed by the problem fingerprint: a
+/// repeat compilation of the same `(graph, device, config)` rebuilds
+/// the solved design deterministically with zero ILP solves and zero
+/// grid search. Unusable entries degrade to a normal compile.
 pub fn solve_with_tiling_fallback(g: &ModelGraph, cfg: &DseConfig) -> Result<Compiled> {
+    let fp = cfg.cache.as_ref().map(|c| (c, problem_fingerprint(g, &cfg.device)));
+    if let Some((c, fp)) = &fp {
+        if let Some(entry) = c.lookup(*fp) {
+            match cache::rebuild_compiled(g, cfg, &entry) {
+                Ok(compiled) => return Ok(compiled),
+                Err(_) => c.note_corrupt(),
+            }
+        }
+    }
     let mut design = build_streaming_design(g)?;
-    match solve(&mut design, cfg) {
-        Ok(sol) => Ok(Compiled::Flat(Box::new(design), sol)),
+    if let Some((c, _)) = &fp {
+        c.count_solve();
+    }
+    let compiled = match solve(&mut design, cfg) {
+        Ok(sol) => Compiled::Flat(Box::new(design), sol),
         // a failed solve leaves the design's scalar timing untouched, so
         // it can seed the tiling planner's lower bounds directly
         Err(flat_err) => match compile_tiled_from(g, &design, cfg) {
-            Ok(tc) => Ok(Compiled::Tiled(Box::new(tc))),
+            Ok(tc) => Compiled::Tiled(Box::new(tc)),
             Err(tile_err) => bail!(
                 "untiled DSE infeasible ({flat_err:#}); tile-grid fallback \
                  also failed ({tile_err:#})"
             ),
         },
+    };
+    if let Some((c, fp)) = &fp {
+        c.insert(*fp, cache::compiled_entry(&compiled));
     }
+    Ok(compiled)
 }
 
 #[cfg(test)]

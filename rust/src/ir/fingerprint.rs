@@ -1,0 +1,457 @@
+//! Content-addressed fingerprints for DSE problems.
+//!
+//! A *design cache* ([`crate::coordinator::cache`]) can only reuse a
+//! solved design if two compilations of "the same" workload produce the
+//! same key — across processes, across sweep shards, and regardless of
+//! the order in which the front-end happened to build the graph. This
+//! module computes that key: a stable 64-bit structural hash over
+//! `(ModelGraph, DeviceSpec)` with three properties:
+//!
+//! 1. **Build-order independence.** Ops are folded in a *canonical*
+//!    topological order (ready ops sorted by their structural signature
+//!    and the canonical ids of their operands), and tensors are
+//!    renumbered in that emission order, so `vgg3@512` hashes
+//!    identically whether it came from `ir::builder::models`, from a
+//!    JSON import, or from a graph whose branches were inserted in a
+//!    different order.
+//! 2. **Name independence.** Tensor/op/graph names never enter the
+//!    hash — they are provenance, not structure. Weight *contents* do
+//!    enter it (two models that differ only in weights emit different
+//!    HLS and must not share a cache entry).
+//! 3. **Process stability.** The hash is plain FNV-1a over a fixed
+//!    byte encoding — no `std::hash` randomization, no pointer values —
+//!    so a fingerprint written to disk by one process is meaningful to
+//!    every other.
+//!
+//! The device's resource capacities (and the graph's tiling hint) are
+//! part of the problem, not the workload, so [`problem_fingerprint`]
+//! folds them on top of [`graph_fingerprint`]: shrinking the BRAM
+//! budget or changing a tile-width hint changes the key and correctly
+//! misses the cache.
+
+use std::collections::HashMap;
+
+use super::generic::{GenericOp, IterType, Payload};
+use super::graph::{ModelGraph, TensorInfo, TensorKind};
+use super::AffineExpr;
+use crate::resources::device::DeviceSpec;
+
+/// Bumped whenever the encoding below changes, so stale on-disk cache
+/// entries from an older scheme can never alias a new fingerprint.
+pub const FINGERPRINT_VERSION: u64 = 1;
+
+/// Incremental FNV-1a (64-bit): tiny, fast, and — unlike
+/// `std::collections::hash_map::DefaultHasher` — specified, so values
+/// are stable across processes, architectures and toolchain versions.
+#[derive(Debug, Clone)]
+pub struct Fnv64(u64);
+
+impl Default for Fnv64 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Fnv64 {
+    pub fn new() -> Self {
+        Fnv64(0xcbf2_9ce4_8422_2325)
+    }
+
+    pub fn write_u8(&mut self, b: u8) {
+        self.0 ^= b as u64;
+        self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+
+    pub fn write_bytes(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.write_u8(b);
+        }
+    }
+
+    pub fn write_u64(&mut self, v: u64) {
+        self.write_bytes(&v.to_le_bytes());
+    }
+
+    pub fn write_i64(&mut self, v: i64) {
+        self.write_bytes(&v.to_le_bytes());
+    }
+
+    pub fn write_usize(&mut self, v: usize) {
+        self.write_u64(v as u64);
+    }
+
+    /// Length-prefixed, so `("ab", "c")` and `("a", "bc")` differ.
+    pub fn write_str(&mut self, s: &str) {
+        self.write_usize(s.len());
+        self.write_bytes(s.as_bytes());
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+fn expr_hash(h: &mut Fnv64, e: &AffineExpr) {
+    match e {
+        AffineExpr::Dim(i) => {
+            h.write_u8(1);
+            h.write_usize(*i);
+        }
+        AffineExpr::Const(c) => {
+            h.write_u8(2);
+            h.write_i64(*c);
+        }
+        AffineExpr::Add(a, b) => {
+            h.write_u8(3);
+            expr_hash(h, a);
+            expr_hash(h, b);
+        }
+        AffineExpr::Mul(a, c) => {
+            h.write_u8(4);
+            expr_hash(h, a);
+            h.write_i64(*c);
+        }
+    }
+}
+
+/// Structural signature of one tensor: type only, never the name.
+fn tensor_sig(t: &TensorInfo) -> u64 {
+    let mut h = Fnv64::new();
+    h.write_usize(t.ty.shape.len());
+    for &d in &t.ty.shape {
+        h.write_usize(d);
+    }
+    h.write_str(t.ty.dtype.name());
+    h.finish()
+}
+
+fn payload_hash(h: &mut Fnv64, p: Payload) {
+    h.write_str(p.name());
+    match p {
+        Payload::Requant { shift } | Payload::ReluRequant { shift } => {
+            h.write_u64(shift as u64)
+        }
+        _ => h.write_u64(0),
+    }
+}
+
+/// Tensor-id-free signature of one op: payload, iteration space,
+/// indexing maps, padding, and the types (plus weight *contents*) of
+/// its operands. Two structurally identical ops in different graphs —
+/// or the same graph built twice in different orders — share it.
+fn op_signature(g: &ModelGraph, op: &GenericOp) -> u64 {
+    let mut h = Fnv64::new();
+    payload_hash(&mut h, op.payload);
+    h.write_usize(op.pad);
+    h.write_usize(op.dims.len());
+    for &d in &op.dims {
+        h.write_usize(d);
+    }
+    for it in &op.iter_types {
+        h.write_u8(match it {
+            IterType::Parallel => 0,
+            IterType::Reduction => 1,
+        });
+    }
+    for m in &op.indexing_maps {
+        h.write_usize(m.num_dims);
+        h.write_usize(m.results.len());
+        for e in &m.results {
+            expr_hash(&mut h, e);
+        }
+    }
+    for &inp in &op.inputs {
+        let t = g.tensor(inp);
+        h.write_u8(match t.kind {
+            TensorKind::Input => 0,
+            TensorKind::Weight => 1,
+            TensorKind::Intermediate => 2,
+            TensorKind::Output => 3,
+        });
+        h.write_u64(tensor_sig(t));
+        if t.kind == TensorKind::Weight {
+            if let Some(data) = &t.data {
+                h.write_usize(data.len());
+                // i8 -> u8 cast is a bijection; the raw bytes are the data
+                for &v in data {
+                    h.write_u8(v as u8);
+                }
+            }
+        }
+    }
+    h.finish()
+}
+
+/// Canonical structural fingerprint of a model graph (workload only —
+/// see [`problem_fingerprint`] for the full DSE-problem key).
+pub fn graph_fingerprint(g: &ModelGraph) -> u64 {
+    let local: Vec<u64> = g.ops.iter().map(|op| op_signature(g, op)).collect();
+
+    // Canonical tensor numbering: graph inputs first (ordered by type
+    // signature — paper graphs are single-input, but stay well-defined),
+    // then each op's output in canonical emission order.
+    let mut inputs = g.inputs();
+    inputs.sort_by_key(|t| tensor_sig(t));
+    let mut canon: HashMap<usize, u64> = HashMap::new();
+    for (i, t) in inputs.iter().enumerate() {
+        canon.insert(t.id.0, i as u64);
+    }
+    let mut next = inputs.len() as u64;
+
+    let mut h = Fnv64::new();
+    h.write_u64(FINGERPRINT_VERSION);
+    h.write_usize(inputs.len());
+    for t in &inputs {
+        h.write_u64(tensor_sig(t));
+    }
+
+    // Canonical topological emission: among ops whose activation inputs
+    // all have canonical ids, always emit the one with the smallest
+    // (signature, operand-ids) key. Identical graphs built in any order
+    // make identical choices, so the fold below is order-independent.
+    let n = g.ops.len();
+    let mut emitted = vec![false; n];
+    for _ in 0..n {
+        let mut best: Option<(Vec<u64>, usize)> = None;
+        for (i, op) in g.ops.iter().enumerate() {
+            if emitted[i] {
+                continue;
+            }
+            let ids: Option<Vec<u64>> = op
+                .inputs
+                .iter()
+                .map(|tid| {
+                    if g.tensor(*tid).kind == TensorKind::Weight {
+                        // weight contents are already in the signature
+                        Some(u64::MAX)
+                    } else {
+                        canon.get(&tid.0).copied()
+                    }
+                })
+                .collect();
+            let Some(ids) = ids else { continue };
+            let mut key = Vec::with_capacity(1 + ids.len());
+            key.push(local[i]);
+            key.extend(ids);
+            let better = match &best {
+                None => true,
+                Some((bk, _)) => key < *bk,
+            };
+            if better {
+                best = Some((key, i));
+            }
+        }
+        let Some((key, i)) = best else {
+            // Defensive: a cyclic (invalid) graph — fold the leftovers
+            // in index order rather than panicking; `validate()` rejects
+            // such graphs before they reach any solver anyway.
+            for (j, sig) in local.iter().enumerate() {
+                if !emitted[j] {
+                    h.write_u64(*sig);
+                }
+            }
+            break;
+        };
+        emitted[i] = true;
+        for v in &key {
+            h.write_u64(*v);
+        }
+        let out_t = g.tensor(g.ops[i].output);
+        canon.insert(out_t.id.0, next);
+        h.write_u64(next);
+        next += 1;
+        h.write_u64(tensor_sig(out_t));
+        h.write_u8(if out_t.kind == TensorKind::Output { 1 } else { 0 });
+    }
+
+    // The tiling hint steers the grid search, so it is part of the key.
+    match &g.tiling {
+        None => h.write_u8(0),
+        Some(t) => {
+            h.write_u8(1);
+            for v in [t.tile_width, t.tile_height, t.max_tiles] {
+                match v {
+                    Some(x) => {
+                        h.write_u8(1);
+                        h.write_usize(x);
+                    }
+                    None => h.write_u8(0),
+                }
+            }
+        }
+    }
+    h.finish()
+}
+
+/// Fingerprint of a full DSE problem: the workload *and* the resource
+/// budgets it must fit. The device name is deliberately excluded — two
+/// identically-sized devices pose the same problem — while every
+/// capacity the solver or the fabric reports read is included, so
+/// `--dsp-limit` / `--bram-limit` / `--max-bram-frac` variants key
+/// separate entries.
+pub fn problem_fingerprint(g: &ModelGraph, dev: &DeviceSpec) -> u64 {
+    let mut h = Fnv64::new();
+    h.write_u64(graph_fingerprint(g));
+    h.write_u64(dev.bram18k);
+    h.write_u64(dev.dsp);
+    h.write_u64(dev.lut);
+    h.write_u64(dev.lutram);
+    h.write_u64(dev.ff);
+    h.finish()
+}
+
+/// Render a fingerprint the way cache files and logs spell it.
+pub fn hex(fp: u64) -> String {
+    format!("{fp:016x}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::builder::{models, GraphBuilder};
+    use crate::ir::graph::TilingHint;
+    use crate::ir::types::DType;
+
+    #[test]
+    fn fnv_is_stable_and_prefix_safe() {
+        let mut a = Fnv64::new();
+        a.write_bytes(b"hello");
+        // reference FNV-1a 64 of "hello"
+        assert_eq!(a.finish(), 0xa430_d846_80aa_bd0b);
+        let mut b = Fnv64::new();
+        b.write_str("ab");
+        b.write_str("c");
+        let mut c = Fnv64::new();
+        c.write_str("a");
+        c.write_str("bc");
+        assert_ne!(b.finish(), c.finish(), "length prefixes must disambiguate");
+    }
+
+    #[test]
+    fn same_builder_same_fingerprint() {
+        let a = graph_fingerprint(&models::conv_relu(32, 8, 8));
+        let b = graph_fingerprint(&models::conv_relu(32, 8, 8));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn workload_changes_change_the_fingerprint() {
+        let base = graph_fingerprint(&models::conv_relu(32, 8, 8));
+        assert_ne!(base, graph_fingerprint(&models::conv_relu(64, 8, 8)), "size");
+        assert_ne!(base, graph_fingerprint(&models::conv_relu(32, 4, 8)), "channels");
+        assert_ne!(base, graph_fingerprint(&models::cascade(32, 8, 8)), "depth");
+    }
+
+    #[test]
+    fn names_do_not_enter_the_fingerprint() {
+        let mut a = models::conv_relu(32, 8, 8);
+        let fp = graph_fingerprint(&a);
+        a.name = "renamed_beyond_recognition".into();
+        for t in &mut a.tensors {
+            t.name = format!("t{}", t.id.0);
+        }
+        for (i, op) in a.ops.iter_mut().enumerate() {
+            op.name = format!("op{i}");
+        }
+        assert_eq!(fp, graph_fingerprint(&a), "names are provenance, not structure");
+    }
+
+    #[test]
+    fn weight_contents_enter_the_fingerprint() {
+        // Same shapes, different seed => different ROM contents => keys
+        // must differ (the cache returns full designs with baked weights).
+        fn conv_with_seed(seed: u64) -> crate::ir::graph::ModelGraph {
+            let mut b = GraphBuilder::new("seeded");
+            let x = b.input("x", vec![16, 16, 4], DType::I8);
+            let w = b.det_weight("w", vec![4, 3, 3, 4], seed);
+            let acc = b.conv2d("conv0", x, w, 1, 1);
+            let y = b.relu_requant("rr0", acc);
+            b.mark_output(y);
+            b.finish()
+        }
+        assert_ne!(
+            graph_fingerprint(&conv_with_seed(1)),
+            graph_fingerprint(&conv_with_seed(2))
+        );
+    }
+
+    #[test]
+    fn build_order_does_not_enter_the_fingerprint() {
+        // A diamond whose two branches can be inserted in either order:
+        //   x -> conv -> requant --\
+        //   x ---------------------+-> add_sat -> relu
+        // Branch-insertion order permutes op and tensor indices; the
+        // canonical emission must erase that.
+        fn diamond(branch_first: bool) -> crate::ir::graph::ModelGraph {
+            let mut b = GraphBuilder::new("diamond");
+            let x = b.input("x", vec![16, 16, 4], DType::I8);
+            let w = b.det_weight("w", vec![4, 3, 3, 4], 7);
+            let (conv, req);
+            if branch_first {
+                conv = b.conv2d("conv0", x, w, 1, 1);
+                req = b.requant("req0", conv);
+            } else {
+                // same ops, created under different names/order pressure:
+                // an unrelated tensor id is burned first so all ids shift
+                let _decoy = b.det_weight("decoy", vec![1, 1, 1, 4], 9);
+                conv = b.conv2d("c", x, w, 1, 1);
+                req = b.requant("r", conv);
+            }
+            let s = b.add_sat("add0", x, req);
+            let y = b.relu("out", s);
+            b.mark_output(y);
+            b.finish()
+        }
+        let a = diamond(true);
+        let b = diamond(false);
+        // the decoy weight is dead (no op consumes it) and must not count
+        assert_eq!(graph_fingerprint(&a), graph_fingerprint(&b));
+
+        // op *storage* order is erased too: reversing the op vector
+        // (ModelGraph does not require sorted creation order) must not
+        // move the fingerprint
+        let mut c = diamond(true);
+        c.ops.reverse();
+        assert_eq!(graph_fingerprint(&a), graph_fingerprint(&c));
+    }
+
+    #[test]
+    fn tiling_hint_enters_the_fingerprint() {
+        let mut g = models::conv_relu(32, 8, 8);
+        let base = graph_fingerprint(&g);
+        g.tiling = Some(TilingHint {
+            tile_width: Some(8),
+            tile_height: None,
+            max_tiles: None,
+        });
+        let hinted = graph_fingerprint(&g);
+        assert_ne!(base, hinted);
+        g.tiling = Some(TilingHint {
+            tile_width: Some(16),
+            tile_height: None,
+            max_tiles: None,
+        });
+        assert_ne!(hinted, graph_fingerprint(&g));
+    }
+
+    #[test]
+    fn device_and_limits_key_the_problem() {
+        let g = models::conv_relu(32, 8, 8);
+        let kv = DeviceSpec::kv260();
+        let base = problem_fingerprint(&g, &kv);
+        assert_eq!(base, problem_fingerprint(&g, &DeviceSpec::kv260()));
+        assert_ne!(base, problem_fingerprint(&g, &DeviceSpec::zcu104()));
+        assert_ne!(base, problem_fingerprint(&g, &kv.with_dsp_limit(250)));
+        assert_ne!(base, problem_fingerprint(&g, &kv.with_bram_limit(64)));
+        // a renamed but identically-sized device is the same problem
+        let mut twin = DeviceSpec::kv260();
+        twin.name = "kv260-rebadged".into();
+        assert_eq!(base, problem_fingerprint(&g, &twin));
+    }
+
+    #[test]
+    fn hex_renders_16_digits() {
+        assert_eq!(hex(0xab), "00000000000000ab");
+        assert_eq!(hex(u64::MAX).len(), 16);
+    }
+}

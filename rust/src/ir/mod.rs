@@ -19,6 +19,7 @@ pub mod generic;
 pub mod builder;
 pub mod graph;
 pub mod json;
+pub mod fingerprint;
 
 pub use affine::{AffineExpr, AffineMap};
 pub use generic::{GenericOp, IterType, Payload};

@@ -42,8 +42,11 @@
 //!   StreamHLS-like, all lowered onto the same simulator/estimator.
 //! * **`runtime`** — PJRT execution of the AOT-lowered JAX/Pallas golden
 //!   model (HLO text artifacts) for functional verification.
-//! * **`coordinator`** — a multi-threaded compile service running kernel ×
-//!   framework × size sweeps and formatting the paper's tables.
+//! * **`coordinator`** — a staged, cache-backed compile service: kernel ×
+//!   framework × size sweeps over a worker pool, content-addressed design
+//!   reuse (`coordinator::cache`, keyed by `ir::fingerprint`), deterministic
+//!   round-robin sharding across processes with mergeable/resumable JSONL
+//!   spools (`coordinator::spool`), and the paper-table formatters.
 //!
 //! See `DESIGN.md` for the substitution map (what the paper ran on Vitis +
 //! a Kria KV260 board vs. what this repo builds) and `EXPERIMENTS.md` for
@@ -66,7 +69,8 @@ pub mod coordinator;
 pub mod prelude {
     pub use crate::analysis::classify::{classify, KernelClass};
     pub use crate::baselines::framework::{Framework, FrameworkKind};
-    pub use crate::coordinator::service::{CompileService, SweepConfig};
+    pub use crate::coordinator::cache::DesignCache;
+    pub use crate::coordinator::service::{CompileService, Shard, SweepConfig};
     pub use crate::dataflow::build::build_streaming_design;
     pub use crate::dse::ilp::DseConfig;
     pub use crate::ir::builder::{models, GraphBuilder};

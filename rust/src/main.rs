@@ -5,21 +5,32 @@
 //!   simulate  cycle-level simulation (+ golden verification if artifacts exist)
 //!   sweep     the full Table-II sweep (kernel × framework)
 //!   table2|table3|table4|fig3   regenerate the paper's tables/figure series
+//!   merge-sweep  stitch sharded sweep spools into the Table-II report
 //!   verify    golden-model verification for all kernels with artifacts
 //!   import    compile a JSON model file (the ONNX-stand-in front-end)
 //!
+//! Scale-out flags (sweep commands): `--design-cache <dir>` reuses
+//! solved designs content-addressed by (graph, device, config)
+//! fingerprint; `--shard i/n --spool <dir>` runs one deterministic
+//! slice of the sweep and spools JSONL results for `merge-sweep`;
+//! `--workers N` sizes the worker pool.
+//!
 //! (Hand-rolled argument parsing: clap is not vendored in this environment.)
 
-use std::collections::HashMap;
+use std::collections::{BTreeSet, HashMap};
 use std::process::ExitCode;
+use std::sync::Arc;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use ming::baselines::framework::{compile_with, FrameworkKind};
 use ming::codegen::emit::emit_tiled_design;
 use ming::codegen::{emit_design, emit_testbench, emit_tiled_testbench};
+use ming::coordinator::cache::DesignCache;
 use ming::coordinator::report::{self, Cell};
-use ming::coordinator::service::{CompileService, SweepConfig};
+use ming::coordinator::service::{CompileService, Shard, SweepConfig};
+use ming::coordinator::spool;
+use ming::coordinator::WorkerPool;
 use ming::dse::ilp::{solve_with_tiling_fallback, Compiled, DseConfig};
 use ming::dataflow::build::build_streaming_design;
 use ming::dataflow::design::Design;
@@ -39,12 +50,16 @@ struct Args {
 }
 
 fn parse_args() -> Result<Args> {
-    let mut it = std::env::args().skip(1);
+    let mut it = std::env::args().skip(1).peekable();
     let cmd = it.next().unwrap_or_else(|| "help".into());
     let mut flags = HashMap::new();
     while let Some(a) = it.next() {
         if let Some(name) = a.strip_prefix("--") {
-            let val = it.next().unwrap_or_else(|| "true".into());
+            // a flag followed by another flag (or by nothing) is boolean
+            let val = match it.peek() {
+                Some(next) if !next.starts_with("--") => it.next().unwrap(),
+                _ => "true".into(),
+            };
             flags.insert(name.to_string(), val);
         } else {
             bail!("unexpected argument {a:?} (flags are --name value)");
@@ -56,6 +71,58 @@ fn parse_args() -> Result<Args> {
 impl Args {
     fn get(&self, name: &str, default: &str) -> String {
         self.flags.get(name).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    /// Boolean flag: present (as `--flag` or `--flag true`) = true.
+    fn get_bool(&self, name: &str) -> Result<bool> {
+        match self.flags.get(name).map(String::as_str) {
+            None => Ok(false),
+            Some("true") | Some("1") | Some("yes") => Ok(true),
+            Some("false") | Some("0") | Some("no") => Ok(false),
+            Some(other) => bail!("--{name} expects true/false, got {other:?}"),
+        }
+    }
+
+    /// The shared design cache, when `--design-cache <dir>` is given.
+    fn design_cache(&self) -> Result<Option<Arc<DesignCache>>> {
+        match self.flags.get("design-cache") {
+            Some(dir) => Ok(Some(Arc::new(DesignCache::at_dir(dir)?))),
+            None => Ok(None),
+        }
+    }
+
+    /// DSE config for one-shot commands: device + optional cache.
+    fn dse_config(&self, dev: &DeviceSpec) -> Result<DseConfig> {
+        let mut cfg = DseConfig::new(dev.clone());
+        if let Some(cache) = self.design_cache()? {
+            cfg = cfg.with_cache(cache);
+        }
+        Ok(cfg)
+    }
+
+    /// Sweep shard (defaults to the full sweep).
+    fn shard(&self) -> Result<Shard> {
+        match self.flags.get("shard") {
+            Some(s) => Shard::parse(s),
+            None => Ok(Shard::full()),
+        }
+    }
+
+    /// The compile service: `--workers N` pool + optional design cache.
+    fn service(&self) -> Result<CompileService> {
+        let pool = match self.flags.get("workers") {
+            Some(n) => {
+                let n: usize = n.parse().context("--workers expects a positive integer")?;
+                ensure!(n >= 1, "--workers must be >= 1");
+                WorkerPool::new(n)
+            }
+            None => WorkerPool::default_size(),
+        };
+        let mut svc = CompileService::new(pool);
+        if let Some(cache) = self.design_cache()? {
+            svc = svc.with_cache(cache);
+        }
+        Ok(svc)
     }
 
     fn device(&self) -> Result<DeviceSpec> {
@@ -91,7 +158,21 @@ impl Args {
         let name = self.get("framework", "ming");
         FrameworkKind::parse(&name).with_context(|| format!("unknown framework {name:?}"))
     }
+
+    /// Reject flags a command does not implement instead of silently
+    /// ignoring them — `ming table4 --shard 0/2 --spool d` would
+    /// otherwise burn the full sweep on every machine and spool nothing.
+    fn forbid_flags(&self, cmd: &str, names: &[&str]) -> Result<()> {
+        for n in names {
+            ensure!(!self.flags.contains_key(*n), "--{n} is not supported by `{cmd}`");
+        }
+        Ok(())
+    }
 }
+
+/// Scale-out flags only the sweep commands (`sweep`/`table2`/`table3`)
+/// implement.
+const SWEEP_ONLY_FLAGS: &[&str] = &["workers", "shard", "spool", "estimate-only"];
 
 fn det_input(g: &ming::ir::graph::ModelGraph) -> Vec<i32> {
     prng::det_tensor(prng::SEED_INPUT, g.inputs()[0].ty.numel())
@@ -155,6 +236,7 @@ fn report_tiled_compile(a: &Args, tc: &TiledCompilation, dev: &DeviceSpec) -> Re
 }
 
 fn cmd_compile(a: &Args) -> Result<()> {
+    a.forbid_flags("compile", SWEEP_ONLY_FLAGS)?;
     let kernel = a.get("kernel", "conv_relu");
     let size: usize = a.get("size", "32").parse()?;
     let dev = a.device()?;
@@ -162,7 +244,7 @@ fn cmd_compile(a: &Args) -> Result<()> {
     let g = models::paper_kernel(&kernel, size)?;
     // MING gets the tile-grid feasibility fallback; baselines do not.
     let d = if fw == FrameworkKind::Ming {
-        match solve_with_tiling_fallback(&g, &DseConfig::new(dev.clone()))? {
+        match solve_with_tiling_fallback(&g, &a.dse_config(&dev)?)? {
             Compiled::Flat(d, _) => *d,
             Compiled::Tiled(tc) => {
                 println!(
@@ -208,13 +290,14 @@ fn golden_check(kernel: &str, size: usize, x: &[i32], output: &[i32]) -> Result<
 }
 
 fn cmd_simulate(a: &Args) -> Result<()> {
+    a.forbid_flags("simulate", SWEEP_ONLY_FLAGS)?;
     let kernel = a.get("kernel", "conv_relu");
     let size: usize = a.get("size", "32").parse()?;
     let dev = a.device()?;
     let fw = a.framework()?;
     let g = models::paper_kernel(&kernel, size)?;
     let d = if fw == FrameworkKind::Ming {
-        match solve_with_tiling_fallback(&g, &DseConfig::new(dev.clone()))? {
+        match solve_with_tiling_fallback(&g, &a.dse_config(&dev)?)? {
             Compiled::Flat(d, _) => *d,
             Compiled::Tiled(tc) => {
                 println!("untiled DSE infeasible — simulating the grid-tiled design");
@@ -251,31 +334,154 @@ fn cmd_simulate(a: &Args) -> Result<()> {
     golden_check(&kernel, size, &x, &rep.output)
 }
 
-fn run_table2_cells(dev: &DeviceSpec) -> Vec<Cell> {
-    let svc = CompileService::default();
-    let results = svc.run_sweep(&SweepConfig::table2(dev.clone()));
-    results
-        .iter()
-        .filter_map(|r| match r {
-            Ok(jr) => Some(report::cell(jr)),
-            Err(e) => {
-                eprintln!("job failed: {e}");
+/// Shared sweep driver: run `cfg` (one shard of it) on `svc`, spooling
+/// to `--spool` when given, and return the cells for rendering (`None`
+/// when a *partial* shard only spooled — the full table then comes from
+/// `merge-sweep`; a full-shard spooled run renders its complete table).
+fn run_sweep_cmd(
+    a: &Args,
+    svc: &CompileService,
+    cfg: &SweepConfig,
+    report: &str,
+) -> Result<Option<Vec<Cell>>> {
+    let shard = a.shard()?;
+    // one canonical job list per command — every seq/total/id below
+    // derives from it (and run_shard re-derives the identical list)
+    let jobs = CompileService::jobs(cfg);
+    let total = jobs.len();
+    let out = match a.flags.get("spool") {
+        Some(dir) => {
+            let dir = std::path::Path::new(dir);
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating spool dir {}", dir.display()))?;
+            let sweep = CompileService::sweep_id(cfg);
+            let path = spool::shard_file(dir, shard);
+            let (existing, torn) = spool::read_spool_file(&path)?;
+            if torn > 0 {
+                eprintln!("warning: skipped {torn} torn line(s) in {}", path.display());
+            }
+            if existing.iter().any(|r| r.sweep != sweep) {
+                bail!(
+                    "spool {} holds records from a different sweep (other command, \
+                     device or config) — use one spool dir per sweep",
+                    path.display()
+                );
+            }
+            // only *successful* records count as done — failed jobs are
+            // retried on resume (their old failure records lose to the
+            // retry's success at merge time)
+            let done: BTreeSet<usize> =
+                existing.iter().filter(|r| r.outcome.is_ok()).map(|r| r.seq).collect();
+            let ids: Vec<String> = jobs.iter().map(|j| j.id()).collect();
+            // stream one record per finished job (crash loses at most
+            // the jobs in flight; the spool is what makes runs resumable)
+            use std::io::Write as _;
+            let mut f = std::fs::OpenOptions::new()
+                .create(true)
+                .append(true)
+                .open(&path)
+                .with_context(|| format!("opening spool {}", path.display()))?;
+            let mut write_err: Option<std::io::Error> = None;
+            let results = svc.run_shard_streaming(cfg, shard, &done, |seq, outcome| {
+                let line = spool::record_line(sweep, report, seq, total, &ids[seq], outcome);
+                if let Err(e) = writeln!(f, "{line}").and_then(|()| f.flush()) {
+                    write_err.get_or_insert(e);
+                }
+            });
+            if let Some(e) = write_err {
+                // The compute already happened — don't throw it away.
+                // Warn loudly (the spool is incomplete; a resume will
+                // re-run whatever is missing) and fall back to rendering
+                // the in-memory results like an unspooled run.
+                eprintln!(
+                    "warning: spool write to {} failed mid-sweep ({e}); the spool is \
+                     INCOMPLETE — do not merge it without re-running; rendering the \
+                     in-memory results instead",
+                    path.display()
+                );
+                let cells = results
+                    .iter()
+                    .filter_map(|(_, r)| match r {
+                        Ok(jr) => Some(report::cell(jr)),
+                        Err(e) => {
+                            eprintln!("job failed: {e}");
+                            None
+                        }
+                    })
+                    .collect();
+                return Ok(Some(cells));
+            }
+            println!(
+                "shard {shard}: spooled {} new job(s) ({} resumed, {total} total in sweep) \
+                 to {}",
+                results.len(),
+                done.len(),
+                path.display()
+            );
+            if shard.is_full() {
+                // the spool now holds the whole sweep — render it, so
+                // `--spool` adds durability without hiding the table
+                let (records, _) = spool::read_spool_file(&path)?;
+                let merged = spool::merge(records)?;
+                for (seq, id, msg) in &merged.failures {
+                    eprintln!("job failed (seq {seq}, {id}): {msg}");
+                }
+                ensure!(
+                    merged.missing.is_empty(),
+                    "spool {} is missing {} job(s) after a full-shard run: seqs {:?}",
+                    path.display(),
+                    merged.missing.len(),
+                    merged.missing
+                );
+                Some(merged.cells)
+            } else {
                 None
             }
-        })
-        .collect()
+        }
+        None => {
+            let results = svc.run_shard(cfg, shard, &BTreeSet::new());
+            if !shard.is_full() {
+                eprintln!(
+                    "note: rendering shard {shard} only ({} of {total} jobs); \
+                     use --spool + merge-sweep for the full table",
+                    results.len()
+                );
+            }
+            let cells = results
+                .iter()
+                .filter_map(|(_, r)| match r {
+                    Ok(jr) => Some(report::cell(jr)),
+                    Err(e) => {
+                        eprintln!("job failed: {e}");
+                        None
+                    }
+                })
+                .collect();
+            Some(cells)
+        }
+    };
+    if let Some(cache) = svc.cache() {
+        eprintln!("{}", cache.summary());
+    }
+    Ok(out)
 }
 
 fn cmd_table2(a: &Args) -> Result<()> {
     let dev = a.device()?;
-    let cells = run_table2_cells(&dev);
-    println!("{}", report::render_table2(&cells));
+    let mut cfg = SweepConfig::table2(dev);
+    cfg.estimate_only = a.get_bool("estimate-only")?;
+    let svc = a.service()?;
+    if let Some(cells) = run_sweep_cmd(a, &svc, &cfg, "table2")? {
+        println!("{}", report::render_table2(&cells));
+    }
     Ok(())
 }
 
 fn cmd_table3(a: &Args) -> Result<()> {
+    // table3 is estimate-only by definition (post-PnR fabric columns);
+    // an explicit flag would be silently overridden, so reject it
+    a.forbid_flags("table3", &["estimate-only"])?;
     let dev = a.device()?;
-    let svc = CompileService::default();
     let cfg = SweepConfig {
         workloads: vec![
             ("conv_relu".into(), 32),
@@ -286,16 +492,57 @@ fn cmd_table3(a: &Args) -> Result<()> {
         device: dev,
         estimate_only: true,
     };
-    let cells: Vec<Cell> = svc
-        .run_sweep(&cfg)
-        .iter()
-        .filter_map(|r| r.as_ref().ok().map(report::cell))
-        .collect();
-    println!("{}", report::render_table3(&cells));
+    let svc = a.service()?;
+    if let Some(cells) = run_sweep_cmd(a, &svc, &cfg, "table3")? {
+        println!("{}", report::render_table3(&cells));
+    }
+    Ok(())
+}
+
+/// Stitch sharded sweep spools back into the unsharded reports.
+fn cmd_merge_sweep(a: &Args) -> Result<()> {
+    a.forbid_flags("merge-sweep", &["workers", "shard", "design-cache", "estimate-only"])?;
+    let dir = a.flags.get("spool").context("--spool <dir> required")?;
+    let (records, torn) = spool::read_spool_dir(std::path::Path::new(dir))?;
+    if torn > 0 {
+        eprintln!("warning: skipped {torn} torn spool line(s)");
+    }
+    let merged = spool::merge(records)?;
+    for (seq, id, msg) in &merged.failures {
+        eprintln!("job failed (seq {seq}, {id}): {msg}");
+    }
+    if !merged.missing.is_empty() {
+        eprintln!(
+            "warning: {} job(s) missing from the spool (run the missing shards, \
+             then merge again): seqs {:?}",
+            merged.missing.len(),
+            merged.missing
+        );
+    }
+    // The spool records know which report they were swept for; an
+    // explicit --report must agree (catches merging the wrong dir).
+    let recorded = merged.report.clone().unwrap_or_else(|| "table2".into());
+    let kind = match a.flags.get("report") {
+        Some(requested) => {
+            ensure!(
+                *requested == recorded,
+                "--report {requested} but the spool was swept for {recorded}"
+            );
+            requested.clone()
+        }
+        None => recorded,
+    };
+    match kind.as_str() {
+        "table2" => println!("{}", report::render_table2(&merged.cells)),
+        "table3" => println!("{}", report::render_table3(&merged.cells)),
+        other => bail!("spool records an unknown report kind {other:?}"),
+    }
     Ok(())
 }
 
 fn cmd_table4(a: &Args) -> Result<()> {
+    a.forbid_flags("table4", SWEEP_ONLY_FLAGS)?;
+    a.forbid_flags("table4", &["design-cache"])?;
     let base_dev = a.device()?;
     let g = models::paper_kernel("conv_relu", 32)?;
     let x = det_input(&g);
@@ -335,6 +582,8 @@ fn cmd_table4(a: &Args) -> Result<()> {
 }
 
 fn cmd_fig3(a: &Args) -> Result<()> {
+    a.forbid_flags("fig3", SWEEP_ONLY_FLAGS)?;
+    a.forbid_flags("fig3", &["design-cache"])?;
     let dev = a.device()?;
     let mut series: HashMap<&'static str, Vec<(usize, u64)>> = HashMap::new();
     for n in [32usize, 64, 96, 128, 160, 192, 224] {
@@ -349,7 +598,9 @@ fn cmd_fig3(a: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_verify(_a: &Args) -> Result<()> {
+fn cmd_verify(a: &Args) -> Result<()> {
+    a.forbid_flags("verify", SWEEP_ONLY_FLAGS)?;
+    a.forbid_flags("verify", &["design-cache"])?;
     let gm = GoldenModel::open_default()?;
     let dev = DeviceSpec::kv260();
     let mut all_ok = true;
@@ -374,6 +625,7 @@ fn cmd_verify(_a: &Args) -> Result<()> {
 }
 
 fn cmd_import(a: &Args) -> Result<()> {
+    a.forbid_flags("import", SWEEP_ONLY_FLAGS)?;
     let path = a.flags.get("model").context("--model <file.json> required")?;
     let text = std::fs::read_to_string(path)?;
     let g = import_model(&text)?;
@@ -382,7 +634,7 @@ fn cmd_import(a: &Args) -> Result<()> {
         println!("tiling hint: {hint:?}");
     }
     let dev = a.device()?;
-    match solve_with_tiling_fallback(&g, &DseConfig::new(dev.clone()))? {
+    match solve_with_tiling_fallback(&g, &a.dse_config(&dev)?)? {
         Compiled::Flat(d, _) => {
             let r = estimate(&d, &dev);
             println!("resources: {r}");
@@ -413,12 +665,21 @@ fn help() {
          \x20           MING falls back to stride-aware 2-D tile-grid decomposition when the\n\
          \x20           DSE is infeasible; --emit-tb then writes a per-boundary seam testbench\n\
          \x20 simulate  --kernel K --size N [--framework F] [--device D]\n\
-         \x20 table2    [--device D]        full Table-II sweep\n\
+         \x20 table2    [--device D] [--estimate-only]   full Table-II sweep\n\
          \x20 table3    [--device D]        post-PnR fabric table\n\
          \x20 table4    [--device D]        DSP-constraint sweep\n\
          \x20 fig3      [--device D]        BRAM-vs-input-size series\n\
+         \x20 merge-sweep --spool DIR [--report table2|table3]\n\
+         \x20           stitch sharded sweep spools into the unsharded report\n\
          \x20 verify                        golden-model check (needs `make artifacts`)\n\
          \x20 import    --model m.json [--emit f.cpp]\n\n\
+         SCALE-OUT (compile/simulate/import + sweep commands)\n\
+         \x20 --design-cache DIR  reuse solved designs across runs/processes\n\
+         \x20                     (content-addressed by graph+device fingerprint)\n\
+         \x20 --workers N         worker-pool size for sweeps\n\
+         \x20 --shard i/n         run the i-th of n deterministic sweep slices\n\
+         \x20 --spool DIR         append JSONL results for merge-sweep / resume\n\
+         \x20                     (already-spooled jobs are skipped on re-run)\n\n\
          kernels: conv_relu cascade residual linear feedforward vgg3 conv_pool\n\
          frameworks: vanilla scalehls streamhls ming\n\
          devices: kv260 zcu104 u250  (+ --dsp-limit N, --bram-limit N, --max-bram-frac F)\n\
@@ -439,6 +700,7 @@ fn main() -> ExitCode {
         "compile" => cmd_compile(&args),
         "simulate" => cmd_simulate(&args),
         "sweep" | "table2" => cmd_table2(&args),
+        "merge-sweep" => cmd_merge_sweep(&args),
         "table3" => cmd_table3(&args),
         "table4" => cmd_table4(&args),
         "fig3" => cmd_fig3(&args),

@@ -25,7 +25,7 @@ use anyhow::{bail, ensure, Result};
 
 use crate::dataflow::build::{build_cell_design, build_streaming_design};
 use crate::dataflow::design::Design;
-use crate::dse::ilp::{solve, DseConfig, DseSolution};
+use crate::dse::ilp::{DseConfig, DseSolution};
 use crate::dse::space::grid_counts;
 use crate::ir::graph::ModelGraph;
 use crate::sim::{simulate, SimMode};
@@ -84,6 +84,12 @@ pub fn compile_tiled_fixed(
 /// Compile `g` for an already-planned grid — the search loop builds each
 /// candidate grid once (for the shrink check and the BRAM lower bound)
 /// and hands it straight in instead of re-deriving it.
+///
+/// The cell DSE goes through [`crate::coordinator::cache::solve_cached`]:
+/// when the config carries a design cache, a cell geometry that was
+/// already solved — by an earlier grid candidate of this search, by a
+/// previous workload sharing the chain shape, or by another process —
+/// is applied instead of re-solved.
 fn compile_tiled_with_grid(
     g: &ModelGraph,
     cfg: &DseConfig,
@@ -103,7 +109,7 @@ fn compile_tiled_with_grid(
             grid.w.local_out
         );
     }
-    let solution = solve(&mut cell, cfg)?;
+    let solution = crate::coordinator::cache::solve_cached(&mut cell, cfg)?;
     let report = crate::resources::estimate(&cell, &cfg.device);
     ensure!(
         report.bram18k <= cfg.device.bram18k,
@@ -215,6 +221,26 @@ pub struct TiledSimReport {
     pub output: Vec<i32>,
     /// Per-cell simulated cycle counts (row-major over the grid).
     pub tile_cycles: Vec<u64>,
+    /// Total node firings summed over all cell runs (simulator
+    /// throughput metric, mirrors `SimReport::total_firings`).
+    pub total_firings: u64,
+}
+
+impl TiledSimReport {
+    /// Repackage as a plain [`crate::sim::SimReport`] so sweep results
+    /// keep output parity between flat and tiled cells: per-node traces
+    /// and FIFO high-water marks are per-cell quantities with no
+    /// meaningful whole-grid stitching, so they stay empty.
+    pub fn into_sim_report(self) -> crate::sim::SimReport {
+        crate::sim::SimReport {
+            cycles: self.cycles,
+            output: self.output,
+            traces: Vec::new(),
+            fifo_high_water: Vec::new(),
+            deadlock: None,
+            total_firings: self.total_firings,
+        }
+    }
 }
 
 /// Execute every cell of `tc` on the cycle-level simulator and stitch
@@ -243,6 +269,7 @@ pub fn simulate_tiled(tc: &TiledCompilation, input: &[i32]) -> Result<TiledSimRe
     let mut output = vec![0i32; h_out * w_out * f];
     let mut tile_cycles = Vec::with_capacity(grid.n_cells());
     let mut cycles = 0u64;
+    let mut total_firings = 0u64;
     for rs in &grid.h.segs {
         for cs in &grid.w.segs {
             // gather the halo-overlapped 2-D input window, row by row
@@ -268,15 +295,17 @@ pub fn simulate_tiled(tc: &TiledCompilation, input: &[i32]) -> Result<TiledSimRe
                     .copy_from_slice(&rep.output[src..src + grid.w.core * f]);
             }
             cycles += rep.cycles + TILE_RESTART_CYCLES;
+            total_firings += rep.total_firings;
             tile_cycles.push(rep.cycles);
         }
     }
-    Ok(TiledSimReport { cycles, output, tile_cycles })
+    Ok(TiledSimReport { cycles, output, tile_cycles, total_firings })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::dse::ilp::solve;
     use crate::ir::builder::models;
     use crate::resources::device::DeviceSpec;
     use crate::util::prng;
