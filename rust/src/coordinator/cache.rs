@@ -65,6 +65,13 @@ pub enum CachedDesign {
     /// The workload only fit grid-tiled: the winning grid shape plus
     /// the cell design's per-node timings.
     Tiled { rows: usize, cols: usize, timings: Vec<NodeTiming> },
+    /// **Negative entry**: the flat DSE for this fingerprint has no
+    /// feasible point at the fingerprinted device budget. Cached so
+    /// `compile_tiled` cell solves and fallback callers stop re-proving
+    /// infeasibility with a full branch-and-bound run; the original
+    /// solver error is preserved verbatim. The fingerprint covers the
+    /// device budgets, so a budget change is automatically a miss.
+    Infeasible { msg: String },
 }
 
 /// Counters accumulated over a cache's lifetime.
@@ -82,6 +89,8 @@ pub struct CacheStats {
     /// Real ILP solves performed through the cached entry points. A
     /// fully warm cache keeps this at zero across an entire sweep.
     pub solves: u64,
+    /// Disk entries removed by [`DesignCache::gc`] (mtime-LRU sweep).
+    pub evicted: u64,
 }
 
 impl CacheStats {
@@ -104,6 +113,7 @@ pub struct DesignCache {
     stores: AtomicU64,
     corrupt: AtomicU64,
     solves: AtomicU64,
+    evicted: AtomicU64,
 }
 
 impl std::fmt::Debug for DesignCache {
@@ -126,6 +136,7 @@ impl DesignCache {
             stores: AtomicU64::new(0),
             corrupt: AtomicU64::new(0),
             solves: AtomicU64::new(0),
+            evicted: AtomicU64::new(0),
         }
     }
 
@@ -227,6 +238,7 @@ impl DesignCache {
             stores: self.stores.load(Ordering::Relaxed),
             corrupt: self.corrupt.load(Ordering::Relaxed),
             solves: self.solves.load(Ordering::Relaxed),
+            evicted: self.evicted.load(Ordering::Relaxed),
         }
     }
 
@@ -235,14 +247,53 @@ impl DesignCache {
         let s = self.stats();
         format!(
             "design cache: {} hits / {} misses ({:.0}% hit rate), {} stores, \
-             {} ilp solves, {} corrupt entries",
+             {} ilp solves, {} corrupt entries, {} evicted",
             s.hits,
             s.misses,
             100.0 * s.hit_rate(),
             s.stores,
             s.solves,
-            s.corrupt
+            s.corrupt,
+            s.evicted
         )
+    }
+
+    /// mtime-LRU garbage collection of the disk tier: keep the
+    /// `max_entries` most-recently-used entry files, remove the rest.
+    /// Atomic renames give every served entry a fresh mtime only when
+    /// (re)written, so "least recently written" approximates LRU well
+    /// enough for long-lived sweep caches; readers racing a removal
+    /// simply take a miss and re-solve. Returns `(kept, evicted)`.
+    /// No-op for in-memory caches.
+    pub fn gc(&self, max_entries: usize) -> Result<(usize, usize)> {
+        let Some(dir) = &self.dir else {
+            return Ok((0, 0));
+        };
+        let mut entries: Vec<(std::time::SystemTime, PathBuf)> = Vec::new();
+        for e in std::fs::read_dir(dir)
+            .with_context(|| format!("reading design cache dir {}", dir.display()))?
+        {
+            let e = e?;
+            let path = e.path();
+            if path.extension().and_then(|x| x.to_str()) != Some("json") {
+                continue; // tmp files and strangers are not entries
+            }
+            let mtime = e
+                .metadata()
+                .and_then(|m| m.modified())
+                .unwrap_or(std::time::SystemTime::UNIX_EPOCH);
+            entries.push((mtime, path));
+        }
+        // newest first; ties broken by path for determinism
+        entries.sort_by(|a, b| b.0.cmp(&a.0).then_with(|| a.1.cmp(&b.1)));
+        let mut evicted = 0usize;
+        for (_, path) in entries.iter().skip(max_entries) {
+            if std::fs::remove_file(path).is_ok() {
+                evicted += 1;
+            }
+        }
+        self.evicted.fetch_add(evicted as u64, Ordering::Relaxed);
+        Ok((entries.len().min(max_entries), evicted))
     }
 }
 
@@ -287,6 +338,10 @@ pub fn entry_to_json(e: &CachedDesign) -> Json {
             m.insert("cols".into(), Json::Num(*cols as f64));
             m.insert("timings".into(), timings(ts));
         }
+        CachedDesign::Infeasible { msg } => {
+            m.insert("kind".into(), Json::Str("infeasible".into()));
+            m.insert("msg".into(), Json::Str(msg.clone()));
+        }
     }
     Json::Obj(m)
 }
@@ -299,6 +354,10 @@ pub fn entry_from_json(text: &str) -> Result<CachedDesign> {
         doc.get("version")?.as_usize()? as u64 == CACHE_VERSION,
         "cache entry has an unknown version"
     );
+    let kind = doc.get("kind")?.as_str()?.to_string();
+    if kind == "infeasible" {
+        return Ok(CachedDesign::Infeasible { msg: doc.get("msg")?.as_str()?.to_string() });
+    }
     let timings: Vec<NodeTiming> = doc
         .get("timings")?
         .as_arr()?
@@ -306,7 +365,7 @@ pub fn entry_from_json(text: &str) -> Result<CachedDesign> {
         .map(timing_from_json)
         .collect::<Result<_>>()?;
     ensure!(!timings.is_empty(), "cache entry has no timings");
-    match doc.get("kind")?.as_str()? {
+    match kind.as_str() {
         "flat" => Ok(CachedDesign::Flat { timings }),
         "tiled" => Ok(CachedDesign::Tiled {
             rows: doc.get("rows")?.as_usize()?,
@@ -420,6 +479,11 @@ pub fn rebuild_compiled(
                 solution,
             })))
         }
+        // a negative entry describes *no* design — the fallback handles
+        // it before calling here; anyone else treats it as unusable
+        CachedDesign::Infeasible { msg } => {
+            bail!("cached verdict: flat DSE infeasible ({msg})")
+        }
     }
 }
 
@@ -442,15 +506,29 @@ pub fn compiled_entry(c: &Compiled) -> CachedDesign {
 /// the solution under the design's graph fingerprint. With no cache
 /// configured this is exactly [`crate::dse::ilp::solve`].
 ///
+/// **Negative caching**: an infeasible solve stores a
+/// [`CachedDesign::Infeasible`] verdict under the same fingerprint, and
+/// a later lookup returns the original error without re-running the
+/// branch-and-bound proof. The grid-lattice search probes many cell
+/// geometries that *don't* fit before finding one that does — on a
+/// warm cache those dead ends now cost a map lookup each.
+///
 /// This is the entry point the tile-grid search uses per candidate
 /// cell: identical cell geometries — which recur across grid candidates
 /// of one search *and* across workloads sharing a chain shape — are
-/// solved once ever.
+/// solved once ever, feasible or not.
 pub fn solve_cached(design: &mut Design, cfg: &DseConfig) -> Result<DseSolution> {
     let Some(cache) = &cfg.cache else {
         return solve(design, cfg);
     };
     let fp = problem_fingerprint(&design.graph, &cfg.device);
+    // A Tiled whole-outcome entry can share this fingerprint (a cell
+    // graph identical to a whole workload compiled via the fallback).
+    // It cannot satisfy a flat solve, but it must not be *clobbered*
+    // by the negative verdict below either — overwriting it would make
+    // the next fallback compile of that workload redo its whole grid
+    // search.
+    let mut preserve_entry = false;
     if let Some(entry) = cache.lookup(fp) {
         match &entry {
             CachedDesign::Flat { timings } => {
@@ -459,17 +537,33 @@ pub fn solve_cached(design: &mut Design, cfg: &DseConfig) -> Result<DseSolution>
                     Err(_) => cache.note_corrupt(),
                 }
             }
-            // a tiled entry can never satisfy a flat solve request
-            CachedDesign::Tiled { .. } => cache.note_corrupt(),
+            CachedDesign::Infeasible { msg } => {
+                bail!("infeasible (cached verdict): {msg}")
+            }
+            CachedDesign::Tiled { .. } => {
+                cache.note_corrupt();
+                preserve_entry = true;
+            }
         }
     }
     cache.count_solve();
-    let sol = solve(design, cfg)?;
-    cache.insert(
-        fp,
-        CachedDesign::Flat { timings: design.nodes.iter().map(|n| n.timing).collect() },
-    );
-    Ok(sol)
+    match solve(design, cfg) {
+        Ok(sol) => {
+            cache.insert(
+                fp,
+                CachedDesign::Flat {
+                    timings: design.nodes.iter().map(|n| n.timing).collect(),
+                },
+            );
+            Ok(sol)
+        }
+        Err(e) => {
+            if !preserve_entry {
+                cache.insert(fp, CachedDesign::Infeasible { msg: format!("{e:#}") });
+            }
+            Err(e)
+        }
+    }
 }
 
 #[cfg(test)]
@@ -499,7 +593,10 @@ mod tests {
             cols: 4,
             timings: vec![NodeTiming::default()],
         };
-        for e in [flat, tiled] {
+        let infeasible = CachedDesign::Infeasible {
+            msg: "infeasible: minimal design needs 9 DSP, device allows 0".into(),
+        };
+        for e in [flat, tiled, infeasible] {
             let text = entry_to_json(&e).render();
             assert_eq!(entry_from_json(&text).unwrap(), e);
         }
@@ -517,6 +614,7 @@ mod tests {
             r#"{"version":1,"kind":"warped","timings":[[1,1,4,1,1]]}"#,
             r#"{"version":1,"kind":"flat","timings":[[1,1,4,1]]}"#,
             r#"{"version":1,"kind":"tiled","timings":[[1,1,4,1,1]]}"#,
+            r#"{"version":1,"kind":"infeasible"}"#,
         ] {
             assert!(entry_from_json(text).is_err(), "{text:?} must not parse");
         }
@@ -592,6 +690,65 @@ mod tests {
         assert_eq!(sol2.nodes_explored, 0, "a hit explores nothing");
         // byte-identical designs, the determinism property
         assert_eq!(format!("{fresh:?}"), format!("{cached:?}"));
+    }
+
+    #[test]
+    fn infeasible_solves_are_negative_cached() {
+        // A DSP-starved conv has no feasible flat point. The first
+        // solve_cached pays the branch-and-bound proof and stores the
+        // verdict; the second returns the same error as a pure hit.
+        let g = models::conv_relu(32, 8, 8);
+        let cache = Arc::new(DesignCache::in_memory());
+        let cfg = DseConfig::new(DeviceSpec::kv260().with_dsp_limit(0)).with_cache(cache.clone());
+
+        let mut d1 = build_streaming_design(&g).unwrap();
+        let e1 = solve_cached(&mut d1, &cfg).unwrap_err();
+        assert_eq!(cache.stats().solves, 1);
+        assert_eq!(cache.stats().stores, 1, "verdict must be stored");
+
+        let mut d2 = build_streaming_design(&g).unwrap();
+        let e2 = solve_cached(&mut d2, &cfg).unwrap_err();
+        let s = cache.stats();
+        assert_eq!(s.solves, 1, "cached verdict must skip the solver");
+        assert_eq!(s.hits, 1);
+        assert!(format!("{e2:#}").contains("cached verdict"), "{e2:#}");
+        // the original reason is preserved
+        assert!(format!("{e2:#}").contains(&format!("{e1:#}")), "{e1:#} vs {e2:#}");
+
+        // a feasible budget is a different fingerprint: unaffected
+        let ok_cfg = DseConfig::new(DeviceSpec::kv260()).with_cache(cache.clone());
+        let mut d3 = build_streaming_design(&g).unwrap();
+        solve_cached(&mut d3, &ok_cfg).unwrap();
+    }
+
+    #[test]
+    fn gc_keeps_newest_entries_and_counts_evictions() {
+        let dir = tmp_dir("gc");
+        let c = DesignCache::at_dir(&dir).unwrap();
+        let entry = CachedDesign::Flat { timings: vec![NodeTiming::default()] };
+        for fp in 0..6u64 {
+            c.insert(fp, entry.clone());
+            // distinct mtimes so LRU order is deterministic
+            let t = std::time::SystemTime::now() - std::time::Duration::from_secs(600 - fp);
+            let f = std::fs::File::options()
+                .append(true)
+                .open(dir.join(format!("{}.json", hex(fp))))
+                .unwrap();
+            f.set_modified(t).unwrap();
+        }
+        // a tmp straggler must not count as an entry
+        std::fs::write(dir.join("stray.tmp.1.2"), "x").unwrap();
+        let (kept, evicted) = c.gc(2).unwrap();
+        assert_eq!((kept, evicted), (2, 4));
+        assert_eq!(c.stats().evicted, 4);
+        // the two newest fingerprints survive on disk
+        let fresh = DesignCache::at_dir(&dir).unwrap();
+        assert!(fresh.lookup(5).is_some());
+        assert!(fresh.lookup(4).is_some());
+        assert!(fresh.lookup(0).is_none(), "oldest entry must be gone");
+        // idempotent: nothing more to evict
+        assert_eq!(c.gc(2).unwrap(), (2, 0));
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

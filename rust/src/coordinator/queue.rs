@@ -3,7 +3,7 @@
 //! CPU-bound, so OS threads are the right tool anyway).
 
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::Mutex;
 use std::thread;
 
 /// Fixed-size worker pool executing `FnOnce` jobs; results come back in
@@ -46,40 +46,56 @@ impl WorkerPool {
     pub fn run_all_streaming<J, R>(
         &self,
         jobs: Vec<J>,
-        mut on_done: impl FnMut(usize, &Result<R, String>),
+        on_done: impl FnMut(usize, &Result<R, String>),
     ) -> Vec<(usize, Result<R, String>)>
     where
         J: FnOnce() -> R + Send + 'static,
         R: Send + 'static,
     {
-        let njobs = jobs.len();
-        let queue: Arc<Mutex<Vec<(usize, J)>>> =
-            Arc::new(Mutex::new(jobs.into_iter().enumerate().rev().collect()));
-        let (tx, rx) = mpsc::channel::<(usize, Result<R, String>)>();
+        self.run_all_scoped(jobs, on_done)
+    }
 
-        let mut handles = Vec::new();
-        for _ in 0..self.workers.min(njobs.max(1)) {
-            let queue = Arc::clone(&queue);
-            let tx = tx.clone();
-            handles.push(thread::spawn(move || loop {
-                let next = queue.lock().unwrap().pop();
-                let Some((idx, job)) = next else { break };
-                let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job))
-                    .map_err(|e| panic_msg(&*e));
-                if tx.send((idx, out)).is_err() {
-                    break;
-                }
-            }));
-        }
-        drop(tx);
+    /// The scoped core shared by every entry point: jobs (and their
+    /// results) may **borrow** from the caller's stack — the pool runs
+    /// them on `std::thread::scope` threads, so `simulate_tiled` can
+    /// fan cell closures referencing the cell design and the input
+    /// tensor straight out without cloning either. Results come back
+    /// `(index, result)`-sorted; `on_done` fires in completion order on
+    /// the coordinator thread.
+    pub fn run_all_scoped<'env, J, R>(
+        &self,
+        jobs: Vec<J>,
+        mut on_done: impl FnMut(usize, &Result<R, String>),
+    ) -> Vec<(usize, Result<R, String>)>
+    where
+        J: FnOnce() -> R + Send + 'env,
+        R: Send + 'env,
+    {
+        let njobs = jobs.len();
+        let queue: Mutex<Vec<(usize, J)>> =
+            Mutex::new(jobs.into_iter().enumerate().rev().collect());
+        let (tx, rx) = mpsc::channel::<(usize, Result<R, String>)>();
         let mut results: Vec<(usize, Result<R, String>)> = Vec::with_capacity(njobs);
-        for (idx, out) in rx.iter() {
-            on_done(idx, &out);
-            results.push((idx, out));
-        }
-        for h in handles {
-            let _ = h.join();
-        }
+        thread::scope(|s| {
+            for _ in 0..self.workers.min(njobs.max(1)) {
+                let tx = tx.clone();
+                let queue = &queue;
+                s.spawn(move || loop {
+                    let next = queue.lock().unwrap().pop();
+                    let Some((idx, job)) = next else { break };
+                    let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job))
+                        .map_err(|e| panic_msg(&*e));
+                    if tx.send((idx, out)).is_err() {
+                        break;
+                    }
+                });
+            }
+            drop(tx);
+            for (idx, out) in rx.iter() {
+                on_done(idx, &out);
+                results.push((idx, out));
+            }
+        });
         results.sort_by_key(|(i, _)| *i);
         results
     }
@@ -138,6 +154,19 @@ mod tests {
         assert_eq!(seen.len(), 16, "one callback per job");
         seen.sort_unstable();
         assert_eq!(seen, (0usize..16).map(|i| (i, i + 1)).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn scoped_jobs_may_borrow_the_callers_stack() {
+        // The contract simulate_tiled relies on: closures borrowing a
+        // local slice run fine on pool threads (no 'static, no clones).
+        let pool = WorkerPool::new(3);
+        let data: Vec<usize> = (0..64).collect();
+        let jobs: Vec<_> =
+            data.chunks(8).map(|ch| move || ch.iter().sum::<usize>()).collect();
+        let results = pool.run_all_scoped(jobs, |_, _| {});
+        let total: usize = results.iter().map(|(_, r)| *r.as_ref().unwrap()).sum();
+        assert_eq!(total, 64 * 63 / 2);
     }
 
     #[test]

@@ -239,36 +239,78 @@ pub enum Compiled {
 /// repeat compilation of the same `(graph, device, config)` rebuilds
 /// the solved design deterministically with zero ILP solves and zero
 /// grid search. Unusable entries degrade to a normal compile.
+///
+/// A cached [`cache::CachedDesign::Infeasible`] verdict short-circuits
+/// the flat branch-and-bound proof entirely: the fallback goes straight
+/// to the tile-grid search (whose per-cell solves are themselves
+/// negative-cached), so a workload whose tiling previously failed never
+/// re-proves flat infeasibility, and one whose tiling succeeds upgrades
+/// the entry to the tiled outcome.
 pub fn solve_with_tiling_fallback(g: &ModelGraph, cfg: &DseConfig) -> Result<Compiled> {
     let fp = cfg.cache.as_ref().map(|c| (c, problem_fingerprint(g, &cfg.device)));
+    let mut cached_flat_err: Option<String> = None;
     if let Some((c, fp)) = &fp {
         if let Some(entry) = c.lookup(*fp) {
-            match cache::rebuild_compiled(g, cfg, &entry) {
-                Ok(compiled) => return Ok(compiled),
-                Err(_) => c.note_corrupt(),
+            match &entry {
+                cache::CachedDesign::Infeasible { msg } => {
+                    // flat verdict already proven: skip solve(), keep
+                    // the original error for the combined message
+                    cached_flat_err = Some(msg.clone());
+                }
+                _ => match cache::rebuild_compiled(g, cfg, &entry) {
+                    Ok(compiled) => return Ok(compiled),
+                    Err(_) => c.note_corrupt(),
+                },
             }
         }
     }
     let mut design = build_streaming_design(g)?;
-    if let Some((c, _)) = &fp {
-        c.count_solve();
-    }
-    let compiled = match solve(&mut design, cfg) {
-        Ok(sol) => Compiled::Flat(Box::new(design), sol),
-        // a failed solve leaves the design's scalar timing untouched, so
-        // it can seed the tiling planner's lower bounds directly
-        Err(flat_err) => match compile_tiled_from(g, &design, cfg) {
-            Ok(tc) => Compiled::Tiled(Box::new(tc)),
-            Err(tile_err) => bail!(
-                "untiled DSE infeasible ({flat_err:#}); tile-grid fallback \
-                 also failed ({tile_err:#})"
-            ),
-        },
+    let flat_err = match &cached_flat_err {
+        Some(msg) => Some(anyhow::anyhow!("{msg} (cached verdict)")),
+        None => {
+            if let Some((c, _)) = &fp {
+                c.count_solve();
+            }
+            match solve(&mut design, cfg) {
+                Ok(sol) => {
+                    let compiled = Compiled::Flat(Box::new(design), sol);
+                    if let Some((c, fp)) = &fp {
+                        c.insert(*fp, cache::compiled_entry(&compiled));
+                    }
+                    return Ok(compiled);
+                }
+                Err(e) => {
+                    // record the negative verdict *now*: even if the
+                    // tiling fallback below also fails, the next run
+                    // skips this branch-and-bound proof
+                    if let Some((c, fp)) = &fp {
+                        c.insert(
+                            *fp,
+                            cache::CachedDesign::Infeasible { msg: format!("{e:#}") },
+                        );
+                    }
+                    Some(e)
+                }
+            }
+        }
     };
-    if let Some((c, fp)) = &fp {
-        c.insert(*fp, cache::compiled_entry(&compiled));
+    let flat_err = flat_err.expect("flat path either returned or produced an error");
+    // a failed solve leaves the design's scalar timing untouched, so it
+    // can seed the tiling planner's lower bounds directly
+    match compile_tiled_from(g, &design, cfg) {
+        Ok(tc) => {
+            let compiled = Compiled::Tiled(Box::new(tc));
+            if let Some((c, fp)) = &fp {
+                // upgrade the infeasible-flat marker to the real outcome
+                c.insert(*fp, cache::compiled_entry(&compiled));
+            }
+            Ok(compiled)
+        }
+        Err(tile_err) => bail!(
+            "untiled DSE infeasible ({flat_err:#}); tile-grid fallback \
+             also failed ({tile_err:#})"
+        ),
     }
-    Ok(compiled)
 }
 
 #[cfg(test)]

@@ -41,7 +41,7 @@ use ming::resources::estimate;
 use ming::runtime::golden::GoldenModel;
 use ming::sim::{simulate, SimMode};
 use ming::sim::trace::render_traces;
-use ming::tiling::{simulate_tiled, TiledCompilation};
+use ming::tiling::{simulate_tiled, simulate_tiled_parallel, TiledCompilation};
 use ming::util::prng;
 
 struct Args {
@@ -84,11 +84,28 @@ impl Args {
     }
 
     /// The shared design cache, when `--design-cache <dir>` is given.
+    /// `--cache-gc <max-entries>` runs an mtime-LRU sweep of the cache
+    /// dir at service start, before any lookups.
     fn design_cache(&self) -> Result<Option<Arc<DesignCache>>> {
-        match self.flags.get("design-cache") {
-            Some(dir) => Ok(Some(Arc::new(DesignCache::at_dir(dir)?))),
-            None => Ok(None),
+        let cache = match self.flags.get("design-cache") {
+            Some(dir) => Arc::new(DesignCache::at_dir(dir)?),
+            None => {
+                ensure!(
+                    !self.flags.contains_key("cache-gc"),
+                    "--cache-gc requires --design-cache <dir>"
+                );
+                return Ok(None);
+            }
+        };
+        if let Some(max) = self.flags.get("cache-gc") {
+            let max: usize = max.parse().context("--cache-gc expects a max entry count")?;
+            let (kept, evicted) = cache.gc(max)?;
+            eprintln!(
+                "design cache gc: kept {kept} entr{} (newest first), evicted {evicted}",
+                if kept == 1 { "y" } else { "ies" }
+            );
         }
+        Ok(Some(cache))
     }
 
     /// DSE config for one-shot commands: device + optional cache.
@@ -108,17 +125,21 @@ impl Args {
         }
     }
 
-    /// The compile service: `--workers N` pool + optional design cache.
-    fn service(&self) -> Result<CompileService> {
-        let pool = match self.flags.get("workers") {
+    /// Worker pool sized by `--workers N` (machine-sized by default).
+    fn worker_pool(&self) -> Result<WorkerPool> {
+        match self.flags.get("workers") {
             Some(n) => {
                 let n: usize = n.parse().context("--workers expects a positive integer")?;
                 ensure!(n >= 1, "--workers must be >= 1");
-                WorkerPool::new(n)
+                Ok(WorkerPool::new(n))
             }
-            None => WorkerPool::default_size(),
-        };
-        let mut svc = CompileService::new(pool);
+            None => Ok(WorkerPool::default_size()),
+        }
+    }
+
+    /// The compile service: `--workers N` pool + optional design cache.
+    fn service(&self) -> Result<CompileService> {
+        let mut svc = CompileService::new(self.worker_pool()?);
         if let Some(cache) = self.design_cache()? {
             svc = svc.with_cache(cache);
         }
@@ -290,11 +311,16 @@ fn golden_check(kernel: &str, size: usize, x: &[i32], output: &[i32]) -> Result<
 }
 
 fn cmd_simulate(a: &Args) -> Result<()> {
-    a.forbid_flags("simulate", SWEEP_ONLY_FLAGS)?;
+    // `simulate` takes --workers (parallel tiled execution) but none of
+    // the sweep-only sharding/spooling flags.
+    a.forbid_flags("simulate", &["shard", "spool", "estimate-only"])?;
     let kernel = a.get("kernel", "conv_relu");
     let size: usize = a.get("size", "32").parse()?;
     let dev = a.device()?;
     let fw = a.framework()?;
+    // validate --workers up front so a bad value errors on the flat
+    // path too (the pool itself is only used by tiled designs)
+    let pool = a.worker_pool()?;
     let g = models::paper_kernel(&kernel, size)?;
     let d = if fw == FrameworkKind::Ming {
         match solve_with_tiling_fallback(&g, &a.dse_config(&dev)?)? {
@@ -303,7 +329,16 @@ fn cmd_simulate(a: &Args) -> Result<()> {
                 println!("untiled DSE infeasible — simulating the grid-tiled design");
                 println!("{}", tc.grid.describe());
                 let x = det_input(&g);
-                let rep = simulate_tiled(&tc, &x)?;
+                let rep = if pool.workers() > 1 {
+                    println!(
+                        "fanning {} cells across {} workers",
+                        tc.grid.n_cells(),
+                        pool.workers().min(tc.grid.n_cells())
+                    );
+                    simulate_tiled_parallel(&tc, &x, &pool)?
+                } else {
+                    simulate_tiled(&tc, &x)?
+                };
                 println!(
                     "cycles: {}  ({:.4} MCycles over {} cells, {:.2} MAC/cycle)",
                     rep.cycles,
@@ -501,7 +536,7 @@ fn cmd_table3(a: &Args) -> Result<()> {
 
 /// Stitch sharded sweep spools back into the unsharded reports.
 fn cmd_merge_sweep(a: &Args) -> Result<()> {
-    a.forbid_flags("merge-sweep", &["workers", "shard", "design-cache", "estimate-only"])?;
+    a.forbid_flags("merge-sweep", &["workers", "shard", "design-cache", "cache-gc", "estimate-only"])?;
     let dir = a.flags.get("spool").context("--spool <dir> required")?;
     let (records, torn) = spool::read_spool_dir(std::path::Path::new(dir))?;
     if torn > 0 {
@@ -542,7 +577,7 @@ fn cmd_merge_sweep(a: &Args) -> Result<()> {
 
 fn cmd_table4(a: &Args) -> Result<()> {
     a.forbid_flags("table4", SWEEP_ONLY_FLAGS)?;
-    a.forbid_flags("table4", &["design-cache"])?;
+    a.forbid_flags("table4", &["design-cache", "cache-gc"])?;
     let base_dev = a.device()?;
     let g = models::paper_kernel("conv_relu", 32)?;
     let x = det_input(&g);
@@ -583,7 +618,7 @@ fn cmd_table4(a: &Args) -> Result<()> {
 
 fn cmd_fig3(a: &Args) -> Result<()> {
     a.forbid_flags("fig3", SWEEP_ONLY_FLAGS)?;
-    a.forbid_flags("fig3", &["design-cache"])?;
+    a.forbid_flags("fig3", &["design-cache", "cache-gc"])?;
     let dev = a.device()?;
     let mut series: HashMap<&'static str, Vec<(usize, u64)>> = HashMap::new();
     for n in [32usize, 64, 96, 128, 160, 192, 224] {
@@ -600,7 +635,7 @@ fn cmd_fig3(a: &Args) -> Result<()> {
 
 fn cmd_verify(a: &Args) -> Result<()> {
     a.forbid_flags("verify", SWEEP_ONLY_FLAGS)?;
-    a.forbid_flags("verify", &["design-cache"])?;
+    a.forbid_flags("verify", &["design-cache", "cache-gc"])?;
     let gm = GoldenModel::open_default()?;
     let dev = DeviceSpec::kv260();
     let mut all_ok = true;
@@ -664,7 +699,8 @@ fn help() {
          \x20 compile   --kernel K --size N [--framework F] [--device D] [--emit f.cpp] [--emit-tb tb.cpp]\n\
          \x20           MING falls back to stride-aware 2-D tile-grid decomposition when the\n\
          \x20           DSE is infeasible; --emit-tb then writes a per-boundary seam testbench\n\
-         \x20 simulate  --kernel K --size N [--framework F] [--device D]\n\
+         \x20 simulate  --kernel K --size N [--framework F] [--device D] [--workers N]\n\
+         \x20           tiled designs fan grid cells across the worker pool\n\
          \x20 table2    [--device D] [--estimate-only]   full Table-II sweep\n\
          \x20 table3    [--device D]        post-PnR fabric table\n\
          \x20 table4    [--device D]        DSP-constraint sweep\n\
@@ -675,8 +711,11 @@ fn help() {
          \x20 import    --model m.json [--emit f.cpp]\n\n\
          SCALE-OUT (compile/simulate/import + sweep commands)\n\
          \x20 --design-cache DIR  reuse solved designs across runs/processes\n\
-         \x20                     (content-addressed by graph+device fingerprint)\n\
-         \x20 --workers N         worker-pool size for sweeps\n\
+         \x20                     (content-addressed by graph+device fingerprint;\n\
+         \x20                      infeasible verdicts are negative-cached too)\n\
+         \x20 --cache-gc N        mtime-LRU sweep of the cache dir at start,\n\
+         \x20                     keeping the N most recent entries\n\
+         \x20 --workers N         worker-pool size (sweeps + tiled simulation)\n\
          \x20 --shard i/n         run the i-th of n deterministic sweep slices\n\
          \x20 --spool DIR         append JSONL results for merge-sweep / resume\n\
          \x20                     (already-spooled jobs are skipped on re-run)\n\n\

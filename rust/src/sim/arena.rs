@@ -1,0 +1,271 @@
+//! The per-run token arena: one flat `i32` payload store plus
+//! refcounted `(offset, len)` slots.
+//!
+//! Every token that flows through the engine is a [`TokenId`] — a
+//! 4-byte handle into the arena — instead of an owned `Vec<i32>`.
+//! Pushing a token into a FIFO moves the handle; broadcasting to a
+//! second consumer bumps a refcount; popping and consuming releases it.
+//! Released slots go onto per-length free lists and are handed straight
+//! back out by the next [`TokenArena::alloc`] of the same length, so a
+//! steady-state simulation performs **zero** heap allocation per firing:
+//! the payload store grows to the high-water mark of live tokens during
+//! the first few thousand firings and is flat from then on. A
+//! [`crate::sim::SimContext`] keeps its arena across runs (`reset`
+//! empties the slots but keeps the capacity), which is what makes
+//! re-simulating the same cell design per grid cell allocation-free.
+
+/// Handle to one token in a [`TokenArena`]. The `Default` value is a
+/// dangling filler for ring-buffer storage — never dereference it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct TokenId(u32);
+
+#[derive(Debug, Clone, Copy)]
+struct Slot {
+    offset: u32,
+    len: u32,
+    refs: u32,
+}
+
+/// Flat refcounted token store. See the module docs.
+#[derive(Debug, Default)]
+pub struct TokenArena {
+    data: Vec<i32>,
+    slots: Vec<Slot>,
+    /// Free slots bucketed by payload length — token lengths are
+    /// per-channel constants, so there are only a handful of buckets.
+    free_by_len: Vec<(u32, Vec<u32>)>,
+    /// Total allocations served (free-list reuses included).
+    pub allocs: u64,
+    /// Allocations that had to grow the payload store.
+    pub fresh: u64,
+}
+
+impl TokenArena {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Drop every slot but keep the payload/slot capacity for the next
+    /// run — after one warm run, subsequent runs allocate nothing.
+    pub fn reset(&mut self) {
+        self.data.clear();
+        self.slots.clear();
+        for (_, bucket) in &mut self.free_by_len {
+            bucket.clear();
+        }
+        self.allocs = 0;
+        self.fresh = 0;
+    }
+
+    /// Live (refs > 0) slots — diagnostics and leak tests.
+    pub fn live(&self) -> usize {
+        self.slots.iter().filter(|s| s.refs > 0).count()
+    }
+
+    /// Allocate a token of `len` values with refcount 1. The payload is
+    /// **uninitialized** (possibly a recycled slot's old values): the
+    /// caller must fully overwrite it via [`Self::slice_mut`].
+    pub fn alloc(&mut self, len: usize) -> TokenId {
+        self.allocs += 1;
+        let len32 = len as u32;
+        if let Some((_, bucket)) = self.free_by_len.iter_mut().find(|(l, _)| *l == len32) {
+            if let Some(id) = bucket.pop() {
+                self.slots[id as usize].refs = 1;
+                return TokenId(id);
+            }
+        }
+        self.fresh += 1;
+        let offset = self.data.len() as u32;
+        self.data.resize(self.data.len() + len, 0);
+        let id = self.slots.len() as u32;
+        self.slots.push(Slot { offset, len: len32, refs: 1 });
+        TokenId(id)
+    }
+
+    /// Allocate and fill from `values` in one step.
+    pub fn alloc_from(&mut self, values: &[i32]) -> TokenId {
+        let id = self.alloc(values.len());
+        self.slice_mut(id).copy_from_slice(values);
+        id
+    }
+
+    #[inline]
+    fn span(&self, id: TokenId) -> (usize, usize) {
+        let s = self.slots[id.0 as usize];
+        debug_assert!(s.refs > 0, "access to a released token");
+        (s.offset as usize, s.len as usize)
+    }
+
+    /// Read a token's payload.
+    #[inline]
+    pub fn get(&self, id: TokenId) -> &[i32] {
+        let (o, l) = self.span(id);
+        &self.data[o..o + l]
+    }
+
+    /// Mutate a token's payload (the producer filling a fresh slot).
+    #[inline]
+    pub fn slice_mut(&mut self, id: TokenId) -> &mut [i32] {
+        let (o, l) = self.span(id);
+        &mut self.data[o..o + l]
+    }
+
+    /// Writable view of `out` plus a read view of `a` — the in-place
+    /// firing path for unary payloads. Slots own disjoint payload
+    /// ranges by construction, so this is safe whenever `out != a`.
+    #[inline]
+    pub fn write_and_read(&mut self, out: TokenId, a: TokenId) -> (&mut [i32], &[i32]) {
+        let (oo, ol) = self.span(out);
+        let (ao, al) = self.span(a);
+        assert!(out != a, "in-place firing must not write its own input");
+        debug_assert!(oo + ol <= ao || ao + al <= oo, "slots must not overlap");
+        let base = self.data.as_mut_ptr();
+        // SAFETY: distinct live slots occupy disjoint ranges of `data`
+        // (ranges are assigned once, at slot creation, and recycled only
+        // whole), and both ranges are in bounds.
+        unsafe {
+            (
+                std::slice::from_raw_parts_mut(base.add(oo), ol),
+                std::slice::from_raw_parts(base.add(ao), al),
+            )
+        }
+    }
+
+    /// Writable view of `out` plus read views of `a` and `b` (binary
+    /// payloads). `a == b` is allowed (a diamond can deliver the same
+    /// broadcast token on both inputs); `out` must differ from both.
+    #[inline]
+    pub fn write_and_read2(
+        &mut self,
+        out: TokenId,
+        a: TokenId,
+        b: TokenId,
+    ) -> (&mut [i32], &[i32], &[i32]) {
+        let (oo, ol) = self.span(out);
+        let (ao, al) = self.span(a);
+        let (bo, bl) = self.span(b);
+        assert!(out != a && out != b, "in-place firing must not write its own input");
+        debug_assert!(oo + ol <= ao || ao + al <= oo, "slots must not overlap");
+        debug_assert!(oo + ol <= bo || bo + bl <= oo, "slots must not overlap");
+        let base = self.data.as_mut_ptr();
+        // SAFETY: as in `write_and_read`; the two read views may alias
+        // each other (shared reads), never the write view.
+        unsafe {
+            (
+                std::slice::from_raw_parts_mut(base.add(oo), ol),
+                std::slice::from_raw_parts(base.add(ao), al),
+                std::slice::from_raw_parts(base.add(bo), bl),
+            )
+        }
+    }
+
+    /// Add one reference (broadcast fan-out to an extra consumer).
+    #[inline]
+    pub fn retain(&mut self, id: TokenId) {
+        let s = &mut self.slots[id.0 as usize];
+        debug_assert!(s.refs > 0, "retain of a released token");
+        s.refs += 1;
+    }
+
+    /// Drop one reference; at zero the slot is recycled.
+    #[inline]
+    pub fn release(&mut self, id: TokenId) {
+        let s = &mut self.slots[id.0 as usize];
+        debug_assert!(s.refs > 0, "double release");
+        s.refs -= 1;
+        if s.refs == 0 {
+            let len = s.len;
+            match self.free_by_len.iter_mut().find(|(l, _)| *l == len) {
+                Some((_, bucket)) => bucket.push(id.0),
+                None => self.free_by_len.push((len, vec![id.0])),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_read_write_roundtrip() {
+        let mut a = TokenArena::new();
+        let t = a.alloc_from(&[1, 2, 3]);
+        assert_eq!(a.get(t), &[1, 2, 3]);
+        a.slice_mut(t)[1] = 9;
+        assert_eq!(a.get(t), &[1, 9, 3]);
+        assert_eq!(a.live(), 1);
+    }
+
+    #[test]
+    fn release_recycles_same_length_slots() {
+        let mut a = TokenArena::new();
+        let t = a.alloc_from(&[1, 2, 3, 4]);
+        a.release(t);
+        assert_eq!(a.live(), 0);
+        let u = a.alloc(4);
+        assert_eq!(u, t, "same-length alloc must reuse the freed slot");
+        assert_eq!(a.fresh, 1, "second alloc must not grow the store");
+        // different length: fresh slot, distinct range
+        let v = a.alloc(2);
+        assert_ne!(v, u);
+        assert_eq!(a.fresh, 2);
+    }
+
+    #[test]
+    fn retain_keeps_the_slot_alive_across_one_release() {
+        let mut a = TokenArena::new();
+        let t = a.alloc_from(&[7]);
+        a.retain(t);
+        a.release(t);
+        assert_eq!(a.get(t), &[7], "one ref left: still readable");
+        a.release(t);
+        assert_eq!(a.live(), 0);
+    }
+
+    #[test]
+    fn steady_state_allocates_nothing_fresh() {
+        let mut a = TokenArena::new();
+        for round in 0..100 {
+            let t = a.alloc_from(&[round, round]);
+            let u = a.alloc_from(&[round]);
+            a.release(t);
+            a.release(u);
+        }
+        assert_eq!(a.fresh, 2, "one fresh slot per distinct length");
+        assert_eq!(a.allocs, 200);
+    }
+
+    #[test]
+    fn in_place_views_are_disjoint_and_shared_reads_alias() {
+        let mut a = TokenArena::new();
+        let x = a.alloc_from(&[1, 2]);
+        let y = a.alloc_from(&[10, 20]);
+        let out = a.alloc(2);
+        let (o, xa, yb) = a.write_and_read2(out, x, y);
+        for i in 0..2 {
+            o[i] = xa[i] + yb[i];
+        }
+        assert_eq!(a.get(out), &[11, 22]);
+        // the same token on both read ports (diamond broadcast)
+        let out2 = a.alloc(2);
+        let (o, xa, xb) = a.write_and_read2(out2, x, x);
+        for i in 0..2 {
+            o[i] = xa[i] * xb[i];
+        }
+        assert_eq!(a.get(out2), &[1, 4]);
+    }
+
+    #[test]
+    fn reset_keeps_capacity_but_drops_slots() {
+        let mut a = TokenArena::new();
+        for _ in 0..10 {
+            a.alloc(8);
+        }
+        a.reset();
+        assert_eq!(a.live(), 0);
+        assert_eq!(a.allocs, 0);
+        let t = a.alloc_from(&[5; 8]);
+        assert_eq!(a.get(t), &[5; 8]);
+    }
+}

@@ -1,12 +1,22 @@
 //! The discrete-event engine: feeder → nodes → sink, at firing
 //! granularity with timestamped tokens.
+//!
+//! The data plane is zero-copy: token payloads live in a per-context
+//! [`TokenArena`], FIFOs queue 12-byte handle+timestamp pairs, and
+//! broadcast fan-out bumps a refcount instead of cloning. All mutable
+//! state lives in a reusable [`SimContext`] — building one pays for
+//! `build_proc` (weight transposition included) exactly once per
+//! design; every subsequent [`SimContext::run`] resets and reuses the
+//! arena, the FIFO rings and the line-buffer allocations, which is what
+//! makes per-cell tiled simulation allocation-free after the first cell.
 
 use anyhow::{ensure, Result};
 
 use crate::dataflow::channel::Endpoint;
 use crate::dataflow::design::{Design, DesignStyle};
 
-use super::fifo::{SimFifo, Token};
+use super::arena::TokenArena;
+use super::fifo::SimFifo;
 use super::process::{build_proc, NodeProc};
 use super::trace::NodeTrace;
 
@@ -48,6 +58,9 @@ pub struct SimReport {
     pub deadlock: Option<Vec<String>>,
     /// Total firings across all nodes (simulator throughput metric).
     pub total_firings: u64,
+    /// Total FIFO operations (pushes + pops) across all channels —
+    /// the data-plane throughput metric for `BENCH_sim.json`.
+    pub token_ops: u64,
 }
 
 impl SimReport {
@@ -64,8 +77,8 @@ impl SimReport {
     }
 }
 
+#[derive(Default)]
 struct NodeState {
-    proc: NodeProc,
     firings: u64,
     t_free: u64,
     complete: u64,
@@ -78,292 +91,388 @@ struct NodeState {
     last_in_time: Vec<u64>,
 }
 
-/// Simulate `design` on a host input tensor (row-major int8 values,
-/// widened to i32).
-pub fn simulate(design: &Design, input: &[i32], mode: SimMode) -> Result<SimReport> {
-    let g = &design.graph;
-    let in_t = g.inputs()[0];
-    ensure!(
-        input.len() == in_t.ty.numel(),
-        "input has {} values, graph expects {}",
-        input.len(),
-        in_t.ty.numel()
-    );
+/// Reusable simulation state for one design: procs (weights transposed
+/// once), FIFO rings, the token arena and per-node bookkeeping. Build
+/// with [`SimContext::new`], then [`SimContext::run`] any number of
+/// inputs — each run resets the state but keeps every allocation.
+pub struct SimContext<'d> {
+    design: &'d Design,
+    mode: SimMode,
+    arena: TokenArena,
+    fifos: Vec<SimFifo>,
+    procs: Vec<NodeProc>,
+    nodes: Vec<NodeState>,
+    /// Cached per-channel stream rate (cycles per token).
+    cpt: Vec<u64>,
+    /// Sequential-barrier predecessors per node.
+    preds: Vec<Vec<usize>>,
+    input_chans: Vec<usize>,
+    tok_len: usize,
+    in_tokens_total: u64,
+    token_bytes: u64,
+    out_chan: usize,
+    out_tokens_total: u64,
+    out_token_bytes: u64,
+}
 
-    // --- runtime state -------------------------------------------------
-    let mut fifos: Vec<SimFifo> = design
-        .channels
-        .iter()
-        .map(|c| match mode {
-            SimMode::Sequential => SimFifo::unbounded(),
-            SimMode::Dataflow => SimFifo::new(c.depth),
-        })
-        .collect();
-
-    let mut nodes: Vec<NodeState> = (0..design.nodes.len())
-        .map(|i| {
-            Ok(NodeState {
-                proc: build_proc(design, i)?,
-                firings: 0,
-                t_free: 0,
-                complete: 0,
-                trace: NodeTrace { name: design.nodes[i].name.clone(), ..Default::default() },
-                consumed: vec![0; design.nodes[i].in_channels.len()],
-                last_in_time: vec![0; design.nodes[i].in_channels.len()],
+impl<'d> SimContext<'d> {
+    pub fn new(design: &'d Design, mode: SimMode) -> Result<Self> {
+        let procs: Vec<NodeProc> =
+            (0..design.nodes.len()).map(|i| build_proc(design, i)).collect::<Result<_>>()?;
+        let fifos: Vec<SimFifo> = design
+            .channels
+            .iter()
+            .map(|c| match mode {
+                SimMode::Sequential => SimFifo::unbounded(),
+                SimMode::Dataflow => SimFifo::new(c.depth),
             })
-        })
-        .collect::<Result<_>>()?;
-
-    // Input tokenization (shared by all graph-input channels).
-    let input_chans: Vec<usize> = design
-        .channels
-        .iter()
-        .filter(|c| c.src == Endpoint::GraphInput)
-        .map(|c| c.id.0)
-        .collect();
-    ensure!(!input_chans.is_empty(), "no input channels");
-    let tok_len = design.channels[input_chans[0]].token_len;
-    let in_tokens_total = design.channels[input_chans[0]].tokens_total;
-    ensure!(
-        in_tokens_total as usize * tok_len == input.len(),
-        "input tokenization mismatch"
-    );
-    let token_bytes = (tok_len as u64 * design.channels[input_chans[0]].elem_bits).div_ceil(8);
-    let mut fed: u64 = 0;
-
-    let out_chan = design.output_channel()?.id.0;
-    let out_tokens_total = design.channels[out_chan].tokens_total;
-    let out_token_bytes =
-        (design.channels[out_chan].token_len as u64 * design.channels[out_chan].elem_bits)
-            .div_ceil(8);
-    let mut output: Vec<i32> = Vec::with_capacity(
-        out_tokens_total as usize * design.channels[out_chan].token_len,
-    );
-    let mut drained: u64 = 0;
-    let mut last_drain: u64 = 0;
-    let mut total_firings: u64 = 0;
-
-    // Sequential barrier: node may not start before all producers finish.
-    let preds: Vec<Vec<usize>> = design
-        .nodes
-        .iter()
-        .map(|n| {
-            n.in_channels
-                .iter()
-                .filter_map(|&c| match design.channel(c).src {
-                    Endpoint::Node(p) => Some(p),
-                    _ => None,
-                })
-                .collect()
-        })
-        .collect();
-
-    // --- sweep loop -----------------------------------------------------
-    loop {
-        let mut progress = false;
-
-        // 1) feeder: deliver input tokens (AXI-limited, broadcast).
-        while fed < in_tokens_total {
-            if !input_chans.iter().all(|&c| fifos[c].has_space()) {
-                break;
-            }
-            let axi_t = ((fed + 1) * token_bytes).div_ceil(AXI_BYTES_PER_CYCLE);
-            let t = input_chans
-                .iter()
-                .filter_map(|&c| fifos[c].next_push_ready())
-                .fold(axi_t, u64::max);
-            let base = fed as usize * tok_len;
-            let tok: Token = input[base..base + tok_len].to_vec();
-            for &c in &input_chans {
-                fifos[c].push(t, tok.clone());
-            }
-            fed += 1;
-            progress = true;
-        }
-
-        // 2) nodes, in topological order.
-        for nid in 0..nodes.len() {
-            let dn = &design.nodes[nid];
-            let barrier = match mode {
-                SimMode::Sequential => {
-                    let mut b = 0;
-                    let mut ready = true;
-                    for &p in &preds[nid] {
-                        if nodes[p].firings < design.nodes[p].geo.out_tokens {
-                            ready = false;
-                            break;
-                        }
-                        b = b.max(nodes[p].complete);
-                    }
-                    if !ready {
-                        continue;
-                    }
-                    b
-                }
-                SimMode::Dataflow => 0,
-            };
-
-            'fire: while nodes[nid].firings < dn.geo.out_tokens {
-                let k = nodes[nid].firings;
-                let needed = nodes[nid].proc.needed(k);
-
-                // (a) eagerly stream available tokens in (≤ needed for this
-                // firing), at one token per `cycles_per_token` — the line-
-                // buffer fill. Frees FIFO slots so shallow streams suffice.
-                for (slot, &cid) in dn.in_channels.iter().enumerate() {
-                    let cpt = design.channel(cid).cycles_per_token();
-                    while nodes[nid].consumed[slot] < needed[slot] && !fifos[cid.0].is_empty() {
-                        let arr = fifos[cid.0].arrival(0).unwrap();
-                        let t_pop = (arr + cpt).max(nodes[nid].last_in_time[slot] + cpt);
-                        let (_, tok) = fifos[cid.0].pop(t_pop);
-                        nodes[nid].proc.accept(slot, tok);
-                        nodes[nid].consumed[slot] += 1;
-                        nodes[nid].last_in_time[slot] = t_pop;
-                        progress = true;
-                    }
-                    if nodes[nid].consumed[slot] < needed[slot] {
-                        break 'fire; // blocked on input tokens
-                    }
-                }
-                let t_in: u64 = dn
-                    .in_channels
+            .collect();
+        let nodes = design
+            .nodes
+            .iter()
+            .map(|n| NodeState {
+                consumed: vec![0; n.in_channels.len()],
+                last_in_time: vec![0; n.in_channels.len()],
+                ..Default::default()
+            })
+            .collect();
+        let cpt = design.channels.iter().map(|c| c.cycles_per_token()).collect();
+        let preds = design
+            .nodes
+            .iter()
+            .map(|n| {
+                n.in_channels
                     .iter()
-                    .enumerate()
-                    .map(|(slot, _)| nodes[nid].last_in_time[slot])
-                    .max()
-                    .unwrap_or(0);
+                    .filter_map(|&c| match design.channel(c).src {
+                        Endpoint::Node(p) => Some(p),
+                        _ => None,
+                    })
+                    .collect()
+            })
+            .collect();
 
-                // (b) output space?
-                let mut t_out: u64 = 0;
-                for &cid in &dn.out_channels {
-                    match fifos[cid.0].next_push_ready() {
-                        Some(t) => t_out = t_out.max(t),
-                        None => break 'fire, // blocked on output space
-                    }
-                }
+        let input_chans: Vec<usize> = design
+            .channels
+            .iter()
+            .filter(|c| c.src == Endpoint::GraphInput)
+            .map(|c| c.id.0)
+            .collect();
+        ensure!(!input_chans.is_empty(), "no input channels");
+        let in0 = &design.channels[input_chans[0]];
+        let (tok_len, in_tokens_total) = (in0.token_len, in0.tokens_total);
+        let token_bytes = (tok_len as u64 * in0.elem_bits).div_ceil(8);
+        let out_chan = design.output_channel()?.id.0;
+        let out = &design.channels[out_chan];
+        let out_token_bytes = (out.token_len as u64 * out.elem_bits).div_ceil(8);
+        Ok(Self {
+            design,
+            mode,
+            arena: TokenArena::new(),
+            fifos,
+            procs,
+            nodes,
+            cpt,
+            preds,
+            input_chans,
+            tok_len,
+            in_tokens_total,
+            token_bytes,
+            out_chan,
+            out_tokens_total: out.tokens_total,
+            out_token_bytes,
+        })
+    }
 
-                // (c) fire
-                let base_ready = nodes[nid].t_free.max(barrier);
-                let t = base_ready.max(t_in).max(t_out);
-                // stall attribution
-                if t_in > base_ready.max(t_out) {
-                    nodes[nid].trace.stall_in += t_in - base_ready.max(t_out);
-                }
-                if t_out > base_ready.max(t_in) {
-                    nodes[nid].trace.stall_out += t_out - base_ready.max(t_in);
-                }
-
-                let value = nodes[nid].proc.fire(k);
-                let t_vis = t + dn.timing.depth;
-                // broadcast: clone for all but the last consumer (the
-                // common single-consumer case moves the token)
-                let (last, rest) = dn.out_channels.split_last().unwrap();
-                for &cid in rest {
-                    fifos[cid.0].push(t_vis, value.clone());
-                }
-                fifos[last.0].push(t_vis, value);
-                let interval = dn.compute_interval();
-                nodes[nid].t_free = t + interval;
-                nodes[nid].firings += 1;
-                total_firings += 1;
-                if k == 0 {
-                    nodes[nid].trace.first_fire = t;
-                }
-                nodes[nid].trace.last_fire = t;
-                nodes[nid].complete = t_vis;
-                progress = true;
-            }
+    /// Clear all per-run state (arena, FIFOs, procs, node bookkeeping)
+    /// while keeping every allocation and the transposed weights.
+    pub fn reset(&mut self) {
+        self.arena.reset();
+        for f in &mut self.fifos {
+            f.reset();
         }
-
-        // 3) sink: drain the output channel (AXI-limited).
-        while !fifos[out_chan].is_empty() {
-            let arr = fifos[out_chan].arrival(0).unwrap();
-            let axi_t = last_drain + out_token_bytes.div_ceil(AXI_BYTES_PER_CYCLE);
-            let t = arr.max(axi_t);
-            let (_, tok) = fifos[out_chan].pop(t);
-            output.extend_from_slice(&tok);
-            drained += 1;
-            last_drain = t;
-            progress = true;
+        for p in &mut self.procs {
+            p.reset();
         }
-
-        if drained == out_tokens_total {
-            break;
-        }
-        if !progress {
-            // deadlock: report who is stuck and why
-            let mut blocked = Vec::new();
-            if fed < in_tokens_total {
-                blocked.push(format!("feeder: {fed}/{in_tokens_total} tokens delivered"));
-            }
-            for (nid, ns) in nodes.iter().enumerate() {
-                let dn = &design.nodes[nid];
-                if ns.firings < dn.geo.out_tokens {
-                    let needed = ns.proc.needed(ns.firings);
-                    let waits: Vec<String> = dn
-                        .in_channels
-                        .iter()
-                        .enumerate()
-                        .map(|(s, &c)| {
-                            format!(
-                                "{}: have {} need {}",
-                                design.channel(c).name,
-                                ns.consumed[s] + fifos[c.0].len() as u64,
-                                needed[s]
-                            )
-                        })
-                        .collect();
-                    let full: Vec<String> = dn
-                        .out_channels
-                        .iter()
-                        .filter(|&&c| !fifos[c.0].has_space())
-                        .map(|&c| format!("{} full", design.channel(c).name))
-                        .collect();
-                    blocked.push(format!(
-                        "{} at firing {}/{} [{} | {}]",
-                        dn.name,
-                        ns.firings,
-                        dn.geo.out_tokens,
-                        waits.join(", "),
-                        full.join(", ")
-                    ));
-                }
-            }
-            return Ok(SimReport {
-                cycles: 0,
-                output,
-                traces: nodes.into_iter().map(|n| n.trace).collect(),
-                fifo_high_water: high_water(design, &fifos),
-                deadlock: Some(blocked),
-                total_firings,
-            });
+        for (ns, n) in self.nodes.iter_mut().zip(&self.design.nodes) {
+            ns.firings = 0;
+            ns.t_free = 0;
+            ns.complete = 0;
+            ns.trace = NodeTrace { name: n.name.clone(), ..Default::default() };
+            ns.consumed.iter_mut().for_each(|v| *v = 0);
+            ns.last_in_time.iter_mut().for_each(|v| *v = 0);
         }
     }
 
-    Ok(SimReport {
-        cycles: last_drain,
-        output,
-        traces: nodes
-            .into_iter()
-            .map(|mut n| {
+    /// The design this context simulates.
+    pub fn design(&self) -> &'d Design {
+        self.design
+    }
+
+    /// Finalize traces — shared by the success and deadlock paths, so
+    /// deadlock reports carry per-node `firings`/`complete` too.
+    fn finish_traces(&mut self) -> Vec<NodeTrace> {
+        self.nodes
+            .iter_mut()
+            .map(|n| {
                 n.trace.firings = n.firings;
                 n.trace.complete = n.complete;
-                n.trace
+                std::mem::take(&mut n.trace)
             })
-            .collect(),
-        fifo_high_water: high_water(design, &fifos),
-        deadlock: None,
-        total_firings,
-    })
+            .collect()
+    }
+
+    fn high_water(&self) -> Vec<(String, usize)> {
+        self.design
+            .channels
+            .iter()
+            .zip(&self.fifos)
+            .map(|(c, f)| (c.name.clone(), f.max_occupancy))
+            .collect()
+    }
+
+    fn token_ops(&self) -> u64 {
+        self.fifos.iter().map(|f| f.pushed + f.popped).sum()
+    }
+
+    /// Simulate the design on a host input tensor (row-major int8
+    /// values, widened to i32). Resets the context first, so a context
+    /// can be reused across any number of runs.
+    pub fn run(&mut self, input: &[i32]) -> Result<SimReport> {
+        self.reset();
+        let design = self.design;
+        let in_t = design.graph.inputs()[0];
+        ensure!(
+            input.len() == in_t.ty.numel(),
+            "input has {} values, graph expects {}",
+            input.len(),
+            in_t.ty.numel()
+        );
+        ensure!(
+            self.in_tokens_total as usize * self.tok_len == input.len(),
+            "input tokenization mismatch"
+        );
+
+        let mut fed: u64 = 0;
+        let mut output: Vec<i32> = Vec::with_capacity(
+            self.out_tokens_total as usize * design.channels[self.out_chan].token_len,
+        );
+        let mut drained: u64 = 0;
+        let mut last_drain: u64 = 0;
+        let mut total_firings: u64 = 0;
+
+        // --- sweep loop --------------------------------------------------
+        loop {
+            let mut progress = false;
+
+            // 1) feeder: deliver input tokens (AXI-limited, broadcast).
+            while fed < self.in_tokens_total {
+                if !self.input_chans.iter().all(|&c| self.fifos[c].has_space()) {
+                    break;
+                }
+                let axi_t = ((fed + 1) * self.token_bytes).div_ceil(AXI_BYTES_PER_CYCLE);
+                let t = self
+                    .input_chans
+                    .iter()
+                    .filter_map(|&c| self.fifos[c].next_push_ready())
+                    .fold(axi_t, u64::max);
+                let base = fed as usize * self.tok_len;
+                let tok = self.arena.alloc_from(&input[base..base + self.tok_len]);
+                let (last, rest) = self.input_chans.split_last().unwrap();
+                for &c in rest {
+                    self.arena.retain(tok);
+                    self.fifos[c].push(t, tok);
+                }
+                self.fifos[*last].push(t, tok);
+                fed += 1;
+                progress = true;
+            }
+
+            // 2) nodes, in topological order.
+            for nid in 0..self.nodes.len() {
+                let dn = &design.nodes[nid];
+                let barrier = match self.mode {
+                    SimMode::Sequential => {
+                        let mut b = 0;
+                        let mut ready = true;
+                        for &p in &self.preds[nid] {
+                            if self.nodes[p].firings < design.nodes[p].geo.out_tokens {
+                                ready = false;
+                                break;
+                            }
+                            b = b.max(self.nodes[p].complete);
+                        }
+                        if !ready {
+                            continue;
+                        }
+                        b
+                    }
+                    SimMode::Dataflow => 0,
+                };
+
+                'fire: while self.nodes[nid].firings < dn.geo.out_tokens {
+                    let k = self.nodes[nid].firings;
+
+                    // (a) eagerly stream available tokens in (≤ needed for
+                    // this firing), at one token per `cycles_per_token` —
+                    // the line-buffer fill. Frees FIFO slots so shallow
+                    // streams suffice.
+                    for (slot, &cid) in dn.in_channels.iter().enumerate() {
+                        let cpt = self.cpt[cid.0];
+                        let needed = self.procs[nid].needed(slot, k);
+                        while self.nodes[nid].consumed[slot] < needed
+                            && !self.fifos[cid.0].is_empty()
+                        {
+                            let arr = self.fifos[cid.0].arrival(0).unwrap();
+                            let t_pop =
+                                (arr + cpt).max(self.nodes[nid].last_in_time[slot] + cpt);
+                            let (_, tok) = self.fifos[cid.0].pop(t_pop);
+                            self.procs[nid].accept(slot, tok, &mut self.arena);
+                            self.nodes[nid].consumed[slot] += 1;
+                            self.nodes[nid].last_in_time[slot] = t_pop;
+                            progress = true;
+                        }
+                        if self.nodes[nid].consumed[slot] < needed {
+                            break 'fire; // blocked on input tokens
+                        }
+                    }
+                    let t_in: u64 = dn
+                        .in_channels
+                        .iter()
+                        .enumerate()
+                        .map(|(slot, _)| self.nodes[nid].last_in_time[slot])
+                        .max()
+                        .unwrap_or(0);
+
+                    // (b) output space?
+                    let mut t_out: u64 = 0;
+                    for &cid in &dn.out_channels {
+                        match self.fifos[cid.0].next_push_ready() {
+                            Some(t) => t_out = t_out.max(t),
+                            None => break 'fire, // blocked on output space
+                        }
+                    }
+
+                    // (c) fire
+                    let base_ready = self.nodes[nid].t_free.max(barrier);
+                    let t = base_ready.max(t_in).max(t_out);
+                    // stall attribution
+                    if t_in > base_ready.max(t_out) {
+                        self.nodes[nid].trace.stall_in += t_in - base_ready.max(t_out);
+                    }
+                    if t_out > base_ready.max(t_in) {
+                        self.nodes[nid].trace.stall_out += t_out - base_ready.max(t_in);
+                    }
+
+                    let value = self.procs[nid].fire_into(k, &mut self.arena);
+                    let t_vis = t + dn.timing.depth;
+                    // broadcast: retain for all but the last consumer (the
+                    // common single-consumer case moves the handle)
+                    let (last, rest) = dn.out_channels.split_last().unwrap();
+                    for &cid in rest {
+                        self.arena.retain(value);
+                        self.fifos[cid.0].push(t_vis, value);
+                    }
+                    self.fifos[last.0].push(t_vis, value);
+                    let interval = dn.compute_interval();
+                    self.nodes[nid].t_free = t + interval;
+                    self.nodes[nid].firings += 1;
+                    total_firings += 1;
+                    if k == 0 {
+                        self.nodes[nid].trace.first_fire = t;
+                    }
+                    self.nodes[nid].trace.last_fire = t;
+                    self.nodes[nid].complete = t_vis;
+                    progress = true;
+                }
+            }
+
+            // 3) sink: drain the output channel (AXI-limited).
+            while !self.fifos[self.out_chan].is_empty() {
+                let arr = self.fifos[self.out_chan].arrival(0).unwrap();
+                let axi_t = last_drain + self.out_token_bytes.div_ceil(AXI_BYTES_PER_CYCLE);
+                let t = arr.max(axi_t);
+                let (_, tok) = self.fifos[self.out_chan].pop(t);
+                output.extend_from_slice(self.arena.get(tok));
+                self.arena.release(tok);
+                drained += 1;
+                last_drain = t;
+                progress = true;
+            }
+
+            if drained == self.out_tokens_total {
+                break;
+            }
+            if !progress {
+                // deadlock: report who is stuck and why
+                let mut blocked = Vec::new();
+                if fed < self.in_tokens_total {
+                    blocked.push(format!(
+                        "feeder: {fed}/{} tokens delivered",
+                        self.in_tokens_total
+                    ));
+                }
+                for (nid, ns) in self.nodes.iter().enumerate() {
+                    let dn = &design.nodes[nid];
+                    if ns.firings < dn.geo.out_tokens {
+                        let waits: Vec<String> = dn
+                            .in_channels
+                            .iter()
+                            .enumerate()
+                            .map(|(s, &c)| {
+                                format!(
+                                    "{}: have {} need {}",
+                                    design.channel(c).name,
+                                    ns.consumed[s] + self.fifos[c.0].len() as u64,
+                                    self.procs[nid].needed(s, ns.firings)
+                                )
+                            })
+                            .collect();
+                        let full: Vec<String> = dn
+                            .out_channels
+                            .iter()
+                            .filter(|&&c| !self.fifos[c.0].has_space())
+                            .map(|&c| format!("{} full", design.channel(c).name))
+                            .collect();
+                        blocked.push(format!(
+                            "{} at firing {}/{} [{} | {}]",
+                            dn.name,
+                            ns.firings,
+                            dn.geo.out_tokens,
+                            waits.join(", "),
+                            full.join(", ")
+                        ));
+                    }
+                }
+                return Ok(SimReport {
+                    cycles: 0,
+                    output,
+                    traces: self.finish_traces(),
+                    fifo_high_water: self.high_water(),
+                    deadlock: Some(blocked),
+                    total_firings,
+                    token_ops: self.token_ops(),
+                });
+            }
+        }
+
+        Ok(SimReport {
+            cycles: last_drain,
+            output,
+            traces: self.finish_traces(),
+            fifo_high_water: self.high_water(),
+            deadlock: None,
+            total_firings,
+            token_ops: self.token_ops(),
+        })
+    }
 }
 
-fn high_water(design: &Design, fifos: &[SimFifo]) -> Vec<(String, usize)> {
-    design
-        .channels
-        .iter()
-        .zip(fifos)
-        .map(|(c, f)| (c.name.clone(), f.max_occupancy))
-        .collect()
+/// Simulate `design` on a host input tensor (row-major int8 values,
+/// widened to i32). One-shot wrapper over [`SimContext`] — callers that
+/// simulate the same design repeatedly (per grid cell, per input) should
+/// build one context and [`SimContext::run`] it instead.
+pub fn simulate(design: &Design, input: &[i32], mode: SimMode) -> Result<SimReport> {
+    SimContext::new(design, mode)?.run(input)
 }
 
 #[cfg(test)]
@@ -440,6 +549,29 @@ mod tests {
     }
 
     #[test]
+    fn context_reuse_is_deterministic_and_leak_free() {
+        // The SimContext contract: run() after run() reproduces the
+        // one-shot result exactly, and no token leaks across runs.
+        let g = models::cascade(16, 8, 8);
+        let d = build_streaming_design(&g).unwrap();
+        let x = det_input(&g);
+        let one_shot = simulate(&d, &x, SimMode::Dataflow).unwrap().expect_complete();
+        let mut ctx = SimContext::new(&d, SimMode::Dataflow).unwrap();
+        for round in 0..3 {
+            let rep = ctx.run(&x).unwrap().expect_complete();
+            assert_eq!(rep.output, one_shot.output, "round {round}: output");
+            assert_eq!(rep.cycles, one_shot.cycles, "round {round}: cycles");
+            assert_eq!(rep.total_firings, one_shot.total_firings);
+            assert_eq!(rep.fifo_high_water, one_shot.fifo_high_water);
+        }
+        // different inputs through the same context stay independent
+        let x2: Vec<i32> = x.iter().map(|v| v.wrapping_neg()).collect();
+        let rep2 = ctx.run(&x2).unwrap().expect_complete();
+        let fresh = simulate(&d, &x2, SimMode::Dataflow).unwrap().expect_complete();
+        assert_eq!(rep2.output, fresh.output, "reused context must not carry state");
+    }
+
+    #[test]
     fn residual_deadlocks_without_fifo_sizing_and_completes_with_it() {
         let g = models::residual(32, 8, 8);
         let d = build_streaming_design(&g).unwrap();
@@ -447,6 +579,13 @@ mod tests {
         // default shallow FIFOs: the skip path must deadlock
         let rep = simulate(&d, &x, SimMode::Dataflow).unwrap();
         assert!(rep.deadlock.is_some(), "expected deadlock with unsized FIFOs");
+        // the deadlock report still accounts firings per node (the old
+        // engine left them zeroed on this branch)
+        for tr in &rep.traces {
+            assert!(tr.firings > 0 || tr.first_fire == 0, "trace {} unfinalized", tr.name);
+        }
+        let fired: u64 = rep.traces.iter().map(|t| t.firings).sum();
+        assert_eq!(fired, rep.total_firings, "deadlock traces must account firings");
 
         // after DSE (which sizes FIFOs) it completes
         let mut d2 = build_streaming_design(&g).unwrap();
@@ -519,6 +658,7 @@ mod tests {
             assert!(tr.complete >= tr.last_fire);
         }
         assert_eq!(rep.total_firings, d.nodes.iter().map(|n| n.geo.out_tokens).sum::<u64>());
+        assert!(rep.token_ops > 0, "token-op accounting must be live");
     }
 
     #[test]

@@ -1,27 +1,33 @@
-//! Runtime FIFO with timestamped tokens and occupancy accounting.
+//! Runtime FIFO: a flat ring buffer of timestamped token *handles* with
+//! occupancy accounting.
+//!
+//! Payloads live in the shared [`crate::sim::arena::TokenArena`]; a FIFO
+//! entry is just an 12-byte `(push_cycle, TokenId)` pair, so push/pop
+//! move no data and allocate nothing once the ring has grown to the
+//! channel's high-water mark.
 
-use std::collections::VecDeque;
-
-/// A token: the values of one stream element group (e.g. one pixel's C
-/// channels), widened to i32 (int8 payloads stay in int8 range).
-pub type Token = Vec<i32>;
+use super::arena::TokenId;
 
 /// Runtime state of one channel.
 #[derive(Debug)]
 pub struct SimFifo {
     /// Capacity in tokens (∞ for Sequential-style full-tensor buffers).
     pub capacity: usize,
-    /// Tokens currently in flight: (push_cycle, value).
-    queue: VecDeque<(u64, Token)>,
+    /// Ring storage: `(push_cycle, token)` entries; `head` indexes the
+    /// front, `len` entries are live.
+    ring: Vec<(u64, TokenId)>,
+    head: usize,
+    len: usize,
     /// Total tokens ever pushed.
     pub pushed: u64,
     /// Total tokens ever popped.
     pub popped: u64,
-    /// Pop cycle of recent tokens, indexed by absolute token number —
-    /// producers consult this for back-pressure (a push of token `i`
-    /// must wait until token `i - capacity` was popped). Only the last
-    /// `capacity + 1` entries are retained.
-    pop_times: VecDeque<(u64, u64)>,
+    /// Pop cycles of the most recent `capacity + 1` tokens, indexed by
+    /// absolute token number modulo the ring size — producers consult
+    /// this for back-pressure (a push of token `i` must wait until token
+    /// `i - capacity` was popped). Allocated lazily on the first pop of
+    /// a bounded FIFO.
+    pop_ring: Vec<u64>,
     /// High-water mark of occupancy (for FIFO sizing diagnostics).
     pub max_occupancy: usize,
 }
@@ -30,10 +36,12 @@ impl SimFifo {
     pub fn new(capacity: usize) -> Self {
         Self {
             capacity: capacity.max(1),
-            queue: VecDeque::new(),
+            ring: Vec::new(),
+            head: 0,
+            len: 0,
             pushed: 0,
             popped: 0,
-            pop_times: VecDeque::new(),
+            pop_ring: Vec::new(),
             max_occupancy: 0,
         }
     }
@@ -42,17 +50,29 @@ impl SimFifo {
         Self::new(usize::MAX)
     }
 
+    /// Empty the queue (dropping any handles — the caller resets the
+    /// arena alongside) but keep the ring capacity for the next run.
+    pub fn reset(&mut self) {
+        self.head = 0;
+        self.len = 0;
+        self.pushed = 0;
+        self.popped = 0;
+        self.max_occupancy = 0;
+        // pop_ring entries are validated by index arithmetic; stale
+        // values from a previous run are never read.
+    }
+
     pub fn len(&self) -> usize {
-        self.queue.len()
+        self.len
     }
 
     pub fn is_empty(&self) -> bool {
-        self.queue.is_empty()
+        self.len == 0
     }
 
     /// Is there space for one more token (structurally)?
     pub fn has_space(&self) -> bool {
-        self.queue.len() < self.capacity
+        self.len < self.capacity
     }
 
     /// Earliest cycle at which the next push may happen given
@@ -66,37 +86,63 @@ impl SimFifo {
         if !self.has_space() {
             return None;
         }
-        let need = self.pushed - self.capacity as u64; // token index that freed our slot
-        self.pop_times
-            .iter()
-            .find(|(idx, _)| *idx == need)
-            .map(|(_, t)| *t)
-            .or(Some(0)) // already trimmed ⇒ long past
+        // Token index that freed our slot. It was popped at most
+        // `capacity` pops ago, so its entry is still in the ring.
+        let need = self.pushed - self.capacity as u64;
+        debug_assert!(need < self.popped);
+        Some(self.pop_ring[(need % self.pop_ring.len() as u64) as usize])
     }
 
-    pub fn push(&mut self, cycle: u64, tok: Token) {
+    pub fn push(&mut self, cycle: u64, tok: TokenId) {
         debug_assert!(self.has_space(), "push into full FIFO");
-        self.queue.push_back((cycle, tok));
+        if self.len == self.ring.len() {
+            self.grow();
+        }
+        let tail = (self.head + self.len) % self.ring.len();
+        self.ring[tail] = (cycle, tok);
+        self.len += 1;
         self.pushed += 1;
-        self.max_occupancy = self.max_occupancy.max(self.queue.len());
+        self.max_occupancy = self.max_occupancy.max(self.len);
+    }
+
+    /// Double the ring, un-wrapping the live entries into the new tail.
+    fn grow(&mut self) {
+        let old = self.ring.len();
+        let new = (old * 2).max(8);
+        self.ring.resize(new, (0, TokenId::default()));
+        // live entries occupy head..head+len (wrapping over `old`); the
+        // wrapped prefix moves to the freshly added region, restoring
+        // contiguity head..head+len in the doubled ring
+        let wrapped = (self.head + self.len).saturating_sub(old);
+        if wrapped > 0 {
+            let (lo, hi) = self.ring.split_at_mut(old);
+            hi[..wrapped].copy_from_slice(&lo[..wrapped]);
+        }
     }
 
     /// Arrival cycle of the k-th (0-based, relative to current front)
     /// queued token, if present.
     pub fn arrival(&self, k: usize) -> Option<u64> {
-        self.queue.get(k).map(|(t, _)| *t)
+        if k >= self.len {
+            return None;
+        }
+        Some(self.ring[(self.head + k) % self.ring.len()].0)
     }
 
     /// Pop the front token, recording the consumer's `cycle`.
-    pub fn pop(&mut self, cycle: u64) -> (u64, Token) {
-        let (t, tok) = self.queue.pop_front().expect("pop from empty FIFO");
-        let idx = self.popped;
-        self.popped += 1;
-        self.pop_times.push_back((idx, cycle));
-        let keep = if self.capacity == usize::MAX { 4 } else { self.capacity + 1 };
-        while self.pop_times.len() > keep {
-            self.pop_times.pop_front();
+    pub fn pop(&mut self, cycle: u64) -> (u64, TokenId) {
+        assert!(self.len > 0, "pop from empty FIFO");
+        let (t, tok) = self.ring[self.head];
+        self.head = (self.head + 1) % self.ring.len();
+        self.len -= 1;
+        if self.capacity != usize::MAX {
+            if self.pop_ring.is_empty() {
+                self.pop_ring = vec![0; self.capacity + 1];
+            }
+            let keep = self.pop_ring.len() as u64;
+            self.pop_ring[(self.popped % keep) as usize] = cycle;
         }
+        self.popped += 1;
         (t, tok)
     }
 }
@@ -104,15 +150,20 @@ impl SimFifo {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sim::arena::TokenArena;
 
     #[test]
     fn fifo_order_and_counts() {
+        let mut arena = TokenArena::new();
         let mut f = SimFifo::new(2);
-        f.push(10, vec![1]);
-        f.push(11, vec![2]);
+        let t1 = arena.alloc_from(&[1]);
+        let t2 = arena.alloc_from(&[2]);
+        f.push(10, t1);
+        f.push(11, t2);
         assert!(!f.has_space());
         let (t, v) = f.pop(20);
-        assert_eq!((t, v), (10, vec![1]));
+        assert_eq!(t, 10);
+        assert_eq!(arena.get(v), &[1]);
         assert_eq!(f.popped, 1);
         assert_eq!(f.len(), 1);
         assert_eq!(f.max_occupancy, 2);
@@ -120,9 +171,10 @@ mod tests {
 
     #[test]
     fn backpressure_timing() {
+        let mut arena = TokenArena::new();
         let mut f = SimFifo::new(2);
-        f.push(0, vec![1]);
-        f.push(0, vec![2]);
+        f.push(0, arena.alloc_from(&[1]));
+        f.push(0, arena.alloc_from(&[2]));
         // full: producer must wait for a pop
         assert_eq!(f.next_push_ready(), None);
         f.pop(35);
@@ -132,21 +184,72 @@ mod tests {
 
     #[test]
     fn unbounded_never_blocks() {
+        let mut arena = TokenArena::new();
+        let tok = arena.alloc_from(&[0]);
         let mut f = SimFifo::unbounded();
         for i in 0..10_000 {
             assert_eq!(f.next_push_ready(), Some(0));
-            f.push(i, vec![i as i32]);
+            arena.retain(tok);
+            f.push(i, tok);
         }
         assert_eq!(f.pushed, 10_000);
     }
 
     #[test]
     fn arrival_peek() {
+        let mut arena = TokenArena::new();
         let mut f = SimFifo::new(8);
-        f.push(5, vec![1]);
-        f.push(9, vec![2]);
+        f.push(5, arena.alloc_from(&[1]));
+        f.push(9, arena.alloc_from(&[2]));
         assert_eq!(f.arrival(0), Some(5));
         assert_eq!(f.arrival(1), Some(9));
         assert_eq!(f.arrival(2), None);
+    }
+
+    #[test]
+    fn ring_growth_preserves_order_across_wrap() {
+        let mut arena = TokenArena::new();
+        let mut f = SimFifo::new(usize::MAX);
+        // interleave pushes and pops so head sits mid-ring when growth
+        // happens, exercising the un-wrap path
+        let mut expect = std::collections::VecDeque::new();
+        let mut next = 0i32;
+        for round in 0..50 {
+            for _ in 0..(round % 7) + 1 {
+                f.push(next as u64, arena.alloc_from(&[next]));
+                expect.push_back(next);
+                next += 1;
+            }
+            for _ in 0..(round % 3) {
+                if let Some(want) = expect.pop_front() {
+                    let (_, tok) = f.pop(0);
+                    assert_eq!(arena.get(tok), &[want]);
+                    arena.release(tok);
+                }
+            }
+        }
+        while let Some(want) = expect.pop_front() {
+            let (_, tok) = f.pop(0);
+            assert_eq!(arena.get(tok), &[want]);
+            arena.release(tok);
+        }
+        assert!(f.is_empty());
+    }
+
+    #[test]
+    fn reset_clears_state_but_keeps_ring() {
+        let mut arena = TokenArena::new();
+        let mut f = SimFifo::new(4);
+        for i in 0..4 {
+            f.push(i, arena.alloc_from(&[i as i32]));
+        }
+        f.pop(9);
+        f.reset();
+        assert!(f.is_empty());
+        assert_eq!(f.pushed, 0);
+        assert_eq!(f.max_occupancy, 0);
+        assert_eq!(f.next_push_ready(), Some(0));
+        f.push(1, arena.alloc_from(&[42]));
+        assert_eq!(f.len(), 1);
     }
 }

@@ -16,9 +16,11 @@
 //! node can make progress and the sink is not done, the engine reports
 //! the blocked nodes and their wait reasons.
 
+pub mod arena;
 pub mod fifo;
 pub mod process;
 pub mod engine;
+pub mod naive;
 pub mod trace;
 
-pub use engine::{simulate, SimMode, SimReport};
+pub use engine::{simulate, SimContext, SimMode, SimReport};

@@ -1,0 +1,642 @@
+//! The retained naive reference engine.
+//!
+//! A deliberately straightforward implementation of the exact same
+//! simulation semantics as [`crate::sim::engine`]: owned `Vec<i32>`
+//! tokens, `VecDeque`-backed FIFOs, per-firing allocation, per-consumer
+//! clones on broadcast, and the untransposed `(F, K, K, C)` weight walk
+//! in the MAC loop. It exists for two reasons:
+//!
+//! 1. **Correctness pinning** — the arena engine is property-tested
+//!    against this path on random graphs: identical outputs, identical
+//!    cycle counts, identical FIFO high-water marks
+//!    (`tests/properties.rs`). The *data plane* (token storage, FIFO
+//!    mechanics, firing computation) is genuinely independent here; the
+//!    scheduling sweep loop is deliberately a structural copy of
+//!    `SimContext::run`, so the pin proves the arena/ring/in-place
+//!    machinery preserves the contract — it does not double-check the
+//!    scheduling policy itself. A change to the scheduling semantics
+//!    must be mirrored in both loops (the property test will fail
+//!    loudly until it is).
+//! 2. **Performance baseline** — `benches/compiler_perf.rs` reports the
+//!    arena engine's firings/s against this path in `BENCH_sim.json`
+//!    (`speedup_vs_naive`), timed the way the pre-PR engine ran: proc
+//!    build per call, allocation per firing.
+//!
+//! Keep this code boring. Optimizations belong in the arena engine.
+
+use std::collections::VecDeque;
+
+use anyhow::{ensure, Result};
+
+use crate::dataflow::channel::Endpoint;
+use crate::dataflow::design::Design;
+use crate::ir::generic::Payload;
+
+use super::engine::{SimMode, SimReport, AXI_BYTES_PER_CYCLE};
+use super::process::{apply_payload, build_proc, NodeProc};
+use super::trace::NodeTrace;
+
+type Token = Vec<i32>;
+
+/// Owned-token FIFO — the pre-arena data plane.
+struct NaiveFifo {
+    capacity: usize,
+    queue: VecDeque<(u64, Token)>,
+    pushed: u64,
+    popped: u64,
+    pop_times: VecDeque<(u64, u64)>,
+    max_occupancy: usize,
+}
+
+impl NaiveFifo {
+    fn new(capacity: usize) -> Self {
+        Self {
+            capacity: capacity.max(1),
+            queue: VecDeque::new(),
+            pushed: 0,
+            popped: 0,
+            pop_times: VecDeque::new(),
+            max_occupancy: 0,
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    fn has_space(&self) -> bool {
+        self.queue.len() < self.capacity
+    }
+
+    fn next_push_ready(&self) -> Option<u64> {
+        if self.capacity == usize::MAX || self.pushed < self.capacity as u64 {
+            return Some(0);
+        }
+        if !self.has_space() {
+            return None;
+        }
+        let need = self.pushed - self.capacity as u64;
+        self.pop_times
+            .iter()
+            .find(|(idx, _)| *idx == need)
+            .map(|(_, t)| *t)
+            .or(Some(0))
+    }
+
+    fn push(&mut self, cycle: u64, tok: Token) {
+        self.queue.push_back((cycle, tok));
+        self.pushed += 1;
+        self.max_occupancy = self.max_occupancy.max(self.queue.len());
+    }
+
+    fn arrival(&self, k: usize) -> Option<u64> {
+        self.queue.get(k).map(|(t, _)| *t)
+    }
+
+    fn pop(&mut self, cycle: u64) -> (u64, Token) {
+        let (t, tok) = self.queue.pop_front().expect("pop from empty FIFO");
+        let idx = self.popped;
+        self.popped += 1;
+        self.pop_times.push_back((idx, cycle));
+        let keep = if self.capacity == usize::MAX { 4 } else { self.capacity + 1 };
+        while self.pop_times.len() > keep {
+            self.pop_times.pop_front();
+        }
+        (t, tok)
+    }
+}
+
+/// Naive per-node behaviour: same functional contract as
+/// [`crate::sim::process::NodeProc`], with owned tokens and the
+/// straightforward weight walk.
+enum NaiveProc {
+    Sliding {
+        h: usize,
+        w: usize,
+        c: usize,
+        w_out: usize,
+        f: usize,
+        k: usize,
+        stride: usize,
+        dilation: usize,
+        pad: usize,
+        /// (F, K, K, C) — deliberately untransposed.
+        weights: Vec<i32>,
+        payload: Payload,
+        buf: Vec<i32>,
+    },
+    Reduction {
+        n: usize,
+        weights: Vec<i32>,
+        cur: Option<Token>,
+    },
+    Parallel {
+        payload: Payload,
+        pending: Vec<VecDeque<Token>>,
+    },
+}
+
+impl NaiveProc {
+    /// Derive the naive proc from the arena-engine's builder so the two
+    /// paths can never disagree about geometry or weights.
+    fn from_node(d: &Design, nid: usize) -> Result<Self> {
+        Ok(match build_proc(d, nid)? {
+            NodeProc::Sliding(p) => NaiveProc::Sliding {
+                h: p.h,
+                w: p.w,
+                c: p.c,
+                w_out: p.w_out,
+                f: p.f,
+                k: p.k,
+                stride: p.stride,
+                dilation: p.dilation,
+                pad: p.pad,
+                weights: p.weights,
+                payload: p.payload,
+                buf: Vec::new(),
+            },
+            NodeProc::Reduction(p) => NaiveProc::Reduction {
+                n: p.n,
+                weights: p.weights,
+                cur: None,
+            },
+            NodeProc::Parallel(p) => NaiveProc::Parallel {
+                payload: p.payload,
+                pending: (0..p.arity).map(|_| VecDeque::new()).collect(),
+            },
+        })
+    }
+
+    fn needed(&self, slot: usize, fire_k: u64) -> u64 {
+        let _ = slot;
+        match self {
+            NaiveProc::Sliding { h, w, w_out, k, stride, dilation, pad, .. } => {
+                let r = (fire_k as usize) / w_out;
+                let cx = (fire_k as usize) % w_out;
+                let keff = (k - 1) * dilation;
+                let raw_r = (r * stride + keff).saturating_sub(*pad);
+                if raw_r >= *h {
+                    return (h * w) as u64;
+                }
+                let in_c = (cx * stride + keff).saturating_sub(*pad).min(w - 1);
+                (raw_r * w + in_c + 1) as u64
+            }
+            NaiveProc::Reduction { .. } | NaiveProc::Parallel { .. } => fire_k + 1,
+        }
+    }
+
+    fn accept(&mut self, slot: usize, tok: Token) {
+        match self {
+            NaiveProc::Sliding { buf, .. } => buf.extend_from_slice(&tok),
+            NaiveProc::Reduction { cur, .. } => *cur = Some(tok),
+            NaiveProc::Parallel { pending, .. } => pending[slot].push_back(tok),
+        }
+    }
+
+    fn fire(&mut self, fire_k: u64) -> Token {
+        match self {
+            NaiveProc::Sliding {
+                h,
+                w,
+                c,
+                w_out,
+                f,
+                k,
+                stride,
+                dilation,
+                pad,
+                weights,
+                payload,
+                buf,
+            } => {
+                let r = (fire_k as usize) / *w_out;
+                let cx = (fire_k as usize) % *w_out;
+                match payload {
+                    Payload::MulAcc => {
+                        // the textbook loop nest: filter-major, strided
+                        // weight reads, no zero skipping
+                        let mut out = vec![0i32; *f];
+                        for (ff, o) in out.iter_mut().enumerate() {
+                            for kh in 0..*k {
+                                for kw in 0..*k {
+                                    let ir = r * *stride + kh * *dilation;
+                                    let ic = cx * *stride + kw * *dilation;
+                                    if ir < *pad || ic < *pad {
+                                        continue;
+                                    }
+                                    let (ir, ic) = (ir - *pad, ic - *pad);
+                                    if ir >= *h || ic >= *w {
+                                        continue;
+                                    }
+                                    for cc in 0..*c {
+                                        let x = buf[(ir * *w + ic) * *c + cc];
+                                        let wv = weights[((ff * *k + kh) * *k + kw) * *c + cc];
+                                        *o = o.wrapping_add(wv.wrapping_mul(x));
+                                    }
+                                }
+                            }
+                        }
+                        out
+                    }
+                    Payload::MaxReduce => {
+                        let mut out = vec![i32::MIN; *f];
+                        for kh in 0..*k {
+                            for kw in 0..*k {
+                                let ir = r * *stride + kh * *dilation;
+                                let ic = cx * *stride + kw * *dilation;
+                                if ir < *pad || ic < *pad {
+                                    continue;
+                                }
+                                let (ir, ic) = (ir - *pad, ic - *pad);
+                                if ir >= *h || ic >= *w {
+                                    continue;
+                                }
+                                for cc in 0..*c {
+                                    out[cc] = out[cc].max(buf[(ir * *w + ic) * *c + cc]);
+                                }
+                            }
+                        }
+                        out
+                    }
+                    other => panic!("sliding node with payload {other:?}"),
+                }
+            }
+            NaiveProc::Reduction { n, weights, cur, .. } => {
+                let x = cur.take().expect("fire before accept");
+                let mut out = vec![0i32; *n];
+                for (kk, &xv) in x.iter().enumerate() {
+                    for (nn, o) in out.iter_mut().enumerate() {
+                        *o = o.wrapping_add(weights[kk * *n + nn].wrapping_mul(xv));
+                    }
+                }
+                out
+            }
+            NaiveProc::Parallel { payload, pending, .. } => {
+                let toks: Vec<Token> = pending
+                    .iter_mut()
+                    .map(|q| q.pop_front().expect("missing token"))
+                    .collect();
+                let refs: Vec<&[i32]> = toks.iter().map(|t| t.as_slice()).collect();
+                apply_payload(*payload, &refs)
+            }
+        }
+    }
+}
+
+struct NodeState {
+    proc: NaiveProc,
+    firings: u64,
+    t_free: u64,
+    complete: u64,
+    trace: NodeTrace,
+    consumed: Vec<u64>,
+    last_in_time: Vec<u64>,
+}
+
+/// Simulate `design` through the naive reference data plane. Must
+/// produce a report **identical** to [`crate::sim::simulate`] in every
+/// observable field (outputs, cycles, traces, high-water marks,
+/// firings, token ops) — that equality is the arena engine's pin.
+pub fn simulate_naive(design: &Design, input: &[i32], mode: SimMode) -> Result<SimReport> {
+    let g = &design.graph;
+    let in_t = g.inputs()[0];
+    ensure!(
+        input.len() == in_t.ty.numel(),
+        "input has {} values, graph expects {}",
+        input.len(),
+        in_t.ty.numel()
+    );
+
+    let mut fifos: Vec<NaiveFifo> = design
+        .channels
+        .iter()
+        .map(|c| match mode {
+            SimMode::Sequential => NaiveFifo::new(usize::MAX),
+            SimMode::Dataflow => NaiveFifo::new(c.depth),
+        })
+        .collect();
+
+    let mut nodes: Vec<NodeState> = (0..design.nodes.len())
+        .map(|i| {
+            Ok(NodeState {
+                proc: NaiveProc::from_node(design, i)?,
+                firings: 0,
+                t_free: 0,
+                complete: 0,
+                trace: NodeTrace { name: design.nodes[i].name.clone(), ..Default::default() },
+                consumed: vec![0; design.nodes[i].in_channels.len()],
+                last_in_time: vec![0; design.nodes[i].in_channels.len()],
+            })
+        })
+        .collect::<Result<_>>()?;
+
+    let input_chans: Vec<usize> = design
+        .channels
+        .iter()
+        .filter(|c| c.src == Endpoint::GraphInput)
+        .map(|c| c.id.0)
+        .collect();
+    ensure!(!input_chans.is_empty(), "no input channels");
+    let tok_len = design.channels[input_chans[0]].token_len;
+    let in_tokens_total = design.channels[input_chans[0]].tokens_total;
+    ensure!(
+        in_tokens_total as usize * tok_len == input.len(),
+        "input tokenization mismatch"
+    );
+    let token_bytes = (tok_len as u64 * design.channels[input_chans[0]].elem_bits).div_ceil(8);
+    let mut fed: u64 = 0;
+
+    let out_chan = design.output_channel()?.id.0;
+    let out_tokens_total = design.channels[out_chan].tokens_total;
+    let out_token_bytes =
+        (design.channels[out_chan].token_len as u64 * design.channels[out_chan].elem_bits)
+            .div_ceil(8);
+    let mut output: Vec<i32> =
+        Vec::with_capacity(out_tokens_total as usize * design.channels[out_chan].token_len);
+    let mut drained: u64 = 0;
+    let mut last_drain: u64 = 0;
+    let mut total_firings: u64 = 0;
+
+    let preds: Vec<Vec<usize>> = design
+        .nodes
+        .iter()
+        .map(|n| {
+            n.in_channels
+                .iter()
+                .filter_map(|&c| match design.channel(c).src {
+                    Endpoint::Node(p) => Some(p),
+                    _ => None,
+                })
+                .collect()
+        })
+        .collect();
+
+    loop {
+        let mut progress = false;
+
+        // 1) feeder
+        while fed < in_tokens_total {
+            if !input_chans.iter().all(|&c| fifos[c].has_space()) {
+                break;
+            }
+            let axi_t = ((fed + 1) * token_bytes).div_ceil(AXI_BYTES_PER_CYCLE);
+            let t = input_chans
+                .iter()
+                .filter_map(|&c| fifos[c].next_push_ready())
+                .fold(axi_t, u64::max);
+            let base = fed as usize * tok_len;
+            let tok: Token = input[base..base + tok_len].to_vec();
+            for &c in &input_chans {
+                fifos[c].push(t, tok.clone());
+            }
+            fed += 1;
+            progress = true;
+        }
+
+        // 2) nodes
+        for nid in 0..nodes.len() {
+            let dn = &design.nodes[nid];
+            let barrier = match mode {
+                SimMode::Sequential => {
+                    let mut b = 0;
+                    let mut ready = true;
+                    for &p in &preds[nid] {
+                        if nodes[p].firings < design.nodes[p].geo.out_tokens {
+                            ready = false;
+                            break;
+                        }
+                        b = b.max(nodes[p].complete);
+                    }
+                    if !ready {
+                        continue;
+                    }
+                    b
+                }
+                SimMode::Dataflow => 0,
+            };
+
+            'fire: while nodes[nid].firings < dn.geo.out_tokens {
+                let k = nodes[nid].firings;
+                for (slot, &cid) in dn.in_channels.iter().enumerate() {
+                    let cpt = design.channel(cid).cycles_per_token();
+                    let needed = nodes[nid].proc.needed(slot, k);
+                    while nodes[nid].consumed[slot] < needed && !fifos[cid.0].is_empty() {
+                        let arr = fifos[cid.0].arrival(0).unwrap();
+                        let t_pop = (arr + cpt).max(nodes[nid].last_in_time[slot] + cpt);
+                        let (_, tok) = fifos[cid.0].pop(t_pop);
+                        nodes[nid].proc.accept(slot, tok);
+                        nodes[nid].consumed[slot] += 1;
+                        nodes[nid].last_in_time[slot] = t_pop;
+                        progress = true;
+                    }
+                    if nodes[nid].consumed[slot] < needed {
+                        break 'fire;
+                    }
+                }
+                let t_in: u64 = dn
+                    .in_channels
+                    .iter()
+                    .enumerate()
+                    .map(|(slot, _)| nodes[nid].last_in_time[slot])
+                    .max()
+                    .unwrap_or(0);
+
+                let mut t_out: u64 = 0;
+                for &cid in &dn.out_channels {
+                    match fifos[cid.0].next_push_ready() {
+                        Some(t) => t_out = t_out.max(t),
+                        None => break 'fire,
+                    }
+                }
+
+                let base_ready = nodes[nid].t_free.max(barrier);
+                let t = base_ready.max(t_in).max(t_out);
+                if t_in > base_ready.max(t_out) {
+                    nodes[nid].trace.stall_in += t_in - base_ready.max(t_out);
+                }
+                if t_out > base_ready.max(t_in) {
+                    nodes[nid].trace.stall_out += t_out - base_ready.max(t_in);
+                }
+
+                let value = nodes[nid].proc.fire(k);
+                let t_vis = t + dn.timing.depth;
+                let (last, rest) = dn.out_channels.split_last().unwrap();
+                for &cid in rest {
+                    fifos[cid.0].push(t_vis, value.clone());
+                }
+                fifos[last.0].push(t_vis, value);
+                let interval = dn.compute_interval();
+                nodes[nid].t_free = t + interval;
+                nodes[nid].firings += 1;
+                total_firings += 1;
+                if k == 0 {
+                    nodes[nid].trace.first_fire = t;
+                }
+                nodes[nid].trace.last_fire = t;
+                nodes[nid].complete = t_vis;
+                progress = true;
+            }
+        }
+
+        // 3) sink
+        while !fifos[out_chan].is_empty() {
+            let arr = fifos[out_chan].arrival(0).unwrap();
+            let axi_t = last_drain + out_token_bytes.div_ceil(AXI_BYTES_PER_CYCLE);
+            let t = arr.max(axi_t);
+            let (_, tok) = fifos[out_chan].pop(t);
+            output.extend_from_slice(&tok);
+            drained += 1;
+            last_drain = t;
+            progress = true;
+        }
+
+        if drained == out_tokens_total {
+            break;
+        }
+        if !progress {
+            let mut blocked = Vec::new();
+            if fed < in_tokens_total {
+                blocked.push(format!("feeder: {fed}/{in_tokens_total} tokens delivered"));
+            }
+            for (nid, ns) in nodes.iter().enumerate() {
+                let dn = &design.nodes[nid];
+                if ns.firings < dn.geo.out_tokens {
+                    let waits: Vec<String> = dn
+                        .in_channels
+                        .iter()
+                        .enumerate()
+                        .map(|(s, &c)| {
+                            format!(
+                                "{}: have {} need {}",
+                                design.channel(c).name,
+                                ns.consumed[s] + fifos[c.0].len() as u64,
+                                ns.proc.needed(s, ns.firings)
+                            )
+                        })
+                        .collect();
+                    let full: Vec<String> = dn
+                        .out_channels
+                        .iter()
+                        .filter(|&&c| !fifos[c.0].has_space())
+                        .map(|&c| format!("{} full", design.channel(c).name))
+                        .collect();
+                    blocked.push(format!(
+                        "{} at firing {}/{} [{} | {}]",
+                        dn.name,
+                        ns.firings,
+                        dn.geo.out_tokens,
+                        waits.join(", "),
+                        full.join(", ")
+                    ));
+                }
+            }
+            return Ok(SimReport {
+                cycles: 0,
+                output,
+                traces: finish_traces(nodes),
+                fifo_high_water: high_water(design, &fifos),
+                deadlock: Some(blocked),
+                total_firings,
+                token_ops: fifos.iter().map(|f| f.pushed + f.popped).sum(),
+            });
+        }
+    }
+
+    let token_ops = fifos.iter().map(|f| f.pushed + f.popped).sum();
+    Ok(SimReport {
+        cycles: last_drain,
+        output,
+        traces: finish_traces(nodes),
+        fifo_high_water: high_water(design, &fifos),
+        deadlock: None,
+        total_firings,
+        token_ops,
+    })
+}
+
+/// Shared trace finalize — the deadlock branch populates
+/// `firings`/`complete` exactly like the success branch.
+fn finish_traces(nodes: Vec<NodeState>) -> Vec<NodeTrace> {
+    nodes
+        .into_iter()
+        .map(|mut n| {
+            n.trace.firings = n.firings;
+            n.trace.complete = n.complete;
+            n.trace
+        })
+        .collect()
+}
+
+fn high_water(design: &Design, fifos: &[NaiveFifo]) -> Vec<(String, usize)> {
+    design
+        .channels
+        .iter()
+        .zip(fifos)
+        .map(|(c, f)| (c.name.clone(), f.max_occupancy))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::build::build_streaming_design;
+    use crate::ir::builder::models;
+    use crate::sim::simulate;
+    use crate::util::prng;
+
+    fn det_input(g: &crate::ir::graph::ModelGraph) -> Vec<i32> {
+        prng::det_tensor(prng::SEED_INPUT, g.inputs()[0].ty.numel())
+            .iter()
+            .map(|&v| v as i32)
+            .collect()
+    }
+
+    fn assert_reports_match(a: &SimReport, b: &SimReport, tag: &str) {
+        assert_eq!(a.output, b.output, "{tag}: output");
+        assert_eq!(a.cycles, b.cycles, "{tag}: cycles");
+        assert_eq!(a.total_firings, b.total_firings, "{tag}: firings");
+        assert_eq!(a.token_ops, b.token_ops, "{tag}: token ops");
+        assert_eq!(a.fifo_high_water, b.fifo_high_water, "{tag}: high water");
+        assert_eq!(a.deadlock.is_some(), b.deadlock.is_some(), "{tag}: deadlock");
+        for (ta, tb) in a.traces.iter().zip(&b.traces) {
+            assert_eq!(ta.firings, tb.firings, "{tag}/{}: trace firings", ta.name);
+            assert_eq!(ta.first_fire, tb.first_fire, "{tag}/{}", ta.name);
+            assert_eq!(ta.last_fire, tb.last_fire, "{tag}/{}", ta.name);
+            assert_eq!(ta.complete, tb.complete, "{tag}/{}", ta.name);
+            assert_eq!(ta.stall_in, tb.stall_in, "{tag}/{}", ta.name);
+            assert_eq!(ta.stall_out, tb.stall_out, "{tag}/{}", ta.name);
+        }
+    }
+
+    #[test]
+    fn naive_matches_arena_engine_on_paper_kernels() {
+        for (name, size) in [("conv_relu", 16usize), ("cascade", 16), ("linear", 0)] {
+            let g = models::paper_kernel(name, size).unwrap();
+            let d = build_streaming_design(&g).unwrap();
+            let x = det_input(&g);
+            for mode in [SimMode::Dataflow, SimMode::Sequential] {
+                let a = simulate(&d, &x, mode).unwrap();
+                let n = simulate_naive(&d, &x, mode).unwrap();
+                assert_reports_match(&a, &n, &format!("{name}/{mode:?}"));
+            }
+        }
+    }
+
+    #[test]
+    fn naive_matches_arena_engine_on_deadlock() {
+        // Undersized diamond FIFOs: both engines must deadlock at the
+        // same place with fully finalized traces.
+        let g = models::residual(32, 8, 8);
+        let d = build_streaming_design(&g).unwrap();
+        let x = det_input(&g);
+        let a = simulate(&d, &x, SimMode::Dataflow).unwrap();
+        let n = simulate_naive(&d, &x, SimMode::Dataflow).unwrap();
+        assert!(a.deadlock.is_some() && n.deadlock.is_some());
+        assert_eq!(a.deadlock, n.deadlock, "blocked-node reports must agree");
+        assert_reports_match(&a, &n, "residual deadlock");
+    }
+}

@@ -2,10 +2,19 @@
 //! `python/compile/kernels/ref.py` (the golden-model contract).
 //!
 //! A [`NodeProc`] answers three questions for the engine:
-//! 1. how many cumulative input tokens each input needs before firing k,
+//! 1. how many cumulative input tokens an input needs before firing k,
 //! 2. what to do with tokens as they arrive (`accept` — e.g. fill the
 //!    line buffer), and
-//! 3. the value of output token k (`fire`).
+//! 3. the value of output token k (`fire_into` — written straight into
+//!    an arena slot, no per-firing allocation).
+//!
+//! Procs are built once per design ([`build_proc`], called from
+//! [`crate::sim::SimContext::new`]) and **reused across runs**:
+//! [`NodeProc::reset`] clears the per-run state (line buffers, pending
+//! queues) while keeping the transposed weights and every allocation,
+//! so re-simulating the same design — the per-cell loop of
+//! `simulate_tiled` — costs no weight re-transposition and no heap
+//! traffic.
 
 use std::collections::VecDeque;
 
@@ -16,7 +25,7 @@ use crate::dataflow::design::Design;
 use crate::ir::generic::Payload;
 use crate::ir::graph::TensorKind;
 
-use super::fifo::Token;
+use super::arena::{TokenArena, TokenId};
 
 pub const I8_MIN: i32 = -128;
 pub const I8_MAX: i32 = 127;
@@ -25,22 +34,50 @@ fn sat_i8(v: i32) -> i32 {
     v.clamp(I8_MIN, I8_MAX)
 }
 
-/// Apply a pure-parallel payload to per-lane values.
-pub fn apply_payload(p: Payload, ins: &[&Token]) -> Token {
-    let n = ins[0].len();
-    let mut out = Vec::with_capacity(n);
-    for i in 0..n {
-        let a = ins[0][i];
-        let v = match p {
-            Payload::Relu => a.max(0),
-            Payload::Requant { shift } => sat_i8(a >> shift),
-            Payload::ReluRequant { shift } => sat_i8(a.max(0) >> shift),
-            Payload::AddSat => sat_i8(a + ins[1][i]),
-            Payload::Copy => a,
-            Payload::MulAcc | Payload::MaxReduce => unreachable!("not pure-parallel"),
-        };
-        out.push(v);
+/// Apply a pure-parallel payload lane-wise, writing into `out`.
+///
+/// `out` may be a recycled (uninitialized) arena slot, so every lane
+/// must be written: the lane counts are asserted up front rather than
+/// letting `zip` truncate silently.
+pub fn apply_payload_into(p: Payload, a: &[i32], b: Option<&[i32]>, out: &mut [i32]) {
+    // hard asserts (release too): zip truncation over a recycled slot
+    // would silently leak stale payload values into the output
+    assert_eq!(a.len(), out.len(), "payload lane-count mismatch");
+    if let Some(b) = b {
+        assert_eq!(b.len(), out.len(), "payload lane-count mismatch");
     }
+    match p {
+        Payload::Relu => {
+            for (o, &x) in out.iter_mut().zip(a) {
+                *o = x.max(0);
+            }
+        }
+        Payload::Requant { shift } => {
+            for (o, &x) in out.iter_mut().zip(a) {
+                *o = sat_i8(x >> shift);
+            }
+        }
+        Payload::ReluRequant { shift } => {
+            for (o, &x) in out.iter_mut().zip(a) {
+                *o = sat_i8(x.max(0) >> shift);
+            }
+        }
+        Payload::AddSat => {
+            let b = b.expect("AddSat needs two inputs");
+            for ((o, &x), &y) in out.iter_mut().zip(a).zip(b) {
+                *o = sat_i8(x + y);
+            }
+        }
+        Payload::Copy => out.copy_from_slice(a),
+        Payload::MulAcc | Payload::MaxReduce => unreachable!("not pure-parallel"),
+    }
+}
+
+/// Allocating convenience wrapper over [`apply_payload_into`] (tests
+/// and reference paths; the engine uses the in-place form).
+pub fn apply_payload(p: Payload, ins: &[&[i32]]) -> Vec<i32> {
+    let mut out = vec![0i32; ins[0].len()];
+    apply_payload_into(p, ins[0], ins.get(1).copied(), &mut out);
     out
 }
 
@@ -52,34 +89,52 @@ pub enum NodeProc {
 }
 
 impl NodeProc {
-    /// Cumulative tokens needed on each input before firing `k`.
-    pub fn needed(&self, k: u64) -> Vec<u64> {
+    /// Cumulative tokens needed on input `slot` before firing `k`.
+    #[inline]
+    pub fn needed(&self, slot: usize, k: u64) -> u64 {
+        let _ = slot;
         match self {
-            NodeProc::Sliding(p) => vec![p.needed(k)],
-            NodeProc::Reduction(_) => vec![k + 1],
-            NodeProc::Parallel(p) => vec![k + 1; p.arity],
+            NodeProc::Sliding(p) => p.needed(k),
+            NodeProc::Reduction(_) | NodeProc::Parallel(_) => k + 1,
         }
     }
 
-    pub fn accept(&mut self, slot: usize, tok: Token) {
+    /// Consume one token (ownership of the handle moves here: the proc
+    /// either copies the payload and releases, or parks the handle
+    /// until its firing releases it).
+    pub fn accept(&mut self, slot: usize, tok: TokenId, arena: &mut TokenArena) {
         match self {
-            NodeProc::Sliding(p) => p.accept(tok),
+            NodeProc::Sliding(p) => p.accept(tok, arena),
             NodeProc::Reduction(p) => p.accept(tok),
             NodeProc::Parallel(p) => p.accept(slot, tok),
         }
     }
 
-    pub fn fire(&mut self, k: u64) -> Token {
+    /// Produce output token `k` into a fresh arena slot (refcount 1).
+    pub fn fire_into(&mut self, k: u64, arena: &mut TokenArena) -> TokenId {
         match self {
-            NodeProc::Sliding(p) => p.fire(k),
-            NodeProc::Reduction(p) => p.fire(),
-            NodeProc::Parallel(p) => p.fire(),
+            NodeProc::Sliding(p) => p.fire_into(k, arena),
+            NodeProc::Reduction(p) => p.fire_into(arena),
+            NodeProc::Parallel(p) => p.fire_into(arena),
+        }
+    }
+
+    /// Clear per-run state, keeping weights and buffer capacity.
+    pub fn reset(&mut self) {
+        match self {
+            NodeProc::Sliding(p) => p.buf.clear(),
+            NodeProc::Reduction(p) => p.cur = None,
+            NodeProc::Parallel(p) => {
+                for q in &mut p.pending {
+                    q.clear();
+                }
+            }
         }
     }
 }
 
 /// Transpose conv weights (F,K,K,C) -> (K,K,C,F) for the contiguous
-/// inner loop of `SlidingProc::fire`.
+/// inner loop of `SlidingProc::fire_into`.
 pub fn transpose_fkkc_to_kkcf(w: &[i32], f: usize, k: usize, c: usize) -> Vec<i32> {
     if w.is_empty() {
         return Vec::new(); // weight-less sliding window (maxpool)
@@ -115,12 +170,14 @@ pub struct SlidingProc {
     pub weights: Vec<i32>,
     /// Weights transposed to (K, K, C, F) so the per-(kh,kw,cc) inner
     /// loop reads a contiguous F-vector — the simulator's hottest loop
-    /// (see EXPERIMENTS.md §Perf).
-    weights_t: Vec<i32>,
+    /// (see EXPERIMENTS.md §Perf). Transposed **once per design** now
+    /// that procs live in a reusable `SimContext`.
+    pub(crate) weights_t: Vec<i32>,
     pub payload: Payload,
     /// Consumed input values (row-major (h, w, c)); the engine's FIFO
     /// back-pressure bounds how far this runs ahead — functionally we
     /// retain everything for simplicity (simulation memory, not BRAM).
+    /// Capacity survives `reset`, so cell re-runs never reallocate.
     buf: Vec<i32>,
 }
 
@@ -142,17 +199,39 @@ impl SlidingProc {
         (raw_r * self.w + in_c + 1) as u64
     }
 
-    fn accept(&mut self, tok: Token) {
-        debug_assert_eq!(tok.len(), self.c);
-        self.buf.extend_from_slice(&tok);
+    fn accept(&mut self, tok: TokenId, arena: &mut TokenArena) {
+        debug_assert_eq!(arena.get(tok).len(), self.c);
+        self.buf.extend_from_slice(arena.get(tok));
+        arena.release(tok);
     }
 
-    fn fire(&mut self, k: u64) -> Token {
+    /// One (kh, kw) tap of the MAC window: `px · W[kh][kw]` accumulated
+    /// into `out` as slice-chunked dot products — the weight row for
+    /// each channel is a contiguous F-vector, so the inner loop is a
+    /// single auto-vectorizable multiply-accumulate over `out`.
+    #[inline]
+    fn mac_tap(out: &mut [i32], px: &[i32], wtap: &[i32], f: usize) {
+        for (cc, &x) in px.iter().enumerate() {
+            if x == 0 {
+                continue;
+            }
+            let wrow = &wtap[cc * f..(cc + 1) * f];
+            for (o, &wv) in out.iter_mut().zip(wrow) {
+                *o = o.wrapping_add(wv.wrapping_mul(x));
+            }
+        }
+    }
+
+    fn fire_into(&mut self, k: u64, arena: &mut TokenArena) -> TokenId {
         let r = (k as usize) / self.w_out;
         let cx = (k as usize) % self.w_out;
+        let id = arena.alloc(self.f);
+        // `out` is a fresh slot; sliding fires read only proc-owned
+        // state (buf, weights), so a plain mutable view suffices.
+        let out = arena.slice_mut(id);
         match self.payload {
             Payload::MulAcc => {
-                let mut out = vec![0i32; self.f];
+                out.fill(0);
                 for kh in 0..self.k {
                     for kw in 0..self.k {
                         let ir = r * self.stride + kh * self.dilation;
@@ -168,22 +247,13 @@ impl SlidingProc {
                         let base = (ir * self.w + ic) * self.c;
                         let px = &self.buf[base..base + self.c];
                         let wbase = (kh * self.k + kw) * self.c * self.f;
-                        // contiguous F-vector per (kh,kw,cc): auto-vectorizes
-                        for (cc, &x) in px.iter().enumerate() {
-                            if x == 0 {
-                                continue;
-                            }
-                            let wrow = &self.weights_t[wbase + cc * self.f..wbase + (cc + 1) * self.f];
-                            for (o, &wv) in out.iter_mut().zip(wrow) {
-                                *o += wv * x;
-                            }
-                        }
+                        let wtap = &self.weights_t[wbase..wbase + self.c * self.f];
+                        Self::mac_tap(out, px, wtap, self.f);
                     }
                 }
-                out
             }
             Payload::MaxReduce => {
-                let mut out = vec![i32::MIN; self.f]; // f == c for pooling
+                out.fill(i32::MIN); // f == c for pooling
                 for kh in 0..self.k {
                     for kw in 0..self.k {
                         let ir = r * self.stride + kh * self.dilation;
@@ -196,15 +266,15 @@ impl SlidingProc {
                             continue;
                         }
                         let base = (ir * self.w + ic) * self.c;
-                        for cc in 0..self.c {
-                            out[cc] = out[cc].max(self.buf[base + cc]);
+                        for (o, &v) in out.iter_mut().zip(&self.buf[base..base + self.c]) {
+                            *o = (*o).max(v);
                         }
                     }
                 }
-                out
             }
             other => panic!("sliding node with payload {other:?}"),
         }
+        id
     }
 }
 
@@ -215,29 +285,32 @@ pub struct ReductionProc {
     pub n: usize,
     /// (K, N) weights as i32.
     pub weights: Vec<i32>,
-    cur: Option<Token>,
+    cur: Option<TokenId>,
 }
 
 impl ReductionProc {
-    fn accept(&mut self, tok: Token) {
-        debug_assert_eq!(tok.len(), self.k);
+    fn accept(&mut self, tok: TokenId) {
         debug_assert!(self.cur.is_none(), "reduction row overwritten before fire");
         self.cur = Some(tok);
     }
 
-    fn fire(&mut self) -> Token {
-        let x = self.cur.take().expect("fire before accept");
-        let mut out = vec![0i32; self.n];
+    fn fire_into(&mut self, arena: &mut TokenArena) -> TokenId {
+        let xid = self.cur.take().expect("fire before accept");
+        let id = arena.alloc(self.n);
+        let (out, x) = arena.write_and_read(id, xid);
+        debug_assert_eq!(x.len(), self.k);
+        out.fill(0);
         for (kk, &xv) in x.iter().enumerate() {
             if xv == 0 {
                 continue;
             }
             let row = &self.weights[kk * self.n..(kk + 1) * self.n];
             for (o, &wv) in out.iter_mut().zip(row) {
-                *o += xv * wv;
+                *o = o.wrapping_add(wv.wrapping_mul(xv));
             }
         }
-        out
+        arena.release(xid);
+        id
     }
 }
 
@@ -245,19 +318,35 @@ impl ReductionProc {
 pub struct ParallelProc {
     pub payload: Payload,
     pub arity: usize,
-    pending: Vec<VecDeque<Token>>,
+    pending: Vec<VecDeque<TokenId>>,
 }
 
 impl ParallelProc {
-    fn accept(&mut self, slot: usize, tok: Token) {
+    fn accept(&mut self, slot: usize, tok: TokenId) {
         self.pending[slot].push_back(tok);
     }
 
-    fn fire(&mut self) -> Token {
-        let toks: Vec<Token> =
-            self.pending.iter_mut().map(|q| q.pop_front().expect("missing token")).collect();
-        let refs: Vec<&Token> = toks.iter().collect();
-        apply_payload(self.payload, &refs)
+    fn fire_into(&mut self, arena: &mut TokenArena) -> TokenId {
+        let a = self.pending[0].pop_front().expect("missing token");
+        match self.arity {
+            1 => {
+                let id = arena.alloc(arena.get(a).len());
+                let (out, x) = arena.write_and_read(id, a);
+                apply_payload_into(self.payload, x, None, out);
+                arena.release(a);
+                id
+            }
+            2 => {
+                let b = self.pending[1].pop_front().expect("missing token");
+                let id = arena.alloc(arena.get(a).len());
+                let (out, x, y) = arena.write_and_read2(id, a, b);
+                apply_payload_into(self.payload, x, Some(y), out);
+                arena.release(a);
+                arena.release(b);
+                id
+            }
+            n => panic!("pure-parallel node with arity {n}"),
+        }
     }
 }
 
@@ -335,6 +424,7 @@ pub fn build_proc(d: &Design, nid: usize) -> Result<NodeProc> {
                 | Payload::Copy => {}
                 other => bail!("pure-parallel node with payload {other:?}"),
             }
+            ensure!((1..=2).contains(&arity), "pure-parallel arity must be 1 or 2");
             Ok(NodeProc::Parallel(ParallelProc {
                 payload: op.payload,
                 arity,
@@ -353,17 +443,17 @@ mod tests {
     #[test]
     fn payload_semantics_match_ref_contract() {
         // floor-rounding arithmetic shift and clamping, as in ref.py
-        let acc: Token = vec![-65, -64, -1, 0, 1, 63, 64, 65];
+        let acc = [-65, -64, -1, 0, 1, 63, 64, 65];
         let got = apply_payload(Payload::Requant { shift: 6 }, &[&acc]);
         assert_eq!(got, vec![-2, -1, -1, 0, 0, 0, 1, 1]);
-        let big: Token = vec![1 << 20, -(1 << 20)];
+        let big = [1 << 20, -(1 << 20)];
         assert_eq!(apply_payload(Payload::Requant { shift: 6 }, &[&big]), vec![127, -128]);
         assert_eq!(
             apply_payload(Payload::ReluRequant { shift: 6 }, &[&big]),
             vec![127, 0]
         );
-        let a: Token = vec![100, -100];
-        let b: Token = vec![100, -100];
+        let a = [100, -100];
+        let b = [100, -100];
         assert_eq!(apply_payload(Payload::AddSat, &[&a, &b]), vec![127, -128]);
     }
 
@@ -395,18 +485,20 @@ mod tests {
         let NodeProc::Sliding(mut p) = build_proc(&d, 0).unwrap() else { panic!() };
         p.weights = vec![1; 9];
         p.weights_t = vec![1; 9];
+        let mut arena = TokenArena::new();
         let vals: Vec<i32> = (0..16).collect();
         for v in &vals {
-            p.accept(vec![*v]);
+            let t = arena.alloc_from(&[*v]);
+            p.accept(t, &mut arena);
         }
         // output pixel (1,1) covers input rows 0..3, cols 0..3
         let k = (1 * 4 + 1) as u64;
-        let got = p.fire(k);
+        let got = p.fire_into(k, &mut arena);
         let want: i32 = [0, 1, 2, 4, 5, 6, 8, 9, 10].iter().map(|&i| vals[i as usize]).sum();
-        assert_eq!(got, vec![want]);
+        assert_eq!(arena.get(got), &[want]);
         // corner pixel (0,0): zero-padded window sums indices {0,1,4,5}
-        let got0 = p.fire(0);
-        assert_eq!(got0, vec![0 + 1 + 4 + 5]);
+        let got0 = p.fire_into(0, &mut arena);
+        assert_eq!(arena.get(got0), &[0 + 1 + 4 + 5]);
     }
 
     #[test]
@@ -415,12 +507,46 @@ mod tests {
         let d = build_streaming_design(&g).unwrap();
         let NodeProc::Reduction(mut p) = build_proc(&d, 0).unwrap() else { panic!() };
         // x = e0 (first unit vector): out = first row of W
+        let mut arena = TokenArena::new();
         let mut x = vec![0i32; p.k];
         x[0] = 1;
-        p.accept(x);
-        let got = p.fire();
+        let t = arena.alloc_from(&x);
+        p.accept(t);
+        let got = p.fire_into(&mut arena);
         let want: Vec<i32> = p.weights[..p.n].to_vec();
-        assert_eq!(got, want);
+        assert_eq!(arena.get(got), &want[..]);
+        assert_eq!(arena.live(), 1, "input token must be released on fire");
+    }
+
+    #[test]
+    fn parallel_fire_consumes_and_releases_inputs() {
+        let mut p = ParallelProc {
+            payload: Payload::AddSat,
+            arity: 2,
+            pending: vec![VecDeque::new(), VecDeque::new()],
+        };
+        let mut arena = TokenArena::new();
+        let a = arena.alloc_from(&[100, -100]);
+        let b = arena.alloc_from(&[100, -100]);
+        p.accept(0, a);
+        p.accept(1, b);
+        let out = p.fire_into(&mut arena);
+        assert_eq!(arena.get(out), &[127, -128]);
+        assert_eq!(arena.live(), 1, "both inputs released");
+    }
+
+    #[test]
+    fn reset_clears_state_and_keeps_weights() {
+        let g = models::conv_relu(8, 2, 2);
+        let d = build_streaming_design(&g).unwrap();
+        let mut proc = build_proc(&d, 0).unwrap();
+        let mut arena = TokenArena::new();
+        let t = arena.alloc_from(&[1, 2]);
+        proc.accept(0, t, &mut arena);
+        proc.reset();
+        let NodeProc::Sliding(p) = &proc else { panic!() };
+        assert!(p.buf.is_empty());
+        assert!(!p.weights_t.is_empty(), "weights survive reset");
     }
 
     #[test]

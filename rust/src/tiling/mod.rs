@@ -36,6 +36,6 @@ pub use cost::{serialized_tiled_cycles, tiled_cycles_estimate, TILE_RESTART_CYCL
 pub use halo::{check_tilable, graph_halo, op_axis_window, AxisCone, AxisWindow, GridGeom};
 pub use plan::{local_extents, rewindow, GridAxis, Seg, TileGrid};
 pub use schedule::{
-    compile_tiled, compile_tiled_fixed, compile_tiled_from, simulate_tiled, TiledCompilation,
-    TiledSimReport,
+    compile_tiled, compile_tiled_fixed, compile_tiled_from, simulate_tiled,
+    simulate_tiled_parallel, TiledCompilation, TiledSimReport,
 };

@@ -21,18 +21,19 @@
 //! [`crate::tiling::plan::TileGrid`] keeps every cell's local output
 //! lattice aligned with the global one.
 
-use anyhow::{bail, ensure, Result};
+use anyhow::{bail, ensure, Context, Result};
 
+use crate::coordinator::WorkerPool;
 use crate::dataflow::build::{build_cell_design, build_streaming_design};
 use crate::dataflow::design::Design;
 use crate::dse::ilp::{DseConfig, DseSolution};
 use crate::dse::space::grid_counts;
 use crate::ir::graph::ModelGraph;
-use crate::sim::{simulate, SimMode};
+use crate::sim::SimMode;
 
 use super::cost::{cell_bram_lower_bound, tiled_cycles_estimate, TILE_RESTART_CYCLES};
 use super::halo::{check_tilable, AXIS_H, AXIS_W};
-use super::plan::{local_extents, TileGrid};
+use super::plan::{local_extents, Seg, TileGrid};
 
 /// A grid-tiled compilation: one DSE-solved cell design reused by every
 /// cell of the grid.
@@ -224,6 +225,8 @@ pub struct TiledSimReport {
     /// Total node firings summed over all cell runs (simulator
     /// throughput metric, mirrors `SimReport::total_firings`).
     pub total_firings: u64,
+    /// Total FIFO pushes + pops summed over all cell runs.
+    pub token_ops: u64,
 }
 
 impl TiledSimReport {
@@ -239,13 +242,27 @@ impl TiledSimReport {
             fifo_high_water: Vec::new(),
             deadlock: None,
             total_firings: self.total_firings,
+            token_ops: self.token_ops,
         }
     }
 }
 
-/// Execute every cell of `tc` on the cycle-level simulator and stitch
-/// the cropped cores into the full output feature map.
-pub fn simulate_tiled(tc: &TiledCompilation, input: &[i32]) -> Result<TiledSimReport> {
+/// Checked geometry of one tiled run, shared by the serial and parallel
+/// execution paths.
+struct TiledGeometry {
+    w_in: usize,
+    c: usize,
+    w_out: usize,
+    f: usize,
+    /// Local input extents (halo included).
+    lh: usize,
+    lw: usize,
+    /// Local output width of the cell design.
+    low: usize,
+    out_len: usize,
+}
+
+fn tiled_geometry(tc: &TiledCompilation, input: &[i32]) -> Result<TiledGeometry> {
     let g = &tc.graph;
     let grid = &tc.grid;
     let in_shape = &g.inputs()[0].ty.shape;
@@ -263,43 +280,180 @@ pub fn simulate_tiled(tc: &TiledCompilation, input: &[i32]) -> Result<TiledSimRe
     );
     let out_shape = &g.outputs()[0].ty.shape;
     let (h_out, w_out, f) = (out_shape[0], out_shape[1], out_shape[2]);
-    let (lh, lw) = (grid.h.local_in, grid.w.local_in);
-    let low = grid.w.local_out;
+    Ok(TiledGeometry {
+        w_in,
+        c,
+        w_out,
+        f,
+        lh: grid.h.local_in,
+        lw: grid.w.local_in,
+        low: grid.w.local_out,
+        out_len: h_out * w_out * f,
+    })
+}
 
-    let mut output = vec![0i32; h_out * w_out * f];
+/// Gather one cell's halo-overlapped 2-D input window into `buf`
+/// (cleared first; capacity is reused across cells).
+fn gather_cell(
+    input: &[i32],
+    geo: &TiledGeometry,
+    rs: &Seg,
+    cs: &Seg,
+    buf: &mut Vec<i32>,
+) {
+    buf.clear();
+    for r in 0..geo.lh {
+        let base = ((rs.in_lo + r) * geo.w_in + cs.in_lo) * geo.c;
+        buf.extend_from_slice(&input[base..base + geo.lw * geo.c]);
+    }
+}
+
+/// What one cell run contributes to the stitched report.
+struct CellRun {
+    cycles: u64,
+    firings: u64,
+    token_ops: u64,
+    /// The cropped core block, `h.core` rows of `w.core * f` values.
+    core: Vec<i32>,
+}
+
+/// Run one cell on a (reusable) context and crop its core block.
+fn run_cell(
+    ctx: &mut crate::sim::SimContext<'_>,
+    tc: &TiledCompilation,
+    geo: &TiledGeometry,
+    input: &[i32],
+    rs: &Seg,
+    cs: &Seg,
+    cell_in: &mut Vec<i32>,
+) -> Result<CellRun> {
+    let grid = &tc.grid;
+    gather_cell(input, geo, rs, cs, cell_in);
+    let rep = ctx.run(cell_in)?;
+    if let Some(blocked) = &rep.deadlock {
+        bail!(
+            "cell ({}, {}) deadlocked:\n  {}",
+            rs.index,
+            cs.index,
+            blocked.join("\n  ")
+        );
+    }
+    let mut core = Vec::with_capacity(grid.h.core * grid.w.core * geo.f);
+    for r in 0..grid.h.core {
+        let src = ((rs.crop_lo + r) * geo.low + cs.crop_lo) * geo.f;
+        core.extend_from_slice(&rep.output[src..src + grid.w.core * geo.f]);
+    }
+    Ok(CellRun {
+        cycles: rep.cycles,
+        firings: rep.total_firings,
+        token_ops: rep.token_ops,
+        core,
+    })
+}
+
+/// Stitch per-cell results (in row-major cell order) into the report.
+fn stitch(
+    tc: &TiledCompilation,
+    geo: &TiledGeometry,
+    runs: Vec<CellRun>,
+) -> TiledSimReport {
+    let grid = &tc.grid;
+    let mut output = vec![0i32; geo.out_len];
     let mut tile_cycles = Vec::with_capacity(grid.n_cells());
-    let mut cycles = 0u64;
-    let mut total_firings = 0u64;
+    let (mut cycles, mut total_firings, mut token_ops) = (0u64, 0u64, 0u64);
+    let mut it = runs.into_iter();
     for rs in &grid.h.segs {
         for cs in &grid.w.segs {
-            // gather the halo-overlapped 2-D input window, row by row
-            let mut cell_in = Vec::with_capacity(lh * lw * c);
-            for r in 0..lh {
-                let base = ((rs.in_lo + r) * w_in + cs.in_lo) * c;
-                cell_in.extend_from_slice(&input[base..base + lw * c]);
-            }
-            let rep = simulate(&tc.cell, &cell_in, SimMode::of(tc.cell.style))?;
-            if let Some(blocked) = &rep.deadlock {
-                bail!(
-                    "cell ({}, {}) deadlocked:\n  {}",
-                    rs.index,
-                    cs.index,
-                    blocked.join("\n  ")
-                );
-            }
-            // scatter the cropped core block into the full output
+            let run = it.next().expect("one run per cell");
             for r in 0..grid.h.core {
-                let src = ((rs.crop_lo + r) * low + cs.crop_lo) * f;
-                let dst = ((rs.out_lo + r) * w_out + cs.out_lo) * f;
-                output[dst..dst + grid.w.core * f]
-                    .copy_from_slice(&rep.output[src..src + grid.w.core * f]);
+                let src = r * grid.w.core * geo.f;
+                let dst = ((rs.out_lo + r) * geo.w_out + cs.out_lo) * geo.f;
+                output[dst..dst + grid.w.core * geo.f]
+                    .copy_from_slice(&run.core[src..src + grid.w.core * geo.f]);
             }
-            cycles += rep.cycles + TILE_RESTART_CYCLES;
-            total_firings += rep.total_firings;
-            tile_cycles.push(rep.cycles);
+            cycles += run.cycles + TILE_RESTART_CYCLES;
+            total_firings += run.firings;
+            token_ops += run.token_ops;
+            tile_cycles.push(run.cycles);
         }
     }
-    Ok(TiledSimReport { cycles, output, tile_cycles, total_firings })
+    TiledSimReport { cycles, output, tile_cycles, total_firings, token_ops }
+}
+
+/// Execute every cell of `tc` on the cycle-level simulator and stitch
+/// the cropped cores into the full output feature map.
+///
+/// Serial path: one [`crate::sim::SimContext`] is built for the cell
+/// design and reused for every cell, so weights are transposed and
+/// line-buffer state allocated **once per design** instead of once per
+/// cell. For multi-core execution see [`simulate_tiled_parallel`].
+pub fn simulate_tiled(tc: &TiledCompilation, input: &[i32]) -> Result<TiledSimReport> {
+    let geo = tiled_geometry(tc, input)?;
+    let grid = &tc.grid;
+    let mut ctx = crate::sim::SimContext::new(&tc.cell, SimMode::of(tc.cell.style))?;
+    let mut cell_in = Vec::with_capacity(geo.lh * geo.lw * geo.c);
+    let mut runs = Vec::with_capacity(grid.n_cells());
+    for rs in &grid.h.segs {
+        for cs in &grid.w.segs {
+            runs.push(run_cell(&mut ctx, tc, &geo, input, rs, cs, &mut cell_in)?);
+        }
+    }
+    Ok(stitch(tc, &geo, runs))
+}
+
+/// Like [`simulate_tiled`], fanning the independent grid cells out
+/// across `pool`'s workers. Cells are split into one contiguous
+/// row-major chunk per worker; each chunk job builds its **own**
+/// `SimContext` (weights transposed once per worker, reused across the
+/// chunk's cells) and returns its cropped cores, which the coordinator
+/// stitches in deterministic cell order — the report is identical to
+/// the serial path's, cycle counts included (asserted by the
+/// equivalence tests and the `BENCH_sim.json` smoke check).
+pub fn simulate_tiled_parallel(
+    tc: &TiledCompilation,
+    input: &[i32],
+    pool: &WorkerPool,
+) -> Result<TiledSimReport> {
+    let geo = tiled_geometry(tc, input)?;
+    let grid = &tc.grid;
+    let cells: Vec<(&Seg, &Seg)> = grid
+        .h
+        .segs
+        .iter()
+        .flat_map(|rs| grid.w.segs.iter().map(move |cs| (rs, cs)))
+        .collect();
+    if pool.workers() <= 1 || cells.len() <= 1 {
+        return simulate_tiled(tc, input);
+    }
+    let chunk = cells.len().div_ceil(pool.workers());
+    let geo_ref = &geo;
+    let jobs: Vec<_> = cells
+        .chunks(chunk)
+        .map(|chunk_cells| {
+            move || -> Result<Vec<CellRun>> {
+                let mut ctx =
+                    crate::sim::SimContext::new(&tc.cell, SimMode::of(tc.cell.style))?;
+                let mut cell_in = Vec::with_capacity(geo_ref.lh * geo_ref.lw * geo_ref.c);
+                chunk_cells
+                    .iter()
+                    .map(|(rs, cs)| {
+                        run_cell(&mut ctx, tc, geo_ref, input, rs, cs, &mut cell_in)
+                    })
+                    .collect()
+            }
+        })
+        .collect();
+    let results = pool.run_all_scoped(jobs, |_, _| {});
+    let mut runs = Vec::with_capacity(cells.len());
+    for (idx, r) in results {
+        let chunk_runs = r
+            .map_err(anyhow::Error::msg)
+            .and_then(|inner| inner)
+            .with_context(|| format!("tiled simulation chunk {idx} failed"))?;
+        runs.extend(chunk_runs);
+    }
+    ensure!(runs.len() == cells.len(), "cell runs lost in the pool");
+    Ok(stitch(tc, &geo, runs))
 }
 
 #[cfg(test)]
@@ -308,6 +462,7 @@ mod tests {
     use crate::dse::ilp::solve;
     use crate::ir::builder::models;
     use crate::resources::device::DeviceSpec;
+    use crate::sim::simulate;
     use crate::util::prng;
 
     fn det_input(g: &ModelGraph) -> Vec<i32> {
@@ -386,6 +541,44 @@ mod tests {
             let rep = simulate_tiled(&tc, &x).unwrap();
             assert_eq!(rep.output, want, "{rows}x{cols} pooled output mismatch");
         }
+    }
+
+    #[test]
+    fn parallel_tiled_simulation_matches_serial_exactly() {
+        // The fan-out contract: any worker count produces the identical
+        // report — stitched output, total/per-cell cycles, firings and
+        // token ops — because cells are independent and the stitch
+        // order is deterministic.
+        let cfg = DseConfig::new(DeviceSpec::kv260());
+        for (g, rows, cols) in [
+            (models::tiny_cnn(32, 4, 8), 2usize, 2usize),
+            (models::cascade(32, 8, 8), 2, 4),
+            (models::conv_pool_conv(64, 8), 2, 2),
+        ] {
+            let x = det_input(&g);
+            let tc = compile_tiled_fixed(&g, &cfg, rows, cols).unwrap();
+            let serial = simulate_tiled(&tc, &x).unwrap();
+            for workers in [2usize, 3, 8] {
+                let par =
+                    simulate_tiled_parallel(&tc, &x, &WorkerPool::new(workers)).unwrap();
+                assert_eq!(par.output, serial.output, "{}@{workers}: output", g.name);
+                assert_eq!(par.cycles, serial.cycles, "{}@{workers}: cycles", g.name);
+                assert_eq!(par.tile_cycles, serial.tile_cycles, "{}@{workers}", g.name);
+                assert_eq!(par.total_firings, serial.total_firings, "{}", g.name);
+                assert_eq!(par.token_ops, serial.token_ops, "{}", g.name);
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_tiled_simulation_with_one_worker_is_serial() {
+        let g = models::conv_relu(32, 8, 8);
+        let x = det_input(&g);
+        let tc = compile_tiled_fixed(&g, &DseConfig::new(DeviceSpec::kv260()), 2, 2).unwrap();
+        let a = simulate_tiled(&tc, &x).unwrap();
+        let b = simulate_tiled_parallel(&tc, &x, &WorkerPool::new(1)).unwrap();
+        assert_eq!(a.output, b.output);
+        assert_eq!(a.cycles, b.cycles);
     }
 
     #[test]

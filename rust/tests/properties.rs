@@ -233,6 +233,95 @@ fn prop_modeled_vector_monotone_in_weight_bits() {
 }
 
 #[test]
+fn prop_arena_engine_matches_naive_reference_exactly() {
+    // The arena data plane is pinned to the retained naive reference
+    // engine on random graphs: identical outputs, identical cycle
+    // counts, identical FIFO high-water marks, identical traces — in
+    // both scheduling modes, scalar and DSE-tuned. Two independent
+    // implementations of the timing contract must agree bit-for-bit
+    // before either is trusted.
+    use ming::sim::naive::simulate_naive;
+    let dev = DeviceSpec::kv260();
+    forall("arena == naive", 25, random_graph, |g| {
+        let x = det_input(g, 13);
+        for tuned in [false, true] {
+            let mut d = build_streaming_design(g).unwrap();
+            if tuned {
+                solve(&mut d, &DseConfig::new(dev.clone())).unwrap();
+            }
+            let modes: &[SimMode] = if tuned {
+                &[SimMode::Dataflow, SimMode::Sequential]
+            } else {
+                // scalar designs have unsized FIFOs: Sequential only
+                // (Dataflow may legitimately deadlock on diamonds, which
+                // the dedicated deadlock-agreement test covers)
+                &[SimMode::Sequential]
+            };
+            for &mode in modes {
+                let a = simulate(&d, &x, mode).unwrap();
+                let n = simulate_naive(&d, &x, mode).unwrap();
+                assert_eq!(a.output, n.output, "{} {mode:?}: output", g.name);
+                assert_eq!(a.cycles, n.cycles, "{} {mode:?}: cycles", g.name);
+                assert_eq!(
+                    a.fifo_high_water, n.fifo_high_water,
+                    "{} {mode:?}: high water",
+                    g.name
+                );
+                assert_eq!(a.total_firings, n.total_firings, "{}", g.name);
+                assert_eq!(a.token_ops, n.token_ops, "{}", g.name);
+                assert_eq!(a.deadlock, n.deadlock, "{}", g.name);
+                for (ta, tn) in a.traces.iter().zip(&n.traces) {
+                    assert_eq!(
+                        (ta.firings, ta.first_fire, ta.last_fire, ta.complete),
+                        (tn.firings, tn.first_fire, tn.last_fire, tn.complete),
+                        "{}/{}: trace",
+                        g.name,
+                        ta.name
+                    );
+                    assert_eq!(ta.stall_in, tn.stall_in, "{}/{}", g.name, ta.name);
+                    assert_eq!(ta.stall_out, tn.stall_out, "{}/{}", g.name, ta.name);
+                }
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_parallel_tiled_simulation_matches_serial() {
+    // Random pooled stride chains through the worker-pool fan-out: for
+    // every buildable grid, the parallel tiled simulation is identical
+    // to the serial one — stitched output, total cycles, per-cell
+    // cycles — at several worker counts.
+    use ming::coordinator::WorkerPool;
+    use ming::tiling::{compile_tiled_fixed, simulate_tiled, simulate_tiled_parallel};
+    let dev = DeviceSpec::kv260();
+    forall("parallel tiled == serial", 8, random_stride_chain, |g| {
+        let x = det_input(g, 23);
+        let mut checked = 0;
+        for (rows, cols) in candidate_grids(g) {
+            let Ok(tc) = compile_tiled_fixed(g, &DseConfig::new(dev.clone()), rows, cols)
+            else {
+                continue;
+            };
+            let serial = simulate_tiled(&tc, &x).unwrap();
+            for workers in [2usize, 5] {
+                let par = simulate_tiled_parallel(&tc, &x, &WorkerPool::new(workers)).unwrap();
+                if par.output != serial.output
+                    || par.cycles != serial.cycles
+                    || par.tile_cycles != serial.tile_cycles
+                    || par.total_firings != serial.total_firings
+                {
+                    return false;
+                }
+            }
+            checked += 1;
+        }
+        checked > 0
+    });
+}
+
+#[test]
 fn prop_simulation_agrees_across_modes_and_unrolls() {
     // Functional output must be invariant to: scheduling mode, and the
     // DSE's unroll decisions. Cycle counts must only improve.

@@ -135,6 +135,58 @@ fn cached_tiled_design_is_byte_identical_to_fresh() {
 }
 
 #[test]
+fn infeasible_flat_verdict_is_negative_cached_in_the_fallback() {
+    // A workload that is infeasible flat *and* untilable (rank-2 linear
+    // with no DSP budget): the first compile pays the flat
+    // branch-and-bound proof; every repeat reuses the cached verdict —
+    // zero further ILP solves even though the compile still errors.
+    let g = models::linear();
+    let cache = Arc::new(DesignCache::in_memory());
+    let cfg = DseConfig::new(DeviceSpec::kv260().with_dsp_limit(0)).with_cache(cache.clone());
+
+    let e1 = solve_with_tiling_fallback(&g, &cfg).unwrap_err();
+    assert!(format!("{e1:#}").contains("fallback"), "{e1:#}");
+    let solves1 = cache.stats().solves;
+    assert_eq!(solves1, 1, "first run proves infeasibility once");
+
+    let e2 = solve_with_tiling_fallback(&g, &cfg).unwrap_err();
+    assert_eq!(
+        cache.stats().solves,
+        1,
+        "repeat compile must reuse the cached infeasibility verdict"
+    );
+    assert!(cache.stats().hits >= 1);
+    assert!(format!("{e2:#}").contains("cached verdict"), "{e2:#}");
+}
+
+#[test]
+fn tile_grid_search_negative_caches_failing_cells() {
+    // The BRAM-starved conv walks grid candidates whose cells do not
+    // fit before reaching the winner. A second *direct* compile_tiled
+    // (no fallback wrapper, so the whole-outcome cache entry is not
+    // consulted) must re-prove none of those dead ends: every cell
+    // probe — failed or won — hits the cache.
+    use ming::tiling::compile_tiled;
+    let g = models::conv_relu(400, 8, 8);
+    let dev = DeviceSpec::kv260().with_bram_limit(3);
+    let cache = Arc::new(DesignCache::in_memory());
+    let cfg = DseConfig::new(dev).with_cache(cache.clone());
+
+    let tc1 = compile_tiled(&g, &cfg).unwrap();
+    let solves_cold = cache.stats().solves;
+    assert!(solves_cold > 0);
+
+    let tc2 = compile_tiled(&g, &cfg).unwrap();
+    assert_eq!(
+        cache.stats().solves,
+        solves_cold,
+        "the repeated grid search must perform zero cell ILP solves"
+    );
+    assert_eq!((tc1.grid.rows(), tc1.grid.cols()), (tc2.grid.rows(), tc2.grid.cols()));
+    assert_eq!(format!("{:?}", tc1.cell), format!("{:?}", tc2.cell));
+}
+
+#[test]
 fn cache_keys_miss_on_device_or_config_change() {
     let g = models::conv_relu(32, 8, 8);
     let kv = DeviceSpec::kv260();
