@@ -153,19 +153,25 @@ fn main() {
     // cells; parallel fans cells over the worker pool.
     let workers = WorkerPool::default_size().workers().max(2);
     let pool = WorkerPool::new(workers);
-    let (tiled_serial_ms, tiled_parallel_ms) = {
+    let (tiled_serial_ms, tiled_parallel_ms, ctx_builds) = {
         let gg = models::vgg_block(128, 16, 3);
         let x = det_input(&gg);
         let tc = compile_tiled_fixed(&gg, &DseConfig::new(dev.clone()), 2, 2).unwrap();
         let serial = min_wall(3, || simulate_tiled(&tc, &x).unwrap().cycles);
-        let parallel = min_wall(3, || simulate_tiled_parallel(&tc, &x, &pool).unwrap().cycles);
+        let mut ctx_builds = 0u64;
+        let parallel = min_wall(3, || {
+            let rep = simulate_tiled_parallel(&tc, &x, &pool).unwrap();
+            ctx_builds = rep.ctx_builds;
+            rep.cycles
+        });
         println!(
-            "tiled_vgg3_128_2x2: serial {:.1}ms, parallel({workers}) {:.1}ms ({:.2}x)",
+            "tiled_vgg3_128_2x2: serial {:.1}ms, parallel({workers}) {:.1}ms ({:.2}x, \
+             {ctx_builds} ctx builds via the shared pool)",
             serial.as_secs_f64() * 1e3,
             parallel.as_secs_f64() * 1e3,
             serial.as_secs_f64() / parallel.as_secs_f64().max(1e-9)
         );
-        (serial.as_secs_f64() * 1e3, parallel.as_secs_f64() * 1e3)
+        (serial.as_secs_f64() * 1e3, parallel.as_secs_f64() * 1e3, ctx_builds)
     };
 
     // --- smoke: parallel must not be slower on the 2x2 tiny_cnn case ------
@@ -204,7 +210,7 @@ fn main() {
          \"reuse_speedup\":{:.2}}},\
          \"tiled_vgg3_128_2x2\":{{\"workers\":{workers},\
          \"serial_ms\":{tiled_serial_ms:.3},\"parallel_ms\":{tiled_parallel_ms:.3},\
-         \"parallel_speedup\":{:.2}}},\
+         \"parallel_speedup\":{:.2},\"ctx_builds\":{ctx_builds}}},\
          \"smoke_tiny_cnn_96_2x2\":{{\"serial_ms\":{smoke_serial_ms:.3},\
          \"parallel_ms\":{smoke_parallel_ms:.3}}}}}",
         ctx_cold_ms / ctx_reused_ms.max(1e-9),

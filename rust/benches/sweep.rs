@@ -1,6 +1,6 @@
 //! Bench: sweep wall-time with and without the content-addressed design
-//! cache, emitting `BENCH_sweep.json` (wall-time + cache hit rate) for
-//! CI tracking.
+//! cache, emitting `BENCH_sweep.json` (wall-time + cache hit rate +
+//! span-tracing overhead) for CI tracking.
 //!
 //! Run: `cargo bench --bench sweep`
 
@@ -38,6 +38,25 @@ fn main() {
         "warm sweep must perform zero ILP solves"
     );
 
+    // traced warm: same warm cache with span tracing + profiling armed —
+    // the delta against the untraced warm run is the instrumentation
+    // overhead (the issue budget: a few percent traced, ~0 disabled,
+    // which the untraced runs above already paid if it weren't ~0)
+    let sink = ming::obs::trace::global();
+    let metrics0 = ming::obs::metrics::global().snapshot();
+    sink.set_tracing(true);
+    sink.set_profiling(true);
+    let t2 = Instant::now();
+    let traced_results = svc.run_sweep(&cfg);
+    let traced = t2.elapsed();
+    sink.set_tracing(false);
+    sink.set_profiling(false);
+    assert_eq!(traced_results.len(), warm_results.len());
+    let trace_events = sink.event_count();
+    assert!(trace_events > 0, "traced sweep must record spans");
+    let traced_delta = ming::obs::metrics::global().snapshot().delta(&metrics0);
+    let overhead_pct = (traced.as_secs_f64() / warm.as_secs_f64().max(1e-9) - 1.0) * 100.0;
+
     let speedup = cold.as_secs_f64() / warm.as_secs_f64().max(1e-9);
     // hit rate of the *warm run alone* (counter deltas) — the cumulative
     // lifetime rate would be diluted by the cold run's mandatory misses
@@ -56,6 +75,12 @@ fn main() {
         fmt_dur(warm),
         warm_stats.solves - cold_stats.solves
     );
+    println!(
+        "  traced: {:>8}  ({trace_events} span events, {overhead_pct:+.1}% vs warm, \
+         pool busy {} ms)",
+        fmt_dur(traced),
+        traced_delta.get("pool.busy_us") / 1000,
+    );
     println!("  {}", cache.summary());
 
     let json = format!(
@@ -63,13 +88,18 @@ fn main() {
          \"cold_ms\":{:.3},\"warm_ms\":{:.3},\"cache_speedup\":{speedup:.2},\
          \"warm_hits\":{warm_hits},\"warm_misses\":{warm_misses},\
          \"stores\":{},\"ilp_solves_cold\":{},\
-         \"ilp_solves_warm\":0,\"warm_hit_rate\":{hit_rate:.4}}}",
+         \"ilp_solves_warm\":0,\"warm_hit_rate\":{hit_rate:.4},\
+         \"traced_ms\":{:.3},\"trace_overhead_pct\":{overhead_pct:.2},\
+         \"trace_events\":{trace_events},\"pool_busy_us\":{},\"pool_idle_us\":{}}}",
         cold_results.len(),
         svc.workers(),
         cold.as_secs_f64() * 1e3,
         warm.as_secs_f64() * 1e3,
         warm_stats.stores,
         cold_stats.solves,
+        traced.as_secs_f64() * 1e3,
+        traced_delta.get("pool.busy_us"),
+        traced_delta.get("pool.idle_us"),
     );
     std::fs::write("BENCH_sweep.json", format!("{json}\n")).expect("writing BENCH_sweep.json");
     println!("wrote BENCH_sweep.json");

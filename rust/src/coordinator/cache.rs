@@ -161,9 +161,14 @@ impl DesignCache {
 
     /// Look up a fingerprint: memory first, then disk. Counts a hit or
     /// a miss; unreadable disk entries additionally count as corrupt.
+    /// Every counter is mirrored into the global metrics registry under
+    /// `cache.*` so `--profile` and bench output see cache behavior
+    /// without holding the cache handle.
     pub fn lookup(&self, fp: u64) -> Option<CachedDesign> {
+        let m = crate::obs::metrics::global();
         if let Some(e) = self.mem.lock().unwrap().get(&fp).cloned() {
             self.hits.fetch_add(1, Ordering::Relaxed);
+            m.incr("cache.hits");
             return Some(e);
         }
         if let Some(path) = self.entry_path(fp) {
@@ -172,11 +177,13 @@ impl DesignCache {
                     Ok(e) => {
                         self.mem.lock().unwrap().insert(fp, e.clone());
                         self.hits.fetch_add(1, Ordering::Relaxed);
+                        m.incr("cache.hits");
                         return Some(e);
                     }
                     Err(_) => {
                         // corrupt on disk: degrade to a miss
                         self.corrupt.fetch_add(1, Ordering::Relaxed);
+                        m.incr("cache.corrupt");
                     }
                 },
                 // absent: a plain miss; any *other* IO error (permissions,
@@ -184,11 +191,13 @@ impl DesignCache {
                 Err(e) => {
                     if e.kind() != std::io::ErrorKind::NotFound {
                         self.corrupt.fetch_add(1, Ordering::Relaxed);
+                        m.incr("cache.corrupt");
                     }
                 }
             }
         }
         self.misses.fetch_add(1, Ordering::Relaxed);
+        m.incr("cache.misses");
         None
     }
 
@@ -214,6 +223,7 @@ impl DesignCache {
         }
         self.mem.lock().unwrap().insert(fp, entry);
         self.stores.fetch_add(1, Ordering::Relaxed);
+        crate::obs::metrics::global().incr("cache.stores");
     }
 
     /// Record an entry that a [`Self::lookup`] returned (counting a
@@ -224,11 +234,16 @@ impl DesignCache {
         self.corrupt.fetch_add(1, Ordering::Relaxed);
         self.hits.fetch_sub(1, Ordering::Relaxed);
         self.misses.fetch_add(1, Ordering::Relaxed);
+        let m = crate::obs::metrics::global();
+        m.incr("cache.corrupt");
+        m.sub("cache.hits", 1);
+        m.incr("cache.misses");
     }
 
     /// Record one real ILP solve behind a cached entry point.
     pub fn count_solve(&self) {
         self.solves.fetch_add(1, Ordering::Relaxed);
+        crate::obs::metrics::global().incr("cache.ilp_solves");
     }
 
     pub fn stats(&self) -> CacheStats {
@@ -293,6 +308,7 @@ impl DesignCache {
             }
         }
         self.evicted.fetch_add(evicted as u64, Ordering::Relaxed);
+        crate::obs::metrics::global().add("cache.evicted", evicted as u64);
         Ok((entries.len().min(max_entries), evicted))
     }
 }

@@ -43,6 +43,28 @@ pub struct CompileJob {
     pub estimate_only: bool,
 }
 
+/// Wall-clock microseconds per pipeline stage of one job run —
+/// measured unconditionally (two clock reads per stage), carried into
+/// spool records and the `--profile` table.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StageTimes {
+    pub lower_us: u64,
+    pub solve_us: u64,
+    pub estimate_us: u64,
+    /// 0 for estimate-only jobs.
+    pub simulate_us: u64,
+    /// Whole-job wall time; ≥ the stage sum (the slack is inter-stage
+    /// glue, asserted small by `stage_times_sum_to_job_wall_time`).
+    pub total_us: u64,
+}
+
+impl StageTimes {
+    /// Sum of the four per-stage times.
+    pub fn staged_sum(&self) -> u64 {
+        self.lower_us + self.solve_us + self.estimate_us + self.simulate_us
+    }
+}
+
 /// Everything a job produces.
 pub struct JobResult {
     pub job: CompileJob,
@@ -57,6 +79,8 @@ pub struct JobResult {
     pub macs: u64,
     /// Number of grid cells the design was tiled into (1 = untiled).
     pub tiles: usize,
+    /// Per-stage wall times for this run.
+    pub stages: StageTimes,
     pub error: Option<String>,
 }
 
@@ -158,14 +182,39 @@ impl CompileJob {
         }
     }
 
-    /// Execute all stages (called from worker threads).
+    /// Execute all stages (called from worker threads). Each stage is
+    /// wall-clocked into [`StageTimes`] and wrapped in a `stage` span;
+    /// the whole job gets a `job` span labelled with [`Self::id`].
     pub fn run_with(&self, cache: Option<&Arc<DesignCache>>) -> Result<JobResult> {
-        let g = self.lower()?;
-        let solved = self.solve(&g, cache)?;
-        let (util, est_cycles) = self.estimate(&solved);
+        let _job_span = crate::obs::span_with("job", || self.id());
+        let job_start = std::time::Instant::now();
+        let mut stages = StageTimes::default();
+
+        let g = {
+            let _sp = crate::obs::span("stage", "lower");
+            let t = std::time::Instant::now();
+            let g = self.lower();
+            stages.lower_us = t.elapsed().as_micros() as u64;
+            g?
+        };
+        let solved = {
+            let _sp = crate::obs::span("stage", "solve");
+            let t = std::time::Instant::now();
+            let s = self.solve(&g, cache);
+            stages.solve_us = t.elapsed().as_micros() as u64;
+            s?
+        };
+        let (util, est_cycles) = {
+            let _sp = crate::obs::span("stage", "estimate");
+            let t = std::time::Instant::now();
+            let e = self.estimate(&solved);
+            stages.estimate_us = t.elapsed().as_micros() as u64;
+            e
+        };
         let macs = g.total_macs();
         let tiles = solved.tiles();
         if self.estimate_only {
+            stages.total_us = job_start.elapsed().as_micros() as u64;
             return Ok(JobResult {
                 job: self.clone(),
                 util,
@@ -173,11 +222,19 @@ impl CompileJob {
                 cycles: est_cycles,
                 macs,
                 tiles,
+                stages,
                 error: None,
             });
         }
-        let (sim, cycles, error) = self.simulate(&g, &solved)?;
-        Ok(JobResult { job: self.clone(), util, sim, cycles, macs, tiles, error })
+        let (sim, cycles, error) = {
+            let _sp = crate::obs::span("stage", "simulate");
+            let t = std::time::Instant::now();
+            let s = self.simulate(&g, &solved);
+            stages.simulate_us = t.elapsed().as_micros() as u64;
+            s?
+        };
+        stages.total_us = job_start.elapsed().as_micros() as u64;
+        Ok(JobResult { job: self.clone(), util, sim, cycles, macs, tiles, stages, error })
     }
 
     /// Execute the job without a design cache.
@@ -294,6 +351,38 @@ mod tests {
         let g = job.lower().unwrap();
         assert_eq!(sim.output.len(), g.outputs()[0].ty.numel());
         assert!(r.error.is_none());
+    }
+
+    #[test]
+    fn stage_times_sum_to_job_wall_time() {
+        // Profile-consistency: the four stage clocks tile the job's
+        // wall clock — their sum never exceeds the total, and the
+        // inter-stage glue (clone + field moves) is bounded generously.
+        let job = CompileJob {
+            kernel: "conv_relu".into(),
+            size: 32,
+            framework: FrameworkKind::Ming,
+            device: DeviceSpec::kv260(),
+            estimate_only: false,
+        };
+        let r = job.run().unwrap();
+        let st = r.stages;
+        assert!(st.total_us > 0, "job wall time must be measured");
+        assert!(st.simulate_us > 0, "non-estimate-only job simulates");
+        assert!(
+            st.staged_sum() <= st.total_us,
+            "stage sum {} exceeds total {}",
+            st.staged_sum(),
+            st.total_us
+        );
+        let glue = st.total_us - st.staged_sum();
+        assert!(glue < 250_000, "inter-stage glue suspiciously large: {glue}us");
+
+        // estimate-only jobs report zero simulate time
+        let eo = CompileJob { estimate_only: true, ..job };
+        let r = eo.run().unwrap();
+        assert_eq!(r.stages.simulate_us, 0);
+        assert!(r.stages.staged_sum() <= r.stages.total_us);
     }
 
     #[test]

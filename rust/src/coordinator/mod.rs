@@ -18,6 +18,6 @@ pub mod service;
 pub mod spool;
 
 pub use cache::{CacheStats, CachedDesign, DesignCache};
-pub use job::{CompileJob, JobResult};
+pub use job::{CompileJob, JobResult, StageTimes};
 pub use queue::WorkerPool;
 pub use service::{CompileService, Shard, SweepConfig};

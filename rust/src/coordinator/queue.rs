@@ -2,9 +2,11 @@
 //! not vendored in this environment; the compile service's workload is
 //! CPU-bound, so OS threads are the right tool anyway).
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::Mutex;
 use std::thread;
+use std::time::Instant;
 
 /// Fixed-size worker pool executing `FnOnce` jobs; results come back in
 /// completion order through an mpsc channel.
@@ -76,17 +78,28 @@ impl WorkerPool {
             Mutex::new(jobs.into_iter().enumerate().rev().collect());
         let (tx, rx) = mpsc::channel::<(usize, Result<R, String>)>();
         let mut results: Vec<(usize, Result<R, String>)> = Vec::with_capacity(njobs);
+        // Busy-vs-idle attribution: each worker clocks the time it
+        // spends inside jobs; idle is the remainder of workers × wall.
+        let busy_us = AtomicU64::new(0);
+        let n_workers = self.workers.min(njobs.max(1));
+        let wall = Instant::now();
         thread::scope(|s| {
-            for _ in 0..self.workers.min(njobs.max(1)) {
+            for widx in 0..n_workers {
                 let tx = tx.clone();
                 let queue = &queue;
-                s.spawn(move || loop {
-                    let next = queue.lock().unwrap().pop();
-                    let Some((idx, job)) = next else { break };
-                    let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job))
-                        .map_err(|e| panic_msg(&*e));
-                    if tx.send((idx, out)).is_err() {
-                        break;
+                let busy_us = &busy_us;
+                s.spawn(move || {
+                    crate::obs::trace::global().set_thread_label(&format!("worker-{widx}"));
+                    loop {
+                        let next = queue.lock().unwrap().pop();
+                        let Some((idx, job)) = next else { break };
+                        let t = Instant::now();
+                        let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job))
+                            .map_err(|e| panic_msg(&*e));
+                        busy_us.fetch_add(t.elapsed().as_micros() as u64, Ordering::Relaxed);
+                        if tx.send((idx, out)).is_err() {
+                            break;
+                        }
                     }
                 });
             }
@@ -96,6 +109,11 @@ impl WorkerPool {
                 results.push((idx, out));
             }
         });
+        let wall_us = wall.elapsed().as_micros() as u64;
+        let busy = busy_us.load(Ordering::Relaxed);
+        let m = crate::obs::metrics::global();
+        m.add("pool.busy_us", busy);
+        m.add("pool.idle_us", (n_workers as u64 * wall_us).saturating_sub(busy));
         results.sort_by_key(|(i, _)| *i);
         results
     }
@@ -167,6 +185,25 @@ mod tests {
         let results = pool.run_all_scoped(jobs, |_, _| {});
         let total: usize = results.iter().map(|(_, r)| *r.as_ref().unwrap()).sum();
         assert_eq!(total, 64 * 63 / 2);
+    }
+
+    #[test]
+    fn pool_flushes_busy_and_idle_time() {
+        // Deltas are >= because other tests share the global registry.
+        let m = crate::obs::metrics::global();
+        let busy0 = m.get("pool.busy_us");
+        let pool = WorkerPool::new(2);
+        let jobs: Vec<Box<dyn FnOnce() -> usize + Send>> = (0..4)
+            .map(|i| {
+                Box::new(move || {
+                    std::thread::sleep(std::time::Duration::from_millis(5));
+                    i
+                }) as _
+            })
+            .collect();
+        pool.run_all(jobs);
+        // 4 jobs × 5ms of in-job time, minus timer slack
+        assert!(m.get("pool.busy_us") - busy0 >= 15_000);
     }
 
     #[test]

@@ -6,7 +6,7 @@ use std::collections::HashMap;
 use crate::baselines::framework::FrameworkKind;
 use crate::util::tables::{fnum, TextTable};
 
-use super::job::JobResult;
+use super::job::{JobResult, StageTimes};
 
 /// One Table-II cell, reduced from a `JobResult`.
 #[derive(Debug, Clone)]
@@ -27,6 +27,10 @@ pub struct Cell {
     pub fits: bool,
     /// Grid cells the design was tiled into (1 = untiled).
     pub tiles: usize,
+    /// Per-stage compile wall times (spooled for profiling; never
+    /// rendered in the paper tables — those must stay byte-stable
+    /// across sharded/unsharded runs).
+    pub stages: StageTimes,
     pub error: Option<String>,
 }
 
@@ -45,6 +49,7 @@ pub fn cell(r: &JobResult) -> Cell {
         ff_pct: r.util.ff_pct(),
         fits: r.util.fits(),
         tiles: r.tiles,
+        stages: r.stages,
         error: r.error.clone(),
     }
 }
@@ -191,6 +196,7 @@ mod tests {
             ff_pct: 1.0,
             fits: true,
             tiles: 1,
+            stages: StageTimes::default(),
             error: None,
         }
     }

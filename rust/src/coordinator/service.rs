@@ -192,6 +192,9 @@ impl CompileService {
         done: &BTreeSet<usize>,
         mut on_done: impl FnMut(usize, &Result<JobResult, String>),
     ) -> Vec<(usize, Result<JobResult, String>)> {
+        // Trace envelope for the whole shard; per-job spans open inside
+        // `run_with` on the worker threads.
+        let _sp = crate::obs::span_with("sweep", || format!("shard {shard}"));
         let mine: Vec<(usize, CompileJob)> = Self::jobs(cfg)
             .into_iter()
             .enumerate()

@@ -29,7 +29,7 @@ use anyhow::{bail, ensure, Context, Result};
 use crate::baselines::framework::FrameworkKind;
 use crate::ir::json::{parse, Json};
 
-use super::job::JobResult;
+use super::job::{JobResult, StageTimes};
 use super::report::{self, Cell};
 use super::service::Shard;
 
@@ -80,6 +80,14 @@ fn cell_to_json(c: &Cell) -> Json {
     m.insert("ff_pct".into(), Json::Num(c.ff_pct));
     m.insert("fits".into(), Json::Bool(c.fits));
     m.insert("tiles".into(), num(c.tiles as u64));
+    // per-stage compile wall times (µs values fit f64 exactly)
+    let mut st = BTreeMap::new();
+    st.insert("lower_us".into(), num(c.stages.lower_us));
+    st.insert("solve_us".into(), num(c.stages.solve_us));
+    st.insert("estimate_us".into(), num(c.stages.estimate_us));
+    st.insert("simulate_us".into(), num(c.stages.simulate_us));
+    st.insert("total_us".into(), num(c.stages.total_us));
+    m.insert("stages".into(), Json::Obj(st));
     m.insert(
         "error".into(),
         match &c.error {
@@ -117,6 +125,21 @@ fn cell_from_json(v: &Json) -> Result<Cell> {
             other => bail!("field \"fits\" must be a bool, got {other:?}"),
         },
         tiles: v.get("tiles")?.as_usize()?,
+        // absent in pre-timing spool lines → zeroed (still version 1;
+        // profiling fields are additive, never load-bearing for tables)
+        stages: match v.as_obj()?.get("stages") {
+            Some(s) => {
+                let u = |key: &str| -> Result<u64> { Ok(s.get(key)?.as_usize()? as u64) };
+                StageTimes {
+                    lower_us: u("lower_us")?,
+                    solve_us: u("solve_us")?,
+                    estimate_us: u("estimate_us")?,
+                    simulate_us: u("simulate_us")?,
+                    total_us: u("total_us")?,
+                }
+            }
+            None => StageTimes::default(),
+        },
         error: match v.get("error")? {
             Json::Null => None,
             Json::Str(s) => Some(s.clone()),
@@ -317,11 +340,32 @@ mod tests {
         assert_eq!(cell.framework, orig.framework);
         assert_eq!(cell.fits, orig.fits);
         assert_eq!(cell.error, orig.error);
+        // per-stage timings round-trip and were actually measured
+        assert_eq!(cell.stages, orig.stages);
+        assert!(orig.stages.total_us > 0);
+        assert!(orig.stages.staged_sum() <= orig.stages.total_us);
         // and the rendered table rows are byte-identical
         assert_eq!(
             report::render_table2(&[cell]),
             report::render_table2(&[orig])
         );
+    }
+
+    #[test]
+    fn pre_timing_spool_lines_still_parse() {
+        // Lines written before the stage-timing fields existed have no
+        // "stages" object — they parse with zeroed timings, so a resume
+        // over an old spool keeps working.
+        let r = sample_result();
+        let line = record_line(SWEEP, "table2", 0, 1, "linear_0@ming", &r);
+        let mut doc = parse(&line).unwrap();
+        if let Json::Obj(m) = &mut doc {
+            if let Some(Json::Obj(cm)) = m.get_mut("cell") {
+                cm.remove("stages");
+            }
+        }
+        let rec = parse_line(&doc.render()).unwrap();
+        assert_eq!(rec.outcome.unwrap().stages, StageTimes::default());
     }
 
     #[test]

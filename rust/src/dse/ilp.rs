@@ -82,6 +82,7 @@ pub struct DseSolution {
 /// Fails if no assignment satisfies the device constraints (the paper's
 /// "infeasible design" case — e.g. StreamHLS's Feed-Forward on KV260).
 pub fn solve(design: &mut Design, cfg: &DseConfig) -> Result<DseSolution> {
+    let _sp = crate::obs::span_with("ilp_solve", || design.graph.name.clone());
     // One resource model per design, shared across all nodes' candidate
     // enumeration. Candidate-independent BRAM — FIFOs hanging off the
     // graph input (including diamond skip channels) — is charged once up
@@ -137,6 +138,10 @@ pub fn solve(design: &mut Design, cfg: &DseConfig) -> Result<DseSolution> {
         best_pick: Vec<usize>,
         pick: Vec<usize>,
         explored: u64,
+        /// Subtrees cut by the cycle lower bound (whole sorted tail) or
+        /// a resource lower bound (single candidate) — the
+        /// branch-and-bound effectiveness metric (`dse.pruned`).
+        pruned: u64,
     }
 
     impl Search<'_> {
@@ -153,6 +158,7 @@ pub fn solve(design: &mut Design, cfg: &DseConfig) -> Result<DseSolution> {
                 let cy = cycles + c.cycles;
                 // candidates are cycle-sorted: once even the LB fails, stop
                 if cy + self.min_cycles[i + 1] >= self.best {
+                    self.pruned += (self.cand[i].len() - k) as u64;
                     break;
                 }
                 let ds = dsp + c.res.dsp;
@@ -160,6 +166,7 @@ pub fn solve(design: &mut Design, cfg: &DseConfig) -> Result<DseSolution> {
                 if ds + self.min_dsp[i + 1] > self.d_total
                     || br + self.min_bram[i + 1] > self.b_total
                 {
+                    self.pruned += 1;
                     continue;
                 }
                 self.pick.push(k);
@@ -180,8 +187,13 @@ pub fn solve(design: &mut Design, cfg: &DseConfig) -> Result<DseSolution> {
         best_pick: Vec::new(),
         pick: Vec::new(),
         explored: 0,
+        pruned: 0,
     };
     s.dfs(0, 0, 0, base_fifo);
+    let metrics = crate::obs::metrics::global();
+    metrics.incr("dse.solves");
+    metrics.add("dse.nodes_explored", s.explored);
+    metrics.add("dse.pruned", s.pruned);
     ensure!(s.best < u64::MAX, "DSE found no feasible assignment");
 
     let chosen: Vec<Candidate> =

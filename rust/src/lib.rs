@@ -47,12 +47,17 @@
 //!   reuse (`coordinator::cache`, keyed by `ir::fingerprint`), deterministic
 //!   round-robin sharding across processes with mergeable/resumable JSONL
 //!   spools (`coordinator::spool`), and the paper-table formatters.
+//! * **`obs`** — pipeline-wide observability: nested span tracing with
+//!   Chrome trace-event export (`--trace-out`, Perfetto-loadable), a
+//!   unified registry of named atomic counters/gauges, and the
+//!   `--profile` phase-time/counter table.
 //!
 //! See `DESIGN.md` for the substitution map (what the paper ran on Vitis +
 //! a Kria KV260 board vs. what this repo builds) and `EXPERIMENTS.md` for
 //! paper-vs-measured numbers.
 
 pub mod util;
+pub mod obs;
 pub mod ir;
 pub mod analysis;
 pub mod dataflow;

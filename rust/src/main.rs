@@ -30,7 +30,7 @@ use ming::coordinator::cache::DesignCache;
 use ming::coordinator::report::{self, Cell};
 use ming::coordinator::service::{CompileService, Shard, SweepConfig};
 use ming::coordinator::spool;
-use ming::coordinator::WorkerPool;
+use ming::coordinator::{StageTimes, WorkerPool};
 use ming::dse::ilp::{solve_with_tiling_fallback, Compiled, DseConfig};
 use ming::dataflow::build::build_streaming_design;
 use ming::dataflow::design::Design;
@@ -39,7 +39,7 @@ use ming::ir::json::import_model;
 use ming::resources::device::DeviceSpec;
 use ming::resources::estimate;
 use ming::runtime::golden::GoldenModel;
-use ming::sim::{simulate, SimMode};
+use ming::sim::{simulate, SimContext, SimMode};
 use ming::sim::trace::render_traces;
 use ming::tiling::{simulate_tiled, simulate_tiled_parallel, TiledCompilation};
 use ming::util::prng;
@@ -108,13 +108,17 @@ impl Args {
         Ok(Some(cache))
     }
 
-    /// DSE config for one-shot commands: device + optional cache.
-    fn dse_config(&self, dev: &DeviceSpec) -> Result<DseConfig> {
+    /// DSE config for one-shot commands: device + optional cache. Also
+    /// hands the cache back so the command can print its stats summary
+    /// when it finishes (the one-shot commands used to drop the `Arc`
+    /// into the config and stay silent about hits/misses).
+    fn dse_config(&self, dev: &DeviceSpec) -> Result<(DseConfig, Option<Arc<DesignCache>>)> {
+        let cache = self.design_cache()?;
         let mut cfg = DseConfig::new(dev.clone());
-        if let Some(cache) = self.design_cache()? {
-            cfg = cfg.with_cache(cache);
+        if let Some(c) = &cache {
+            cfg = cfg.with_cache(Arc::clone(c));
         }
-        Ok(cfg)
+        Ok((cfg, cache))
     }
 
     /// Sweep shard (defaults to the full sweep).
@@ -195,6 +199,14 @@ impl Args {
 /// implement.
 const SWEEP_ONLY_FLAGS: &[&str] = &["workers", "shard", "spool", "estimate-only"];
 
+/// Cache-stats summary for every cache-enabled command (sweeps already
+/// print it in `run_sweep_cmd`; the one-shot commands go through here).
+fn print_cache_summary(cache: &Option<Arc<DesignCache>>) {
+    if let Some(c) = cache {
+        eprintln!("{}", c.summary());
+    }
+}
+
 fn det_input(g: &ming::ir::graph::ModelGraph) -> Vec<i32> {
     prng::det_tensor(prng::SEED_INPUT, g.inputs()[0].ty.numel())
         .iter()
@@ -263,9 +275,10 @@ fn cmd_compile(a: &Args) -> Result<()> {
     let dev = a.device()?;
     let fw = a.framework()?;
     let g = models::paper_kernel(&kernel, size)?;
+    let (cfg, cache) = a.dse_config(&dev)?;
     // MING gets the tile-grid feasibility fallback; baselines do not.
     let d = if fw == FrameworkKind::Ming {
-        match solve_with_tiling_fallback(&g, &a.dse_config(&dev)?)? {
+        match solve_with_tiling_fallback(&g, &cfg)? {
             Compiled::Flat(d, _) => *d,
             Compiled::Tiled(tc) => {
                 println!(
@@ -273,7 +286,9 @@ fn cmd_compile(a: &Args) -> Result<()> {
                     fw.name(),
                     dev.name
                 );
-                return report_tiled_compile(a, &tc, &dev);
+                let r = report_tiled_compile(a, &tc, &dev);
+                print_cache_summary(&cache);
+                return r;
             }
         }
     } else {
@@ -293,6 +308,7 @@ fn cmd_compile(a: &Args) -> Result<()> {
         std::fs::write(path, emit_testbench(&d, &x, Some(&rep.output)))?;
         println!("wrote testbench to {path}");
     }
+    print_cache_summary(&cache);
     Ok(())
 }
 
@@ -322,8 +338,9 @@ fn cmd_simulate(a: &Args) -> Result<()> {
     // path too (the pool itself is only used by tiled designs)
     let pool = a.worker_pool()?;
     let g = models::paper_kernel(&kernel, size)?;
+    let (cfg, cache) = a.dse_config(&dev)?;
     let d = if fw == FrameworkKind::Ming {
-        match solve_with_tiling_fallback(&g, &a.dse_config(&dev)?)? {
+        match solve_with_tiling_fallback(&g, &cfg)? {
             Compiled::Flat(d, _) => *d,
             Compiled::Tiled(tc) => {
                 println!("untiled DSE infeasible — simulating the grid-tiled design");
@@ -346,14 +363,24 @@ fn cmd_simulate(a: &Args) -> Result<()> {
                     rep.tile_cycles.len(),
                     g.total_macs() as f64 / rep.cycles.max(1) as f64
                 );
-                return golden_check(&kernel, size, &x, &rep.output);
+                let r = golden_check(&kernel, size, &x, &rep.output);
+                print_cache_summary(&cache);
+                return r;
             }
         }
     } else {
         compile_with(fw, &g, &dev)?
     };
     let x = det_input(&g);
-    let rep = simulate(&d, &x, SimMode::of(d.style))?;
+    // under --profile, run with per-FIFO back-pressure accounting so the
+    // sim section below can attribute stalls to channels
+    let rep = if ming::obs::trace::global().is_profiling() {
+        let mut ctx = SimContext::new(&d, SimMode::of(d.style))?;
+        ctx.enable_profile();
+        ctx.run(&x)?
+    } else {
+        simulate(&d, &x, SimMode::of(d.style))?
+    };
     if let Some(blocked) = &rep.deadlock {
         println!("DEADLOCK:\n  {}", blocked.join("\n  "));
         return Ok(());
@@ -365,8 +392,13 @@ fn cmd_simulate(a: &Args) -> Result<()> {
         rep.macs_per_cycle(d.total_macs())
     );
     println!("{}", render_traces(&rep.traces));
+    if let Some(fp) = &rep.fifo_profile {
+        println!("back-pressure profile:\n{}", fp.render());
+    }
     // golden verification when artifacts are available
-    golden_check(&kernel, size, &x, &rep.output)
+    let r = golden_check(&kernel, size, &x, &rep.output);
+    print_cache_summary(&cache);
+    r
 }
 
 /// Shared sweep driver: run `cfg` (one shard of it) on `svc`, spooling
@@ -607,6 +639,7 @@ fn cmd_table4(a: &Args) -> Result<()> {
                 ff_pct: r.ff_pct(),
                 fits: r.fits(),
                 tiles: 1,
+                stages: StageTimes::default(),
                 error: None,
             },
             base_mc,
@@ -669,7 +702,8 @@ fn cmd_import(a: &Args) -> Result<()> {
         println!("tiling hint: {hint:?}");
     }
     let dev = a.device()?;
-    match solve_with_tiling_fallback(&g, &a.dse_config(&dev)?)? {
+    let (cfg, cache) = a.dse_config(&dev)?;
+    match solve_with_tiling_fallback(&g, &cfg)? {
         Compiled::Flat(d, _) => {
             let r = estimate(&d, &dev);
             println!("resources: {r}");
@@ -688,6 +722,7 @@ fn cmd_import(a: &Args) -> Result<()> {
             }
         }
     }
+    print_cache_summary(&cache);
     Ok(())
 }
 
@@ -719,6 +754,13 @@ fn help() {
          \x20 --shard i/n         run the i-th of n deterministic sweep slices\n\
          \x20 --spool DIR         append JSONL results for merge-sweep / resume\n\
          \x20                     (already-spooled jobs are skipped on re-run)\n\n\
+         OBSERVABILITY (every command)\n\
+         \x20 --trace-out F.json  write a Chrome-trace-format span timeline of the\n\
+         \x20                     run (load in Perfetto / chrome://tracing; sweep\n\
+         \x20                     workers render as per-thread lanes)\n\
+         \x20 --profile           print a phase-time + counter table at exit;\n\
+         \x20                     `simulate` additionally attributes per-FIFO\n\
+         \x20                     back-pressure (occupancy histograms, stalls)\n\n\
          kernels: conv_relu cascade residual linear feedforward vgg3 conv_pool\n\
          frameworks: vanilla scalehls streamhls ming\n\
          devices: kv260 zcu104 u250  (+ --dsp-limit N, --bram-limit N, --max-bram-frac F)\n\
@@ -735,6 +777,24 @@ fn main() -> ExitCode {
             return ExitCode::FAILURE;
         }
     };
+    // Observability flags are global: arm the sink before dispatch so
+    // every subsystem's spans/counters land in one place, and emit the
+    // trace/profile after — even for failing runs (where they help most).
+    let profile = match args.get_bool("profile") {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let trace_out = args.flags.get("trace-out").cloned();
+    let sink = ming::obs::trace::global();
+    if trace_out.is_some() {
+        sink.set_tracing(true);
+        sink.set_thread_label("coordinator");
+    }
+    sink.set_profiling(profile);
+    let before = profile.then(|| ming::obs::metrics::global().snapshot());
     let r = match args.cmd.as_str() {
         "compile" => cmd_compile(&args),
         "simulate" => cmd_simulate(&args),
@@ -755,6 +815,19 @@ fn main() -> ExitCode {
             return ExitCode::FAILURE;
         }
     };
+    if let Some(before) = before {
+        let delta = ming::obs::metrics::global().snapshot().delta(&before);
+        if !delta.is_empty() {
+            println!("profile:");
+        }
+        print!("{}", ming::obs::render_profile(&delta));
+    }
+    if let Some(path) = &trace_out {
+        match sink.write_chrome_trace(std::path::Path::new(path)) {
+            Ok(()) => eprintln!("wrote {} trace event(s) to {path}", sink.event_count()),
+            Err(e) => eprintln!("error: writing trace to {path}: {e}"),
+        }
+    }
     match r {
         Ok(()) => ExitCode::SUCCESS,
         Err(e) => {

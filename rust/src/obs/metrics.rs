@@ -1,0 +1,205 @@
+//! Unified metrics registry: named atomic counters and max-gauges.
+//!
+//! One global registry absorbs the pipeline's previously scattered stats
+//! (cache hits/misses, ILP nodes explored/pruned, grid candidates
+//! tried/rejected, sim firings/token-ops/arena high-water, worker-pool
+//! busy/idle time). Hot loops keep their local counters and flush totals
+//! here at run boundaries — the registry itself is only touched at coarse
+//! points, so a `Mutex<BTreeMap>` name lookup per update is cheap. Sites
+//! that update more often can grab a [`Metric`] handle once and bump the
+//! shared atomic directly.
+//!
+//! Naming convention: `subsystem.stat` (`cache.hits`, `dse.pruned`,
+//! `sim.firings`, `pool.busy_us`); span-derived phase times land under
+//! `time.*` in microseconds (see [`crate::obs::trace`]).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// A registry of named `u64` metrics. Counters accumulate with [`add`];
+/// high-water gauges accumulate with [`gauge_max`].
+///
+/// [`add`]: Registry::add
+/// [`gauge_max`]: Registry::gauge_max
+#[derive(Default)]
+pub struct Registry {
+    metrics: Mutex<BTreeMap<String, Arc<AtomicU64>>>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn cell(&self, name: &str) -> Arc<AtomicU64> {
+        let mut m = self.metrics.lock().unwrap();
+        if let Some(c) = m.get(name) {
+            return Arc::clone(c);
+        }
+        let c = Arc::new(AtomicU64::new(0));
+        m.insert(name.to_string(), Arc::clone(&c));
+        c
+    }
+
+    /// A shared handle for hot call sites: one name lookup, then direct
+    /// atomic updates.
+    pub fn handle(&self, name: &str) -> Metric {
+        Metric(self.cell(name))
+    }
+
+    /// Add `v` to the named counter (creating it at zero first).
+    pub fn add(&self, name: &str, v: u64) {
+        self.cell(name).fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Increment the named counter by one.
+    pub fn incr(&self, name: &str) {
+        self.add(name, 1);
+    }
+
+    /// Subtract `v` from the named counter — only for callers undoing
+    /// their own earlier `add` (e.g. demoting a cache hit to a miss).
+    pub fn sub(&self, name: &str, v: u64) {
+        self.cell(name).fetch_sub(v, Ordering::Relaxed);
+    }
+
+    /// Raise the named gauge to `v` if `v` is larger (high-water mark).
+    pub fn gauge_max(&self, name: &str, v: u64) {
+        self.cell(name).fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// Current value of a metric (0 if never touched).
+    pub fn get(&self, name: &str) -> u64 {
+        let m = self.metrics.lock().unwrap();
+        m.get(name).map(|c| c.load(Ordering::Relaxed)).unwrap_or(0)
+    }
+
+    /// A point-in-time copy of every metric, name-ordered.
+    pub fn snapshot(&self) -> Snapshot {
+        let m = self.metrics.lock().unwrap();
+        Snapshot {
+            values: m.iter().map(|(k, v)| (k.clone(), v.load(Ordering::Relaxed))).collect(),
+        }
+    }
+}
+
+/// A shared counter/gauge handle (see [`Registry::handle`]).
+#[derive(Clone)]
+pub struct Metric(Arc<AtomicU64>);
+
+impl Metric {
+    pub fn add(&self, v: u64) {
+        self.0.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn incr(&self) {
+        self.add(1);
+    }
+
+    pub fn max(&self, v: u64) {
+        self.0.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// An immutable, ordered view of registry values; subtracting two
+/// snapshots attributes activity to the work between them.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Snapshot {
+    values: BTreeMap<String, u64>,
+}
+
+impl Snapshot {
+    pub fn get(&self, name: &str) -> u64 {
+        self.values.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&str, u64)> {
+        self.values.iter().map(|(k, v)| (k.as_str(), *v))
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+
+    /// Per-name saturating difference `self - earlier`, dropping zeros.
+    /// (Saturating: gauges snapshotted mid-update never underflow.)
+    pub fn delta(&self, earlier: &Snapshot) -> Snapshot {
+        let values = self
+            .values
+            .iter()
+            .map(|(k, v)| (k.clone(), v.saturating_sub(earlier.get(k))))
+            .filter(|(_, d)| *d > 0)
+            .collect();
+        Snapshot { values }
+    }
+}
+
+/// The process-wide registry every pipeline layer reports into.
+pub fn global() -> &'static Registry {
+    static GLOBAL: OnceLock<Registry> = OnceLock::new();
+    GLOBAL.get_or_init(Registry::default)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges_accumulate() {
+        let r = Registry::new();
+        r.incr("a.hits");
+        r.add("a.hits", 4);
+        r.gauge_max("a.hw", 10);
+        r.gauge_max("a.hw", 3);
+        assert_eq!(r.get("a.hits"), 5);
+        assert_eq!(r.get("a.hw"), 10);
+        assert_eq!(r.get("never.touched"), 0);
+    }
+
+    #[test]
+    fn handles_share_the_same_cell() {
+        let r = Registry::new();
+        let h = r.handle("x");
+        h.add(7);
+        r.incr("x");
+        assert_eq!(h.get(), 8);
+        assert_eq!(r.get("x"), 8);
+    }
+
+    #[test]
+    fn snapshot_delta_drops_zeros_and_orders_names() {
+        let r = Registry::new();
+        r.add("b.two", 2);
+        r.add("a.one", 1);
+        let before = r.snapshot();
+        r.add("b.two", 3);
+        r.add("c.new", 9);
+        let after = r.snapshot();
+        let d = after.delta(&before);
+        let got: Vec<(String, u64)> = d.iter().map(|(k, v)| (k.to_string(), v)).collect();
+        assert_eq!(got, vec![("b.two".to_string(), 3), ("c.new".to_string(), 9)]);
+        assert_eq!(d.get("a.one"), 0);
+    }
+
+    #[test]
+    fn concurrent_updates_are_lossless() {
+        let r = std::sync::Arc::new(Registry::new());
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let r = std::sync::Arc::clone(&r);
+                s.spawn(move || {
+                    let h = r.handle("t.count");
+                    for _ in 0..1000 {
+                        h.incr();
+                    }
+                });
+            }
+        });
+        assert_eq!(r.get("t.count"), 4000);
+    }
+}

@@ -1,0 +1,85 @@
+//! Pipeline-wide observability: span tracing, a unified metrics
+//! registry, and profile rendering — zero external dependencies.
+//!
+//! Three pieces, threaded through every pipeline layer:
+//!
+//! * [`trace`] — nested timed spans (`lower → solve → estimate →
+//!   simulate`, per grid-cell solve, per tiled sim cell) with
+//!   per-thread lanes, exported as Chrome trace-event JSON
+//!   (`--trace-out trace.json`, loadable in Perfetto).
+//! * [`metrics`] — a global registry of named atomic counters/gauges
+//!   unifying the previously scattered stats (cache, ILP, grid search,
+//!   simulator, worker pool).
+//! * [`render_profile`] — the `--profile` phase-time + counter table,
+//!   built from a snapshot delta.
+//!
+//! Everything is off by default and asserted cheap-when-disabled: a
+//! span against a disabled sink is two atomic loads, and hot loops
+//! (per-firing simulator paths) only flush local counters into the
+//! registry at run boundaries.
+
+pub mod metrics;
+pub mod trace;
+
+pub use metrics::{Metric, Registry, Snapshot};
+pub use trace::{SpanGuard, TraceSink};
+
+use crate::util::tables::{fnum, TextTable};
+
+/// Open a span on the global sink (static name; aggregates profile time
+/// under `time.<cat>.<name>`).
+pub fn span(cat: &'static str, name: &'static str) -> SpanGuard<'static> {
+    trace::global().span(cat, name)
+}
+
+/// Open a span on the global sink with a lazily-built name (aggregates
+/// profile time under `time.<cat>`; the closure only runs when tracing
+/// is enabled).
+pub fn span_with<F: FnOnce() -> String>(cat: &'static str, name: F) -> SpanGuard<'static> {
+    trace::global().span_with(cat, name)
+}
+
+/// Render the `--profile` table from a metrics snapshot (usually a
+/// [`Snapshot::delta`] covering one command). Phase times (`time.*`
+/// keys, microseconds) print first as milliseconds; counters follow.
+pub fn render_profile(snap: &Snapshot) -> String {
+    let mut t = TextTable::new(vec!["metric", "value"]);
+    for (name, v) in snap.iter() {
+        if let Some(phase) = name.strip_prefix("time.") {
+            t.row(vec![format!("time {phase}"), format!("{} ms", fnum(v as f64 / 1000.0, 2))]);
+        }
+    }
+    for (name, v) in snap.iter() {
+        if !name.starts_with("time.") {
+            t.row(vec![name.to_string(), v.to_string()]);
+        }
+    }
+    if t.is_empty() {
+        return "profile: no activity recorded\n".to_string();
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn profile_table_orders_times_before_counters() {
+        let r = Registry::new();
+        let before = r.snapshot();
+        r.add("cache.hits", 12);
+        r.add("time.stage.solve", 2500);
+        let d = r.snapshot().delta(&before);
+        let out = render_profile(&d);
+        let time_at = out.find("time stage.solve").unwrap();
+        let ctr_at = out.find("cache.hits").unwrap();
+        assert!(time_at < ctr_at, "phase times render before counters:\n{out}");
+        assert!(out.contains("2.5 ms"), "{out}");
+    }
+
+    #[test]
+    fn empty_profile_has_a_placeholder() {
+        assert!(render_profile(&Snapshot::default()).contains("no activity"));
+    }
+}

@@ -1,0 +1,391 @@
+//! Span tracing with Chrome trace-event export.
+//!
+//! A [`TraceSink`] records nested timed phases as begin/end event pairs
+//! with per-thread lanes; [`TraceSink::write_chrome_trace`] emits the
+//! Chrome trace-event JSON array that `chrome://tracing` and Perfetto
+//! load directly, so a sharded sweep renders as one lane per worker
+//! thread with per-stage spans (`lower → solve → estimate → simulate`)
+//! nested under each job.
+//!
+//! Cost model: a span against a sink with both tracing and profiling
+//! disabled is two relaxed atomic loads — no clock read, no allocation,
+//! no lock (asserted by `disabled_sink_spans_record_nothing`). With
+//! profiling enabled (and tracing off), spans skip event recording and
+//! only accumulate `time.<cat>[.<name>]` microsecond counters into the
+//! global metrics registry — that feeds the `--profile` table without
+//! paying for trace storage.
+
+use std::borrow::Cow;
+use std::collections::HashMap;
+use std::fmt::Write as _;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::thread::ThreadId;
+use std::time::Instant;
+
+use super::metrics;
+
+/// One begin or end trace event. `ts_us` is microseconds since the
+/// sink's origin; `tid` is the sink-assigned lane for the recording
+/// thread (dense, in order of first appearance).
+#[derive(Debug, Clone)]
+struct Event {
+    name: Cow<'static, str>,
+    cat: &'static str,
+    begin: bool,
+    ts_us: u64,
+    tid: u64,
+}
+
+#[derive(Default)]
+struct Inner {
+    events: Vec<Event>,
+    lanes: HashMap<ThreadId, u64>,
+    lane_names: HashMap<u64, String>,
+}
+
+impl Inner {
+    fn lane(&mut self, id: ThreadId) -> u64 {
+        let next = self.lanes.len() as u64;
+        *self.lanes.entry(id).or_insert(next)
+    }
+}
+
+/// Collects span events; instantiable for tests, with one process-wide
+/// instance behind [`global`].
+pub struct TraceSink {
+    tracing: AtomicBool,
+    profiling: AtomicBool,
+    origin: Instant,
+    inner: Mutex<Inner>,
+}
+
+impl Default for TraceSink {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TraceSink {
+    pub fn new() -> Self {
+        TraceSink {
+            tracing: AtomicBool::new(false),
+            profiling: AtomicBool::new(false),
+            origin: Instant::now(),
+            inner: Mutex::new(Inner::default()),
+        }
+    }
+
+    /// Turn event recording on/off (the `--trace-out` switch).
+    pub fn set_tracing(&self, on: bool) {
+        self.tracing.store(on, Ordering::Relaxed);
+    }
+
+    /// Turn phase-time accumulation on/off (the `--profile` switch).
+    pub fn set_profiling(&self, on: bool) {
+        self.profiling.store(on, Ordering::Relaxed);
+    }
+
+    pub fn is_tracing(&self) -> bool {
+        self.tracing.load(Ordering::Relaxed)
+    }
+
+    pub fn is_profiling(&self) -> bool {
+        self.profiling.load(Ordering::Relaxed)
+    }
+
+    /// Name the calling thread's lane in the exported trace (e.g.
+    /// `worker-3`). No-op while tracing is disabled.
+    pub fn set_thread_label(&self, label: &str) {
+        if !self.is_tracing() {
+            return;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        let lane = inner.lane(std::thread::current().id());
+        inner.lane_names.insert(lane, label.to_string());
+    }
+
+    /// Open a span with a static name. Dropping the guard closes it.
+    /// Profile time aggregates under `time.<cat>.<name>`.
+    pub fn span(&self, cat: &'static str, name: &'static str) -> SpanGuard<'_> {
+        self.span_impl(cat, || Cow::Borrowed(name), true)
+    }
+
+    /// Open a span whose name is built lazily — the closure only runs
+    /// (and allocates) when tracing is enabled. Profile time aggregates
+    /// under `time.<cat>` (dynamic names would explode cardinality).
+    pub fn span_with<F>(&self, cat: &'static str, name: F) -> SpanGuard<'_>
+    where
+        F: FnOnce() -> String,
+    {
+        self.span_impl(cat, || Cow::Owned(name()), false)
+    }
+
+    fn span_impl<F>(&self, cat: &'static str, name: F, static_name: bool) -> SpanGuard<'_>
+    where
+        F: FnOnce() -> Cow<'static, str>,
+    {
+        let tracing = self.is_tracing();
+        let profiling = self.is_profiling();
+        if !tracing && !profiling {
+            return SpanGuard { sink: self, state: None };
+        }
+        let name = if tracing || static_name { name() } else { Cow::Borrowed("") };
+        if tracing {
+            self.push(name.clone(), cat, true);
+        }
+        SpanGuard {
+            sink: self,
+            state: Some(SpanState {
+                name,
+                cat,
+                static_name,
+                tracing,
+                profiling,
+                start: Instant::now(),
+            }),
+        }
+    }
+
+    fn push(&self, name: Cow<'static, str>, cat: &'static str, begin: bool) {
+        let mut inner = self.inner.lock().unwrap();
+        // Timestamp under the lock: the recorded order is globally
+        // chronological, and per-lane B/E pairs nest by construction.
+        let ts_us = self.origin.elapsed().as_micros() as u64;
+        let tid = inner.lane(std::thread::current().id());
+        inner.events.push(Event { name, cat, begin, ts_us, tid });
+    }
+
+    /// Number of recorded events (tests; 0 while disabled).
+    pub fn event_count(&self) -> usize {
+        self.inner.lock().unwrap().events.len()
+    }
+
+    /// Render the Chrome trace-event JSON array (metadata events first,
+    /// then B/E pairs in recorded order).
+    pub fn to_chrome_json(&self) -> String {
+        let inner = self.inner.lock().unwrap();
+        let pid = std::process::id();
+        let mut out = String::from("[\n");
+        let mut first = true;
+        let mut emit = |line: String, out: &mut String| {
+            if !first {
+                out.push_str(",\n");
+            }
+            first = false;
+            out.push_str(&line);
+        };
+        emit(
+            format!(
+                "{{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":{pid},\"tid\":0,\
+                 \"args\":{{\"name\":\"ming\"}}}}"
+            ),
+            &mut out,
+        );
+        let mut lanes: Vec<(&u64, &String)> = inner.lane_names.iter().collect();
+        lanes.sort();
+        for (tid, label) in lanes {
+            emit(
+                format!(
+                    "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":{pid},\"tid\":{tid},\
+                     \"args\":{{\"name\":\"{}\"}}}}",
+                    escape(label)
+                ),
+                &mut out,
+            );
+        }
+        for ev in &inner.events {
+            let ph = if ev.begin { 'B' } else { 'E' };
+            emit(
+                format!(
+                    "{{\"name\":\"{}\",\"cat\":\"{}\",\"ph\":\"{ph}\",\"ts\":{},\
+                     \"pid\":{pid},\"tid\":{}}}",
+                    escape(&ev.name),
+                    escape(ev.cat),
+                    ev.ts_us,
+                    ev.tid
+                ),
+                &mut out,
+            );
+        }
+        out.push_str("\n]\n");
+        out
+    }
+
+    /// Write the Chrome trace JSON to `path` (Perfetto-loadable).
+    pub fn write_chrome_trace(&self, path: &Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_chrome_json())
+    }
+}
+
+fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+struct SpanState {
+    name: Cow<'static, str>,
+    cat: &'static str,
+    static_name: bool,
+    tracing: bool,
+    profiling: bool,
+    start: Instant,
+}
+
+/// RAII span: records the end event (and/or accumulates profile time)
+/// when dropped. Inert — no clock, no lock — when the sink was fully
+/// disabled at open time.
+pub struct SpanGuard<'a> {
+    sink: &'a TraceSink,
+    state: Option<SpanState>,
+}
+
+impl Drop for SpanGuard<'_> {
+    fn drop(&mut self) {
+        let Some(st) = self.state.take() else { return };
+        if st.tracing {
+            self.sink.push(st.name.clone(), st.cat, false);
+        }
+        if st.profiling {
+            let us = st.start.elapsed().as_micros() as u64;
+            if st.static_name {
+                metrics::global().add(&format!("time.{}.{}", st.cat, st.name), us);
+            } else {
+                metrics::global().add(&format!("time.{}", st.cat), us);
+            }
+        }
+    }
+}
+
+/// The process-wide sink the CLI arms via `--trace-out` / `--profile`.
+pub fn global() -> &'static TraceSink {
+    static GLOBAL: OnceLock<TraceSink> = OnceLock::new();
+    GLOBAL.get_or_init(TraceSink::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::json::{parse, Json};
+
+    #[test]
+    fn disabled_sink_spans_record_nothing() {
+        let sink = TraceSink::new();
+        for _ in 0..10_000 {
+            let _a = sink.span("stage", "solve");
+            let _b = sink.span_with("job", || unreachable!("lazy name must not run"));
+        }
+        assert_eq!(sink.event_count(), 0);
+    }
+
+    #[test]
+    fn spans_nest_and_pair_per_lane() {
+        let sink = TraceSink::new();
+        sink.set_tracing(true);
+        {
+            let _outer = sink.span("job", "j0");
+            let _inner = sink.span("stage", "solve");
+        }
+        {
+            let _late = sink.span_with("stage", || "estimate".to_string());
+        }
+        let json = sink.to_chrome_json();
+        let doc = parse(&json).expect("trace must be valid JSON");
+        let events = doc.as_arr().unwrap();
+        // Per-lane: timestamps monotonic, B/E matched and well-nested.
+        let mut stacks: HashMap<i64, Vec<String>> = HashMap::new();
+        let mut last_ts: HashMap<i64, i64> = HashMap::new();
+        let mut pairs = 0usize;
+        for ev in events {
+            let ph = ev.get("ph").unwrap().as_str().unwrap();
+            if ph == "M" {
+                continue;
+            }
+            let tid = ev.get("tid").unwrap().as_i64().unwrap();
+            let ts = ev.get("ts").unwrap().as_i64().unwrap();
+            let name = ev.get("name").unwrap().as_str().unwrap().to_string();
+            assert!(ts >= last_ts.get(&tid).copied().unwrap_or(0), "ts regressed");
+            last_ts.insert(tid, ts);
+            let stack = stacks.entry(tid).or_default();
+            match ph {
+                "B" => stack.push(name),
+                "E" => {
+                    assert_eq!(stack.pop().as_deref(), Some(name.as_str()), "unmatched E");
+                    pairs += 1;
+                }
+                other => panic!("unexpected ph {other}"),
+            }
+        }
+        assert!(stacks.values().all(Vec::is_empty), "unclosed spans");
+        assert_eq!(pairs, 3);
+    }
+
+    #[test]
+    fn thread_labels_become_metadata_events() {
+        let sink = TraceSink::new();
+        sink.set_tracing(true);
+        sink.set_thread_label("worker-0");
+        let _s = sink.span("stage", "lower");
+        drop(_s);
+        let doc = parse(&sink.to_chrome_json()).unwrap();
+        let has_label = doc.as_arr().unwrap().iter().any(|ev| {
+            ev.get("name").map(|n| n == &Json::Str("thread_name".into())).unwrap_or(false)
+                && ev
+                    .get("args")
+                    .and_then(|a| a.get("name"))
+                    .map(|n| n == &Json::Str("worker-0".into()))
+                    .unwrap_or(false)
+        });
+        assert!(has_label, "thread_name metadata missing");
+    }
+
+    #[test]
+    fn profiling_without_tracing_accumulates_time_only() {
+        let sink = TraceSink::new();
+        sink.set_profiling(true);
+        let before = metrics::global().get("time.teststage.lower");
+        {
+            let _s = sink.span("teststage", "lower");
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        assert_eq!(sink.event_count(), 0, "profiling alone must not record events");
+        // >= : other tests may run concurrently against the global registry.
+        assert!(metrics::global().get("time.teststage.lower") >= before + 1000);
+    }
+
+    #[test]
+    fn multithreaded_spans_get_distinct_lanes() {
+        let sink = TraceSink::new();
+        sink.set_tracing(true);
+        std::thread::scope(|s| {
+            for _ in 0..2 {
+                s.spawn(|| {
+                    let _sp = sink.span("stage", "simulate");
+                });
+            }
+        });
+        let doc = parse(&sink.to_chrome_json()).unwrap();
+        let tids: std::collections::BTreeSet<i64> = doc
+            .as_arr()
+            .unwrap()
+            .iter()
+            .filter(|ev| ev.get("ph").unwrap().as_str().unwrap() != "M")
+            .map(|ev| ev.get("tid").unwrap().as_i64().unwrap())
+            .collect();
+        assert_eq!(tids.len(), 2, "each thread gets its own lane");
+    }
+}

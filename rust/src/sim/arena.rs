@@ -62,6 +62,12 @@ impl TokenArena {
         self.slots.iter().filter(|s| s.refs > 0).count()
     }
 
+    /// Payload-store high-water mark (i32 values) since the last reset —
+    /// the arena footprint metric surfaced by `sim.arena_high_water`.
+    pub fn high_water(&self) -> usize {
+        self.data.len()
+    }
+
     /// Allocate a token of `len` values with refcount 1. The payload is
     /// **uninitialized** (possibly a recycled slot's old values): the
     /// caller must fully overwrite it via [`Self::slice_mut`].

@@ -43,6 +43,105 @@ impl SimMode {
     }
 }
 
+/// Back-pressure profile of one channel: how deep the FIFO ran and how
+/// many cycles it bounded its neighbours.
+#[derive(Debug, Clone, Default)]
+pub struct ChannelProfile {
+    pub name: String,
+    /// Configured capacity in tokens (`usize::MAX` = unbounded).
+    pub capacity: usize,
+    pub max_occupancy: usize,
+    pub pushed: u64,
+    /// Log2 occupancy histogram (see [`crate::sim::fifo::occupancy_bucket`]);
+    /// empty if no push happened.
+    pub hist: Vec<u64>,
+    /// Cycles the consumer stalled waiting for this channel's tokens.
+    pub stall_wait: u64,
+    /// Cycles the producer stalled because this channel was full.
+    pub stall_full: u64,
+}
+
+/// Per-FIFO back-pressure profile for one run ([`SimReport::fifo_profile`];
+/// populated only when [`SimContext::enable_profile`] was called).
+#[derive(Debug, Clone, Default)]
+pub struct FifoProfile {
+    pub channels: Vec<ChannelProfile>,
+}
+
+impl FifoProfile {
+    /// The channel that bounds throughput: most producer-blocking cycles,
+    /// falling back to most consumer-wait cycles.
+    pub fn bounding_channel(&self) -> Option<&ChannelProfile> {
+        let by_full = self.channels.iter().max_by_key(|c| c.stall_full);
+        match by_full {
+            Some(c) if c.stall_full > 0 => Some(c),
+            _ => self.channels.iter().filter(|c| c.stall_wait > 0).max_by_key(|c| c.stall_wait),
+        }
+    }
+
+    /// Merge another run's profile into this one (tiled cells accumulate
+    /// into a whole-design profile; channel sets must match).
+    pub fn merge(&mut self, other: &FifoProfile) {
+        if self.channels.is_empty() {
+            self.channels = other.channels.clone();
+            return;
+        }
+        for (a, b) in self.channels.iter_mut().zip(&other.channels) {
+            a.max_occupancy = a.max_occupancy.max(b.max_occupancy);
+            a.pushed += b.pushed;
+            a.stall_wait += b.stall_wait;
+            a.stall_full += b.stall_full;
+            if a.hist.len() < b.hist.len() {
+                a.hist.resize(b.hist.len(), 0);
+            }
+            for (ha, hb) in a.hist.iter_mut().zip(&b.hist) {
+                *ha += hb;
+            }
+        }
+    }
+
+    /// Render the `--profile` back-pressure section: one row per
+    /// channel plus a bounding-channel headline.
+    pub fn render(&self) -> String {
+        use crate::sim::fifo::bucket_label;
+        use crate::util::tables::TextTable;
+        let mut t =
+            TextTable::new(vec!["channel", "cap", "max occ", "pushed", "full", "wait", "occupancy"]);
+        for c in &self.channels {
+            let cap =
+                if c.capacity == usize::MAX { "inf".to_string() } else { c.capacity.to_string() };
+            let hist = c
+                .hist
+                .iter()
+                .enumerate()
+                .filter(|(_, n)| **n > 0)
+                .map(|(b, n)| format!("{}:{n}", bucket_label(b)))
+                .collect::<Vec<_>>()
+                .join(" ");
+            t.row(vec![
+                c.name.clone(),
+                cap,
+                c.max_occupancy.to_string(),
+                c.pushed.to_string(),
+                c.stall_full.to_string(),
+                c.stall_wait.to_string(),
+                hist,
+            ]);
+        }
+        let mut out = t.render();
+        match self.bounding_channel() {
+            Some(c) => {
+                out.push_str(&format!(
+                    "bounding channel: {} ({} cycles blocked-full, {} cycles consumer-wait)\n",
+                    c.name, c.stall_full, c.stall_wait
+                ));
+            }
+            None => out.push_str("no back-pressure observed\n"),
+        }
+        out
+    }
+}
+
 /// Simulation result.
 #[derive(Debug)]
 pub struct SimReport {
@@ -61,6 +160,9 @@ pub struct SimReport {
     /// Total FIFO operations (pushes + pops) across all channels —
     /// the data-plane throughput metric for `BENCH_sim.json`.
     pub token_ops: u64,
+    /// Per-FIFO back-pressure profile; `None` unless
+    /// [`SimContext::enable_profile`] armed the run.
+    pub fifo_profile: Option<FifoProfile>,
 }
 
 impl SimReport {
@@ -113,6 +215,13 @@ pub struct SimContext<'d> {
     out_chan: usize,
     out_tokens_total: u64,
     out_token_bytes: u64,
+    /// Back-pressure profiling armed? Adds per-channel stall attribution
+    /// and FIFO occupancy histograms to each run's report.
+    profile: bool,
+    /// Per-channel consumer-wait cycles (profiling only).
+    chan_stall_wait: Vec<u64>,
+    /// Per-channel producer-blocked-full cycles (profiling only).
+    chan_stall_full: Vec<u64>,
 }
 
 impl<'d> SimContext<'d> {
@@ -180,7 +289,23 @@ impl<'d> SimContext<'d> {
             out_chan,
             out_tokens_total: out.tokens_total,
             out_token_bytes,
+            profile: false,
+            chan_stall_wait: Vec::new(),
+            chan_stall_full: Vec::new(),
         })
+    }
+
+    /// Arm per-FIFO back-pressure profiling: every subsequent run
+    /// records occupancy histograms and per-channel stall attribution
+    /// into [`SimReport::fifo_profile`]. Off by default — the disabled
+    /// cost is one branch per firing.
+    pub fn enable_profile(&mut self) {
+        self.profile = true;
+        self.chan_stall_wait = vec![0; self.fifos.len()];
+        self.chan_stall_full = vec![0; self.fifos.len()];
+        for f in &mut self.fifos {
+            f.enable_profile();
+        }
     }
 
     /// Clear all per-run state (arena, FIFOs, procs, node bookkeeping)
@@ -201,6 +326,8 @@ impl<'d> SimContext<'d> {
             ns.consumed.iter_mut().for_each(|v| *v = 0);
             ns.last_in_time.iter_mut().for_each(|v| *v = 0);
         }
+        self.chan_stall_wait.iter_mut().for_each(|v| *v = 0);
+        self.chan_stall_full.iter_mut().for_each(|v| *v = 0);
     }
 
     /// The design this context simulates.
@@ -232,6 +359,40 @@ impl<'d> SimContext<'d> {
 
     fn token_ops(&self) -> u64 {
         self.fifos.iter().map(|f| f.pushed + f.popped).sum()
+    }
+
+    /// Assemble the per-FIFO back-pressure profile (profiling runs only).
+    fn fifo_profile(&self) -> Option<FifoProfile> {
+        if !self.profile {
+            return None;
+        }
+        let channels = self
+            .design
+            .channels
+            .iter()
+            .zip(&self.fifos)
+            .enumerate()
+            .map(|(i, (c, f))| ChannelProfile {
+                name: c.name.clone(),
+                capacity: f.capacity,
+                max_occupancy: f.max_occupancy,
+                pushed: f.pushed,
+                hist: f.occupancy_histogram().map(|h| h.to_vec()).unwrap_or_default(),
+                stall_wait: self.chan_stall_wait[i],
+                stall_full: self.chan_stall_full[i],
+            })
+            .collect();
+        Some(FifoProfile { channels })
+    }
+
+    /// Flush this run's totals into the global metrics registry (coarse:
+    /// once per run, not per firing).
+    fn flush_metrics(&self, total_firings: u64, token_ops: u64) {
+        let m = crate::obs::metrics::global();
+        m.incr("sim.runs");
+        m.add("sim.firings", total_firings);
+        m.add("sim.token_ops", token_ops);
+        m.gauge_max("sim.arena_high_water", self.arena.high_water() as u64);
     }
 
     /// Simulate the design on a host input tensor (row-major int8
@@ -345,9 +506,15 @@ impl<'d> SimContext<'d> {
 
                     // (b) output space?
                     let mut t_out: u64 = 0;
+                    let mut t_out_chan = usize::MAX;
                     for &cid in &dn.out_channels {
                         match self.fifos[cid.0].next_push_ready() {
-                            Some(t) => t_out = t_out.max(t),
+                            Some(t) => {
+                                if t >= t_out {
+                                    t_out = t;
+                                    t_out_chan = cid.0;
+                                }
+                            }
                             None => break 'fire, // blocked on output space
                         }
                     }
@@ -357,10 +524,24 @@ impl<'d> SimContext<'d> {
                     let t = base_ready.max(t_in).max(t_out);
                     // stall attribution
                     if t_in > base_ready.max(t_out) {
-                        self.nodes[nid].trace.stall_in += t_in - base_ready.max(t_out);
+                        let stall = t_in - base_ready.max(t_out);
+                        self.nodes[nid].trace.stall_in += stall;
+                        if self.profile {
+                            // charge the input channel whose token arrived
+                            // last — the one that bounded this firing
+                            if let Some(slot) = (0..dn.in_channels.len())
+                                .max_by_key(|&s| self.nodes[nid].last_in_time[s])
+                            {
+                                self.chan_stall_wait[dn.in_channels[slot].0] += stall;
+                            }
+                        }
                     }
                     if t_out > base_ready.max(t_in) {
-                        self.nodes[nid].trace.stall_out += t_out - base_ready.max(t_in);
+                        let stall = t_out - base_ready.max(t_in);
+                        self.nodes[nid].trace.stall_out += stall;
+                        if self.profile && t_out_chan != usize::MAX {
+                            self.chan_stall_full[t_out_chan] += stall;
+                        }
                     }
 
                     let value = self.procs[nid].fire_into(k, &mut self.arena);
@@ -443,6 +624,8 @@ impl<'d> SimContext<'d> {
                         ));
                     }
                 }
+                let token_ops = self.token_ops();
+                self.flush_metrics(total_firings, token_ops);
                 return Ok(SimReport {
                     cycles: 0,
                     output,
@@ -450,11 +633,14 @@ impl<'d> SimContext<'d> {
                     fifo_high_water: self.high_water(),
                     deadlock: Some(blocked),
                     total_firings,
-                    token_ops: self.token_ops(),
+                    token_ops,
+                    fifo_profile: self.fifo_profile(),
                 });
             }
         }
 
+        let token_ops = self.token_ops();
+        self.flush_metrics(total_firings, token_ops);
         Ok(SimReport {
             cycles: last_drain,
             output,
@@ -462,7 +648,8 @@ impl<'d> SimContext<'d> {
             fifo_high_water: self.high_water(),
             deadlock: None,
             total_firings,
-            token_ops: self.token_ops(),
+            token_ops,
+            fifo_profile: self.fifo_profile(),
         })
     }
 }
@@ -670,6 +857,57 @@ mod tests {
         for ((name, hw), c) in rep.fifo_high_water.iter().zip(&d.channels) {
             assert!(*hw <= c.depth, "channel {name} overflowed: {hw} > {}", c.depth);
         }
+    }
+
+    #[test]
+    fn backpressure_profile_is_opt_in_and_consistent() {
+        let g = models::cascade(16, 8, 8);
+        let d = build_streaming_design(&g).unwrap();
+        let x = det_input(&g);
+        let plain = simulate(&d, &x, SimMode::Dataflow).unwrap().expect_complete();
+        assert!(plain.fifo_profile.is_none(), "profiling must be opt-in");
+
+        let mut ctx = SimContext::new(&d, SimMode::Dataflow).unwrap();
+        ctx.enable_profile();
+        let rep = ctx.run(&x).unwrap().expect_complete();
+        assert_eq!(rep.output, plain.output, "profiling must not change results");
+        assert_eq!(rep.cycles, plain.cycles, "profiling must not change timing");
+        let prof = rep.fifo_profile.expect("profile armed");
+        assert_eq!(prof.channels.len(), d.channels.len());
+        for c in &prof.channels {
+            let hist_total: u64 = c.hist.iter().sum();
+            assert_eq!(hist_total, c.pushed, "channel {}: histogram covers every push", c.name);
+        }
+        // stall attribution sums match the per-node trace totals
+        let node_wait: u64 = rep.traces.iter().map(|t| t.stall_in).sum();
+        let node_full: u64 = rep.traces.iter().map(|t| t.stall_out).sum();
+        let chan_wait: u64 = prof.channels.iter().map(|c| c.stall_wait).sum();
+        let chan_full: u64 = prof.channels.iter().map(|c| c.stall_full).sum();
+        assert_eq!(chan_wait, node_wait, "consumer stalls attribute to channels");
+        assert_eq!(chan_full, node_full, "producer stalls attribute to channels");
+        assert!(prof.render().contains("channel"), "render smoke");
+    }
+
+    #[test]
+    fn fifo_profile_merge_accumulates() {
+        let mk = |pushed, full| FifoProfile {
+            channels: vec![ChannelProfile {
+                name: "c0".into(),
+                capacity: 4,
+                max_occupancy: 2,
+                pushed,
+                hist: vec![pushed, 0],
+                stall_wait: 1,
+                stall_full: full,
+            }],
+        };
+        let mut acc = FifoProfile::default();
+        acc.merge(&mk(10, 5));
+        acc.merge(&mk(7, 0));
+        assert_eq!(acc.channels[0].pushed, 17);
+        assert_eq!(acc.channels[0].stall_full, 5);
+        assert_eq!(acc.channels[0].hist[0], 17);
+        assert_eq!(acc.bounding_channel().unwrap().name, "c0");
     }
 
     #[test]

@@ -30,6 +30,38 @@ pub struct SimFifo {
     pop_ring: Vec<u64>,
     /// High-water mark of occupancy (for FIFO sizing diagnostics).
     pub max_occupancy: usize,
+    /// Power-of-two occupancy histogram (`hist[b]` counts pushes that
+    /// left `len` in bucket `b`, see [`occupancy_bucket`]). Empty unless
+    /// back-pressure profiling was enabled — the disabled cost on the
+    /// push path is one `is_empty` branch.
+    hist: Vec<u64>,
+}
+
+/// Number of histogram buckets: bucket `b` covers occupancies
+/// `2^(b-1) < n ≤ 2^b` (bucket 0 is occupancy ≤ 1), with the last
+/// bucket absorbing everything deeper.
+pub const HIST_BUCKETS: usize = 16;
+
+/// Bucket index for an observed occupancy.
+pub fn occupancy_bucket(occupancy: usize) -> usize {
+    if occupancy <= 1 {
+        return 0;
+    }
+    let b = (usize::BITS - (occupancy - 1).leading_zeros()) as usize;
+    b.min(HIST_BUCKETS - 1)
+}
+
+/// Human-readable occupancy range label for bucket `b` (e.g. `"2-4"`).
+pub fn bucket_label(b: usize) -> String {
+    if b == 0 {
+        return "<=1".to_string();
+    }
+    let hi = 1u64 << b;
+    if b == HIST_BUCKETS - 1 {
+        format!(">{}", hi / 2)
+    } else {
+        format!("{}-{}", hi / 2 + 1, hi)
+    }
 }
 
 impl SimFifo {
@@ -43,6 +75,25 @@ impl SimFifo {
             popped: 0,
             pop_ring: Vec::new(),
             max_occupancy: 0,
+            hist: Vec::new(),
+        }
+    }
+
+    /// Allocate the occupancy histogram; every subsequent push records
+    /// its post-push occupancy bucket.
+    pub fn enable_profile(&mut self) {
+        if self.hist.is_empty() {
+            self.hist = vec![0; HIST_BUCKETS];
+        }
+    }
+
+    /// The occupancy histogram, if profiling was enabled and any push
+    /// happened.
+    pub fn occupancy_histogram(&self) -> Option<&[u64]> {
+        if self.hist.is_empty() || self.hist.iter().all(|c| *c == 0) {
+            None
+        } else {
+            Some(&self.hist)
         }
     }
 
@@ -58,6 +109,7 @@ impl SimFifo {
         self.pushed = 0;
         self.popped = 0;
         self.max_occupancy = 0;
+        self.hist.iter_mut().for_each(|c| *c = 0);
         // pop_ring entries are validated by index arithmetic; stale
         // values from a previous run are never read.
     }
@@ -103,6 +155,9 @@ impl SimFifo {
         self.len += 1;
         self.pushed += 1;
         self.max_occupancy = self.max_occupancy.max(self.len);
+        if !self.hist.is_empty() {
+            self.hist[occupancy_bucket(self.len)] += 1;
+        }
     }
 
     /// Double the ring, un-wrapping the live entries into the new tail.
@@ -234,6 +289,39 @@ mod tests {
             arena.release(tok);
         }
         assert!(f.is_empty());
+    }
+
+    #[test]
+    fn occupancy_buckets_are_log2_ranges() {
+        assert_eq!(occupancy_bucket(0), 0);
+        assert_eq!(occupancy_bucket(1), 0);
+        assert_eq!(occupancy_bucket(2), 1);
+        assert_eq!(occupancy_bucket(3), 2);
+        assert_eq!(occupancy_bucket(4), 2);
+        assert_eq!(occupancy_bucket(5), 3);
+        assert_eq!(occupancy_bucket(1 << 20), HIST_BUCKETS - 1);
+        assert_eq!(bucket_label(0), "<=1");
+        assert_eq!(bucket_label(2), "3-4");
+        assert_eq!(bucket_label(HIST_BUCKETS - 1), ">16384");
+    }
+
+    #[test]
+    fn histogram_counts_pushes_only_when_enabled() {
+        let mut arena = TokenArena::new();
+        let mut f = SimFifo::new(8);
+        f.push(0, arena.alloc_from(&[1]));
+        assert!(f.occupancy_histogram().is_none(), "disabled by default");
+        f.enable_profile();
+        f.push(0, arena.alloc_from(&[2])); // occupancy 2 -> bucket 1
+        f.push(0, arena.alloc_from(&[3])); // occupancy 3 -> bucket 2
+        let h = f.occupancy_histogram().unwrap();
+        assert_eq!(h[1], 1);
+        assert_eq!(h[2], 1);
+        assert_eq!(h.iter().sum::<u64>(), 2);
+        f.reset();
+        assert!(f.occupancy_histogram().is_none(), "reset zeroes counts");
+        f.push(0, arena.alloc_from(&[4]));
+        assert_eq!(f.occupancy_histogram().unwrap()[0], 1, "still enabled after reset");
     }
 
     #[test]

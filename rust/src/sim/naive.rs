@@ -542,6 +542,7 @@ pub fn simulate_naive(design: &Design, input: &[i32], mode: SimMode) -> Result<S
                 deadlock: Some(blocked),
                 total_firings,
                 token_ops: fifos.iter().map(|f| f.pushed + f.popped).sum(),
+                fifo_profile: None,
             });
         }
     }
@@ -555,6 +556,7 @@ pub fn simulate_naive(design: &Design, input: &[i32], mode: SimMode) -> Result<S
         deadlock: None,
         total_firings,
         token_ops,
+        fifo_profile: None,
     })
 }
 

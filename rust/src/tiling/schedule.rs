@@ -110,6 +110,9 @@ fn compile_tiled_with_grid(
             grid.w.local_out
         );
     }
+    let _sp = crate::obs::span_with("cell_solve", || {
+        format!("cell {}x{} ({})", grid.h.local_in, grid.w.local_in, g.name)
+    });
     let solution = crate::coordinator::cache::solve_cached(&mut cell, cfg)?;
     let report = crate::resources::estimate(&cell, &cfg.device);
     ensure!(
@@ -180,14 +183,18 @@ pub fn compile_tiled_from(
         geom.cone[AXIS_W].lo,
         geom.cone[AXIS_W].hi
     );
+    let metrics = crate::obs::metrics::global();
+    let _sp = crate::obs::span_with("grid_search", || g.name.clone());
     let mut tried = std::collections::HashSet::new();
     for (r, c) in candidates {
         if !tried.insert((r, c)) {
             continue;
         }
+        metrics.incr("tiling.candidates_tried");
         let grid = match TileGrid::build(g, r as usize, c as usize) {
             Ok(grid) => grid,
             Err(e) => {
+                metrics.incr("tiling.candidates_rejected");
                 last_err = e;
                 continue;
             }
@@ -195,6 +202,7 @@ pub fn compile_tiled_from(
         // every split axis must actually shrink its local extent,
         // otherwise the grid only adds halo recompute
         if (grid.rows() > 1 && !grid.h.shrinks()) || (grid.cols() > 1 && !grid.w.shrinks()) {
+            metrics.incr("tiling.candidates_rejected");
             continue;
         }
         // cheap prune: the unified-model lower bound (line buffers
@@ -203,11 +211,18 @@ pub fn compile_tiled_from(
         // before paying for a cell DSE
         let ext = local_extents(g, grid.h.local_in, grid.w.local_in)?;
         if cell_bram_lower_bound(base, &ext) > budget {
+            metrics.incr("tiling.candidates_rejected");
             continue;
         }
         match compile_tiled_with_grid(g, cfg, grid) {
-            Ok(tc) => return Ok(tc),
-            Err(e) => last_err = e,
+            Ok(tc) => {
+                metrics.incr("tiling.grids_accepted");
+                return Ok(tc);
+            }
+            Err(e) => {
+                metrics.incr("tiling.candidates_rejected");
+                last_err = e;
+            }
         }
     }
     Err(last_err.context(format!("tile-grid fallback failed for graph {}", g.name)))
@@ -227,6 +242,11 @@ pub struct TiledSimReport {
     pub total_firings: u64,
     /// Total FIFO pushes + pops summed over all cell runs.
     pub token_ops: u64,
+    /// How many `SimContext`s were built for this run — 1 on the serial
+    /// path; at most the worker count on the parallel path, where the
+    /// shared context pool reuses them across chunks (the pool-proof
+    /// metric, mirrored to `sim.ctx_builds`).
+    pub ctx_builds: u64,
 }
 
 impl TiledSimReport {
@@ -243,6 +263,7 @@ impl TiledSimReport {
             deadlock: None,
             total_firings: self.total_firings,
             token_ops: self.token_ops,
+            fifo_profile: None,
         }
     }
 }
@@ -328,6 +349,7 @@ fn run_cell(
     cell_in: &mut Vec<i32>,
 ) -> Result<CellRun> {
     let grid = &tc.grid;
+    let _sp = crate::obs::span_with("sim_cell", || format!("cell r{} c{}", rs.index, cs.index));
     gather_cell(input, geo, rs, cs, cell_in);
     let rep = ctx.run(cell_in)?;
     if let Some(blocked) = &rep.deadlock {
@@ -356,6 +378,7 @@ fn stitch(
     tc: &TiledCompilation,
     geo: &TiledGeometry,
     runs: Vec<CellRun>,
+    ctx_builds: u64,
 ) -> TiledSimReport {
     let grid = &tc.grid;
     let mut output = vec![0i32; geo.out_len];
@@ -377,7 +400,8 @@ fn stitch(
             tile_cycles.push(run.cycles);
         }
     }
-    TiledSimReport { cycles, output, tile_cycles, total_firings, token_ops }
+    crate::obs::metrics::global().add("sim.ctx_builds", ctx_builds);
+    TiledSimReport { cycles, output, tile_cycles, total_firings, token_ops, ctx_builds }
 }
 
 /// Execute every cell of `tc` on the cycle-level simulator and stitch
@@ -398,22 +422,26 @@ pub fn simulate_tiled(tc: &TiledCompilation, input: &[i32]) -> Result<TiledSimRe
             runs.push(run_cell(&mut ctx, tc, &geo, input, rs, cs, &mut cell_in)?);
         }
     }
-    Ok(stitch(tc, &geo, runs))
+    Ok(stitch(tc, &geo, runs, 1))
 }
 
 /// Like [`simulate_tiled`], fanning the independent grid cells out
-/// across `pool`'s workers. Cells are split into one contiguous
-/// row-major chunk per worker; each chunk job builds its **own**
-/// `SimContext` (weights transposed once per worker, reused across the
-/// chunk's cells) and returns its cropped cores, which the coordinator
-/// stitches in deterministic cell order — the report is identical to
-/// the serial path's, cycle counts included (asserted by the
-/// equivalence tests and the `BENCH_sim.json` smoke check).
+/// across `pool`'s workers. Cells are split into small contiguous
+/// row-major chunks (several per worker, for load balance); chunk jobs
+/// draw a `SimContext` from a **shared context pool** — pop-or-build on
+/// entry, return on exit — so weights are transposed at most once per
+/// concurrently-active worker no matter how many chunks run
+/// ([`TiledSimReport::ctx_builds`] counts the builds, proving reuse).
+/// Cropped cores are stitched in deterministic cell order — the report
+/// is identical to the serial path's, cycle counts included (asserted
+/// by the equivalence tests and the `BENCH_sim.json` smoke check).
 pub fn simulate_tiled_parallel(
     tc: &TiledCompilation,
     input: &[i32],
     pool: &WorkerPool,
 ) -> Result<TiledSimReport> {
+    use std::sync::atomic::{AtomicU64, Ordering};
+
     let geo = tiled_geometry(tc, input)?;
     let grid = &tc.grid;
     let cells: Vec<(&Seg, &Seg)> = grid
@@ -425,21 +453,36 @@ pub fn simulate_tiled_parallel(
     if pool.workers() <= 1 || cells.len() <= 1 {
         return simulate_tiled(tc, input);
     }
-    let chunk = cells.len().div_ceil(pool.workers());
+    // ~4 chunks per worker: fine-grained enough that a slow chunk does
+    // not straggle, and the context pool makes extra chunks free.
+    let chunk = cells.len().div_ceil(pool.workers() * 4).max(1);
     let geo_ref = &geo;
+    let ctx_pool: std::sync::Mutex<Vec<crate::sim::SimContext<'_>>> =
+        std::sync::Mutex::new(Vec::new());
+    let ctx_builds = AtomicU64::new(0);
     let jobs: Vec<_> = cells
         .chunks(chunk)
         .map(|chunk_cells| {
+            let ctx_pool = &ctx_pool;
+            let ctx_builds = &ctx_builds;
             move || -> Result<Vec<CellRun>> {
-                let mut ctx =
-                    crate::sim::SimContext::new(&tc.cell, SimMode::of(tc.cell.style))?;
+                let pooled = ctx_pool.lock().unwrap().pop();
+                let mut ctx = match pooled {
+                    Some(ctx) => ctx,
+                    None => {
+                        ctx_builds.fetch_add(1, Ordering::Relaxed);
+                        crate::sim::SimContext::new(&tc.cell, SimMode::of(tc.cell.style))?
+                    }
+                };
                 let mut cell_in = Vec::with_capacity(geo_ref.lh * geo_ref.lw * geo_ref.c);
-                chunk_cells
+                let runs: Result<Vec<CellRun>> = chunk_cells
                     .iter()
                     .map(|(rs, cs)| {
                         run_cell(&mut ctx, tc, geo_ref, input, rs, cs, &mut cell_in)
                     })
-                    .collect()
+                    .collect();
+                ctx_pool.lock().unwrap().push(ctx);
+                runs
             }
         })
         .collect();
@@ -453,7 +496,7 @@ pub fn simulate_tiled_parallel(
         runs.extend(chunk_runs);
     }
     ensure!(runs.len() == cells.len(), "cell runs lost in the pool");
-    Ok(stitch(tc, &geo, runs))
+    Ok(stitch(tc, &geo, runs, ctx_builds.load(Ordering::Relaxed)))
 }
 
 #[cfg(test)]
@@ -567,6 +610,29 @@ mod tests {
                 assert_eq!(par.total_firings, serial.total_firings, "{}", g.name);
                 assert_eq!(par.token_ops, serial.token_ops, "{}", g.name);
             }
+        }
+    }
+
+    #[test]
+    fn context_pool_bounds_builds_by_worker_count() {
+        // 4x4 = 16 cells split into ~4 chunks per worker: without the
+        // shared pool every chunk would build its own SimContext; with
+        // it, builds are bounded by the number of concurrently-active
+        // workers (and the serial path always reports exactly one).
+        let g = models::conv_relu(32, 8, 8);
+        let x = det_input(&g);
+        let tc = compile_tiled_fixed(&g, &DseConfig::new(DeviceSpec::kv260()), 4, 4).unwrap();
+        let serial = simulate_tiled(&tc, &x).unwrap();
+        assert_eq!(serial.ctx_builds, 1, "serial path builds one context");
+        for workers in [2usize, 4] {
+            let par = simulate_tiled_parallel(&tc, &x, &WorkerPool::new(workers)).unwrap();
+            assert_eq!(par.output, serial.output);
+            assert!(par.ctx_builds >= 1);
+            assert!(
+                par.ctx_builds <= workers as u64,
+                "{} builds for {workers} workers — context pool not reusing",
+                par.ctx_builds
+            );
         }
     }
 
