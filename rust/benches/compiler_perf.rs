@@ -22,11 +22,14 @@ use ming::coordinator::WorkerPool;
 use ming::dse::ilp::{solve, DseConfig};
 use ming::dataflow::build::build_streaming_design;
 use ming::ir::builder::models;
+use ming::ir::json;
 use ming::resources::device::DeviceSpec;
 use ming::runtime::golden::GoldenModel;
 use ming::sim::naive::simulate_naive;
-use ming::sim::{simulate, SimContext, SimMode};
-use ming::tiling::{compile_tiled_fixed, simulate_tiled, simulate_tiled_parallel};
+use ming::sim::{simulate, SimConfig, SimContext, SimMode};
+use ming::tiling::{
+    compile_tiled_fixed, simulate_tiled, simulate_tiled_parallel, simulate_tiled_with,
+};
 use ming::util::bench::bench;
 use ming::util::prng;
 
@@ -75,34 +78,57 @@ fn main() {
         println!("{}", s.summary());
     }
 
-    // --- simulation throughput: arena engine ------------------------------
+    // --- simulation throughput: arena engine (fast-forward vs exact) ------
+    // The default engine fast-forwards steady-state periods; the exact
+    // run of the same context config'd with `SimConfig::exact()` is the
+    // reference. Both simulate the identical cycle count (bit-exact), so
+    // the effective simulated-cycles/s ratio is also the wall-time ratio.
     let mut conv224_arena_fps = 0.0f64;
     let mut conv224_token_ops_ps = 0.0f64;
+    // (kernel, ff sim-cycles/s, exact sim-cycles/s, ff periods)
+    let mut ff_rows: Vec<(String, f64, f64, u64)> = Vec::new();
     for (name, size) in [("conv_relu", 224usize), ("cascade", 224), ("linear", 0)] {
         let gg = models::paper_kernel(name, size).unwrap();
         let d = compile_with(FrameworkKind::Ming, &gg, &dev).unwrap();
         let x = det_input(&gg);
         let mut firings = 0u64;
         let mut token_ops = 0u64;
+        let mut cycles = 0u64;
+        let mut periods = 0u64;
         let mut ctx = SimContext::new(&d, SimMode::Dataflow).unwrap();
         let s = bench(&format!("simulate_ming_{name}_{size}"), 1, 5, || {
             let rep = ctx.run(&x).unwrap();
             firings = rep.total_firings;
             token_ops = rep.token_ops;
+            cycles = rep.cycles;
+            periods = rep.ff.periods;
             rep.cycles
         });
         let per_sec = firings as f64 / s.mean.as_secs_f64();
         let ops_sec = token_ops as f64 / s.mean.as_secs_f64();
+        let ff_cps = cycles as f64 / s.mean.as_secs_f64();
+        let mut exact_ctx = SimContext::new(&d, SimMode::Dataflow).unwrap();
+        exact_ctx.set_config(SimConfig::exact());
+        let se = bench(&format!("simulate_exact_{name}_{size}"), 1, 3, || {
+            exact_ctx.run(&x).unwrap().cycles
+        });
+        let exact_cps = cycles as f64 / se.mean.as_secs_f64();
+        println!("{}", se.summary());
         println!(
-            "{}  [{:.1}M firings/s, {:.1}M token-ops/s]",
+            "{}  [{:.1}M firings/s, {:.1}M token-ops/s; {:.1}M sim-cycles/s vs {:.1}M exact \
+             = {:.1}x, {periods} ff periods]",
             s.summary(),
             per_sec / 1e6,
-            ops_sec / 1e6
+            ops_sec / 1e6,
+            ff_cps / 1e6,
+            exact_cps / 1e6,
+            ff_cps / exact_cps.max(1.0)
         );
         if name == "conv_relu" {
             conv224_arena_fps = per_sec;
             conv224_token_ops_ps = ops_sec;
         }
+        ff_rows.push((format!("{name}_{size}"), ff_cps, exact_cps, periods));
     }
 
     // --- arena vs the retained naive reference engine ---------------------
@@ -153,11 +179,14 @@ fn main() {
     // cells; parallel fans cells over the worker pool.
     let workers = WorkerPool::default_size().workers().max(2);
     let pool = WorkerPool::new(workers);
-    let (tiled_serial_ms, tiled_parallel_ms, ctx_builds) = {
+    let (tiled_serial_ms, tiled_parallel_ms, ctx_builds, vgg_ff_speedup) = {
         let gg = models::vgg_block(128, 16, 3);
         let x = det_input(&gg);
         let tc = compile_tiled_fixed(&gg, &DseConfig::new(dev.clone()), 2, 2).unwrap();
         let serial = min_wall(3, || simulate_tiled(&tc, &x).unwrap().cycles);
+        let exact =
+            min_wall(2, || simulate_tiled_with(&tc, &x, SimConfig::exact()).unwrap().cycles);
+        let ff_speedup = exact.as_secs_f64() / serial.as_secs_f64().max(1e-9);
         let mut ctx_builds = 0u64;
         let parallel = min_wall(3, || {
             let rep = simulate_tiled_parallel(&tc, &x, &pool).unwrap();
@@ -165,13 +194,14 @@ fn main() {
             rep.cycles
         });
         println!(
-            "tiled_vgg3_128_2x2: serial {:.1}ms, parallel({workers}) {:.1}ms ({:.2}x, \
-             {ctx_builds} ctx builds via the shared pool)",
+            "tiled_vgg3_128_2x2: serial {:.1}ms (exact {:.1}ms, ff {ff_speedup:.1}x), \
+             parallel({workers}) {:.1}ms ({:.2}x, {ctx_builds} ctx builds via the shared pool)",
             serial.as_secs_f64() * 1e3,
+            exact.as_secs_f64() * 1e3,
             parallel.as_secs_f64() * 1e3,
             serial.as_secs_f64() / parallel.as_secs_f64().max(1e-9)
         );
-        (serial.as_secs_f64() * 1e3, parallel.as_secs_f64() * 1e3, ctx_builds)
+        (serial.as_secs_f64() * 1e3, parallel.as_secs_f64() * 1e3, ctx_builds, ff_speedup)
     };
 
     // --- smoke: parallel must not be slower on the 2x2 tiny_cnn case ------
@@ -199,6 +229,18 @@ fn main() {
         (serial.as_secs_f64() * 1e3, parallel.as_secs_f64() * 1e3)
     };
 
+    let ff_json = ff_rows
+        .iter()
+        .map(|(name, ffc, exc, periods)| {
+            format!(
+                "\"{name}\":{{\"sim_cycles_per_sec\":{ffc:.0},\
+                 \"exact_sim_cycles_per_sec\":{exc:.0},\
+                 \"speedup\":{:.2},\"ff_periods\":{periods}}}",
+                ffc / exc.max(1.0)
+            )
+        })
+        .collect::<Vec<_>>()
+        .join(",");
     let json = format!(
         "{{\"bench\":\"sim\",\
          \"simulate_ming_conv_relu_224\":{{\
@@ -206,6 +248,8 @@ fn main() {
          \"naive_firings_per_sec\":{naive_fps:.0},\
          \"speedup_vs_naive\":{speedup_vs_naive:.2},\
          \"token_ops_per_sec\":{conv224_token_ops_ps:.0}}},\
+         \"fast_forward\":{{{ff_json},\
+         \"vgg3_128_2x2\":{{\"speedup\":{vgg_ff_speedup:.2}}}}},\
          \"sim_context\":{{\"cold_ms\":{ctx_cold_ms:.3},\"reused_ms\":{ctx_reused_ms:.3},\
          \"reuse_speedup\":{:.2}}},\
          \"tiled_vgg3_128_2x2\":{{\"workers\":{workers},\
@@ -218,6 +262,51 @@ fn main() {
     );
     std::fs::write("BENCH_sim.json", format!("{json}\n")).expect("writing BENCH_sim.json");
     println!("wrote BENCH_sim.json");
+
+    // --- perf-regression gate (BENCH_baseline.json) -----------------------
+    // Committed floors, deliberately conservative: the job fails only when
+    // a gated throughput metric drops below 80% of its baseline value.
+    // Re-baseline by copying numbers from a CI BENCH_sim.json artifact.
+    // MING_BENCH_NO_GATE=1 skips the gate (shared/loaded dev machines).
+    if std::env::var_os("MING_BENCH_NO_GATE").is_some() {
+        println!("perf gate: skipped (MING_BENCH_NO_GATE=1)");
+    } else if let Ok(text) = std::fs::read_to_string("BENCH_baseline.json") {
+        let base = json::parse(&text).expect("BENCH_baseline.json must parse");
+        let baseline = |path: &str| -> f64 {
+            let mut node = &base;
+            for seg in path.split('.') {
+                node = node.get(seg).unwrap_or_else(|e| panic!("baseline {path}: {e}"));
+            }
+            node.as_f64().unwrap_or_else(|e| panic!("baseline {path}: {e}"))
+        };
+        let ff_row = |key: &str| {
+            ff_rows.iter().find(|r| r.0 == key).map(|r| (r.1, r.1 / r.2.max(1.0))).unwrap()
+        };
+        let (conv_cps, conv_speedup) = ff_row("conv_relu_224");
+        let (cascade_cps, cascade_speedup) = ff_row("cascade_224");
+        let gates = [
+            ("simulate_ming_conv_relu_224.arena_firings_per_sec", conv224_arena_fps),
+            ("simulate_ming_conv_relu_224.speedup_vs_naive", speedup_vs_naive),
+            ("fast_forward.conv_relu_224.sim_cycles_per_sec", conv_cps),
+            ("fast_forward.conv_relu_224.speedup", conv_speedup),
+            ("fast_forward.cascade_224.sim_cycles_per_sec", cascade_cps),
+            ("fast_forward.cascade_224.speedup", cascade_speedup),
+            ("fast_forward.vgg3_128_2x2.speedup", vgg_ff_speedup),
+        ];
+        let mut failed = false;
+        for (path, cur) in gates {
+            let floor = baseline(path) * 0.8;
+            if cur < floor {
+                eprintln!("perf gate FAIL {path}: {cur:.2} < floor {floor:.2} (0.8x baseline)");
+                failed = true;
+            } else {
+                println!("perf gate ok   {path}: {cur:.2} >= floor {floor:.2}");
+            }
+        }
+        assert!(!failed, "simulation throughput regressed >20% vs BENCH_baseline.json");
+    } else {
+        println!("perf gate: BENCH_baseline.json not found, skipping");
+    }
 
     // --- golden model (PJRT) ------------------------------------------------
     if let Ok(gm) = GoldenModel::open_default() {

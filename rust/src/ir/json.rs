@@ -71,6 +71,13 @@ impl Json {
         }
     }
 
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            Json::Num(n) => Ok(*n),
+            other => bail!("expected number, got {other:?}"),
+        }
+    }
+
     pub fn get(&self, key: &str) -> Result<&Json> {
         match self.as_obj()?.get(key) {
             Some(v) => Ok(v),
@@ -477,6 +484,13 @@ mod tests {
         let v = parse(src).unwrap();
         let v2 = parse(&v.render()).unwrap();
         assert_eq!(v, v2);
+    }
+
+    #[test]
+    fn as_f64_accepts_any_number() {
+        assert_eq!(parse("2.5").unwrap().as_f64().unwrap(), 2.5);
+        assert_eq!(parse("-3").unwrap().as_f64().unwrap(), -3.0);
+        assert!(parse("\"x\"").unwrap().as_f64().is_err());
     }
 
     #[test]

@@ -39,9 +39,9 @@ use ming::ir::json::import_model;
 use ming::resources::device::DeviceSpec;
 use ming::resources::estimate;
 use ming::runtime::golden::GoldenModel;
-use ming::sim::{simulate, SimContext, SimMode};
+use ming::sim::{simulate, FfStats, SimConfig, SimContext, SimMode};
 use ming::sim::trace::render_traces;
-use ming::tiling::{simulate_tiled, simulate_tiled_parallel, TiledCompilation};
+use ming::tiling::{simulate_tiled_parallel_with, simulate_tiled_with, TiledCompilation};
 use ming::util::prng;
 
 struct Args {
@@ -326,12 +326,28 @@ fn golden_check(kernel: &str, size: usize, x: &[i32], output: &[i32]) -> Result<
     Ok(())
 }
 
+/// One-line `--profile` summary of what the steady-state accelerator
+/// covered: skipped periods, skipped cycles, and how much of the run was
+/// executed exactly (fill/drain/transients).
+fn print_ff_summary(ff: &FfStats, cycles: u64) {
+    if ff.periods == 0 {
+        println!("fast-forward: no steady-state period detected ({} checkpoints)", ff.checkpoints);
+        return;
+    }
+    let exact_pct = 100.0 * cycles.saturating_sub(ff.skipped_cycles) as f64 / cycles.max(1) as f64;
+    println!(
+        "fast-forward: {} periods, {} cycles skipped ({:.1}% of the run simulated exactly)",
+        ff.periods, ff.skipped_cycles, exact_pct
+    );
+}
+
 fn cmd_simulate(a: &Args) -> Result<()> {
     // `simulate` takes --workers (parallel tiled execution) but none of
     // the sweep-only sharding/spooling flags.
     a.forbid_flags("simulate", &["shard", "spool", "estimate-only"])?;
     let kernel = a.get("kernel", "conv_relu");
     let size: usize = a.get("size", "32").parse()?;
+    let sim_cfg = if a.get_bool("exact-sim")? { SimConfig::exact() } else { SimConfig::default() };
     let dev = a.device()?;
     let fw = a.framework()?;
     // validate --workers up front so a bad value errors on the flat
@@ -352,9 +368,9 @@ fn cmd_simulate(a: &Args) -> Result<()> {
                         tc.grid.n_cells(),
                         pool.workers().min(tc.grid.n_cells())
                     );
-                    simulate_tiled_parallel(&tc, &x, &pool)?
+                    simulate_tiled_parallel_with(&tc, &x, &pool, sim_cfg)?
                 } else {
-                    simulate_tiled(&tc, &x)?
+                    simulate_tiled_with(&tc, &x, sim_cfg)?
                 };
                 println!(
                     "cycles: {}  ({:.4} MCycles over {} cells, {:.2} MAC/cycle)",
@@ -363,6 +379,9 @@ fn cmd_simulate(a: &Args) -> Result<()> {
                     rep.tile_cycles.len(),
                     g.total_macs() as f64 / rep.cycles.max(1) as f64
                 );
+                if ming::obs::trace::global().is_profiling() {
+                    print_ff_summary(&rep.ff, rep.cycles);
+                }
                 let r = golden_check(&kernel, size, &x, &rep.output);
                 print_cache_summary(&cache);
                 return r;
@@ -374,13 +393,13 @@ fn cmd_simulate(a: &Args) -> Result<()> {
     let x = det_input(&g);
     // under --profile, run with per-FIFO back-pressure accounting so the
     // sim section below can attribute stalls to channels
-    let rep = if ming::obs::trace::global().is_profiling() {
-        let mut ctx = SimContext::new(&d, SimMode::of(d.style))?;
+    let profiling = ming::obs::trace::global().is_profiling();
+    let mut ctx = SimContext::new(&d, SimMode::of(d.style))?;
+    ctx.set_config(sim_cfg);
+    if profiling {
         ctx.enable_profile();
-        ctx.run(&x)?
-    } else {
-        simulate(&d, &x, SimMode::of(d.style))?
-    };
+    }
+    let rep = ctx.run(&x)?;
     if let Some(blocked) = &rep.deadlock {
         println!("DEADLOCK:\n  {}", blocked.join("\n  "));
         return Ok(());
@@ -391,6 +410,9 @@ fn cmd_simulate(a: &Args) -> Result<()> {
         rep.cycles as f64 / 1e6,
         rep.macs_per_cycle(d.total_macs())
     );
+    if profiling {
+        print_ff_summary(&rep.ff, rep.cycles);
+    }
     println!("{}", render_traces(&rep.traces));
     if let Some(fp) = &rep.fifo_profile {
         println!("back-pressure profile:\n{}", fp.render());
@@ -735,7 +757,10 @@ fn help() {
          \x20           MING falls back to stride-aware 2-D tile-grid decomposition when the\n\
          \x20           DSE is infeasible; --emit-tb then writes a per-boundary seam testbench\n\
          \x20 simulate  --kernel K --size N [--framework F] [--device D] [--workers N]\n\
-         \x20           tiled designs fan grid cells across the worker pool\n\
+         \x20           [--exact-sim]\n\
+         \x20           tiled designs fan grid cells across the worker pool;\n\
+         \x20           --exact-sim disables the (bit-exact) steady-state\n\
+         \x20           fast-forward + batched firing and runs step by step\n\
          \x20 table2    [--device D] [--estimate-only]   full Table-II sweep\n\
          \x20 table3    [--device D]        post-PnR fabric table\n\
          \x20 table4    [--device D]        DSP-constraint sweep\n\
@@ -760,7 +785,9 @@ fn help() {
          \x20                     workers render as per-thread lanes)\n\
          \x20 --profile           print a phase-time + counter table at exit;\n\
          \x20                     `simulate` additionally attributes per-FIFO\n\
-         \x20                     back-pressure (occupancy histograms, stalls)\n\n\
+         \x20                     back-pressure (occupancy histograms, stalls)\n\
+         \x20                     and prints a fast-forward summary (periods,\n\
+         \x20                     cycles skipped, % simulated exactly)\n\n\
          kernels: conv_relu cascade residual linear feedforward vgg3 conv_pool\n\
          frameworks: vanilla scalehls streamhls ming\n\
          devices: kv260 zcu104 u250  (+ --dsp-limit N, --bram-limit N, --max-bram-frac F)\n\

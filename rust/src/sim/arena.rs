@@ -88,6 +88,18 @@ impl TokenArena {
         TokenId(id)
     }
 
+    /// Batched reservation: allocate `n` tokens of `len` values each
+    /// (refcount 1, payloads **uninitialized** as in [`Self::alloc`])
+    /// into `out` — the row-granular firing path reserves one output
+    /// row's worth of slots in a single call.
+    pub fn alloc_many(&mut self, len: usize, n: usize, out: &mut Vec<TokenId>) {
+        out.clear();
+        out.reserve(n);
+        for _ in 0..n {
+            out.push(self.alloc(len));
+        }
+    }
+
     /// Allocate and fill from `values` in one step.
     pub fn alloc_from(&mut self, values: &[i32]) -> TokenId {
         let id = self.alloc(values.len());

@@ -17,8 +17,10 @@ use crate::dataflow::design::{Design, DesignStyle};
 
 use super::arena::TokenArena;
 use super::fifo::SimFifo;
-use super::process::{build_proc, NodeProc};
+use super::process::{build_proc, NodeProc, WeightBank};
 use super::trace::NodeTrace;
+
+mod ffwd;
 
 /// Host-interface model: a 128-bit AXI port moves 16 bytes per cycle in
 /// each direction (KV260 DDR4 class). Bounds feeder and sink rates.
@@ -41,6 +43,52 @@ impl SimMode {
             DesignStyle::Sequential => SimMode::Sequential,
         }
     }
+}
+
+/// Knobs for the simulator fast path. Both stages are **on by
+/// default** — they are bit-exact against the naive oracle (asserted by
+/// the equivalence property suite) — and both can be disabled for a
+/// fully step-by-step run (`--exact-sim`, [`SimConfig::exact`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SimConfig {
+    /// Steady-state detection + fast-forward: once the engine's timing
+    /// state repeats modulo a uniform cycle shift, whole periods are
+    /// replayed functionally and their timing applied analytically.
+    pub fast_forward: bool,
+    /// Row-batched firing inside the fast-forward replay: sliding nodes
+    /// produce a whole output row per step over the arena's flat
+    /// slices. No effect on the exact (cycle-attributing) path.
+    pub batch_fire: bool,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        Self { fast_forward: true, batch_fire: true }
+    }
+}
+
+impl SimConfig {
+    /// Fully exact execution: no fast-forward, no batched firing — the
+    /// PR-6 arena engine behaviour, byte for byte.
+    pub fn exact() -> Self {
+        Self { fast_forward: false, batch_fire: false }
+    }
+}
+
+/// What the steady-state accelerator did during one run
+/// ([`SimReport::ff`]; all zeros on exact runs and whenever no period
+/// was detected).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FfStats {
+    /// Whole steady-state periods skipped analytically.
+    pub periods: u64,
+    /// Simulated cycles covered by those periods (the report's `cycles`
+    /// still includes them — they were advanced in O(1), not executed).
+    pub skipped_cycles: u64,
+    /// Firings executed through the row-batched replay kernel.
+    pub batched_firings: u64,
+    /// Scanline checkpoints snapshotted by the detector.
+    pub checkpoints: u64,
 }
 
 /// Back-pressure profile of one channel: how deep the FIFO ran and how
@@ -163,6 +211,8 @@ pub struct SimReport {
     /// Per-FIFO back-pressure profile; `None` unless
     /// [`SimContext::enable_profile`] armed the run.
     pub fifo_profile: Option<FifoProfile>,
+    /// Steady-state fast-forward statistics for this run.
+    pub ff: FfStats,
 }
 
 impl SimReport {
@@ -222,12 +272,23 @@ pub struct SimContext<'d> {
     chan_stall_wait: Vec<u64>,
     /// Per-channel producer-blocked-full cycles (profiling only).
     chan_stall_full: Vec<u64>,
+    /// Fast-path knobs (steady-state fast-forward, batched firing).
+    cfg: SimConfig,
+    /// Steady-state detector working state (checkpoints, stats).
+    ff: ffwd::FfState,
 }
 
 impl<'d> SimContext<'d> {
     pub fn new(design: &'d Design, mode: SimMode) -> Result<Self> {
+        Self::with_bank(design, mode, &WeightBank::build(design)?)
+    }
+
+    /// Build a context whose procs share weight storage with every
+    /// other context built from the same `bank` (one transposition per
+    /// design, however many worker contexts the tiled pool holds).
+    pub fn with_bank(design: &'d Design, mode: SimMode, bank: &WeightBank) -> Result<Self> {
         let procs: Vec<NodeProc> =
-            (0..design.nodes.len()).map(|i| build_proc(design, i)).collect::<Result<_>>()?;
+            (0..design.nodes.len()).map(|i| build_proc(design, i, bank)).collect::<Result<_>>()?;
         let fifos: Vec<SimFifo> = design
             .channels
             .iter()
@@ -292,7 +353,32 @@ impl<'d> SimContext<'d> {
             profile: false,
             chan_stall_wait: Vec::new(),
             chan_stall_full: Vec::new(),
+            cfg: SimConfig::default(),
+            ff: ffwd::FfState::new(design, tok_len),
         })
+    }
+
+    /// Override the fast-path knobs (defaults: everything on).
+    pub fn set_config(&mut self, cfg: SimConfig) {
+        self.cfg = cfg;
+    }
+
+    /// The active fast-path knobs.
+    pub fn config(&self) -> SimConfig {
+        self.cfg
+    }
+
+    /// Do this context's procs share (by pointer) their weight storage
+    /// with `other`'s? True exactly when both were built from the same
+    /// [`WeightBank`] — the bytes-shared diagnostic for the tiled
+    /// context pool.
+    pub fn shares_weights_with(&self, other: &SimContext<'_>) -> bool {
+        self.procs.len() == other.procs.len()
+            && self
+                .procs
+                .iter()
+                .zip(&other.procs)
+                .all(|(a, b)| a.weights_addr() == b.weights_addr())
     }
 
     /// Arm per-FIFO back-pressure profiling: every subsequent run
@@ -328,6 +414,7 @@ impl<'d> SimContext<'d> {
         }
         self.chan_stall_wait.iter_mut().for_each(|v| *v = 0);
         self.chan_stall_full.iter_mut().for_each(|v| *v = 0);
+        self.ff.reset();
     }
 
     /// The design this context simulates.
@@ -393,6 +480,14 @@ impl<'d> SimContext<'d> {
         m.add("sim.firings", total_firings);
         m.add("sim.token_ops", token_ops);
         m.gauge_max("sim.arena_high_water", self.arena.high_water() as u64);
+        let ff = self.ff.stats;
+        if ff.periods > 0 {
+            m.add("sim.ff_periods", ff.periods);
+            m.add("sim.ff_cycles", ff.skipped_cycles);
+        }
+        if ff.batched_firings > 0 {
+            m.add("sim.batched_firings", ff.batched_firings);
+        }
     }
 
     /// Simulate the design on a host input tensor (row-major int8
@@ -421,9 +516,28 @@ impl<'d> SimContext<'d> {
         let mut last_drain: u64 = 0;
         let mut total_firings: u64 = 0;
 
+        let ff_active = self.cfg.fast_forward && self.mode == SimMode::Dataflow;
+
         // --- sweep loop --------------------------------------------------
         loop {
             let mut progress = false;
+
+            // 0) steady-state detector: snapshot the timing state about
+            // once per input scanline; on a repeat (modulo a uniform
+            // cycle shift), replay the remaining whole periods
+            // functionally and advance all timing in O(1) per period.
+            if ff_active
+                && self.maybe_fast_forward(
+                    input,
+                    &mut fed,
+                    &mut drained,
+                    &mut last_drain,
+                    &mut total_firings,
+                    &mut output,
+                )?
+            {
+                progress = true;
+            }
 
             // 1) feeder: deliver input tokens (AXI-limited, broadcast).
             while fed < self.in_tokens_total {
@@ -431,11 +545,18 @@ impl<'d> SimContext<'d> {
                     break;
                 }
                 let axi_t = ((fed + 1) * self.token_bytes).div_ceil(AXI_BYTES_PER_CYCLE);
-                let t = self
+                let fifo_t = self
                     .input_chans
                     .iter()
                     .filter_map(|&c| self.fifos[c].next_push_ready())
-                    .fold(axi_t, u64::max);
+                    .fold(0, u64::max);
+                // the detector needs to know whether the host port or
+                // FIFO back-pressure set this push's time (feeder
+                // periodicity condition)
+                if axi_t > fifo_t {
+                    self.ff.axi_bound += 1;
+                }
+                let t = axi_t.max(fifo_t);
                 let base = fed as usize * self.tok_len;
                 let tok = self.arena.alloc_from(&input[base..base + self.tok_len]);
                 let (last, rest) = self.input_chans.split_last().unwrap();
@@ -635,6 +756,7 @@ impl<'d> SimContext<'d> {
                     total_firings,
                     token_ops,
                     fifo_profile: self.fifo_profile(),
+                    ff: self.ff.stats,
                 });
             }
         }
@@ -650,6 +772,7 @@ impl<'d> SimContext<'d> {
             total_firings,
             token_ops,
             fifo_profile: self.fifo_profile(),
+            ff: self.ff.stats,
         })
     }
 }
@@ -886,6 +1009,98 @@ mod tests {
         assert_eq!(chan_wait, node_wait, "consumer stalls attribute to channels");
         assert_eq!(chan_full, node_full, "producer stalls attribute to channels");
         assert!(prof.render().contains("channel"), "render smoke");
+    }
+
+    /// Field-for-field report equality, including trace timing — the
+    /// fast-forward acceptance bar.
+    fn assert_ff_matches_exact(fast: &SimReport, exact: &SimReport, tag: &str) {
+        assert_eq!(fast.output, exact.output, "{tag}: output");
+        assert_eq!(fast.cycles, exact.cycles, "{tag}: cycles");
+        assert_eq!(fast.total_firings, exact.total_firings, "{tag}: firings");
+        assert_eq!(fast.token_ops, exact.token_ops, "{tag}: token ops");
+        assert_eq!(fast.fifo_high_water, exact.fifo_high_water, "{tag}: high water");
+        assert_eq!(fast.deadlock, exact.deadlock, "{tag}: deadlock");
+        for (a, b) in fast.traces.iter().zip(&exact.traces) {
+            assert_eq!(a.firings, b.firings, "{tag}/{}: firings", a.name);
+            assert_eq!(a.first_fire, b.first_fire, "{tag}/{}: first_fire", a.name);
+            assert_eq!(a.last_fire, b.last_fire, "{tag}/{}: last_fire", a.name);
+            assert_eq!(a.complete, b.complete, "{tag}/{}: complete", a.name);
+            assert_eq!(a.stall_in, b.stall_in, "{tag}/{}: stall_in", a.name);
+            assert_eq!(a.stall_out, b.stall_out, "{tag}/{}: stall_out", a.name);
+        }
+    }
+
+    #[test]
+    fn fast_forward_matches_exact_and_skips_periods() {
+        let g = models::conv_relu(64, 4, 4);
+        let d = build_streaming_design(&g).unwrap();
+        let x = det_input(&g);
+
+        let mut ectx = SimContext::new(&d, SimMode::Dataflow).unwrap();
+        ectx.set_config(SimConfig::exact());
+        let exact = ectx.run(&x).unwrap().expect_complete();
+        assert_eq!(exact.ff, FfStats::default(), "exact config must not fast-forward");
+
+        let fast = simulate(&d, &x, SimMode::Dataflow).unwrap().expect_complete();
+        assert!(fast.ff.periods > 0, "steady conv chain must be detected as periodic");
+        assert!(fast.ff.skipped_cycles > 0, "periods must cover simulated cycles");
+        assert!(fast.ff.batched_firings > 0, "replay must use the row-batched kernel");
+        assert!(fast.ff.checkpoints > 0);
+        assert_ff_matches_exact(&fast, &exact, "conv_relu@64");
+    }
+
+    #[test]
+    fn fast_forward_is_bit_exact_on_reused_context() {
+        // period detection state must fully reset between runs
+        let g = models::cascade(32, 8, 8);
+        let d = build_streaming_design(&g).unwrap();
+        let x = det_input(&g);
+        let mut ctx = SimContext::new(&d, SimMode::Dataflow).unwrap();
+        let first = ctx.run(&x).unwrap().expect_complete();
+        let second = ctx.run(&x).unwrap().expect_complete();
+        assert_eq!(first.ff, second.ff, "detector state must reset across runs");
+        assert_eq!(first.output, second.output);
+        assert_eq!(first.cycles, second.cycles);
+    }
+
+    #[test]
+    fn fast_forward_profile_stall_attribution_stays_exact() {
+        // Satellite invariant: under fast-forward, per-channel stall
+        // attribution, histograms and occupancy stay byte-identical to
+        // the exact profiled run, and stalls still sum to trace totals.
+        let g = models::cascade(32, 8, 8);
+        let d = build_streaming_design(&g).unwrap();
+        let x = det_input(&g);
+
+        let mut ctx = SimContext::new(&d, SimMode::Dataflow).unwrap();
+        ctx.enable_profile();
+        let fast = ctx.run(&x).unwrap().expect_complete();
+        let mut ectx = SimContext::new(&d, SimMode::Dataflow).unwrap();
+        ectx.set_config(SimConfig::exact());
+        ectx.enable_profile();
+        let exact = ectx.run(&x).unwrap().expect_complete();
+        assert!(fast.ff.periods > 0, "cascade must reach steady state");
+        assert_ff_matches_exact(&fast, &exact, "cascade profile");
+
+        let pf = fast.fifo_profile.expect("profile armed");
+        let pe = exact.fifo_profile.expect("profile armed");
+        for (a, b) in pf.channels.iter().zip(&pe.channels) {
+            assert_eq!(a.stall_wait, b.stall_wait, "{}: stall_wait", a.name);
+            assert_eq!(a.stall_full, b.stall_full, "{}: stall_full", a.name);
+            assert_eq!(a.pushed, b.pushed, "{}: pushed", a.name);
+            assert_eq!(a.max_occupancy, b.max_occupancy, "{}: max occ", a.name);
+            assert_eq!(a.hist, b.hist, "{}: histogram", a.name);
+        }
+        for c in &pf.channels {
+            let hist_total: u64 = c.hist.iter().sum();
+            assert_eq!(hist_total, c.pushed, "{}: histogram covers every push", c.name);
+        }
+        let node_wait: u64 = fast.traces.iter().map(|t| t.stall_in).sum();
+        let node_full: u64 = fast.traces.iter().map(|t| t.stall_out).sum();
+        let chan_wait: u64 = pf.channels.iter().map(|c| c.stall_wait).sum();
+        let chan_full: u64 = pf.channels.iter().map(|c| c.stall_full).sum();
+        assert_eq!(chan_wait, node_wait, "consumer stalls attribute to channels");
+        assert_eq!(chan_full, node_full, "producer stalls attribute to channels");
     }
 
     #[test]

@@ -1,0 +1,642 @@
+//! Steady-state detector + fast-forward for the dataflow engine.
+//!
+//! The paper's streaming pipelines reach a periodic equilibrium almost
+//! immediately: after the line-buffer fill, every FIFO occupancy,
+//! firing phase and stall pattern repeats with a fixed period (one
+//! input scanline for conv chains). This module detects that
+//! equilibrium and skips it.
+//!
+//! Mechanism: at scanline-aligned checkpoints (top of the sweep loop)
+//! the engine's *timing-relevant* state is snapshotted — per-FIFO
+//! occupancy + arrival times, per-node firing phases, consumption gaps
+//! and timestamps, all relative to the sink clock so the summary is
+//! shift-invariant. When a snapshot matches an earlier one modulo a
+//! uniform cycle shift `dt`, the engine's evolution from now on
+//! provably mirrors the recorded period shifted by `dt` (the transition
+//! function reads nothing else), so the remaining whole periods are
+//! **replayed functionally** — token values still flow token-by-token
+//! through the real procs/arena/FIFOs, because outputs must stay
+//! bit-exact — while every timestamp and statistic is advanced in O(1)
+//! per period. Fill, drain and any transient that breaks the match
+//! conditions fall back to exact execution automatically.
+//!
+//! The replay is also where batched firing pays off: inputs for a whole
+//! output row are streamed in first, then [`SlidingProc::fire_row_into`]
+//! produces the row in one pass (no timestamps to attribute, so no
+//! per-pixel bookkeeping is lost).
+
+use std::collections::hash_map::DefaultHasher;
+use std::hash::{Hash, Hasher};
+
+use anyhow::{ensure, Result};
+
+use crate::dataflow::design::Design;
+use crate::sim::arena::TokenId;
+use crate::sim::process::{NodeProc, SlidingProc};
+
+use super::{FfStats, SimContext, AXI_BYTES_PER_CYCLE};
+
+/// Checkpoint budget per run: past this many snapshots without finding
+/// a period the detector turns itself off (the run is aperiodic or too
+/// irregular — don't keep paying the snapshot cost).
+const MAX_SNAPSHOTS: usize = 160;
+
+/// Detector working state, embedded in [`SimContext`].
+pub(super) struct FfState {
+    snapshots: Vec<Snapshot>,
+    /// `fed` at the last checkpoint — the next one triggers a scanline
+    /// later.
+    last_cp_fed: u64,
+    /// Input tokens per scanline (checkpoint cadence); 1 when the input
+    /// isn't a rank-3 image.
+    scan_stride: u64,
+    /// Cumulative feeder pushes whose time was set by the AXI port
+    /// (strictly later than FIFO back-pressure allowed) — the feeder
+    /// periodicity condition needs to know this.
+    pub(super) axi_bound: u64,
+    pub(super) stats: FfStats,
+    enabled: bool,
+}
+
+impl FfState {
+    pub(super) fn new(design: &Design, tok_len: usize) -> Self {
+        let shape = &design.graph.inputs()[0].ty.shape;
+        let scan_stride = if shape.len() == 3 && tok_len > 0 && (shape[1] * shape[2]) % tok_len == 0
+        {
+            (((shape[1] * shape[2]) / tok_len).max(1)) as u64
+        } else {
+            1
+        };
+        Self {
+            snapshots: Vec::new(),
+            last_cp_fed: 0,
+            scan_stride,
+            axi_bound: 0,
+            stats: FfStats::default(),
+            enabled: true,
+        }
+    }
+
+    pub(super) fn reset(&mut self) {
+        self.snapshots.clear();
+        self.last_cp_fed = 0;
+        self.axi_bound = 0;
+        self.stats = FfStats::default();
+        self.enabled = true;
+    }
+}
+
+/// One node's timing-relevant state at a checkpoint.
+struct NodeSnap {
+    firings: u64,
+    t_free: u64,
+    complete: u64,
+    last_fire: u64,
+    stall_in: u64,
+    stall_out: u64,
+    last_in: Vec<u64>,
+    consumed: Vec<u64>,
+}
+
+/// One FIFO's timing-relevant state at a checkpoint.
+struct FifoSnap {
+    len: usize,
+    pushed: u64,
+    popped: u64,
+    /// Arrival times of the queued tokens, front to back.
+    arrivals: Vec<u64>,
+    /// Pop times of the last `min(popped, capacity+1)` pops, oldest
+    /// first — the readable region of the back-pressure pop ring.
+    window: Vec<u64>,
+    /// Occupancy-histogram counts (empty unless profiling).
+    hist: Vec<u64>,
+}
+
+/// Full engine state summary at one checkpoint. Counters are absolute;
+/// the `hash` folds only shift-invariant views so that two states one
+/// steady period apart collide.
+struct Snapshot {
+    hash: u64,
+    fed: u64,
+    drained: u64,
+    last_drain: u64,
+    axi_bound: u64,
+    nodes: Vec<NodeSnap>,
+    fifos: Vec<FifoSnap>,
+    stall_wait: Vec<u64>,
+    stall_full: Vec<u64>,
+}
+
+/// Per-period deltas (j − i) plus the fix-up payload cloned out of the
+/// matched snapshots, so the replay can mutate the context freely.
+struct FfPlan {
+    dfed: u64,
+    ddrained: u64,
+    daxi: u64,
+    node_df: Vec<u64>,
+    node_dc: Vec<Vec<u64>>,
+    node_dstall_in: Vec<u64>,
+    node_dstall_out: Vec<u64>,
+    chan_dwait: Vec<u64>,
+    chan_dfull: Vec<u64>,
+    /// Queued arrival times at j (unshifted; fix-up adds the skip span).
+    fifo_arrivals: Vec<Vec<u64>>,
+    /// Pop-ring window at j (unshifted).
+    fifo_window: Vec<Vec<u64>>,
+    /// Per-period histogram increments.
+    fifo_dhist: Vec<Vec<u64>>,
+}
+
+/// First and one-past-last output row of a sliding node for which
+/// `needed()` is exactly linear in whole rows (`needed(k + w_out) =
+/// needed(k) + stride·w`): no top-padding saturation below `r_lo`, no
+/// bottom clamp at or above `r_hi`. Fast-forward only ever replays rows
+/// inside `[r_lo, r_hi)` — outside, the consumption pattern changes
+/// shape and the period match would be unsound.
+fn sliding_linear_rows(p: &SlidingProc) -> (u64, u64) {
+    let keff = (p.k - 1) * p.dilation;
+    let r_lo = if keff >= p.pad { 0 } else { (p.pad - keff).div_ceil(p.stride) };
+    let r_hi = (p.h + p.pad).saturating_sub(keff).div_ceil(p.stride);
+    (r_lo as u64, r_hi as u64)
+}
+
+/// Pop time of absolute token index `q` as recorded in a snapshot's
+/// window, if that index is inside the recorded range.
+fn window_at(s: &FifoSnap, q: u64) -> Option<u64> {
+    let w = s.window.len() as u64;
+    let start = s.popped - w;
+    if q < start || q >= s.popped {
+        return None;
+    }
+    Some(s.window[(q - start) as usize])
+}
+
+impl<'d> SimContext<'d> {
+    /// Step 0 of the sweep loop: checkpoint if a scanline of input went
+    /// by, match against history, and if a whole number of steady
+    /// periods fits in the remaining work, replay them. Returns whether
+    /// any fast-forward progress was made.
+    pub(super) fn maybe_fast_forward(
+        &mut self,
+        input: &[i32],
+        fed: &mut u64,
+        drained: &mut u64,
+        last_drain: &mut u64,
+        total_firings: &mut u64,
+        output: &mut Vec<i32>,
+    ) -> Result<bool> {
+        if !self.ff.enabled || *fed < self.ff.last_cp_fed + self.ff.scan_stride {
+            return Ok(false);
+        }
+        let cur = self.take_snapshot(*fed, *drained, *last_drain);
+        self.ff.stats.checkpoints += 1;
+        self.ff.last_cp_fed = *fed;
+
+        let mut plan: Option<(FfPlan, u64, u64)> = None;
+        for past in &self.ff.snapshots {
+            if past.hash != cur.hash {
+                continue;
+            }
+            let Some(dt) = self.verify_period(past, &cur) else { continue };
+            let n_p = self.whole_periods(past, &cur);
+            if n_p == 0 {
+                continue;
+            }
+            plan = Some((extract_plan(past, &cur), dt, n_p));
+            break;
+        }
+        self.ff.snapshots.push(cur);
+        if self.ff.snapshots.len() >= MAX_SNAPSHOTS {
+            self.ff.enabled = false;
+        }
+        let Some((plan, dt, n_p)) = plan else { return Ok(false) };
+
+        self.replay_periods(input, &plan, n_p, fed, drained, total_firings, output)?;
+        self.apply_timing(&plan, n_p, dt, last_drain);
+        self.ff.last_cp_fed = *fed;
+        Ok(true)
+    }
+
+    /// Capture the timing-relevant state (see module docs).
+    fn take_snapshot(&self, fed: u64, drained: u64, last_drain: u64) -> Snapshot {
+        let nodes = self
+            .nodes
+            .iter()
+            .map(|ns| NodeSnap {
+                firings: ns.firings,
+                t_free: ns.t_free,
+                complete: ns.complete,
+                last_fire: ns.trace.last_fire,
+                stall_in: ns.trace.stall_in,
+                stall_out: ns.trace.stall_out,
+                last_in: ns.last_in_time.clone(),
+                consumed: ns.consumed.clone(),
+            })
+            .collect();
+        let fifos = self
+            .fifos
+            .iter()
+            .map(|f| FifoSnap {
+                len: f.len(),
+                pushed: f.pushed,
+                popped: f.popped,
+                arrivals: f.queued_arrivals(),
+                window: f.pop_window(),
+                hist: f.hist_counts().to_vec(),
+            })
+            .collect();
+        let mut s = Snapshot {
+            hash: 0,
+            fed,
+            drained,
+            last_drain,
+            axi_bound: self.ff.axi_bound,
+            nodes,
+            fifos,
+            stall_wait: self.chan_stall_wait.clone(),
+            stall_full: self.chan_stall_full.clone(),
+        };
+        s.hash = self.state_hash(&s);
+        s
+    }
+
+    /// Shift-invariant hash: timestamps relative to the sink clock,
+    /// firing counts as phases, consumption as gaps-to-need. Two states
+    /// exactly one steady period apart hash equal; the full
+    /// [`Self::verify_period`] check runs only on hash collisions.
+    fn state_hash(&self, s: &Snapshot) -> u64 {
+        let mut h = DefaultHasher::new();
+        let ld = s.last_drain;
+        for f in &s.fifos {
+            f.len.hash(&mut h);
+            for &a in &f.arrivals {
+                a.wrapping_sub(ld).hash(&mut h);
+            }
+        }
+        for (nid, n) in s.nodes.iter().enumerate() {
+            let done = n.firings == self.design.nodes[nid].geo.out_tokens;
+            done.hash(&mut h);
+            if done {
+                // frozen absolute state
+                (n.firings, n.t_free, n.complete).hash(&mut h);
+                continue;
+            }
+            let phase = match &self.procs[nid] {
+                NodeProc::Sliding(p) => n.firings % p.w_out as u64,
+                _ => 0,
+            };
+            phase.hash(&mut h);
+            for (slot, &c) in n.consumed.iter().enumerate() {
+                (self.procs[nid].needed(slot, n.firings) - c).hash(&mut h);
+            }
+            n.t_free.wrapping_sub(ld).hash(&mut h);
+            n.complete.wrapping_sub(ld).hash(&mut h);
+            n.last_fire.wrapping_sub(ld).hash(&mut h);
+            for &t in &n.last_in {
+                t.wrapping_sub(ld).hash(&mut h);
+            }
+        }
+        h.finish()
+    }
+
+    /// Is state `b` exactly state `a` advanced by one steady period?
+    /// Checks every input the sweep transition function reads, so a
+    /// `Some(dt)` is a proof that execution from `b` mirrors the
+    /// recorded `a → b` evolution shifted by `dt` — as long as replayed
+    /// sliding rows stay inside their linear region (the caller caps
+    /// periods accordingly).
+    fn verify_period(&self, a: &Snapshot, b: &Snapshot) -> Option<u64> {
+        if b.last_drain <= a.last_drain || b.drained <= a.drained {
+            return None;
+        }
+        let dt = b.last_drain - a.last_drain;
+
+        // Feeder: its push times depend on the absolute AXI schedule,
+        // which is not shift-invariant. Periodicity holds iff either
+        // the AXI rate advances by exactly dt per period (phase
+        // preserved), or no push in the period was AXI-bound and the
+        // AXI clock gains no ground on the FIFO clock (stays behind).
+        if a.fed < self.in_tokens_total {
+            if b.fed <= a.fed {
+                return None;
+            }
+            let bytes = (b.fed - a.fed) * self.token_bytes;
+            let rate_matched =
+                bytes % AXI_BYTES_PER_CYCLE == 0 && bytes / AXI_BYTES_PER_CYCLE == dt;
+            let fifo_bound =
+                b.axi_bound == a.axi_bound && bytes.div_ceil(AXI_BYTES_PER_CYCLE) <= dt;
+            if !(rate_matched || fifo_bound) {
+                return None;
+            }
+        }
+
+        for nid in 0..a.nodes.len() {
+            let (x, y) = (&a.nodes[nid], &b.nodes[nid]);
+            if x.firings == self.design.nodes[nid].geo.out_tokens {
+                continue; // done at a ⇒ frozen ever since
+            }
+            let df = y.firings - x.firings;
+            if df == 0 {
+                // a node idle across the period must be idle in every
+                // future period: frozen in place
+                if x.t_free != y.t_free
+                    || x.complete != y.complete
+                    || x.last_fire != y.last_fire
+                    || x.last_in != y.last_in
+                    || x.consumed != y.consumed
+                {
+                    return None;
+                }
+                continue;
+            }
+            if x.firings == 0 {
+                // replaying firing 0 would skip `first_fire` attribution
+                return None;
+            }
+            if y.t_free != x.t_free + dt
+                || y.complete != x.complete + dt
+                || y.last_fire != x.last_fire + dt
+            {
+                return None;
+            }
+            for s in 0..x.last_in.len() {
+                if y.last_in[s] != x.last_in[s] + dt {
+                    return None;
+                }
+                let gx = self.procs[nid].needed(s, x.firings) - x.consumed[s];
+                let gy = self.procs[nid].needed(s, y.firings) - y.consumed[s];
+                if gx != gy {
+                    return None;
+                }
+            }
+            if let NodeProc::Sliding(p) = &self.procs[nid] {
+                let w_out = p.w_out as u64;
+                let (r_lo, _) = sliding_linear_rows(p);
+                // whole rows per period, starting inside the linear
+                // region — otherwise needed()'s increments change shape
+                // across periods
+                if df % w_out != 0 || x.firings / w_out < r_lo {
+                    return None;
+                }
+            }
+        }
+
+        for cid in 0..a.fifos.len() {
+            let (fx, fy) = (&a.fifos[cid], &b.fifos[cid]);
+            if fx.len != fy.len {
+                return None;
+            }
+            for k in 0..fx.len {
+                if fy.arrivals[k] != fx.arrivals[k] + dt {
+                    return None;
+                }
+            }
+            // Back-pressure pop ring: every entry a future push may
+            // read must mirror its counterpart one period earlier.
+            // Channels that never outgrow their capacity never read
+            // the ring at all.
+            let cap = self.fifos[cid].capacity;
+            if cap != usize::MAX && self.design.channels[cid].tokens_total > cap as u64 {
+                if fx.pushed < cap as u64 {
+                    return None; // still in the free (pre-ring) regime at a
+                }
+                let dpop = fy.popped - fx.popped;
+                for q in fy.pushed.saturating_sub(cap as u64)..fy.popped {
+                    let (Some(tb), Some(ta)) = (window_at(fy, q), window_at(fx, q - dpop))
+                    else {
+                        return None;
+                    };
+                    if tb != ta + dt {
+                        return None;
+                    }
+                }
+            }
+        }
+        Some(dt)
+    }
+
+    /// How many whole periods fit before any counter overruns its total
+    /// or a sliding node leaves its linear row region.
+    fn whole_periods(&self, a: &Snapshot, b: &Snapshot) -> u64 {
+        let mut n_p = (self.out_tokens_total - b.drained) / (b.drained - a.drained);
+        if b.fed > a.fed {
+            n_p = n_p.min((self.in_tokens_total - b.fed) / (b.fed - a.fed));
+        }
+        for nid in 0..a.nodes.len() {
+            let df = b.nodes[nid].firings - a.nodes[nid].firings;
+            if df == 0 {
+                continue;
+            }
+            let out_tokens = self.design.nodes[nid].geo.out_tokens;
+            n_p = n_p.min((out_tokens - b.nodes[nid].firings) / df);
+            if let NodeProc::Sliding(p) = &self.procs[nid] {
+                let (_, r_hi) = sliding_linear_rows(p);
+                let limit = r_hi * p.w_out as u64;
+                n_p = n_p.min(limit.saturating_sub(b.nodes[nid].firings) / df);
+            }
+        }
+        n_p
+    }
+
+    /// Replay `n_p` whole periods functionally: real tokens through the
+    /// real procs, but no timestamping — timing is applied afterwards
+    /// by [`Self::apply_timing`]. Node order is topological, so each
+    /// producer finishes all its periods before any consumer streams.
+    #[allow(clippy::too_many_arguments)]
+    fn replay_periods(
+        &mut self,
+        input: &[i32],
+        plan: &FfPlan,
+        n_p: u64,
+        fed: &mut u64,
+        drained: &mut u64,
+        total_firings: &mut u64,
+        output: &mut Vec<i32>,
+    ) -> Result<()> {
+        let design = self.design;
+
+        // 1) feeder
+        for _ in 0..n_p * plan.dfed {
+            ensure!(*fed < self.in_tokens_total, "fast-forward: feeder overrun");
+            let base = *fed as usize * self.tok_len;
+            let tok = self.arena.alloc_from(&input[base..base + self.tok_len]);
+            let (last, rest) = self.input_chans.split_last().unwrap();
+            for &c in rest {
+                self.arena.retain(tok);
+                self.fifos[c].replay_push(tok);
+            }
+            self.fifos[*last].replay_push(tok);
+            *fed += 1;
+        }
+
+        // 2) nodes
+        let mut row_buf: Vec<TokenId> = Vec::new();
+        for nid in 0..self.nodes.len() {
+            let df = plan.node_df[nid];
+            if df == 0 {
+                continue;
+            }
+            let dn = &design.nodes[nid];
+            let target = self.nodes[nid].firings + n_p * df;
+            let c_targets: Vec<u64> = self.nodes[nid]
+                .consumed
+                .iter()
+                .zip(&plan.node_dc[nid])
+                .map(|(&c, &dc)| c + n_p * dc)
+                .collect();
+            let batch_w = match &self.procs[nid] {
+                NodeProc::Sliding(p) if self.cfg.batch_fire => Some(p.w_out as u64),
+                _ => None,
+            };
+            while self.nodes[nid].firings < target {
+                let k = self.nodes[nid].firings;
+                let fire_n = match batch_w {
+                    Some(w) if k % w == 0 && k + w <= target => w,
+                    _ => 1,
+                };
+                // stream inputs through the last firing of this step
+                for (slot, &cid) in dn.in_channels.iter().enumerate() {
+                    let need = self.procs[nid].needed(slot, k + fire_n - 1);
+                    while self.nodes[nid].consumed[slot] < need {
+                        ensure!(
+                            !self.fifos[cid.0].is_empty(),
+                            "fast-forward: replay underrun on {}",
+                            design.channels[cid.0].name
+                        );
+                        let tok = self.fifos[cid.0].replay_pop();
+                        self.procs[nid].accept(slot, tok, &mut self.arena);
+                        self.nodes[nid].consumed[slot] += 1;
+                    }
+                }
+                let (last, rest) = dn.out_channels.split_last().unwrap();
+                if fire_n > 1 {
+                    match &mut self.procs[nid] {
+                        NodeProc::Sliding(p) => p.fire_row_into(k, &mut self.arena, &mut row_buf),
+                        _ => unreachable!("only sliding nodes batch-fire"),
+                    }
+                    for &v in &row_buf {
+                        for &cid in rest {
+                            self.arena.retain(v);
+                            self.fifos[cid.0].replay_push(v);
+                        }
+                        self.fifos[last.0].replay_push(v);
+                    }
+                    self.ff.stats.batched_firings += fire_n;
+                } else {
+                    let v = self.procs[nid].fire_into(k, &mut self.arena);
+                    for &cid in rest {
+                        self.arena.retain(v);
+                        self.fifos[cid.0].replay_push(v);
+                    }
+                    self.fifos[last.0].replay_push(v);
+                }
+                self.nodes[nid].firings += fire_n;
+                *total_firings += fire_n;
+            }
+            // top up eager consumption to the mirrored state (the exact
+            // engine streams ahead of the current firing's need)
+            for (slot, &cid) in dn.in_channels.iter().enumerate() {
+                while self.nodes[nid].consumed[slot] < c_targets[slot] {
+                    ensure!(
+                        !self.fifos[cid.0].is_empty(),
+                        "fast-forward: top-up underrun on {}",
+                        design.channels[cid.0].name
+                    );
+                    let tok = self.fifos[cid.0].replay_pop();
+                    self.procs[nid].accept(slot, tok, &mut self.arena);
+                    self.nodes[nid].consumed[slot] += 1;
+                }
+            }
+        }
+
+        // 3) sink
+        for _ in 0..n_p * plan.ddrained {
+            ensure!(!self.fifos[self.out_chan].is_empty(), "fast-forward: sink underrun");
+            let tok = self.fifos[self.out_chan].replay_pop();
+            output.extend_from_slice(self.arena.get(tok));
+            self.arena.release(tok);
+            *drained += 1;
+        }
+        Ok(())
+    }
+
+    /// Apply the skipped periods' timing and statistics: every live
+    /// timestamp shifts by `n_p·dt`, every cumulative statistic grows by
+    /// `n_p ×` its per-period delta.
+    fn apply_timing(&mut self, plan: &FfPlan, n_p: u64, dt: u64, last_drain: &mut u64) {
+        let shift = n_p * dt;
+        *last_drain += shift;
+        for nid in 0..self.nodes.len() {
+            let ns = &mut self.nodes[nid];
+            if plan.node_df[nid] > 0 {
+                ns.t_free += shift;
+                ns.complete += shift;
+                ns.trace.last_fire += shift;
+                for t in &mut ns.last_in_time {
+                    *t += shift;
+                }
+            }
+            ns.trace.stall_in += n_p * plan.node_dstall_in[nid];
+            ns.trace.stall_out += n_p * plan.node_dstall_out[nid];
+        }
+        for (c, d) in self.chan_stall_wait.iter_mut().zip(&plan.chan_dwait) {
+            *c += n_p * d;
+        }
+        for (c, d) in self.chan_stall_full.iter_mut().zip(&plan.chan_dfull) {
+            *c += n_p * d;
+        }
+        for cid in 0..self.fifos.len() {
+            let arrivals: Vec<u64> = plan.fifo_arrivals[cid].iter().map(|&t| t + shift).collect();
+            let window: Vec<u64> = plan.fifo_window[cid].iter().map(|&t| t + shift).collect();
+            self.fifos[cid].apply_fast_forward(&arrivals, &window, &plan.fifo_dhist[cid], n_p);
+        }
+        self.ff.axi_bound += n_p * plan.daxi;
+        self.ff.stats.periods += n_p;
+        self.ff.stats.skipped_cycles += shift;
+    }
+}
+
+/// Clone the per-period deltas and fix-up payload out of the matched
+/// snapshot pair (so the borrow on the snapshot store can end before
+/// the replay mutates the context).
+fn extract_plan(a: &Snapshot, b: &Snapshot) -> FfPlan {
+    FfPlan {
+        dfed: b.fed - a.fed,
+        ddrained: b.drained - a.drained,
+        daxi: b.axi_bound - a.axi_bound,
+        node_df: a
+            .nodes
+            .iter()
+            .zip(&b.nodes)
+            .map(|(x, y)| y.firings - x.firings)
+            .collect(),
+        node_dc: a
+            .nodes
+            .iter()
+            .zip(&b.nodes)
+            .map(|(x, y)| x.consumed.iter().zip(&y.consumed).map(|(&cx, &cy)| cy - cx).collect())
+            .collect(),
+        node_dstall_in: a
+            .nodes
+            .iter()
+            .zip(&b.nodes)
+            .map(|(x, y)| y.stall_in - x.stall_in)
+            .collect(),
+        node_dstall_out: a
+            .nodes
+            .iter()
+            .zip(&b.nodes)
+            .map(|(x, y)| y.stall_out - x.stall_out)
+            .collect(),
+        chan_dwait: a.stall_wait.iter().zip(&b.stall_wait).map(|(&x, &y)| y - x).collect(),
+        chan_dfull: a.stall_full.iter().zip(&b.stall_full).map(|(&x, &y)| y - x).collect(),
+        fifo_arrivals: b.fifos.iter().map(|f| f.arrivals.clone()).collect(),
+        fifo_window: b.fifos.iter().map(|f| f.window.clone()).collect(),
+        fifo_dhist: a
+            .fifos
+            .iter()
+            .zip(&b.fifos)
+            .map(|(x, y)| x.hist.iter().zip(&y.hist).map(|(&hx, &hy)| hy - hx).collect())
+            .collect(),
+    }
+}

@@ -175,6 +175,94 @@ impl SimFifo {
         }
     }
 
+    /// Push for the fast-forward replay path: enqueue the handle and
+    /// count it, but skip timestamping, the capacity assert, occupancy
+    /// high-water and the histogram. The replay's transient occupancy is
+    /// an artifact of its batched (whole-period) schedule, not of the
+    /// simulated machine; the skipped periods' timing and statistics are
+    /// applied analytically by [`Self::apply_fast_forward`] afterwards.
+    pub fn replay_push(&mut self, tok: TokenId) {
+        if self.len == self.ring.len() {
+            self.grow();
+        }
+        let tail = (self.head + self.len) % self.ring.len();
+        self.ring[tail] = (0, tok);
+        self.len += 1;
+        self.pushed += 1;
+    }
+
+    /// Pop for the replay path: dequeue and count, with no pop-time
+    /// recording ([`Self::apply_fast_forward`] rebuilds the pop window).
+    pub fn replay_pop(&mut self) -> TokenId {
+        assert!(self.len > 0, "replay pop from empty FIFO");
+        let (_, tok) = self.ring[self.head];
+        self.head = (self.head + 1) % self.ring.len();
+        self.len -= 1;
+        self.popped += 1;
+        tok
+    }
+
+    /// Arrival times of every queued token, front to back (steady-state
+    /// snapshot helper).
+    pub fn queued_arrivals(&self) -> Vec<u64> {
+        (0..self.len).map(|k| self.arrival(k).unwrap()).collect()
+    }
+
+    /// Pop times of the most recent `min(popped, capacity + 1)` pops,
+    /// oldest first (snapshot helper; empty for unbounded FIFOs or
+    /// before the first pop).
+    pub fn pop_window(&self) -> Vec<u64> {
+        if self.capacity == usize::MAX || self.pop_ring.is_empty() {
+            return Vec::new();
+        }
+        let keep = self.pop_ring.len() as u64;
+        let w = self.popped.min(keep);
+        (self.popped - w..self.popped).map(|q| self.pop_ring[(q % keep) as usize]).collect()
+    }
+
+    /// Occupancy-histogram counts (zeros until profiling is enabled) —
+    /// snapshot helper for the fast-forward statistics replay.
+    pub fn hist_counts(&self) -> &[u64] {
+        &self.hist
+    }
+
+    /// Finalize this FIFO after a fast-forward: restore the queued
+    /// tokens' arrival times (`arrivals`, front to back, pre-shifted by
+    /// the skipped span), rebuild the back-pressure pop window from the
+    /// matched snapshot's `window` (pop times for the absolute token
+    /// indices ending at the current `popped`, oldest first,
+    /// pre-shifted), and fold `periods ×` the per-period histogram delta
+    /// into the profile histogram.
+    pub fn apply_fast_forward(
+        &mut self,
+        arrivals: &[u64],
+        window: &[u64],
+        hist_delta: &[u64],
+        periods: u64,
+    ) {
+        assert_eq!(arrivals.len(), self.len, "fast-forward occupancy mismatch");
+        for (k, &t) in arrivals.iter().enumerate() {
+            let idx = (self.head + k) % self.ring.len();
+            self.ring[idx].0 = t;
+        }
+        if self.capacity != usize::MAX && !window.is_empty() {
+            if self.pop_ring.is_empty() {
+                self.pop_ring = vec![0; self.capacity + 1];
+            }
+            let keep = self.pop_ring.len() as u64;
+            debug_assert!(window.len() as u64 <= keep);
+            for (o, &t) in window.iter().enumerate() {
+                let q = self.popped - window.len() as u64 + o as u64;
+                self.pop_ring[(q % keep) as usize] = t;
+            }
+        }
+        if !self.hist.is_empty() {
+            for (h, &d) in self.hist.iter_mut().zip(hist_delta) {
+                *h += periods * d;
+            }
+        }
+    }
+
     /// Arrival cycle of the k-th (0-based, relative to current front)
     /// queued token, if present.
     pub fn arrival(&self, k: usize) -> Option<u64> {

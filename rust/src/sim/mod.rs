@@ -23,4 +23,5 @@ pub mod engine;
 pub mod naive;
 pub mod trace;
 
-pub use engine::{simulate, SimContext, SimMode, SimReport};
+pub use engine::{simulate, FfStats, SimConfig, SimContext, SimMode, SimReport};
+pub use process::WeightBank;

@@ -33,7 +33,7 @@ use crate::dataflow::design::Design;
 use crate::ir::generic::Payload;
 
 use super::engine::{SimMode, SimReport, AXI_BYTES_PER_CYCLE};
-use super::process::{apply_payload, build_proc, NodeProc};
+use super::process::{apply_payload, build_proc, NodeProc, WeightBank};
 use super::trace::NodeTrace;
 
 type Token = Vec<i32>;
@@ -143,8 +143,8 @@ enum NaiveProc {
 impl NaiveProc {
     /// Derive the naive proc from the arena-engine's builder so the two
     /// paths can never disagree about geometry or weights.
-    fn from_node(d: &Design, nid: usize) -> Result<Self> {
-        Ok(match build_proc(d, nid)? {
+    fn from_node(d: &Design, nid: usize, bank: &WeightBank) -> Result<Self> {
+        Ok(match build_proc(d, nid, bank)? {
             NodeProc::Sliding(p) => NaiveProc::Sliding {
                 h: p.h,
                 w: p.w,
@@ -155,13 +155,13 @@ impl NaiveProc {
                 stride: p.stride,
                 dilation: p.dilation,
                 pad: p.pad,
-                weights: p.weights,
+                weights: p.weights.to_vec(),
                 payload: p.payload,
                 buf: Vec::new(),
             },
             NodeProc::Reduction(p) => NaiveProc::Reduction {
                 n: p.n,
-                weights: p.weights,
+                weights: p.weights.to_vec(),
                 cur: None,
             },
             NodeProc::Parallel(p) => NaiveProc::Parallel {
@@ -320,10 +320,11 @@ pub fn simulate_naive(design: &Design, input: &[i32], mode: SimMode) -> Result<S
         })
         .collect();
 
+    let bank = WeightBank::build(design)?;
     let mut nodes: Vec<NodeState> = (0..design.nodes.len())
         .map(|i| {
             Ok(NodeState {
-                proc: NaiveProc::from_node(design, i)?,
+                proc: NaiveProc::from_node(design, i, &bank)?,
                 firings: 0,
                 t_free: 0,
                 complete: 0,

@@ -17,6 +17,7 @@
 //! traffic.
 
 use std::collections::VecDeque;
+use std::sync::Arc;
 
 use anyhow::{bail, ensure, Context, Result};
 
@@ -119,6 +120,17 @@ impl NodeProc {
         }
     }
 
+    /// Address of this proc's (shared) weight storage, if any — the
+    /// bank-sharing diagnostic behind
+    /// [`crate::sim::SimContext::shares_weights_with`].
+    pub fn weights_addr(&self) -> Option<usize> {
+        match self {
+            NodeProc::Sliding(p) if !p.weights.is_empty() => Some(p.weights.as_ptr() as usize),
+            NodeProc::Reduction(p) => Some(p.weights.as_ptr() as usize),
+            _ => None,
+        }
+    }
+
     /// Clear per-run state, keeping weights and buffer capacity.
     pub fn reset(&mut self) {
         match self {
@@ -130,6 +142,72 @@ impl NodeProc {
                 }
             }
         }
+    }
+}
+
+/// Read-only, reference-counted weight storage for one design: the raw
+/// and transposed weights of every node, extracted and transposed
+/// **once** and shared by every [`crate::sim::SimContext`] built via
+/// [`crate::sim::SimContext::with_bank`]. The tiled context pool builds
+/// one bank per design, so `ctx_builds`-worth of duplicate
+/// transposition work and weight memory collapses to a single copy.
+pub struct WeightBank {
+    nodes: Vec<BankEntry>,
+}
+
+struct BankEntry {
+    /// Untransposed weights as stored in the graph (empty if weightless).
+    raw: Arc<[i32]>,
+    /// (K,K,C,F) transposition for sliding nodes; empty otherwise.
+    transposed: Arc<[i32]>,
+}
+
+impl WeightBank {
+    /// Extract and transpose every node's weights.
+    pub fn build(d: &Design) -> Result<WeightBank> {
+        let nodes = (0..d.nodes.len())
+            .map(|nid| {
+                let node = &d.nodes[nid];
+                let op = &d.graph.ops[node.op_index];
+                let raw: Vec<i32> = op
+                    .inputs
+                    .iter()
+                    .find(|&&t| d.graph.tensor(t).kind == TensorKind::Weight)
+                    .map(|&t| {
+                        d.graph
+                            .tensor(t)
+                            .data
+                            .as_ref()
+                            .expect("weight without data")
+                            .iter()
+                            .map(|&v| v as i32)
+                            .collect()
+                    })
+                    .unwrap_or_default();
+                let transposed = match node.geo.class {
+                    KernelClass::SlidingWindow(sw) => {
+                        let in_t = d.graph.tensor(op.inputs[0]);
+                        ensure!(in_t.ty.rank() == 3, "sliding input must be (H,W,C)");
+                        let c = in_t.ty.shape[2];
+                        let out_t = d.graph.tensor(op.output);
+                        let f = *out_t.ty.shape.last().unwrap();
+                        let k = op.dims[sw.reduction_dim];
+                        if op.payload == Payload::MulAcc {
+                            ensure!(raw.len() == f * k * k * c, "conv weight size mismatch");
+                        }
+                        transpose_fkkc_to_kkcf(&raw, f, k, c)
+                    }
+                    _ => Vec::new(),
+                };
+                Ok(BankEntry { raw: raw.into(), transposed: transposed.into() })
+            })
+            .collect::<Result<_>>()?;
+        Ok(WeightBank { nodes })
+    }
+
+    /// Total i32 weight values held (raw + transposed) — diagnostics.
+    pub fn values(&self) -> usize {
+        self.nodes.iter().map(|e| e.raw.len() + e.transposed.len()).sum()
     }
 }
 
@@ -166,19 +244,24 @@ pub struct SlidingProc {
     pub stride: usize,
     pub dilation: usize,
     pub pad: usize,
-    /// Flattened weights (F, K, K, C) as i32; empty for maxpool.
-    pub weights: Vec<i32>,
+    /// Flattened weights (F, K, K, C) as i32; empty for maxpool. Shared
+    /// (refcounted) with every other context built from the same
+    /// [`WeightBank`].
+    pub weights: Arc<[i32]>,
     /// Weights transposed to (K, K, C, F) so the per-(kh,kw,cc) inner
     /// loop reads a contiguous F-vector — the simulator's hottest loop
-    /// (see EXPERIMENTS.md §Perf). Transposed **once per design** now
-    /// that procs live in a reusable `SimContext`.
-    pub(crate) weights_t: Vec<i32>,
+    /// (see EXPERIMENTS.md §Perf). Transposed **once per design** and
+    /// shared via the [`WeightBank`].
+    pub(crate) weights_t: Arc<[i32]>,
     pub payload: Payload,
     /// Consumed input values (row-major (h, w, c)); the engine's FIFO
     /// back-pressure bounds how far this runs ahead — functionally we
     /// retain everything for simplicity (simulation memory, not BRAM).
     /// Capacity survives `reset`, so cell re-runs never reallocate.
     buf: Vec<i32>,
+    /// Row-granular output scratch for [`Self::fire_row_into`]
+    /// (`w_out * f` values, capacity kept across runs).
+    row_scratch: Vec<i32>,
 }
 
 impl SlidingProc {
@@ -276,6 +359,82 @@ impl SlidingProc {
         }
         id
     }
+
+    /// Batched firing for the fast-forward replay path: compute one
+    /// whole output row — pixels `k .. k + w_out`, `k` row-aligned — in
+    /// a single pass and hand back `w_out` freshly allocated tokens.
+    ///
+    /// The win over per-pixel [`Self::fire_into`]: the pad/bounds
+    /// branches move out of the inner loop (each `(kh, kw)` tap
+    /// precomputes its valid output-column range), the weight F-vector
+    /// of a tap is reused across the whole row, and the arena
+    /// reservation is batched ([`TokenArena::alloc_many`]). Requires the
+    /// line buffer to be filled through `needed(k + w_out - 1)` — the
+    /// replay streams inputs first. Bit-exact with `w_out` calls to
+    /// `fire_into` (asserted by the unit test and the oracle property
+    /// suite).
+    pub(crate) fn fire_row_into(&mut self, k: u64, arena: &mut TokenArena, out: &mut Vec<TokenId>) {
+        debug_assert_eq!(k as usize % self.w_out, 0, "row firing must start row-aligned");
+        let r = (k as usize) / self.w_out;
+        let (w_out, f, c, w) = (self.w_out, self.f, self.c, self.w);
+        let fill = match self.payload {
+            Payload::MulAcc => 0,
+            Payload::MaxReduce => i32::MIN,
+            other => panic!("sliding node with payload {other:?}"),
+        };
+        self.row_scratch.clear();
+        self.row_scratch.resize(w_out * f, fill);
+        let scratch = &mut self.row_scratch[..];
+        let buf = &self.buf[..];
+        let wt = &self.weights_t[..];
+        for kh in 0..self.k {
+            let ir = r * self.stride + kh * self.dilation;
+            if ir < self.pad || ir - self.pad >= self.h {
+                continue;
+            }
+            let ir = ir - self.pad;
+            for kw in 0..self.k {
+                // valid columns: pad <= cx*stride + kw*dilation <= pad + w - 1
+                let off = kw * self.dilation;
+                let cx_lo = if off >= self.pad {
+                    0
+                } else {
+                    (self.pad - off).div_ceil(self.stride)
+                };
+                let hi_raw = self.pad + w - 1;
+                if off > hi_raw {
+                    continue;
+                }
+                let cx_hi = ((hi_raw - off) / self.stride + 1).min(w_out);
+                if cx_lo >= cx_hi {
+                    continue;
+                }
+                let wtap = if wt.is_empty() {
+                    &[][..]
+                } else {
+                    let wbase = (kh * self.k + kw) * c * f;
+                    &wt[wbase..wbase + c * f]
+                };
+                for cx in cx_lo..cx_hi {
+                    let ic = cx * self.stride + off - self.pad;
+                    let px = &buf[(ir * w + ic) * c..(ir * w + ic) * c + c];
+                    let o = &mut scratch[cx * f..(cx + 1) * f];
+                    match self.payload {
+                        Payload::MulAcc => Self::mac_tap(o, px, wtap, f),
+                        _ => {
+                            for (ov, &v) in o.iter_mut().zip(px) {
+                                *ov = (*ov).max(v);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        arena.alloc_many(f, w_out, out);
+        for (cx, &id) in out.iter().enumerate() {
+            arena.slice_mut(id).copy_from_slice(&self.row_scratch[cx * f..(cx + 1) * f]);
+        }
+    }
 }
 
 /// Regular-reduction node (linear): one activation row in, one output
@@ -283,8 +442,8 @@ impl SlidingProc {
 pub struct ReductionProc {
     pub k: usize,
     pub n: usize,
-    /// (K, N) weights as i32.
-    pub weights: Vec<i32>,
+    /// (K, N) weights as i32, shared via the [`WeightBank`].
+    pub weights: Arc<[i32]>,
     cur: Option<TokenId>,
 }
 
@@ -350,10 +509,13 @@ impl ParallelProc {
     }
 }
 
-/// Build the functional behaviour of node `nid` of a design.
-pub fn build_proc(d: &Design, nid: usize) -> Result<NodeProc> {
+/// Build the functional behaviour of node `nid` of a design, sourcing
+/// weights from the (shared) `bank` instead of re-extracting and
+/// re-transposing them per context.
+pub fn build_proc(d: &Design, nid: usize, bank: &WeightBank) -> Result<NodeProc> {
     let node = &d.nodes[nid];
     let op = &d.graph.ops[node.op_index];
+    let entry = &bank.nodes[nid];
     match node.geo.class {
         KernelClass::SlidingWindow(sw) => {
             let in_t = d.graph.tensor(op.inputs[0]);
@@ -363,25 +525,6 @@ pub fn build_proc(d: &Design, nid: usize) -> Result<NodeProc> {
             let w_out = out_t.ty.shape[1];
             let f = *out_t.ty.shape.last().unwrap();
             let k = op.dims[sw.reduction_dim];
-            let weights: Vec<i32> = op
-                .inputs
-                .iter()
-                .find(|&&t| d.graph.tensor(t).kind == TensorKind::Weight)
-                .map(|&t| {
-                    d.graph
-                        .tensor(t)
-                        .data
-                        .as_ref()
-                        .expect("weight without data")
-                        .iter()
-                        .map(|&v| v as i32)
-                        .collect()
-                })
-                .unwrap_or_default();
-            if op.payload == Payload::MulAcc {
-                ensure!(weights.len() == f * k * k * c, "conv weight size mismatch");
-            }
-            let weights_t = transpose_fkkc_to_kkcf(&weights, f, k, c);
             Ok(NodeProc::Sliding(SlidingProc {
                 h,
                 w,
@@ -392,10 +535,11 @@ pub fn build_proc(d: &Design, nid: usize) -> Result<NodeProc> {
                 stride: sw.stride as usize,
                 dilation: sw.dilation as usize,
                 pad: op.pad,
-                weights,
-                weights_t,
+                weights: entry.raw.clone(),
+                weights_t: entry.transposed.clone(),
                 payload: op.payload,
                 buf: Vec::new(),
+                row_scratch: Vec::new(),
             }))
         }
         KernelClass::RegularReduction => {
@@ -407,12 +551,7 @@ pub fn build_proc(d: &Design, nid: usize) -> Result<NodeProc> {
             let wt = d.graph.tensor(*wt);
             ensure!(wt.ty.rank() == 2, "linear weights must be (K,N)");
             let (k, n) = (wt.ty.shape[0], wt.ty.shape[1]);
-            Ok(NodeProc::Reduction(ReductionProc {
-                k,
-                n,
-                weights: wt.data.as_ref().unwrap().iter().map(|&v| v as i32).collect(),
-                cur: None,
-            }))
+            Ok(NodeProc::Reduction(ReductionProc { k, n, weights: entry.raw.clone(), cur: None }))
         }
         KernelClass::PureParallel => {
             let arity = node.in_channels.len();
@@ -440,6 +579,10 @@ mod tests {
     use crate::dataflow::build::build_streaming_design;
     use crate::ir::builder::models;
 
+    fn test_proc(d: &Design, nid: usize) -> NodeProc {
+        build_proc(d, nid, &WeightBank::build(d).unwrap()).unwrap()
+    }
+
     #[test]
     fn payload_semantics_match_ref_contract() {
         // floor-rounding arithmetic shift and clamping, as in ref.py
@@ -461,7 +604,7 @@ mod tests {
     fn sliding_needed_is_monotone_and_bounded() {
         let g = models::conv_relu(16, 4, 4);
         let d = build_streaming_design(&g).unwrap();
-        let NodeProc::Sliding(p) = build_proc(&d, 0).unwrap() else { panic!() };
+        let NodeProc::Sliding(p) = test_proc(&d, 0) else { panic!() };
         let total = 16 * 16;
         let mut last = 0;
         for k in 0..total as u64 {
@@ -482,9 +625,9 @@ mod tests {
         // (interior) = sum of the 3x3 neighbourhood.
         let g = models::conv_relu(4, 1, 1);
         let d = build_streaming_design(&g).unwrap();
-        let NodeProc::Sliding(mut p) = build_proc(&d, 0).unwrap() else { panic!() };
-        p.weights = vec![1; 9];
-        p.weights_t = vec![1; 9];
+        let NodeProc::Sliding(mut p) = test_proc(&d, 0) else { panic!() };
+        p.weights = vec![1; 9].into();
+        p.weights_t = vec![1; 9].into();
         let mut arena = TokenArena::new();
         let vals: Vec<i32> = (0..16).collect();
         for v in &vals {
@@ -505,7 +648,7 @@ mod tests {
     fn reduction_fire_is_matvec() {
         let g = models::linear();
         let d = build_streaming_design(&g).unwrap();
-        let NodeProc::Reduction(mut p) = build_proc(&d, 0).unwrap() else { panic!() };
+        let NodeProc::Reduction(mut p) = test_proc(&d, 0) else { panic!() };
         // x = e0 (first unit vector): out = first row of W
         let mut arena = TokenArena::new();
         let mut x = vec![0i32; p.k];
@@ -536,10 +679,86 @@ mod tests {
     }
 
     #[test]
+    fn fire_row_matches_per_pixel_fires() {
+        // the batched replay kernel must be bit-exact with w_out
+        // per-pixel fires, padding rows and columns included
+        let g = models::conv_relu(8, 3, 5);
+        let d = build_streaming_design(&g).unwrap();
+        let NodeProc::Sliding(mut a) = test_proc(&d, 0) else { panic!() };
+        let NodeProc::Sliding(mut b) = test_proc(&d, 0) else { panic!() };
+        let mut arena = TokenArena::new();
+        let vals = crate::util::prng::det_tensor(crate::util::prng::SEED_INPUT, 8 * 8 * 3);
+        for px in vals.chunks(3) {
+            let px: Vec<i32> = px.iter().map(|&v| v as i32).collect();
+            let ta = arena.alloc_from(&px);
+            a.accept(ta, &mut arena);
+            let tb = arena.alloc_from(&px);
+            b.accept(tb, &mut arena);
+        }
+        let mut row = Vec::new();
+        for r in 0..8u64 {
+            let k = r * a.w_out as u64;
+            b.fire_row_into(k, &mut arena, &mut row);
+            assert_eq!(row.len(), a.w_out);
+            for (cx, &tok) in row.iter().enumerate() {
+                let want = a.fire_into(k + cx as u64, &mut arena);
+                assert_eq!(arena.get(tok), arena.get(want), "conv row {r} col {cx}");
+                arena.release(want);
+            }
+            for &tok in &row {
+                arena.release(tok);
+            }
+        }
+    }
+
+    #[test]
+    fn fire_row_matches_per_pixel_fires_for_strided_pool() {
+        let mk = || SlidingProc {
+            h: 8,
+            w: 8,
+            c: 4,
+            w_out: 4,
+            f: 4,
+            k: 2,
+            stride: 2,
+            dilation: 1,
+            pad: 0,
+            weights: Vec::<i32>::new().into(),
+            weights_t: Vec::<i32>::new().into(),
+            payload: Payload::MaxReduce,
+            buf: Vec::new(),
+            row_scratch: Vec::new(),
+        };
+        let (mut a, mut b) = (mk(), mk());
+        let mut arena = TokenArena::new();
+        let vals = crate::util::prng::det_tensor(crate::util::prng::SEED_INPUT, 8 * 8 * 4);
+        for px in vals.chunks(4) {
+            let px: Vec<i32> = px.iter().map(|&v| v as i32).collect();
+            let ta = arena.alloc_from(&px);
+            a.accept(ta, &mut arena);
+            let tb = arena.alloc_from(&px);
+            b.accept(tb, &mut arena);
+        }
+        let mut row = Vec::new();
+        for r in 0..4u64 {
+            let k = r * 4;
+            b.fire_row_into(k, &mut arena, &mut row);
+            for (cx, &tok) in row.iter().enumerate() {
+                let want = a.fire_into(k + cx as u64, &mut arena);
+                assert_eq!(arena.get(tok), arena.get(want), "pool row {r} col {cx}");
+                arena.release(want);
+            }
+            for &tok in &row {
+                arena.release(tok);
+            }
+        }
+    }
+
+    #[test]
     fn reset_clears_state_and_keeps_weights() {
         let g = models::conv_relu(8, 2, 2);
         let d = build_streaming_design(&g).unwrap();
-        let mut proc = build_proc(&d, 0).unwrap();
+        let mut proc = test_proc(&d, 0);
         let mut arena = TokenArena::new();
         let t = arena.alloc_from(&[1, 2]);
         proc.accept(0, t, &mut arena);
@@ -554,8 +773,9 @@ mod tests {
         for (name, size) in models::table2_workloads() {
             let g = models::paper_kernel(name, size.max(16)).unwrap();
             let d = build_streaming_design(&g).unwrap();
+            let bank = WeightBank::build(&d).unwrap();
             for nid in 0..d.nodes.len() {
-                build_proc(&d, nid).unwrap_or_else(|e| panic!("{name}/{nid}: {e}"));
+                build_proc(&d, nid, &bank).unwrap_or_else(|e| panic!("{name}/{nid}: {e}"));
             }
         }
     }

@@ -37,5 +37,6 @@ pub use halo::{check_tilable, graph_halo, op_axis_window, AxisCone, AxisWindow, 
 pub use plan::{local_extents, rewindow, GridAxis, Seg, TileGrid};
 pub use schedule::{
     compile_tiled, compile_tiled_fixed, compile_tiled_from, simulate_tiled,
-    simulate_tiled_parallel, TiledCompilation, TiledSimReport,
+    simulate_tiled_parallel, simulate_tiled_parallel_with, simulate_tiled_with,
+    TiledCompilation, TiledSimReport,
 };

@@ -247,6 +247,8 @@ pub struct TiledSimReport {
     /// shared context pool reuses them across chunks (the pool-proof
     /// metric, mirrored to `sim.ctx_builds`).
     pub ctx_builds: u64,
+    /// Steady-state fast-forward statistics summed over all cell runs.
+    pub ff: crate::sim::FfStats,
 }
 
 impl TiledSimReport {
@@ -264,6 +266,7 @@ impl TiledSimReport {
             total_firings: self.total_firings,
             token_ops: self.token_ops,
             fifo_profile: None,
+            ff: self.ff,
         }
     }
 }
@@ -334,6 +337,7 @@ struct CellRun {
     cycles: u64,
     firings: u64,
     token_ops: u64,
+    ff: crate::sim::FfStats,
     /// The cropped core block, `h.core` rows of `w.core * f` values.
     core: Vec<i32>,
 }
@@ -369,6 +373,7 @@ fn run_cell(
         cycles: rep.cycles,
         firings: rep.total_firings,
         token_ops: rep.token_ops,
+        ff: rep.ff,
         core,
     })
 }
@@ -384,6 +389,7 @@ fn stitch(
     let mut output = vec![0i32; geo.out_len];
     let mut tile_cycles = Vec::with_capacity(grid.n_cells());
     let (mut cycles, mut total_firings, mut token_ops) = (0u64, 0u64, 0u64);
+    let mut ff = crate::sim::FfStats::default();
     let mut it = runs.into_iter();
     for rs in &grid.h.segs {
         for cs in &grid.w.segs {
@@ -397,11 +403,15 @@ fn stitch(
             cycles += run.cycles + TILE_RESTART_CYCLES;
             total_firings += run.firings;
             token_ops += run.token_ops;
+            ff.periods += run.ff.periods;
+            ff.skipped_cycles += run.ff.skipped_cycles;
+            ff.batched_firings += run.ff.batched_firings;
+            ff.checkpoints += run.ff.checkpoints;
             tile_cycles.push(run.cycles);
         }
     }
     crate::obs::metrics::global().add("sim.ctx_builds", ctx_builds);
-    TiledSimReport { cycles, output, tile_cycles, total_firings, token_ops, ctx_builds }
+    TiledSimReport { cycles, output, tile_cycles, total_firings, token_ops, ctx_builds, ff }
 }
 
 /// Execute every cell of `tc` on the cycle-level simulator and stitch
@@ -412,9 +422,20 @@ fn stitch(
 /// line-buffer state allocated **once per design** instead of once per
 /// cell. For multi-core execution see [`simulate_tiled_parallel`].
 pub fn simulate_tiled(tc: &TiledCompilation, input: &[i32]) -> Result<TiledSimReport> {
+    simulate_tiled_with(tc, input, crate::sim::SimConfig::default())
+}
+
+/// [`simulate_tiled`] with explicit fast-path knobs (`--exact-sim`
+/// forces [`crate::sim::SimConfig::exact`]).
+pub fn simulate_tiled_with(
+    tc: &TiledCompilation,
+    input: &[i32],
+    cfg: crate::sim::SimConfig,
+) -> Result<TiledSimReport> {
     let geo = tiled_geometry(tc, input)?;
     let grid = &tc.grid;
     let mut ctx = crate::sim::SimContext::new(&tc.cell, SimMode::of(tc.cell.style))?;
+    ctx.set_config(cfg);
     let mut cell_in = Vec::with_capacity(geo.lh * geo.lw * geo.c);
     let mut runs = Vec::with_capacity(grid.n_cells());
     for rs in &grid.h.segs {
@@ -440,6 +461,16 @@ pub fn simulate_tiled_parallel(
     input: &[i32],
     pool: &WorkerPool,
 ) -> Result<TiledSimReport> {
+    simulate_tiled_parallel_with(tc, input, pool, crate::sim::SimConfig::default())
+}
+
+/// [`simulate_tiled_parallel`] with explicit fast-path knobs.
+pub fn simulate_tiled_parallel_with(
+    tc: &TiledCompilation,
+    input: &[i32],
+    pool: &WorkerPool,
+    cfg: crate::sim::SimConfig,
+) -> Result<TiledSimReport> {
     use std::sync::atomic::{AtomicU64, Ordering};
 
     let geo = tiled_geometry(tc, input)?;
@@ -451,12 +482,15 @@ pub fn simulate_tiled_parallel(
         .flat_map(|rs| grid.w.segs.iter().map(move |cs| (rs, cs)))
         .collect();
     if pool.workers() <= 1 || cells.len() <= 1 {
-        return simulate_tiled(tc, input);
+        return simulate_tiled_with(tc, input, cfg);
     }
     // ~4 chunks per worker: fine-grained enough that a slow chunk does
     // not straggle, and the context pool makes extra chunks free.
     let chunk = cells.len().div_ceil(pool.workers() * 4).max(1);
     let geo_ref = &geo;
+    // one weight extraction + transposition for the whole pool: every
+    // worker context shares the bank's Arc'd storage
+    let bank = crate::sim::WeightBank::build(&tc.cell)?;
     let ctx_pool: std::sync::Mutex<Vec<crate::sim::SimContext<'_>>> =
         std::sync::Mutex::new(Vec::new());
     let ctx_builds = AtomicU64::new(0);
@@ -465,13 +499,20 @@ pub fn simulate_tiled_parallel(
         .map(|chunk_cells| {
             let ctx_pool = &ctx_pool;
             let ctx_builds = &ctx_builds;
+            let bank = &bank;
             move || -> Result<Vec<CellRun>> {
                 let pooled = ctx_pool.lock().unwrap().pop();
                 let mut ctx = match pooled {
                     Some(ctx) => ctx,
                     None => {
                         ctx_builds.fetch_add(1, Ordering::Relaxed);
-                        crate::sim::SimContext::new(&tc.cell, SimMode::of(tc.cell.style))?
+                        let mut ctx = crate::sim::SimContext::with_bank(
+                            &tc.cell,
+                            SimMode::of(tc.cell.style),
+                            bank,
+                        )?;
+                        ctx.set_config(cfg);
+                        ctx
                     }
                 };
                 let mut cell_in = Vec::with_capacity(geo_ref.lh * geo_ref.lw * geo_ref.c);
@@ -624,6 +665,18 @@ mod tests {
         let tc = compile_tiled_fixed(&g, &DseConfig::new(DeviceSpec::kv260()), 4, 4).unwrap();
         let serial = simulate_tiled(&tc, &x).unwrap();
         assert_eq!(serial.ctx_builds, 1, "serial path builds one context");
+        // the pool's contexts share one weight bank: same Arc'd bytes,
+        // not per-context copies
+        let bank = crate::sim::WeightBank::build(&tc.cell).unwrap();
+        let mode = SimMode::of(tc.cell.style);
+        let a = crate::sim::SimContext::with_bank(&tc.cell, mode, &bank).unwrap();
+        let b = crate::sim::SimContext::with_bank(&tc.cell, mode, &bank).unwrap();
+        assert!(a.shares_weights_with(&b), "bank contexts must share weight storage");
+        let fresh = crate::sim::SimContext::new(&tc.cell, mode).unwrap();
+        assert!(
+            !a.shares_weights_with(&fresh),
+            "independently built contexts must not share storage"
+        );
         for workers in [2usize, 4] {
             let par = simulate_tiled_parallel(&tc, &x, &WorkerPool::new(workers)).unwrap();
             assert_eq!(par.output, serial.output);

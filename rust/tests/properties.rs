@@ -467,6 +467,86 @@ fn prop_tiled_stride2_chains_are_bit_exact() {
 }
 
 #[test]
+fn prop_fast_forward_is_bit_identical_to_exact() {
+    // The steady-state fast-forward's acceptance bar on random
+    // stride/kernel chains (convs + stride-2 pools, DSE-tuned): the
+    // accelerated run must be indistinguishable from the exact engine —
+    // outputs, cycles, high-water marks, firings, traces, and (in
+    // profile mode) per-channel stall attribution and histograms.
+    use ming::sim::{FfStats, SimConfig, SimContext};
+    let dev = DeviceSpec::kv260();
+    forall("fast-forward == exact", 12, random_stride_chain, |g| {
+        let x = det_input(g, 17);
+        let mut d = build_streaming_design(g).unwrap();
+        solve(&mut d, &DseConfig::new(dev.clone())).unwrap();
+        for profile in [false, true] {
+            let run = |cfg: SimConfig| {
+                let mut ctx = SimContext::new(&d, SimMode::Dataflow).unwrap();
+                ctx.set_config(cfg);
+                if profile {
+                    ctx.enable_profile();
+                }
+                ctx.run(&x).unwrap()
+            };
+            let fast = run(SimConfig::default());
+            let exact = run(SimConfig::exact());
+            assert_eq!(exact.ff, FfStats::default(), "{}: exact must not fast-forward", g.name);
+            assert_eq!(fast.output, exact.output, "{}: output", g.name);
+            assert_eq!(fast.cycles, exact.cycles, "{}: cycles", g.name);
+            assert_eq!(fast.total_firings, exact.total_firings, "{}: firings", g.name);
+            assert_eq!(fast.token_ops, exact.token_ops, "{}: token ops", g.name);
+            assert_eq!(fast.fifo_high_water, exact.fifo_high_water, "{}: high water", g.name);
+            assert_eq!(fast.deadlock, exact.deadlock, "{}: deadlock", g.name);
+            for (a, b) in fast.traces.iter().zip(&exact.traces) {
+                assert_eq!(
+                    (a.firings, a.first_fire, a.last_fire, a.complete, a.stall_in, a.stall_out),
+                    (b.firings, b.first_fire, b.last_fire, b.complete, b.stall_in, b.stall_out),
+                    "{}/{}: trace",
+                    g.name,
+                    a.name
+                );
+            }
+            if profile {
+                let pf = fast.fifo_profile.expect("profile armed");
+                let pe = exact.fifo_profile.expect("profile armed");
+                for (a, b) in pf.channels.iter().zip(&pe.channels) {
+                    assert_eq!(a.stall_wait, b.stall_wait, "{}/{}: wait", g.name, a.name);
+                    assert_eq!(a.stall_full, b.stall_full, "{}/{}: full", g.name, a.name);
+                    assert_eq!(a.pushed, b.pushed, "{}/{}: pushed", g.name, a.name);
+                    assert_eq!(a.hist, b.hist, "{}/{}: histogram", g.name, a.name);
+                    assert_eq!(a.max_occupancy, b.max_occupancy, "{}/{}: occ", g.name, a.name);
+                }
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn fast_forward_detects_no_false_period_on_aperiodic_deadlock() {
+    // Adversarial case for the detector: undersized diamond FIFOs make
+    // the run a short aperiodic transient into deadlock (the sink never
+    // drains, so no shifted-state match can verify). The detector must
+    // report zero periods and the deadlock report must stay identical
+    // to the exact engine's.
+    use ming::ir::builder::models;
+    use ming::sim::{SimConfig, SimContext};
+    let g = models::residual(32, 8, 8);
+    let d = build_streaming_design(&g).unwrap();
+    let x = det_input(&g, 29);
+    let fast = simulate(&d, &x, SimMode::Dataflow).unwrap();
+    let mut ctx = SimContext::new(&d, SimMode::Dataflow).unwrap();
+    ctx.set_config(SimConfig::exact());
+    let exact = ctx.run(&x).unwrap();
+    assert!(fast.deadlock.is_some(), "diamond without FIFO sizing must deadlock");
+    assert_eq!(fast.deadlock, exact.deadlock, "blocked-node reports must agree");
+    assert_eq!(fast.ff.periods, 0, "no false period on an aperiodic transient");
+    assert_eq!(fast.cycles, exact.cycles);
+    assert_eq!(fast.output, exact.output);
+    assert_eq!(fast.total_firings, exact.total_firings);
+}
+
+#[test]
 fn prop_input_data_does_not_change_cycles() {
     // Streaming designs are data-oblivious: cycle counts must not depend
     // on input values (no data-dependent control flow in hardware).
