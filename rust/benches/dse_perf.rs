@@ -1,0 +1,226 @@
+//! Bench: the cold compile path after the parallel-DSE rework:
+//!   * cold solve throughput over the Table-II paper kernels (build +
+//!     branch-and-bound, no cache),
+//!   * dominance-prune ratio on those kernels (`dse.dominance_pruned` /
+//!     `dse.candidates` metric deltas),
+//!   * parallel-vs-serial branch-and-bound speedup on a synthetic
+//!     wide-lattice MLP under a tight DSP cap (the filter is disabled
+//!     for this pair so the comparison isolates raw search parallelism;
+//!     the filtered serial time is reported alongside for scale),
+//!   * serial-vs-speculative tile-grid search wall-time on the
+//!     BRAM-starved conv fallback scenario.
+//!
+//! Emits `BENCH_dse.json` (uploaded as a CI artifact) and gates against
+//! the committed `BENCH_dse_baseline.json` floors (0.8x baseline, same
+//! `MING_BENCH_NO_GATE=1` escape hatch as the sim gate). The
+//! parallelism gates only arm on machines with >= 4 cores.
+//!
+//! Run: `cargo bench --bench dse_perf`
+
+use std::time::{Duration, Instant};
+
+use ming::dataflow::build::build_streaming_design;
+use ming::dse::ilp::{solve, DseConfig};
+use ming::ir::builder::{models, GraphBuilder};
+use ming::ir::graph::ModelGraph;
+use ming::ir::json;
+use ming::ir::types::DType;
+use ming::resources::device::DeviceSpec;
+use ming::tiling::compile_tiled;
+use ming::util::bench::bench;
+
+/// Min wall-time of `iters` runs (min is the noise-robust statistic for
+/// serial-vs-parallel comparisons).
+fn min_wall<T>(iters: usize, mut f: impl FnMut() -> T) -> Duration {
+    let mut best = Duration::MAX;
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        best = best.min(t0.elapsed());
+    }
+    best
+}
+
+/// The synthetic wide-lattice workload: a square MLP whose matmul
+/// dimensions have many divisors, so every layer contributes a dense
+/// (unroll_par × unroll_red) candidate lattice and the branch-and-bound
+/// has a genuinely wide tree to split across workers.
+fn wide_mlp(layers: usize, dim: usize) -> ModelGraph {
+    let mut b = GraphBuilder::new(format!("wide_mlp{layers}x{dim}"));
+    let x = b.input("x", vec![dim, dim], DType::I8);
+    let mut cur = x;
+    for li in 0..layers {
+        let w = b.det_weight(&format!("w{li}"), vec![dim, dim], 100 + li as u64);
+        let acc = b.linear(&format!("mm{li}"), cur, w);
+        cur = b.relu_requant(&format!("rr{li}"), acc);
+    }
+    b.mark_output(cur);
+    let g = b.finish();
+    g.validate().unwrap();
+    g
+}
+
+fn main() {
+    let dev = DeviceSpec::kv260();
+    let metrics = ming::obs::metrics::global();
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+
+    // --- cold solve throughput + dominance ratio (Table-II kernels) -------
+    let workloads = models::table2_workloads();
+    let c0 = metrics.get("dse.candidates");
+    let p0 = metrics.get("dse.dominance_pruned");
+    let s = bench("dse_cold_table2", 1, 3, || {
+        let mut objective_sum = 0u64;
+        for &(name, size) in &workloads {
+            let gg = models::paper_kernel(name, size.max(32)).unwrap();
+            let mut d = build_streaming_design(&gg).unwrap();
+            objective_sum += solve(&mut d, &DseConfig::new(dev.clone())).unwrap().objective;
+        }
+        objective_sum
+    });
+    let cold_solves_per_sec = workloads.len() as f64 / s.mean.as_secs_f64();
+    let candidates = metrics.get("dse.candidates") - c0;
+    let pruned = metrics.get("dse.dominance_pruned") - p0;
+    assert!(pruned > 0, "paper kernels must contain dominated candidates");
+    let dominance_ratio = pruned as f64 / candidates.max(1) as f64;
+    println!(
+        "{}  [{cold_solves_per_sec:.1} cold solves/s; dominance pruned {pruned}/{candidates} \
+         = {dominance_ratio:.3}]",
+        s.summary()
+    );
+
+    // --- wide lattice: serial vs parallel branch-and-bound ----------------
+    // A tight DSP cap puts the optimum on the resource boundary (the
+    // cycle lower bound stays loose), so the exact search has real work
+    // to fan out. The dominance filter is off for both sides: it prunes
+    // this lattice so hard that the filtered search is too fast to need
+    // parallelism — which is the layered-defense story, reported below.
+    let wl_workers = 4usize;
+    let g = wide_mlp(4, 72);
+    let wl_dev = DeviceSpec::kv260().with_dsp_limit(128);
+    let base = build_streaming_design(&g).unwrap();
+    let serial_cfg = DseConfig::new(wl_dev.clone()).with_workers(1).with_dominance_filter(false);
+    let (mut serial_objective, mut serial_explored) = (0u64, 0u64);
+    let wl_serial = min_wall(3, || {
+        let mut d = base.clone();
+        let sol = solve(&mut d, &serial_cfg).unwrap();
+        serial_objective = sol.objective;
+        serial_explored = sol.nodes_explored;
+        sol.objective
+    });
+    let par_cfg = DseConfig::new(wl_dev.clone())
+        .with_workers(wl_workers)
+        .with_dominance_filter(false)
+        .with_parallel_min_volume(1);
+    let mut par_objective = 0u64;
+    let wl_parallel = min_wall(3, || {
+        let mut d = base.clone();
+        par_objective = solve(&mut d, &par_cfg).unwrap().objective;
+        par_objective
+    });
+    assert_eq!(serial_objective, par_objective, "parallel solver diverged from serial");
+    let filtered_cfg = DseConfig::new(wl_dev.clone()).with_workers(1);
+    let wl_filtered = min_wall(3, || {
+        let mut d = base.clone();
+        solve(&mut d, &filtered_cfg).unwrap().objective
+    });
+    let wl_speedup = wl_serial.as_secs_f64() / wl_parallel.as_secs_f64().max(1e-9);
+    println!(
+        "wide_mlp4x72 @ dsp128: serial {:.1}ms ({serial_explored} nodes), \
+         parallel({wl_workers}) {:.1}ms = {wl_speedup:.2}x; with dominance filter the \
+         serial search takes {:.1}ms",
+        wl_serial.as_secs_f64() * 1e3,
+        wl_parallel.as_secs_f64() * 1e3,
+        wl_filtered.as_secs_f64() * 1e3
+    );
+
+    // --- tile-grid search: serial walk vs speculative fan-out -------------
+    // The BRAM-starved conv fallback: several grid candidates survive
+    // the cheap prunes and need a cell DSE each before one fits.
+    let gg = models::conv_relu(80, 32, 8);
+    let gs_dev = DeviceSpec::kv260().with_bram_limit(4);
+    let gs_serial_cfg = DseConfig::new(gs_dev.clone()).with_workers(1);
+    let mut serial_cells = 0usize;
+    let gs_serial = min_wall(3, || {
+        serial_cells = compile_tiled(&gg, &gs_serial_cfg).unwrap().grid.n_cells();
+        serial_cells
+    });
+    let gs_spec_cfg = DseConfig::new(gs_dev.clone()).with_workers(4);
+    let mut spec_cells = 0usize;
+    let gs_spec = min_wall(3, || {
+        spec_cells = compile_tiled(&gg, &gs_spec_cfg).unwrap().grid.n_cells();
+        spec_cells
+    });
+    assert_eq!(serial_cells, spec_cells, "speculative grid search diverged from serial");
+    let gs_speedup = gs_serial.as_secs_f64() / gs_spec.as_secs_f64().max(1e-9);
+    println!(
+        "grid_search conv_relu_80 @ bram4: serial {:.1}ms, speculative(4) {:.1}ms \
+         = {gs_speedup:.2}x ({serial_cells} cells committed)",
+        gs_serial.as_secs_f64() * 1e3,
+        gs_spec.as_secs_f64() * 1e3
+    );
+
+    let json_out = format!(
+        "{{\"bench\":\"dse\",\
+         \"cold\":{{\"solves_per_sec\":{cold_solves_per_sec:.1},\
+         \"kernels\":{}}},\
+         \"dominance\":{{\"candidates\":{candidates},\"pruned\":{pruned},\
+         \"ratio\":{dominance_ratio:.4}}},\
+         \"wide_lattice\":{{\"workers\":{wl_workers},\
+         \"serial_ms\":{:.3},\"parallel_ms\":{:.3},\
+         \"parallel_speedup\":{wl_speedup:.2},\
+         \"serial_explored\":{serial_explored},\
+         \"filtered_serial_ms\":{:.3}}},\
+         \"grid_search\":{{\"serial_ms\":{:.3},\"speculative_ms\":{:.3},\
+         \"speculative_speedup\":{gs_speedup:.2}}}}}",
+        workloads.len(),
+        wl_serial.as_secs_f64() * 1e3,
+        wl_parallel.as_secs_f64() * 1e3,
+        wl_filtered.as_secs_f64() * 1e3,
+        gs_serial.as_secs_f64() * 1e3,
+        gs_spec.as_secs_f64() * 1e3,
+    );
+    std::fs::write("BENCH_dse.json", format!("{json_out}\n")).expect("writing BENCH_dse.json");
+    println!("wrote BENCH_dse.json");
+
+    // --- perf-regression gate (BENCH_dse_baseline.json) -------------------
+    // Committed floors, deliberately conservative: fail only when a
+    // gated metric drops below 80% of its baseline. The parallel-speedup
+    // gates need real cores, so they only arm when >= 4 are available.
+    // Re-baseline by copying numbers from a CI BENCH_dse.json artifact.
+    if std::env::var_os("MING_BENCH_NO_GATE").is_some() {
+        println!("perf gate: skipped (MING_BENCH_NO_GATE=1)");
+    } else if let Ok(text) = std::fs::read_to_string("BENCH_dse_baseline.json") {
+        let base = json::parse(&text).expect("BENCH_dse_baseline.json must parse");
+        let baseline = |path: &str| -> f64 {
+            let mut node = &base;
+            for seg in path.split('.') {
+                node = node.get(seg).unwrap_or_else(|e| panic!("baseline {path}: {e}"));
+            }
+            node.as_f64().unwrap_or_else(|e| panic!("baseline {path}: {e}"))
+        };
+        let mut gates = vec![
+            ("cold.solves_per_sec", cold_solves_per_sec),
+            ("dominance.ratio", dominance_ratio),
+        ];
+        if cores >= 4 {
+            gates.push(("wide_lattice.parallel_speedup", wl_speedup));
+            gates.push(("grid_search.speculative_speedup", gs_speedup));
+        } else {
+            println!("perf gate: parallelism gates skipped ({cores} cores < 4)");
+        }
+        let mut failed = false;
+        for (path, cur) in gates {
+            let floor = baseline(path) * 0.8;
+            if cur < floor {
+                eprintln!("perf gate FAIL {path}: {cur:.2} < floor {floor:.2} (0.8x baseline)");
+                failed = true;
+            } else {
+                println!("perf gate ok   {path}: {cur:.2} >= floor {floor:.2}");
+            }
+        }
+        assert!(!failed, "cold-path DSE regressed >20% vs BENCH_dse_baseline.json");
+    } else {
+        println!("perf gate: BENCH_dse_baseline.json not found, skipping");
+    }
+}

@@ -131,7 +131,11 @@ impl CompileJob {
     ) -> Result<SolvedDesign> {
         match self.framework {
             FrameworkKind::Ming => {
-                let mut cfg = DseConfig::new(self.device.clone());
+                // Sweep jobs are already fanned across the service pool;
+                // nested solver parallelism would only oversubscribe the
+                // cores, so each job solves serially. One-shot `compile`
+                // and `import` opt into the parallel solver instead.
+                let mut cfg = DseConfig::new(self.device.clone()).with_workers(1);
                 if let Some(c) = cache {
                     cfg = cfg.with_cache(Arc::clone(c));
                 }

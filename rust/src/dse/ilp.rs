@@ -11,12 +11,28 @@
 //! depth-first branch-and-bound using per-node lower bounds on cycles,
 //! DSP and BRAM for pruning. Exact — no heuristics — and fast: paper
 //! kernels have ≤ 6 nodes × ≤ 96 candidates.
+//!
+//! Two cold-path accelerators sit on top of the exact search, both
+//! **bit-identical** to the plain serial solver (the design cache's
+//! byte-identity invariant depends on that):
+//!
+//! * a Pareto-dominance candidate filter
+//!   ([`super::space::dominance_filter`]) drops lattice points that can
+//!   never appear in the first-found optimum, before the search runs;
+//! * a parallel branch-and-bound: lexicographic prefix subtrees fan out
+//!   over a [`crate::coordinator::WorkerPool`], sharing the incumbent
+//!   objective through an `AtomicU64` so one worker's improvement
+//!   tightens every other worker's pruning, with a deterministic final
+//!   argmin (lowest subtree index wins ties — exactly the assignment
+//!   the serial first-found DFS keeps).
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use anyhow::{bail, ensure, Result};
 
 use crate::coordinator::cache::{self, DesignCache};
+use crate::coordinator::WorkerPool;
 use crate::dataflow::build::{build_streaming_design, refresh_buffers};
 use crate::dataflow::design::Design;
 use crate::ir::fingerprint::problem_fingerprint;
@@ -26,7 +42,7 @@ use crate::resources::model::{ResourceModel, ResourceVec};
 use crate::tiling::{compile_tiled_from, TiledCompilation};
 
 use super::fifo::size_fifos;
-use super::space::{candidates_with, Candidate};
+use super::space::{self, candidates_with, Candidate};
 
 /// DSE configuration.
 ///
@@ -44,11 +60,40 @@ pub struct DseConfig {
     /// and the tile-grid search reuses per-cell solutions — the solver
     /// itself ([`solve`]) stays cache-oblivious.
     pub cache: Option<Arc<DesignCache>>,
+    /// Worker threads for the parallel branch-and-bound and the
+    /// speculative tile-grid search. `1` takes the exact serial code
+    /// path; the default is machine-sized (mirroring
+    /// [`WorkerPool::default_size`]). Not part of the problem
+    /// fingerprint: worker count never changes the solution, only how
+    /// fast it is found.
+    pub workers: usize,
+    /// Apply the Pareto-dominance candidate filter before searching
+    /// (default on). Provably solution-invariant — the switch exists so
+    /// tests and benches can measure the unfiltered lattice.
+    pub dominance_filter: bool,
+    /// Minimum assignment-lattice volume (product of per-node candidate
+    /// counts) before the solver fans subtrees across workers. Below
+    /// it, pool spin-up costs more than the whole serial search; the
+    /// threshold is deterministic in the problem, so it never affects
+    /// bit-identity. Tests force tiny lattices onto the parallel path
+    /// with [`DseConfig::with_parallel_min_volume`]`(1)`.
+    pub parallel_min_volume: u64,
 }
+
+/// Default parallel fan-out threshold: paper-kernel-sized lattices
+/// (conv_relu: 48 assignments) stay serial; wide MLP lattices
+/// (feedforward: ~260k) go wide.
+pub const PARALLEL_MIN_VOLUME: u64 = 4096;
 
 impl DseConfig {
     pub fn new(device: DeviceSpec) -> Self {
-        Self { device, cache: None }
+        Self {
+            device,
+            cache: None,
+            workers: default_workers(),
+            dominance_filter: true,
+            parallel_min_volume: PARALLEL_MIN_VOLUME,
+        }
     }
 
     /// Attach a (shared) design cache to this configuration.
@@ -56,6 +101,35 @@ impl DseConfig {
         self.cache = Some(cache);
         self
     }
+
+    /// Size the solver's worker fan-out; `1` selects the serial solver.
+    pub fn with_workers(mut self, n: usize) -> Self {
+        self.workers = n.max(1);
+        self
+    }
+
+    /// Toggle the Pareto-dominance candidate filter.
+    pub fn with_dominance_filter(mut self, on: bool) -> Self {
+        self.dominance_filter = on;
+        self
+    }
+
+    /// Override the parallel fan-out threshold (see
+    /// [`DseConfig::parallel_min_volume`]).
+    pub fn with_parallel_min_volume(mut self, v: u64) -> Self {
+        self.parallel_min_volume = v;
+        self
+    }
+}
+
+/// Machine-sized solver parallelism: one thread per core, minus one for
+/// the caller (same policy as [`WorkerPool::default_size`]).
+fn default_workers() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .saturating_sub(1)
+        .max(1)
 }
 
 /// Outcome of the DSE.
@@ -91,7 +165,7 @@ pub fn solve(design: &mut Design, cfg: &DseConfig) -> Result<DseSolution> {
     // The incremental FIFO re-sizing per partial assignment is exact
     // because each channel's depth depends only on its producer's
     // pipeline depth plus a timing-independent diamond floor.
-    let (cand, base_fifo) = {
+    let (mut cand, base_fifo) = {
         let model = ResourceModel::new(design);
         let cand: Vec<Vec<Candidate>> = (0..design.nodes.len())
             .map(|i| candidates_with(&model, design, i))
@@ -100,6 +174,21 @@ pub fn solve(design: &mut Design, cfg: &DseConfig) -> Result<DseSolution> {
     };
     for (i, c) in cand.iter().enumerate() {
         ensure!(!c.is_empty(), "node {} has no candidates", design.nodes[i].name);
+    }
+    // The ordering invariant the DFS tail prune relies on: enforce it
+    // here rather than trusting every enumeration path forever.
+    debug_assert!(
+        cand.iter().all(|c| space::is_canonical(c)),
+        "candidate vectors must be in canonical (cycle-sorted) order"
+    );
+
+    let metrics = crate::obs::metrics::global();
+    metrics.add("dse.candidates", cand.iter().map(|c| c.len() as u64).sum::<u64>());
+    if cfg.dominance_filter {
+        // Solution-invariant (see `space::dominance_filter`): shrinks
+        // the lattice before the exponential part ever sees it.
+        let dropped: u64 = cand.iter_mut().map(space::dominance_filter).sum();
+        metrics.add("dse.dominance_pruned", dropped);
     }
 
     let d_total = cfg.device.dsp;
@@ -127,70 +216,16 @@ pub fn solve(design: &mut Design, cfg: &DseConfig) -> Result<DseSolution> {
         b_total
     );
 
-    struct Search<'a> {
-        cand: &'a [Vec<Candidate>],
-        min_cycles: &'a [u64],
-        min_dsp: &'a [u64],
-        min_bram: &'a [u64],
-        d_total: u64,
-        b_total: u64,
-        best: u64,
-        best_pick: Vec<usize>,
-        pick: Vec<usize>,
-        explored: u64,
-        /// Subtrees cut by the cycle lower bound (whole sorted tail) or
-        /// a resource lower bound (single candidate) — the
-        /// branch-and-bound effectiveness metric (`dse.pruned`).
-        pruned: u64,
-    }
-
-    impl Search<'_> {
-        fn dfs(&mut self, i: usize, cycles: u64, dsp: u64, bram: u64) {
-            self.explored += 1;
-            if i == self.cand.len() {
-                if cycles < self.best {
-                    self.best = cycles;
-                    self.best_pick = self.pick.clone();
-                }
-                return;
-            }
-            for (k, c) in self.cand[i].iter().enumerate() {
-                let cy = cycles + c.cycles;
-                // candidates are cycle-sorted: once even the LB fails, stop
-                if cy + self.min_cycles[i + 1] >= self.best {
-                    self.pruned += (self.cand[i].len() - k) as u64;
-                    break;
-                }
-                let ds = dsp + c.res.dsp;
-                let br = bram + c.res.bram();
-                if ds + self.min_dsp[i + 1] > self.d_total
-                    || br + self.min_bram[i + 1] > self.b_total
-                {
-                    self.pruned += 1;
-                    continue;
-                }
-                self.pick.push(k);
-                self.dfs(i + 1, cy, ds, br);
-                self.pick.pop();
-            }
-        }
-    }
-
-    let mut s = Search {
+    let problem = Problem {
         cand: &cand,
         min_cycles: &min_cycles,
         min_dsp: &min_dsp,
         min_bram: &min_bram,
         d_total,
         b_total,
-        best: u64::MAX,
-        best_pick: Vec::new(),
-        pick: Vec::new(),
-        explored: 0,
-        pruned: 0,
+        base_fifo,
     };
-    s.dfs(0, 0, 0, base_fifo);
-    let metrics = crate::obs::metrics::global();
+    let s = search(&problem, cfg);
     metrics.incr("dse.solves");
     metrics.add("dse.nodes_explored", s.explored);
     metrics.add("dse.pruned", s.pruned);
@@ -226,6 +261,261 @@ pub fn solve(design: &mut Design, cfg: &DseConfig) -> Result<DseSolution> {
         resources,
         nodes_explored: s.explored,
     })
+}
+
+/// The immutable search problem: (filtered) candidate lists, suffix-
+/// minima lower bounds and device totals, shared by the serial DFS and
+/// every parallel subtree task.
+struct Problem<'a> {
+    cand: &'a [Vec<Candidate>],
+    min_cycles: &'a [u64],
+    min_dsp: &'a [u64],
+    min_bram: &'a [u64],
+    d_total: u64,
+    b_total: u64,
+    base_fifo: u64,
+}
+
+/// What a search returns: `best`/`best_pick` are bit-identical between
+/// the serial and parallel paths (pinned by the property tests);
+/// `explored`/`pruned` are effort metrics and may legitimately differ
+/// (workers race the incumbent, so the visit counts are not
+/// deterministic).
+struct SearchOutcome {
+    best: u64,
+    best_pick: Vec<usize>,
+    explored: u64,
+    pruned: u64,
+}
+
+struct Search<'a> {
+    p: &'a Problem<'a>,
+    /// Cross-subtree incumbent objective — parallel search only. The
+    /// prune bound derived from it is `shared + 1`, i.e. *strict*: an
+    /// equal-objective assignment in a lexicographically earlier
+    /// subtree must stay discoverable, or the deterministic argmin
+    /// below would drift from the serial first-found pick.
+    shared: Option<&'a AtomicU64>,
+    best: u64,
+    best_pick: Vec<usize>,
+    pick: Vec<usize>,
+    explored: u64,
+    /// Subtrees cut by the cycle lower bound (whole sorted tail) or
+    /// a resource lower bound (single candidate) — the
+    /// branch-and-bound effectiveness metric (`dse.pruned`).
+    pruned: u64,
+}
+
+impl Search<'_> {
+    /// The effective prune bound: the local incumbent, tightened by the
+    /// pool-wide one when present. On the serial path this is exactly
+    /// `self.best` — the `--workers 1` code path is the historical
+    /// serial solver, instruction for instruction.
+    fn bound(&self) -> u64 {
+        match self.shared {
+            Some(s) => self.best.min(s.load(Ordering::Relaxed).saturating_add(1)),
+            None => self.best,
+        }
+    }
+
+    fn dfs(&mut self, i: usize, cycles: u64, dsp: u64, bram: u64) {
+        self.explored += 1;
+        if i == self.p.cand.len() {
+            if cycles < self.best {
+                self.best = cycles;
+                self.best_pick = self.pick.clone();
+                if let Some(s) = self.shared {
+                    // publish the improvement: every other worker's
+                    // bound tightens on its next loop iteration
+                    s.fetch_min(cycles, Ordering::Relaxed);
+                }
+            }
+            return;
+        }
+        for (k, c) in self.p.cand[i].iter().enumerate() {
+            let cy = cycles + c.cycles;
+            // candidates are cycle-sorted: once even the LB fails, stop
+            if cy + self.p.min_cycles[i + 1] >= self.bound() {
+                self.pruned += (self.p.cand[i].len() - k) as u64;
+                break;
+            }
+            let ds = dsp + c.res.dsp;
+            let br = bram + c.res.bram();
+            if ds + self.p.min_dsp[i + 1] > self.p.d_total
+                || br + self.p.min_bram[i + 1] > self.p.b_total
+            {
+                self.pruned += 1;
+                continue;
+            }
+            self.pick.push(k);
+            self.dfs(i + 1, cy, ds, br);
+            self.pick.pop();
+        }
+    }
+}
+
+/// Product of per-node candidate counts — the assignment-lattice size
+/// (saturating; only compared against thresholds).
+fn lattice_volume(cand: &[Vec<Candidate>]) -> u64 {
+    cand.iter().fold(1u64, |v, c| v.saturating_mul(c.len() as u64))
+}
+
+/// Dispatch: the parallel branch-and-bound when the config asks for
+/// workers and the lattice is big enough to amortize pool spin-up,
+/// the serial DFS otherwise. Both sides of the dispatch are
+/// deterministic functions of the problem, so the returned
+/// `best`/`best_pick` never depend on which path ran.
+fn search(p: &Problem<'_>, cfg: &DseConfig) -> SearchOutcome {
+    if cfg.workers > 1 && lattice_volume(p.cand) >= cfg.parallel_min_volume {
+        if let Some(out) = parallel_search(p, cfg.workers) {
+            return out;
+        }
+    }
+    serial_search(p)
+}
+
+fn serial_search(p: &Problem<'_>) -> SearchOutcome {
+    let mut s = Search {
+        p,
+        shared: None,
+        best: u64::MAX,
+        best_pick: Vec::new(),
+        pick: Vec::new(),
+        explored: 0,
+        pruned: 0,
+    };
+    s.dfs(0, 0, 0, p.base_fifo);
+    SearchOutcome { best: s.best, best_pick: s.best_pick, explored: s.explored, pruned: s.pruned }
+}
+
+/// One parallel subtree task: a fixed assignment of the first
+/// `split_depth` nodes plus its accumulated cost; a worker searches it
+/// to the leaves with the serial DFS.
+struct PrefixTask {
+    pick: Vec<usize>,
+    cycles: u64,
+    dsp: u64,
+    bram: u64,
+}
+
+/// Smallest prefix of node levels whose assignment count gives every
+/// worker several subtree tasks to steal — load balance without
+/// enumerating a meaningful fraction of the space up front.
+fn split_depth(cand: &[Vec<Candidate>], workers: usize) -> usize {
+    let target = (workers * 4) as u64;
+    let mut tasks = 1u64;
+    let mut depth = 0;
+    while depth < cand.len() && tasks < target {
+        tasks = tasks.saturating_mul(cand[depth].len().max(1) as u64);
+        depth += 1;
+    }
+    depth
+}
+
+/// Enumerates resource-feasible prefixes in lexicographic order — the
+/// order the serial DFS visits them, so task index == lex rank and the
+/// argmin tie-break below reproduces first-found semantics. The cycle
+/// lower bound cannot prune here (no incumbent exists yet), but the
+/// resource bounds are incumbent-independent and drop dead prefixes
+/// before they ever become pool jobs.
+struct PrefixEnum<'a> {
+    p: &'a Problem<'a>,
+    depth: usize,
+    pick: Vec<usize>,
+    out: Vec<PrefixTask>,
+    pruned: u64,
+}
+
+impl PrefixEnum<'_> {
+    fn rec(&mut self, i: usize, cycles: u64, dsp: u64, bram: u64) {
+        if i == self.depth {
+            self.out.push(PrefixTask { pick: self.pick.clone(), cycles, dsp, bram });
+            return;
+        }
+        for (k, c) in self.p.cand[i].iter().enumerate() {
+            let ds = dsp + c.res.dsp;
+            let br = bram + c.res.bram();
+            if ds + self.p.min_dsp[i + 1] > self.p.d_total
+                || br + self.p.min_bram[i + 1] > self.p.b_total
+            {
+                self.pruned += 1;
+                continue;
+            }
+            self.pick.push(k);
+            self.rec(i + 1, cycles + c.cycles, ds, br);
+            self.pick.pop();
+        }
+    }
+}
+
+/// The parallel branch-and-bound. Returns `None` when the prefix split
+/// degenerates to fewer than two tasks (the caller falls back to the
+/// serial DFS).
+///
+/// Bit-identity argument: every resource-feasible prefix becomes a task;
+/// each task runs the serial-semantics DFS over its subtree, pruning
+/// strictly against the shared incumbent (`>= shared + 1`), so any
+/// assignment with objective ≤ the global optimum survives pruning in
+/// whichever subtree lexicographically first contains one. Results come
+/// back index-sorted and only a strictly better objective replaces the
+/// running argmin, so the lowest-ranked subtree wins ties — exactly the
+/// first-found optimum of the serial DFS, which visits subtrees in the
+/// same lexicographic order.
+fn parallel_search(p: &Problem<'_>, workers: usize) -> Option<SearchOutcome> {
+    let depth = split_depth(p.cand, workers);
+    let mut en =
+        PrefixEnum { p, depth, pick: Vec::with_capacity(depth), out: Vec::new(), pruned: 0 };
+    en.rec(0, 0, 0, p.base_fifo);
+    let (prefixes, pre_pruned) = (en.out, en.pruned);
+    if prefixes.len() < 2 {
+        return None;
+    }
+    let metrics = crate::obs::metrics::global();
+    metrics.incr("dse.par_solves");
+    metrics.add("dse.subtree_tasks", prefixes.len() as u64);
+    let shared = AtomicU64::new(u64::MAX);
+    let shared_ref = &shared;
+    let jobs: Vec<_> = prefixes
+        .into_iter()
+        .enumerate()
+        .map(|(ti, task)| {
+            move || {
+                let _sp = crate::obs::span_with("ilp_subtree", || format!("subtree {ti}"));
+                let PrefixTask { pick, cycles, dsp, bram } = task;
+                let mut s = Search {
+                    p,
+                    shared: Some(shared_ref),
+                    best: u64::MAX,
+                    best_pick: Vec::new(),
+                    pick,
+                    explored: 0,
+                    pruned: 0,
+                };
+                s.dfs(depth, cycles, dsp, bram);
+                (s.best, s.best_pick, s.explored, s.pruned)
+            }
+        })
+        .collect();
+    let pool = WorkerPool::new(workers);
+    let results = pool.run_all_scoped(jobs, |_, _| {});
+    let mut out = SearchOutcome {
+        best: u64::MAX,
+        best_pick: Vec::new(),
+        explored: 0,
+        pruned: pre_pruned,
+    };
+    for (ti, r) in results {
+        let (best, best_pick, explored, pruned) =
+            r.unwrap_or_else(|e| panic!("ILP subtree task {ti} failed: {e}"));
+        out.explored += explored;
+        out.pruned += pruned;
+        // strict improvement only: ties go to the earlier subtree
+        if best < out.best {
+            out.best = best;
+            out.best_pick = best_pick;
+        }
+    }
+    Some(out)
 }
 
 /// Outcome of [`solve_with_tiling_fallback`].
@@ -489,5 +779,72 @@ mod tests {
     fn search_effort_is_small() {
         let (_, sol) = solve_kernel("feedforward", 0, DeviceSpec::kv260());
         assert!(sol.nodes_explored < 200_000, "explored {}", sol.nodes_explored);
+    }
+
+    #[test]
+    fn parallel_solver_is_bit_identical_to_serial() {
+        // The tentpole invariant: the same DseSolution and the same
+        // rebuilt design, with and without the dominance filter, at any
+        // worker count (forced past the volume threshold).
+        let g = models::paper_kernel("feedforward", 0).unwrap();
+        for dominance in [true, false] {
+            let mut d1 = build_streaming_design(&g).unwrap();
+            let serial = DseConfig::new(DeviceSpec::kv260())
+                .with_workers(1)
+                .with_dominance_filter(dominance);
+            let s1 = solve(&mut d1, &serial).unwrap();
+            for workers in [2usize, 4] {
+                let mut d2 = build_streaming_design(&g).unwrap();
+                let par = DseConfig::new(DeviceSpec::kv260())
+                    .with_workers(workers)
+                    .with_dominance_filter(dominance)
+                    .with_parallel_min_volume(1);
+                let s2 = solve(&mut d2, &par).unwrap();
+                assert_eq!(s1.objective, s2.objective, "workers {workers}");
+                assert_eq!(s1.chosen, s2.chosen, "workers {workers}");
+                assert_eq!(s1.resources, s2.resources, "workers {workers}");
+                assert_eq!(s1.dsp_used, s2.dsp_used, "workers {workers}");
+                assert_eq!(s1.bram_used, s2.bram_used, "workers {workers}");
+                assert_eq!(format!("{d1:?}"), format!("{d2:?}"), "designs diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_path_runs_and_counts_subtree_tasks() {
+        let m = crate::obs::metrics::global();
+        let before = m.get("dse.par_solves");
+        let g = models::paper_kernel("feedforward", 0).unwrap();
+        let mut d = build_streaming_design(&g).unwrap();
+        let cfg = DseConfig::new(DeviceSpec::kv260()).with_workers(4).with_parallel_min_volume(1);
+        solve(&mut d, &cfg).unwrap();
+        assert!(m.get("dse.par_solves") > before, "forced fan-out must be counted");
+        assert!(m.get("dse.subtree_tasks") > 0);
+    }
+
+    #[test]
+    fn dominance_filter_is_solution_invariant_on_paper_kernels() {
+        // The filter is provably invisible to the chosen solution; it
+        // must also actually fire (the nonzero-ratio acceptance claim).
+        let m = crate::obs::metrics::global();
+        let before = m.get("dse.dominance_pruned");
+        for (name, size) in models::table2_workloads() {
+            let g = models::paper_kernel(name, size.max(32)).unwrap();
+            let mut d1 = build_streaming_design(&g).unwrap();
+            let s1 = solve(&mut d1, &DseConfig::new(DeviceSpec::kv260()).with_workers(1)).unwrap();
+            let mut d2 = build_streaming_design(&g).unwrap();
+            let off = DseConfig::new(DeviceSpec::kv260())
+                .with_workers(1)
+                .with_dominance_filter(false);
+            let s2 = solve(&mut d2, &off).unwrap();
+            assert_eq!(s1.chosen, s2.chosen, "{name}");
+            assert_eq!(s1.objective, s2.objective, "{name}");
+            assert_eq!(s1.resources, s2.resources, "{name}");
+            assert_eq!(format!("{d1:?}"), format!("{d2:?}"), "{name}: designs diverged");
+        }
+        assert!(
+            m.get("dse.dominance_pruned") > before,
+            "paper kernels must contain dominated candidates"
+        );
     }
 }

@@ -44,7 +44,7 @@ pub fn grid_counts(out_h: u64, out_w: u64) -> Vec<(u64, u64)> {
 }
 
 /// One unroll candidate for a node, with its pre-computed cost/resources.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Candidate {
     pub unroll_par: u64,
     pub unroll_red: u64,
@@ -91,10 +91,67 @@ pub fn unroll_timings(d: &Design, nid: usize) -> Vec<NodeTiming> {
     out
 }
 
-/// Enumerate candidates for node `nid` of `d`, cheapest-cycles first,
-/// pricing each timing with the caller's [`ResourceModel`] — build the
-/// model once per design and reuse it across nodes (as `dse::ilp::solve`
-/// does) instead of re-deriving the diamond floors per node.
+/// The canonical candidate ordering key: cycles first (the branch-and-
+/// bound tail prune in `dse::ilp` requires non-decreasing cycles), then
+/// resource footprint, then the unroll pair. `(unroll_par, unroll_red)`
+/// is unique per node lattice, so the key is a **total** order —
+/// [`canonicalize`] restores the exact enumeration order from any
+/// permutation, not just *a* cycle-sorted order.
+fn canonical_key(c: &Candidate) -> (u64, u64, u64, u64, u64) {
+    (c.cycles, c.res.dsp, c.res.bram(), c.unroll_par, c.unroll_red)
+}
+
+/// Is `cands` in the canonical order [`candidates_with`] guarantees?
+/// `dse::ilp::solve` `debug_assert!`s this before searching: the DFS
+/// tail prune silently returns wrong optima on unsorted input.
+pub fn is_canonical(cands: &[Candidate]) -> bool {
+    cands.windows(2).all(|w| canonical_key(&w[0]) <= canonical_key(&w[1]))
+}
+
+/// Re-sort `cands` into the canonical (total) order. Idempotent; after
+/// this, [`is_canonical`] holds.
+pub fn canonicalize(cands: &mut [Candidate]) {
+    cands.sort_by_key(canonical_key);
+}
+
+/// Pareto-dominance filter: drop every candidate that has an earlier
+/// kept candidate no worse in cycles **and** no worse in any
+/// [`ResourceVec`] component — such a candidate can never appear in the
+/// serial DFS's first-found optimum (swapping in its dominator keeps
+/// the objective and feasibility while lowering the lexicographic pick),
+/// so removing it is invisible to the solution *and* to the suffix-
+/// minima lower bounds (the dominator attains every per-field minimum
+/// the dominated candidate did). Checking kept candidates only is
+/// complete because dominance is transitive, and keeping the earlier of
+/// two mutually-dominating (identical-cost) candidates matches the
+/// serial tie-break exactly. Requires — and preserves — canonical
+/// order. Returns the number of dropped candidates
+/// (`dse.dominance_pruned`).
+pub fn dominance_filter(cands: &mut Vec<Candidate>) -> u64 {
+    debug_assert!(is_canonical(cands), "dominance filter requires canonical order");
+    let mut kept: Vec<Candidate> = Vec::with_capacity(cands.len());
+    let mut dropped = 0u64;
+    for c in cands.iter() {
+        if kept.iter().any(|a| a.cycles <= c.cycles && a.res.le(&c.res)) {
+            dropped += 1;
+        } else {
+            kept.push(*c);
+        }
+    }
+    *cands = kept;
+    dropped
+}
+
+/// Enumerate candidates for node `nid` of `d`, pricing each timing with
+/// the caller's [`ResourceModel`] — build the model once per design and
+/// reuse it across nodes (as `dse::ilp::solve` does) instead of
+/// re-deriving the diamond floors per node.
+///
+/// **Ordering contract:** the returned vector is sorted by the canonical
+/// key `(cycles, dsp, bram, unroll_par, unroll_red)` — cheapest-cycles
+/// first. The solver's DFS tail prune ("once even the lower bound
+/// fails, every later candidate fails too") is only correct under this
+/// order; [`is_canonical`] checks it and [`canonicalize`] restores it.
 pub fn candidates_with(model: &ResourceModel, d: &Design, nid: usize) -> Vec<Candidate> {
     let n = &d.nodes[nid];
     let mut out: Vec<Candidate> = unroll_timings(d, nid)
@@ -111,7 +168,7 @@ pub fn candidates_with(model: &ResourceModel, d: &Design, nid: usize) -> Vec<Can
             }
         })
         .collect();
-    out.sort_by_key(|c| (c.cycles, c.res.dsp, c.res.bram()));
+    canonicalize(&mut out);
     out
 }
 
@@ -262,6 +319,69 @@ mod tests {
                 })
             },
         );
+    }
+
+    #[test]
+    fn shuffled_candidates_are_detected_and_canonicalized() {
+        let g = models::conv_relu(32, 8, 8);
+        let d = build_streaming_design(&g).unwrap();
+        let orig = candidates(&d, 0);
+        assert!(is_canonical(&orig));
+        // a shuffled vector is rejected by the invariant check ...
+        let mut shuffled = orig.clone();
+        shuffled.reverse();
+        assert!(!is_canonical(&shuffled), "reversed order must fail the invariant");
+        // ... and canonicalize restores the exact enumeration order,
+        // not merely a cycle-sorted one: the key is total, so every
+        // position matches the original (unroll pair included)
+        canonicalize(&mut shuffled);
+        assert!(is_canonical(&shuffled));
+        for (a, b) in shuffled.iter().zip(&orig) {
+            assert_eq!((a.unroll_par, a.unroll_red), (b.unroll_par, b.unroll_red));
+        }
+    }
+
+    #[test]
+    fn dominance_filter_preserves_minima_order_and_front() {
+        let g = models::conv_relu(32, 8, 8);
+        let d = build_streaming_design(&g).unwrap();
+        let orig = candidates(&d, 0);
+        let mut filtered = orig.clone();
+        let dropped = dominance_filter(&mut filtered);
+        assert_eq!(dropped as usize + filtered.len(), orig.len());
+        // equal-lane unroll splits (e.g. 1x2 vs 2x1) price identically
+        // in cycles/DSP/ROM and differ only in comparable line-buffer
+        // terms, so the 48-candidate conv lattice must contain dominated
+        // points — the nonzero-prune-ratio claim of BENCH_dse.json
+        assert!(dropped > 0, "conv_relu lattice has no dominated candidates?");
+        assert!(is_canonical(&filtered), "filtering must preserve canonical order");
+        // per-field minima are attained by the kept set, so the suffix
+        // lower bounds (and the infeasibility verdict) are unchanged
+        let fields: [fn(&Candidate) -> u64; 3] = [|c| c.cycles, |c| c.res.dsp, |c| c.res.bram()];
+        for f in fields {
+            assert_eq!(orig.iter().map(f).min(), filtered.iter().map(f).min());
+        }
+        // the fastest candidate always survives (it heads the order and
+        // nothing precedes it to dominate it)
+        assert_eq!(filtered[0], orig[0]);
+        // every dropped candidate really is dominated by a kept one
+        for c in &orig {
+            let survives = filtered
+                .iter()
+                .any(|a| (a.unroll_par, a.unroll_red) == (c.unroll_par, c.unroll_red));
+            if !survives {
+                assert!(
+                    filtered.iter().any(|a| a.cycles <= c.cycles && a.res.le(&c.res)),
+                    "dropped candidate {}x{} has no dominator",
+                    c.unroll_par,
+                    c.unroll_red
+                );
+            }
+        }
+        // idempotent: a second pass finds nothing left to drop
+        let mut again = filtered.clone();
+        assert_eq!(dominance_filter(&mut again), 0);
+        assert_eq!(again.len(), filtered.len());
     }
 
     #[test]

@@ -108,15 +108,22 @@ impl Args {
         Ok(Some(cache))
     }
 
-    /// DSE config for one-shot commands: device + optional cache. Also
-    /// hands the cache back so the command can print its stats summary
-    /// when it finishes (the one-shot commands used to drop the `Arc`
-    /// into the config and stay silent about hits/misses).
+    /// DSE config for one-shot commands: device + optional cache +
+    /// solver pool size (`--workers N`; `--workers 1` takes the exact
+    /// serial code path). Also hands the cache back so the command can
+    /// print its stats summary when it finishes (the one-shot commands
+    /// used to drop the `Arc` into the config and stay silent about
+    /// hits/misses).
     fn dse_config(&self, dev: &DeviceSpec) -> Result<(DseConfig, Option<Arc<DesignCache>>)> {
         let cache = self.design_cache()?;
         let mut cfg = DseConfig::new(dev.clone());
         if let Some(c) = &cache {
             cfg = cfg.with_cache(Arc::clone(c));
+        }
+        if let Some(n) = self.flags.get("workers") {
+            let n: usize = n.parse().context("--workers expects a positive integer")?;
+            ensure!(n >= 1, "--workers must be >= 1");
+            cfg = cfg.with_workers(n);
         }
         Ok((cfg, cache))
     }
@@ -196,8 +203,12 @@ impl Args {
 }
 
 /// Scale-out flags only the sweep commands (`sweep`/`table2`/`table3`)
-/// implement.
+/// implement. `compile`, `import`, and `simulate` carve out `--workers`
+/// (parallel DSE / tiled simulation) and forbid only the rest.
 const SWEEP_ONLY_FLAGS: &[&str] = &["workers", "shard", "spool", "estimate-only"];
+
+/// The sweep-only flags minus `--workers`, for the commands above.
+const SWEEP_ONLY_FLAGS_SANS_WORKERS: &[&str] = &["shard", "spool", "estimate-only"];
 
 /// Cache-stats summary for every cache-enabled command (sweeps already
 /// print it in `run_sweep_cmd`; the one-shot commands go through here).
@@ -269,7 +280,9 @@ fn report_tiled_compile(a: &Args, tc: &TiledCompilation, dev: &DeviceSpec) -> Re
 }
 
 fn cmd_compile(a: &Args) -> Result<()> {
-    a.forbid_flags("compile", SWEEP_ONLY_FLAGS)?;
+    // `compile` takes --workers (parallel branch-and-bound and
+    // speculative grid search) but none of the sharding/spooling flags.
+    a.forbid_flags("compile", SWEEP_ONLY_FLAGS_SANS_WORKERS)?;
     let kernel = a.get("kernel", "conv_relu");
     let size: usize = a.get("size", "32").parse()?;
     let dev = a.device()?;
@@ -344,7 +357,7 @@ fn print_ff_summary(ff: &FfStats, cycles: u64) {
 fn cmd_simulate(a: &Args) -> Result<()> {
     // `simulate` takes --workers (parallel tiled execution) but none of
     // the sweep-only sharding/spooling flags.
-    a.forbid_flags("simulate", &["shard", "spool", "estimate-only"])?;
+    a.forbid_flags("simulate", SWEEP_ONLY_FLAGS_SANS_WORKERS)?;
     let kernel = a.get("kernel", "conv_relu");
     let size: usize = a.get("size", "32").parse()?;
     let sim_cfg = if a.get_bool("exact-sim")? { SimConfig::exact() } else { SimConfig::default() };
@@ -715,7 +728,9 @@ fn cmd_verify(a: &Args) -> Result<()> {
 }
 
 fn cmd_import(a: &Args) -> Result<()> {
-    a.forbid_flags("import", SWEEP_ONLY_FLAGS)?;
+    // `import` cold-compiles an external model: --workers feeds the
+    // parallel solver exactly like `compile`.
+    a.forbid_flags("import", SWEEP_ONLY_FLAGS_SANS_WORKERS)?;
     let path = a.flags.get("model").context("--model <file.json> required")?;
     let text = std::fs::read_to_string(path)?;
     let g = import_model(&text)?;
@@ -753,7 +768,8 @@ fn help() {
         "ming — MING CNN-to-edge HLS framework (paper reproduction)\n\n\
          USAGE: ming <command> [--flag value ...]\n\n\
          COMMANDS\n\
-         \x20 compile   --kernel K --size N [--framework F] [--device D] [--emit f.cpp] [--emit-tb tb.cpp]\n\
+         \x20 compile   --kernel K --size N [--framework F] [--device D] [--workers N]\n\
+         \x20           [--emit f.cpp] [--emit-tb tb.cpp]\n\
          \x20           MING falls back to stride-aware 2-D tile-grid decomposition when the\n\
          \x20           DSE is infeasible; --emit-tb then writes a per-boundary seam testbench\n\
          \x20 simulate  --kernel K --size N [--framework F] [--device D] [--workers N]\n\
@@ -768,14 +784,16 @@ fn help() {
          \x20 merge-sweep --spool DIR [--report table2|table3]\n\
          \x20           stitch sharded sweep spools into the unsharded report\n\
          \x20 verify                        golden-model check (needs `make artifacts`)\n\
-         \x20 import    --model m.json [--emit f.cpp]\n\n\
+         \x20 import    --model m.json [--emit f.cpp] [--workers N]\n\n\
          SCALE-OUT (compile/simulate/import + sweep commands)\n\
          \x20 --design-cache DIR  reuse solved designs across runs/processes\n\
          \x20                     (content-addressed by graph+device fingerprint;\n\
          \x20                      infeasible verdicts are negative-cached too)\n\
          \x20 --cache-gc N        mtime-LRU sweep of the cache dir at start,\n\
          \x20                     keeping the N most recent entries\n\
-         \x20 --workers N         worker-pool size (sweeps + tiled simulation)\n\
+         \x20 --workers N         worker-pool size: sweep fan-out, tiled simulation,\n\
+         \x20                     and the cold-path DSE (parallel branch-and-bound +\n\
+         \x20                     speculative grid search; --workers 1 = exact serial path)\n\
          \x20 --shard i/n         run the i-th of n deterministic sweep slices\n\
          \x20 --spool DIR         append JSONL results for merge-sweep / resume\n\
          \x20                     (already-spooled jobs are skipped on re-run)\n\n\

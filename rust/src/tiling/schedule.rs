@@ -11,7 +11,11 @@
 //! BRAM budget end to end. Fewer cells means less halo recompute and
 //! restart overhead, so the first hit is the best; among equal cell
 //! counts, width-major splits come first (narrower cells shrink line
-//! buffers, the dominant BRAM term).
+//! buffers, the dominant BRAM term). With `DseConfig::workers > 1` the
+//! candidates surviving the cheap prunes are cell-solved
+//! **speculatively in parallel** ([`speculative_grid_search`]); the
+//! committed grid is provably the one the serial walk would pick, so
+//! the two paths are interchangeable byte for byte.
 //!
 //! [`simulate_tiled`] then runs the cell design once per grid cell over
 //! the halo-overlapped 2-D input windows and stitches the cropped cores
@@ -96,6 +100,22 @@ fn compile_tiled_with_grid(
     cfg: &DseConfig,
     grid: TileGrid,
 ) -> Result<TiledCompilation> {
+    Ok(compile_tiled_with_grid_cancellable(g, cfg, grid, &|| false)?
+        .expect("uncancellable grid compile returned None"))
+}
+
+/// [`compile_tiled_with_grid`] with cooperative cancellation for the
+/// speculative grid search: `cancelled` is probed at the stage
+/// boundaries (before the cell DSE and before the estimate check), and
+/// a `true` answer abandons the candidate with `Ok(None)`. The probes
+/// never interrupt a stage mid-flight, so any candidate that runs to
+/// completion produces exactly what the serial search would have.
+fn compile_tiled_with_grid_cancellable(
+    g: &ModelGraph,
+    cfg: &DseConfig,
+    grid: TileGrid,
+    cancelled: &dyn Fn() -> bool,
+) -> Result<Option<TiledCompilation>> {
     let mut cell = build_cell_design(g, grid.h.local_in, grid.w.local_in)?;
     // the planner's affine local-output prediction must match the cell
     // graph's actual forward shape propagation
@@ -110,10 +130,16 @@ fn compile_tiled_with_grid(
             grid.w.local_out
         );
     }
+    if cancelled() {
+        return Ok(None);
+    }
     let _sp = crate::obs::span_with("cell_solve", || {
         format!("cell {}x{} ({})", grid.h.local_in, grid.w.local_in, g.name)
     });
     let solution = crate::coordinator::cache::solve_cached(&mut cell, cfg)?;
+    if cancelled() {
+        return Ok(None);
+    }
     let report = crate::resources::estimate(&cell, &cfg.device);
     ensure!(
         report.bram18k <= cfg.device.bram18k,
@@ -123,7 +149,56 @@ fn compile_tiled_with_grid(
         report.bram18k,
         cfg.device.bram18k
     );
-    Ok(TiledCompilation { graph: g.clone(), grid, cell, solution })
+    Ok(Some(TiledCompilation { graph: g.clone(), grid, cell, solution }))
+}
+
+/// Why one grid candidate was rejected, and at which funnel stage
+/// (`plan`, `no-shrink`, `bram-lower-bound`, or `cell-compile`).
+#[derive(Debug, Clone)]
+pub struct GridRejection {
+    pub rows: u64,
+    pub cols: u64,
+    pub stage: &'static str,
+    pub reason: String,
+}
+
+/// Cap on stored per-candidate details — large output lattices can
+/// reject hundreds of grids, and triage only needs the leading edge of
+/// the funnel plus the total count.
+const MAX_REJECTION_DETAILS: usize = 12;
+
+/// Bounded per-candidate rejection summary for one grid search. Every
+/// rejection bumps `tiling.candidates_rejected` and the total; only the
+/// first [`MAX_REJECTION_DETAILS`] keep their full (grid, stage,
+/// reason) triple. Rendered under `--profile` and appended to the
+/// all-candidates-failed error so infeasible-workload triage does not
+/// require a re-run with tracing enabled.
+#[derive(Debug, Default)]
+struct RejectionLog {
+    details: Vec<GridRejection>,
+    total: u64,
+}
+
+impl RejectionLog {
+    fn push(&mut self, rows: u64, cols: u64, stage: &'static str, reason: String) {
+        crate::obs::metrics::global().incr("tiling.candidates_rejected");
+        self.total += 1;
+        if self.details.len() < MAX_REJECTION_DETAILS {
+            self.details.push(GridRejection { rows, cols, stage, reason });
+        }
+    }
+
+    fn render(&self, graph: &str) -> String {
+        let mut out = format!("grid search rejected {} candidate(s) for {graph}:", self.total);
+        for d in &self.details {
+            out.push_str(&format!("\n  {}x{} [{}] {}", d.rows, d.cols, d.stage, d.reason));
+        }
+        let shown = self.details.len() as u64;
+        if self.total > shown {
+            out.push_str(&format!("\n  ... and {} more", self.total - shown));
+        }
+        out
+    }
 }
 
 /// Feasibility fallback: find the smallest grid whose cell design fits
@@ -185,7 +260,12 @@ pub fn compile_tiled_from(
     );
     let metrics = crate::obs::metrics::global();
     let _sp = crate::obs::span_with("grid_search", || g.name.clone());
+    let mut rejections = RejectionLog::default();
     let mut tried = std::collections::HashSet::new();
+    // Phase 1 — the cheap serial funnel: plan each candidate grid once
+    // and run the free prunes, in fewest-cells order. Survivors are the
+    // (ordered) grids worth a cell DSE.
+    let mut survivors: Vec<TileGrid> = Vec::new();
     for (r, c) in candidates {
         if !tried.insert((r, c)) {
             continue;
@@ -194,7 +274,7 @@ pub fn compile_tiled_from(
         let grid = match TileGrid::build(g, r as usize, c as usize) {
             Ok(grid) => grid,
             Err(e) => {
-                metrics.incr("tiling.candidates_rejected");
+                rejections.push(r, c, "plan", format!("{e:#}"));
                 last_err = e;
                 continue;
             }
@@ -202,7 +282,7 @@ pub fn compile_tiled_from(
         // every split axis must actually shrink its local extent,
         // otherwise the grid only adds halo recompute
         if (grid.rows() > 1 && !grid.h.shrinks()) || (grid.cols() > 1 && !grid.w.shrinks()) {
-            metrics.incr("tiling.candidates_rejected");
+            rejections.push(r, c, "no-shrink", "split axis does not shrink local extent".into());
             continue;
         }
         // cheap prune: the unified-model lower bound (line buffers
@@ -210,22 +290,148 @@ pub fn compile_tiled_from(
         // floors, minimized per node over the unroll lattice) must fit
         // before paying for a cell DSE
         let ext = local_extents(g, grid.h.local_in, grid.w.local_in)?;
-        if cell_bram_lower_bound(base, &ext) > budget {
-            metrics.incr("tiling.candidates_rejected");
+        let lb = cell_bram_lower_bound(base, &ext);
+        if lb > budget {
+            let reason = format!("cell BRAM lower bound {lb} exceeds budget {budget}");
+            rejections.push(r, c, "bram-lower-bound", reason);
             continue;
         }
+        survivors.push(grid);
+    }
+
+    // Phase 2 — cell DSE over the survivors: speculative fan-out when
+    // the config has workers to spare, the plain serial walk otherwise
+    // (or when only one candidate survived the funnel).
+    let winner = if cfg.workers > 1 && survivors.len() > 1 {
+        speculative_grid_search(g, cfg, survivors, &mut rejections, &mut last_err)
+    } else {
+        serial_grid_search(g, cfg, survivors, &mut rejections, &mut last_err)
+    };
+    if crate::obs::trace::global().is_profiling() && rejections.total > 0 {
+        eprintln!("{}", rejections.render(&g.name));
+    }
+    match winner {
+        Some(tc) => {
+            metrics.incr("tiling.grids_accepted");
+            Ok(tc)
+        }
+        None => {
+            let err = if rejections.total > 0 {
+                last_err.context(rejections.render(&g.name))
+            } else {
+                last_err
+            };
+            Err(err.context(format!("tile-grid fallback failed for graph {}", g.name)))
+        }
+    }
+}
+
+/// Walk the surviving grids in fewest-cells order and commit the first
+/// whose cell design solves and fits — the original (and reference)
+/// search semantics.
+fn serial_grid_search(
+    g: &ModelGraph,
+    cfg: &DseConfig,
+    survivors: Vec<TileGrid>,
+    rejections: &mut RejectionLog,
+    last_err: &mut anyhow::Error,
+) -> Option<TiledCompilation> {
+    for grid in survivors {
+        let (r, c) = (grid.rows() as u64, grid.cols() as u64);
         match compile_tiled_with_grid(g, cfg, grid) {
-            Ok(tc) => {
-                metrics.incr("tiling.grids_accepted");
-                return Ok(tc);
-            }
+            Ok(tc) => return Some(tc),
             Err(e) => {
-                metrics.incr("tiling.candidates_rejected");
-                last_err = e;
+                rejections.push(r, c, "cell-compile", format!("{e:#}"));
+                *last_err = e;
             }
         }
     }
-    Err(last_err.context(format!("tile-grid fallback failed for graph {}", g.name)))
+    None
+}
+
+/// Evaluate the surviving grids concurrently but commit the **first
+/// acceptable grid in the existing fewest-cells order** — exactly what
+/// [`serial_grid_search`] returns.
+///
+/// Protocol: jobs share a `committed` cell holding the lowest
+/// successful candidate index (`usize::MAX` until someone succeeds). A
+/// job observing a smaller committed index abandons its grid (at start
+/// or at a [`compile_tiled_with_grid_cancellable`] stage boundary); a
+/// success publishes its own index with `fetch_min`. Determinism: the
+/// winner is the minimum-index success, and every candidate ranked
+/// below it can never observe a smaller committed index — so each ran
+/// to completion and failed for real, exactly as the serial walk would
+/// have. Their failures land in the rejection log; later-ranked
+/// completions are counted as `tiling.speculative_wasted` and
+/// abandoned ones as `tiling.speculative_cancelled`.
+///
+/// Per-cell solves still dedupe through the design cache (same
+/// fingerprints as the serial path), and each speculative job pins its
+/// cell DSE to one worker — the parallelism budget is spent across
+/// grids here, not nested inside one solve.
+fn speculative_grid_search(
+    g: &ModelGraph,
+    cfg: &DseConfig,
+    survivors: Vec<TileGrid>,
+    rejections: &mut RejectionLog,
+    last_err: &mut anyhow::Error,
+) -> Option<TiledCompilation> {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    let metrics = crate::obs::metrics::global();
+    let cell_cfg = cfg.clone().with_workers(1);
+    let dims: Vec<(u64, u64)> =
+        survivors.iter().map(|gr| (gr.rows() as u64, gr.cols() as u64)).collect();
+    let committed = AtomicUsize::new(usize::MAX);
+    let committed_ref = &committed;
+    let cell_cfg_ref = &cell_cfg;
+    let jobs: Vec<_> = survivors
+        .into_iter()
+        .enumerate()
+        .map(|(i, grid)| {
+            move || -> Result<Option<TiledCompilation>> {
+                let _sp = crate::obs::span_with("grid_try", || {
+                    format!("grid {}x{} ({})", grid.rows(), grid.cols(), g.name)
+                });
+                if committed_ref.load(Ordering::Relaxed) < i {
+                    return Ok(None);
+                }
+                let cancelled = || committed_ref.load(Ordering::Relaxed) < i;
+                let out = compile_tiled_with_grid_cancellable(g, cell_cfg_ref, grid, &cancelled)?;
+                if out.is_some() {
+                    committed_ref.fetch_min(i, Ordering::Relaxed);
+                }
+                Ok(out)
+            }
+        })
+        .collect();
+    let pool = WorkerPool::new(cfg.workers.min(dims.len()));
+    let results = pool.run_all_scoped(jobs, |_, _| {});
+    let mut winner: Option<TiledCompilation> = None;
+    for (idx, r) in results {
+        let (rows, cols) = dims[idx];
+        match r.map_err(anyhow::Error::msg).and_then(|inner| inner) {
+            Ok(Some(tc)) => {
+                if winner.is_none() {
+                    winner = Some(tc);
+                } else {
+                    metrics.incr("tiling.speculative_wasted");
+                }
+            }
+            Ok(None) => {
+                metrics.incr("tiling.speculative_cancelled");
+            }
+            Err(e) => {
+                if winner.is_none() {
+                    rejections.push(rows, cols, "cell-compile", format!("{e:#}"));
+                    *last_err = e;
+                } else {
+                    metrics.incr("tiling.speculative_wasted");
+                }
+            }
+        }
+    }
+    winner
 }
 
 /// Result of a tiled simulation.
@@ -725,6 +931,47 @@ mod tests {
         let want = untiled_output(&g, &x);
         let rep = simulate_tiled(&tc, &x).unwrap();
         assert_eq!(rep.output, want);
+    }
+
+    #[test]
+    fn speculative_grid_search_matches_serial_choice() {
+        // Same starved device as fallback_rescues_bram_starved_conv:
+        // several survivors reach the cell-DSE stage, so the parallel
+        // path actually speculates — and must still commit the exact
+        // grid (and byte-identical cell design) the serial walk picks.
+        let g = models::conv_relu(80, 32, 8);
+        let dev = DeviceSpec::kv260().with_bram_limit(4);
+        let serial = compile_tiled(&g, &DseConfig::new(dev.clone()).with_workers(1)).unwrap();
+        for workers in [2usize, 4] {
+            let cfg = DseConfig::new(dev.clone()).with_workers(workers);
+            let spec = compile_tiled(&g, &cfg).unwrap();
+            assert_eq!(
+                (spec.grid.rows(), spec.grid.cols()),
+                (serial.grid.rows(), serial.grid.cols()),
+                "workers {workers}: committed grid diverged"
+            );
+            assert_eq!(spec.solution.objective, serial.solution.objective);
+            assert_eq!(spec.solution.chosen, serial.solution.chosen);
+            assert_eq!(
+                format!("{:?}", spec.cell),
+                format!("{:?}", serial.cell),
+                "workers {workers}: cell design diverged"
+            );
+        }
+    }
+
+    #[test]
+    fn failed_grid_search_reports_bounded_rejection_summary() {
+        // A zero-BRAM device rejects every candidate at the lower-bound
+        // prune; the error must carry the bounded per-candidate summary
+        // so triage does not need a re-run with tracing.
+        let g = models::conv_relu(32, 8, 8);
+        let cfg = DseConfig::new(DeviceSpec::kv260().with_bram_limit(0));
+        let err = compile_tiled(&g, &cfg).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("fallback"), "{msg}");
+        assert!(msg.contains("rejected"), "{msg}");
+        assert!(msg.contains("bram-lower-bound"), "{msg}");
     }
 
     #[test]

@@ -546,6 +546,64 @@ fn fast_forward_detects_no_false_period_on_aperiodic_deadlock() {
     assert_eq!(fast.total_firings, exact.total_firings);
 }
 
+/// A random model paired with a random device budget straddling the
+/// feasibility boundary: some cases solve, some come out infeasible —
+/// and both verdicts must agree across solver configurations.
+fn random_budgeted_case(g: &mut Gen) -> (ModelGraph, DeviceSpec) {
+    let graph = random_graph(g);
+    let rng = &mut g.rng;
+    let dev = DeviceSpec::kv260()
+        .with_dsp_limit(8 + rng.below(250))
+        .with_bram_limit(4 + rng.below(140));
+    (graph, dev)
+}
+
+#[test]
+fn prop_parallel_dse_is_bit_identical_to_serial() {
+    // The cold-path tentpole contract on random graphs × random device
+    // budgets: the parallel branch-and-bound (forced past its volume
+    // threshold) returns a DseSolution field-for-field identical to the
+    // serial solver's, and the rebuilt designs emit identical HLS bytes
+    // — with and without the dominance filter. Infeasible cases must
+    // fail identically too, message included.
+    use ming::codegen::emit::emit_design;
+    forall("parallel dse == serial", 18, random_budgeted_case, |(g, dev)| {
+        for dominance in [true, false] {
+            let serial_cfg = DseConfig::new(dev.clone())
+                .with_workers(1)
+                .with_dominance_filter(dominance);
+            let mut d1 = build_streaming_design(g).unwrap();
+            let r1 = solve(&mut d1, &serial_cfg);
+            let par_cfg = DseConfig::new(dev.clone())
+                .with_workers(4)
+                .with_dominance_filter(dominance)
+                .with_parallel_min_volume(1);
+            let mut d2 = build_streaming_design(g).unwrap();
+            let r2 = solve(&mut d2, &par_cfg);
+            match (r1, r2) {
+                (Ok(s1), Ok(s2)) => {
+                    assert_eq!(s1.chosen, s2.chosen, "{}: chosen candidates", g.name);
+                    assert_eq!(s1.objective, s2.objective, "{}: objective", g.name);
+                    assert_eq!(s1.resources, s2.resources, "{}: resources", g.name);
+                    assert_eq!(s1.dsp_used, s2.dsp_used, "{}: dsp", g.name);
+                    assert_eq!(s1.bram_used, s2.bram_used, "{}: bram", g.name);
+                    assert_eq!(emit_design(&d1), emit_design(&d2), "{}: HLS bytes", g.name);
+                }
+                (Err(e1), Err(e2)) => {
+                    assert_eq!(format!("{e1:#}"), format!("{e2:#}"), "{}: error", g.name);
+                }
+                (r1, r2) => panic!(
+                    "{}: feasibility diverged (serial ok={}, parallel ok={})",
+                    g.name,
+                    r1.is_ok(),
+                    r2.is_ok()
+                ),
+            }
+        }
+        true
+    });
+}
+
 #[test]
 fn prop_input_data_does_not_change_cycles() {
     // Streaming designs are data-oblivious: cycle counts must not depend
