@@ -8,7 +8,11 @@
 //!     for this pair so the comparison isolates raw search parallelism;
 //!     the filtered serial time is reported alongside for scale),
 //!   * serial-vs-speculative tile-grid search wall-time on the
-//!     BRAM-starved conv fallback scenario.
+//!     BRAM-starved conv fallback scenario,
+//!   * cold-vs-warm sweep wall time on a multi-size same-kernel
+//!     workload (node-front memoization + repair-based incumbent
+//!     seeding), with the front-cache hit rate and the warm-seed
+//!     prune ratio on explored nodes.
 //!
 //! Emits `BENCH_dse.json` (uploaded as a CI artifact) and gates against
 //! the committed `BENCH_dse_baseline.json` floors (0.8x baseline, same
@@ -17,10 +21,12 @@
 //!
 //! Run: `cargo bench --bench dse_perf`
 
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use ming::dataflow::build::build_streaming_design;
 use ming::dse::ilp::{solve, DseConfig};
+use ming::dse::WarmStart;
 use ming::ir::builder::{models, GraphBuilder};
 use ming::ir::graph::ModelGraph;
 use ming::ir::json;
@@ -160,6 +166,78 @@ fn main() {
         gs_spec.as_secs_f64() * 1e3
     );
 
+    // --- warm start: cold vs warm multi-size sweep ------------------------
+    // The cross-problem reuse story: a sweep that revisits the same
+    // kernels at several sizes shares node geometries (front cache) and
+    // shapes (incumbent seeds). Cold solves every problem from scratch;
+    // warm runs against a store primed by one prior pass, so the
+    // measured passes are steady-state: every node front is a hit and
+    // every problem starts from a validated incumbent.
+    let ws_sweep: &[(&str, usize)] = &[
+        ("conv_relu", 32),
+        ("conv_relu", 48),
+        ("cascade", 32),
+        ("cascade", 48),
+        ("residual", 32),
+        ("residual", 48),
+        ("linear", 32),
+        ("feedforward", 32),
+    ];
+    let ws_graphs: Vec<ModelGraph> =
+        ws_sweep.iter().map(|&(n, sz)| models::paper_kernel(n, sz).unwrap()).collect();
+    let (mut cold_obj, mut cold_explored) = (0u64, 0u64);
+    let ws_cold = min_wall(3, || {
+        let (mut obj, mut exp) = (0u64, 0u64);
+        for gr in &ws_graphs {
+            let mut d = build_streaming_design(gr).unwrap();
+            let sol = solve(&mut d, &DseConfig::new(dev.clone())).unwrap();
+            obj += sol.objective;
+            exp += sol.nodes_explored;
+        }
+        cold_obj = obj;
+        cold_explored = exp;
+        obj
+    });
+    let warm = Arc::new(WarmStart::new());
+    let warm_cfg = DseConfig::new(dev.clone()).with_warm_start(Arc::clone(&warm));
+    for gr in &ws_graphs {
+        // priming pass: populate fronts and record every shape's optimum
+        let mut d = build_streaming_design(gr).unwrap();
+        solve(&mut d, &warm_cfg).unwrap();
+    }
+    let h0 = metrics.get("dse.front_hits");
+    let fm0 = metrics.get("dse.front_misses");
+    let sd0 = metrics.get("dse.warm_seeds");
+    let (mut warm_obj, mut warm_explored) = (0u64, 0u64);
+    let ws_warm = min_wall(3, || {
+        let (mut obj, mut exp) = (0u64, 0u64);
+        for gr in &ws_graphs {
+            let mut d = build_streaming_design(gr).unwrap();
+            let sol = solve(&mut d, &warm_cfg).unwrap();
+            obj += sol.objective;
+            exp += sol.nodes_explored;
+        }
+        warm_obj = obj;
+        warm_explored = exp;
+        obj
+    });
+    assert_eq!(cold_obj, warm_obj, "warm-started sweep diverged from cold");
+    let front_hits = metrics.get("dse.front_hits") - h0;
+    let front_misses = metrics.get("dse.front_misses") - fm0;
+    let warm_seeds = metrics.get("dse.warm_seeds") - sd0;
+    assert!(front_hits > 0, "steady-state warm sweep must hit the front cache");
+    let front_hit_rate = front_hits as f64 / (front_hits + front_misses).max(1) as f64;
+    let seed_prune_ratio = 1.0 - warm_explored as f64 / cold_explored.max(1) as f64;
+    let ws_speedup = ws_cold.as_secs_f64() / ws_warm.as_secs_f64().max(1e-9);
+    println!(
+        "warm_sweep x{}: cold {:.1}ms, warm {:.1}ms = {ws_speedup:.2}x; front hit rate \
+         {front_hit_rate:.3} ({front_hits} hits), {warm_seeds} seeds pruned \
+         {seed_prune_ratio:.3} of explored nodes ({cold_explored} -> {warm_explored})",
+        ws_sweep.len(),
+        ws_cold.as_secs_f64() * 1e3,
+        ws_warm.as_secs_f64() * 1e3
+    );
+
     let json_out = format!(
         "{{\"bench\":\"dse\",\
          \"cold\":{{\"solves_per_sec\":{cold_solves_per_sec:.1},\
@@ -172,13 +250,20 @@ fn main() {
          \"serial_explored\":{serial_explored},\
          \"filtered_serial_ms\":{:.3}}},\
          \"grid_search\":{{\"serial_ms\":{:.3},\"speculative_ms\":{:.3},\
-         \"speculative_speedup\":{gs_speedup:.2}}}}}",
+         \"speculative_speedup\":{gs_speedup:.2}}},\
+         \"warm\":{{\"sweep_len\":{},\"cold_ms\":{:.3},\"warm_ms\":{:.3},\
+         \"speedup\":{ws_speedup:.2},\"front_hits\":{front_hits},\
+         \"front_hit_rate\":{front_hit_rate:.4},\"warm_seeds\":{warm_seeds},\
+         \"seed_prune_ratio\":{seed_prune_ratio:.4}}}}}",
         workloads.len(),
         wl_serial.as_secs_f64() * 1e3,
         wl_parallel.as_secs_f64() * 1e3,
         wl_filtered.as_secs_f64() * 1e3,
         gs_serial.as_secs_f64() * 1e3,
         gs_spec.as_secs_f64() * 1e3,
+        ws_sweep.len(),
+        ws_cold.as_secs_f64() * 1e3,
+        ws_warm.as_secs_f64() * 1e3,
     );
     std::fs::write("BENCH_dse.json", format!("{json_out}\n")).expect("writing BENCH_dse.json");
     println!("wrote BENCH_dse.json");
@@ -202,6 +287,9 @@ fn main() {
         let mut gates = vec![
             ("cold.solves_per_sec", cold_solves_per_sec),
             ("dominance.ratio", dominance_ratio),
+            // single-process and allocation-bound, so armed on any core
+            // count: steady-state warm must stay ahead of cold
+            ("warm.speedup", ws_speedup),
         ];
         if cores >= 4 {
             gates.push(("wide_lattice.parallel_speedup", wl_speedup));

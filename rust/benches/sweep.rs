@@ -1,14 +1,17 @@
 //! Bench: sweep wall-time with and without the content-addressed design
 //! cache, emitting `BENCH_sweep.json` (wall-time + cache hit rate +
-//! span-tracing overhead) for CI tracking.
+//! span-tracing overhead + DSE warm-start reuse counters) for CI
+//! tracking. Also proves the cold sweep — full and 2-way sharded —
+//! reuses node fronts across problems (`dse.front_hits > 0`).
 //!
 //! Run: `cargo bench --bench sweep`
 
+use std::collections::BTreeSet;
 use std::sync::Arc;
 use std::time::Instant;
 
 use ming::coordinator::cache::DesignCache;
-use ming::coordinator::service::{CompileService, SweepConfig};
+use ming::coordinator::service::{CompileService, Shard, SweepConfig};
 use ming::coordinator::WorkerPool;
 use ming::resources::device::DeviceSpec;
 use ming::util::bench::fmt_dur;
@@ -17,15 +20,24 @@ fn main() {
     let mut cfg = SweepConfig::table2(DeviceSpec::kv260());
     cfg.estimate_only = true; // wall-time here is compile+DSE, not simulation
 
-    // cold: empty cache, every problem solved for real
+    // cold: empty cache, every problem solved for real — but the
+    // service's per-sweep DSE warm-start store is already live, so the
+    // cold run itself reuses node fronts across structurally-identical
+    // layers and seeds incumbents between same-shape problems
     let cache = Arc::new(DesignCache::in_memory());
     let svc = CompileService::new(WorkerPool::default_size()).with_cache(cache.clone());
+    let m = ming::obs::metrics::global();
+    let fh0 = m.get("dse.front_hits");
+    let ws0 = m.get("dse.warm_seeds");
     let t0 = Instant::now();
     let cold_results = svc.run_sweep(&cfg);
     let cold = t0.elapsed();
+    let dse_front_hits = m.get("dse.front_hits") - fh0;
+    let dse_warm_seeds = m.get("dse.warm_seeds") - ws0;
     let cold_stats = cache.stats();
     assert!(cold_results.iter().all(|r| r.is_ok()), "table2 estimate sweep must succeed");
     assert!(cold_stats.solves > 0, "cold sweep must solve");
+    assert!(dse_front_hits > 0, "cold sweep must reuse node fronts across problems");
 
     // warm: same cache, the acceptance invariant is zero ILP solves
     let t1 = Instant::now();
@@ -82,6 +94,29 @@ fn main() {
         traced_delta.get("pool.busy_us") / 1000,
     );
     println!("  {}", cache.summary());
+    println!(
+        "  dse warm-start (cold run): {dse_front_hits} front hits, {dse_warm_seeds} \
+         incumbent seeds"
+    );
+
+    // sharded cold sweep: each shard runs in a fresh service (its own
+    // warm-start store, no design cache), as two processes would — the
+    // front cache must still pay off inside every shard
+    let shard_hits: u64 = (0..2)
+        .map(|index| {
+            let shard_svc = CompileService::new(WorkerPool::default_size());
+            let before = m.get("dse.front_hits");
+            let results =
+                shard_svc.run_shard(&cfg, Shard { index, count: 2 }, &BTreeSet::new());
+            assert!(
+                results.iter().all(|(_, r)| r.is_ok()),
+                "shard {index}/2 estimate sweep must succeed"
+            );
+            m.get("dse.front_hits") - before
+        })
+        .sum();
+    assert!(shard_hits > 0, "cold sharded sweep must hit the front cache");
+    println!("  dse warm-start (2-shard cold run): {shard_hits} front hits");
 
     let json = format!(
         "{{\"bench\":\"sweep\",\"jobs\":{},\"workers\":{},\
@@ -89,6 +124,8 @@ fn main() {
          \"warm_hits\":{warm_hits},\"warm_misses\":{warm_misses},\
          \"stores\":{},\"ilp_solves_cold\":{},\
          \"ilp_solves_warm\":0,\"warm_hit_rate\":{hit_rate:.4},\
+         \"dse_front_hits\":{dse_front_hits},\"dse_warm_seeds\":{dse_warm_seeds},\
+         \"dse_shard_front_hits\":{shard_hits},\
          \"traced_ms\":{:.3},\"trace_overhead_pct\":{overhead_pct:.2},\
          \"trace_events\":{trace_events},\"pool_busy_us\":{},\"pool_idle_us\":{}}}",
         cold_results.len(),

@@ -104,6 +104,22 @@ impl CacheStats {
     }
 }
 
+/// What the disk tier of a cache currently holds — computed by
+/// [`DesignCache::disk_stats`] for `ming cache-stats`. Zero-valued for
+/// in-memory caches.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DiskStats {
+    /// Parseable `.json` entry files.
+    pub entries: usize,
+    /// Bytes across all entry files (readable or not).
+    pub bytes: u64,
+    /// Entries holding a negative [`CachedDesign::Infeasible`] verdict.
+    pub infeasible: usize,
+    /// Entry files that failed to read or parse (would degrade to a
+    /// miss at lookup time).
+    pub unreadable: usize,
+}
+
 /// Thread-safe design cache (wrap in `Arc` to share across workers).
 pub struct DesignCache {
     dir: Option<PathBuf>,
@@ -114,6 +130,10 @@ pub struct DesignCache {
     corrupt: AtomicU64,
     solves: AtomicU64,
     evicted: AtomicU64,
+    /// Snapshot of the last [`Self::flush_metrics`] — the delta base, so
+    /// the flush can mirror counter *changes* into the global registry
+    /// without double-counting (see that method).
+    flushed: Mutex<CacheStats>,
 }
 
 impl std::fmt::Debug for DesignCache {
@@ -137,6 +157,7 @@ impl DesignCache {
             corrupt: AtomicU64::new(0),
             solves: AtomicU64::new(0),
             evicted: AtomicU64::new(0),
+            flushed: Mutex::new(CacheStats::default()),
         }
     }
 
@@ -161,14 +182,12 @@ impl DesignCache {
 
     /// Look up a fingerprint: memory first, then disk. Counts a hit or
     /// a miss; unreadable disk entries additionally count as corrupt.
-    /// Every counter is mirrored into the global metrics registry under
-    /// `cache.*` so `--profile` and bench output see cache behavior
-    /// without holding the cache handle.
+    /// Counters reach the global `cache.*` metrics through the unified
+    /// [`Self::flush_metrics`], not inline — every command path (and
+    /// the `Drop` backstop) syncs the registry the same way.
     pub fn lookup(&self, fp: u64) -> Option<CachedDesign> {
-        let m = crate::obs::metrics::global();
         if let Some(e) = self.mem.lock().unwrap().get(&fp).cloned() {
             self.hits.fetch_add(1, Ordering::Relaxed);
-            m.incr("cache.hits");
             return Some(e);
         }
         if let Some(path) = self.entry_path(fp) {
@@ -177,13 +196,11 @@ impl DesignCache {
                     Ok(e) => {
                         self.mem.lock().unwrap().insert(fp, e.clone());
                         self.hits.fetch_add(1, Ordering::Relaxed);
-                        m.incr("cache.hits");
                         return Some(e);
                     }
                     Err(_) => {
                         // corrupt on disk: degrade to a miss
                         self.corrupt.fetch_add(1, Ordering::Relaxed);
-                        m.incr("cache.corrupt");
                     }
                 },
                 // absent: a plain miss; any *other* IO error (permissions,
@@ -191,13 +208,11 @@ impl DesignCache {
                 Err(e) => {
                     if e.kind() != std::io::ErrorKind::NotFound {
                         self.corrupt.fetch_add(1, Ordering::Relaxed);
-                        m.incr("cache.corrupt");
                     }
                 }
             }
         }
         self.misses.fetch_add(1, Ordering::Relaxed);
-        m.incr("cache.misses");
         None
     }
 
@@ -223,7 +238,6 @@ impl DesignCache {
         }
         self.mem.lock().unwrap().insert(fp, entry);
         self.stores.fetch_add(1, Ordering::Relaxed);
-        crate::obs::metrics::global().incr("cache.stores");
     }
 
     /// Record an entry that a [`Self::lookup`] returned (counting a
@@ -234,27 +248,63 @@ impl DesignCache {
         self.corrupt.fetch_add(1, Ordering::Relaxed);
         self.hits.fetch_sub(1, Ordering::Relaxed);
         self.misses.fetch_add(1, Ordering::Relaxed);
-        let m = crate::obs::metrics::global();
-        m.incr("cache.corrupt");
-        m.sub("cache.hits", 1);
-        m.incr("cache.misses");
     }
 
     /// Record one real ILP solve behind a cached entry point.
     pub fn count_solve(&self) {
         self.solves.fetch_add(1, Ordering::Relaxed);
-        crate::obs::metrics::global().incr("cache.ilp_solves");
     }
 
+    /// Read the lifetime counters, syncing the global `cache.*` metrics
+    /// on the way out (every `stats()`/`summary()` caller — which is
+    /// every cache-enabled command path — keeps `--profile` current
+    /// without per-operation registry traffic; see
+    /// [`Self::flush_metrics`]).
     pub fn stats(&self) -> CacheStats {
-        CacheStats {
+        self.flush_metrics()
+    }
+
+    /// Mirror counter *changes since the last flush* into the global
+    /// metrics registry (`cache.hits` … `cache.evicted`) and return the
+    /// current totals.
+    ///
+    /// This replaces the old per-operation inline `incr` calls, which
+    /// covered `compile`/`import` (whose summaries forced a sync) but
+    /// left any path that dropped the cache without printing — `simulate`
+    /// most visibly, plus every error path — with a registry permanently
+    /// behind the cache's own counters. Now one delta-sync runs from
+    /// `stats()` and from `Drop`, so the registry converges to the true
+    /// totals on every command, however it exits. Deltas can be negative
+    /// ([`Self::note_corrupt`] demotes an already-counted hit), hence
+    /// the signed add/sub below.
+    pub fn flush_metrics(&self) -> CacheStats {
+        // lock first, load second: concurrent flushes each sync a
+        // non-overlapping, non-decreasing slice of the counters
+        let mut last = self.flushed.lock().unwrap();
+        let cur = CacheStats {
             hits: self.hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
             stores: self.stores.load(Ordering::Relaxed),
             corrupt: self.corrupt.load(Ordering::Relaxed),
             solves: self.solves.load(Ordering::Relaxed),
             evicted: self.evicted.load(Ordering::Relaxed),
-        }
+        };
+        let m = crate::obs::metrics::global();
+        let sync = |name: &str, cur: u64, prev: u64| {
+            if cur > prev {
+                m.add(name, cur - prev);
+            } else if prev > cur {
+                m.sub(name, prev - cur);
+            }
+        };
+        sync("cache.hits", cur.hits, last.hits);
+        sync("cache.misses", cur.misses, last.misses);
+        sync("cache.stores", cur.stores, last.stores);
+        sync("cache.corrupt", cur.corrupt, last.corrupt);
+        sync("cache.ilp_solves", cur.solves, last.solves);
+        sync("cache.evicted", cur.evicted, last.evicted);
+        *last = cur;
+        cur
     }
 
     /// One-line summary for sweep footers.
@@ -308,8 +358,84 @@ impl DesignCache {
             }
         }
         self.evicted.fetch_add(evicted as u64, Ordering::Relaxed);
-        crate::obs::metrics::global().add("cache.evicted", evicted as u64);
-        Ok((entries.len().min(max_entries), evicted))
+        let kept = entries.len().min(max_entries);
+        if evicted > 0 {
+            // Best-effort history line for `ming cache-stats`. The file
+            // is not `.json`, so the entry scan above ignores it and it
+            // can never be GC'd as an entry itself.
+            let secs = std::time::SystemTime::now()
+                .duration_since(std::time::SystemTime::UNIX_EPOCH)
+                .map(|d| d.as_secs())
+                .unwrap_or(0);
+            let line = format!("{secs} evicted {evicted} kept {kept}\n");
+            use std::io::Write;
+            if let Ok(mut f) =
+                std::fs::File::options().create(true).append(true).open(dir.join(EVICTION_LOG))
+            {
+                let _ = f.write_all(line.as_bytes());
+            }
+        }
+        Ok((kept, evicted))
+    }
+
+    /// Scan the disk tier for `ming cache-stats`: entry count, on-disk
+    /// bytes, negative-verdict count and unreadable files. Reads every
+    /// entry file once; no cache state is touched (no hit/miss/corrupt
+    /// counting — this is inspection, not lookup).
+    pub fn disk_stats(&self) -> Result<DiskStats> {
+        let Some(dir) = &self.dir else {
+            return Ok(DiskStats::default());
+        };
+        let mut ds = DiskStats::default();
+        for e in std::fs::read_dir(dir)
+            .with_context(|| format!("reading design cache dir {}", dir.display()))?
+        {
+            let e = e?;
+            let path = e.path();
+            if path.extension().and_then(|x| x.to_str()) != Some("json") {
+                continue;
+            }
+            ds.bytes += e.metadata().map(|m| m.len()).unwrap_or(0);
+            match std::fs::read_to_string(&path).map_err(anyhow::Error::from).and_then(|t| {
+                entry_from_json(&t)
+            }) {
+                Ok(CachedDesign::Infeasible { .. }) => {
+                    ds.entries += 1;
+                    ds.infeasible += 1;
+                }
+                Ok(_) => ds.entries += 1,
+                Err(_) => ds.unreadable += 1,
+            }
+        }
+        Ok(ds)
+    }
+
+    /// The GC history lines [`Self::gc`] appended (`"<unix-secs> evicted
+    /// <n> kept <k>"`, oldest first). Empty for in-memory caches or
+    /// when no eviction ever happened.
+    pub fn eviction_history(&self) -> Vec<String> {
+        let Some(dir) = &self.dir else {
+            return Vec::new();
+        };
+        std::fs::read_to_string(dir.join(EVICTION_LOG))
+            .map(|t| t.lines().map(str::to_string).collect())
+            .unwrap_or_default()
+    }
+}
+
+/// GC history file inside a disk cache dir (non-`.json` so the entry
+/// scans skip it).
+const EVICTION_LOG: &str = "evictions.log";
+
+impl Drop for DesignCache {
+    /// Final metrics sync: commands that never read `stats()` — errors,
+    /// early exits, cache-enabled paths without a summary line — still
+    /// leave the global `cache.*` registry equal to the cache's own
+    /// lifetime counters, so `--profile` deltas are trustworthy
+    /// everywhere. (The CLI drops its cache `Arc` when the command
+    /// scope ends, before the profile table renders.)
+    fn drop(&mut self) {
+        self.flush_metrics();
     }
 }
 
@@ -762,8 +888,72 @@ mod tests {
         assert!(fresh.lookup(5).is_some());
         assert!(fresh.lookup(4).is_some());
         assert!(fresh.lookup(0).is_none(), "oldest entry must be gone");
-        // idempotent: nothing more to evict
+        // the sweep is recorded in the history log (and the log itself
+        // is invisible to the entry scan)
+        let hist = c.eviction_history();
+        assert_eq!(hist.len(), 1);
+        assert!(hist[0].contains("evicted 4 kept 2"), "{hist:?}");
+        // idempotent: nothing more to evict, no new history line
         assert_eq!(c.gc(2).unwrap(), (2, 0));
+        assert_eq!(c.eviction_history().len(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn flush_metrics_delta_syncs_the_registry_once() {
+        let m = crate::obs::metrics::global();
+        let (h0, s0) = (m.get("cache.hits"), m.get("cache.stores"));
+        let c = DesignCache::in_memory();
+        c.insert(11, CachedDesign::Flat { timings: vec![NodeTiming::default()] });
+        assert!(c.lookup(11).is_some());
+        assert!(c.lookup(12).is_none());
+        let st = c.stats(); // flushes
+        assert_eq!((st.hits, st.misses, st.stores), (1, 1, 1));
+        // monotone `>=`: the registry is global and other tests run
+        // concurrently — we can only pin our own contribution's floor
+        assert!(m.get("cache.hits") >= h0 + 1);
+        assert!(m.get("cache.stores") >= s0 + 1);
+        // a second flush with no new activity adds nothing from *this*
+        // cache: its internal delta base caught up
+        assert_eq!(*c.flushed.lock().unwrap(), st);
+        let again = c.stats();
+        assert_eq!(again, st, "totals are stable across flushes");
+    }
+
+    #[test]
+    fn dropping_a_cache_flushes_unsynced_counters() {
+        // The regression S-fix: `simulate` (and every error path) drops
+        // the cache without printing a summary, so only the Drop flush
+        // gets its counters into the registry.
+        let m = crate::obs::metrics::global();
+        let s0 = m.get("cache.stores");
+        {
+            let c = DesignCache::in_memory();
+            c.insert(21, CachedDesign::Flat { timings: vec![NodeTiming::default()] });
+            // no stats()/summary() call — Drop must sync
+        }
+        assert!(m.get("cache.stores") >= s0 + 1, "Drop flush missing");
+    }
+
+    #[test]
+    fn disk_stats_census_entries_bytes_and_verdicts() {
+        let dir = tmp_dir("disk-stats");
+        let c = DesignCache::at_dir(&dir).unwrap();
+        assert_eq!(c.disk_stats().unwrap(), DiskStats::default(), "fresh dir is empty");
+        c.insert(1, CachedDesign::Flat { timings: vec![NodeTiming::default()] });
+        c.insert(2, CachedDesign::Infeasible { msg: "no feasible point".into() });
+        std::fs::write(dir.join(format!("{}.json", hex(3))), "{torn").unwrap();
+        std::fs::write(dir.join("stray.tmp.1.2"), "x").unwrap(); // not an entry
+        let ds = c.disk_stats().unwrap();
+        assert_eq!(ds.entries, 2);
+        assert_eq!(ds.infeasible, 1);
+        assert_eq!(ds.unreadable, 1);
+        assert!(ds.bytes > 0);
+        // inspection leaves lookup counters untouched
+        assert_eq!(c.stats().misses, 0);
+        assert_eq!(c.stats().corrupt, 0);
+        // in-memory caches report an empty census
+        assert_eq!(DesignCache::in_memory().disk_stats().unwrap(), DiskStats::default());
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -120,14 +120,17 @@ impl CompileJob {
     }
 
     /// Stage 2 — solve. MING gets the tile-grid feasibility fallback
-    /// (and, when `cache` is present, content-addressed design reuse);
-    /// the baseline strategies have no tiling story (the paper's
-    /// infeasible cells) and never consult the cache — their "solve" is
-    /// a fixed strategy, not a search worth memoizing.
+    /// (and, when `cache` is present, content-addressed design reuse;
+    /// when `warm` is present, cross-problem front memoization and
+    /// incumbent seeding — both provably solution-invariant); the
+    /// baseline strategies have no tiling story (the paper's infeasible
+    /// cells) and never consult either — their "solve" is a fixed
+    /// strategy, not a search worth memoizing.
     pub fn solve(
         &self,
         g: &ModelGraph,
         cache: Option<&Arc<DesignCache>>,
+        warm: Option<&Arc<crate::dse::WarmStart>>,
     ) -> Result<SolvedDesign> {
         match self.framework {
             FrameworkKind::Ming => {
@@ -138,6 +141,9 @@ impl CompileJob {
                 let mut cfg = DseConfig::new(self.device.clone()).with_workers(1);
                 if let Some(c) = cache {
                     cfg = cfg.with_cache(Arc::clone(c));
+                }
+                if let Some(w) = warm {
+                    cfg = cfg.with_warm_start(Arc::clone(w));
                 }
                 match solve_with_tiling_fallback(g, &cfg)? {
                     Compiled::Flat(d, _) => Ok(SolvedDesign::Flat(d)),
@@ -190,6 +196,18 @@ impl CompileJob {
     /// wall-clocked into [`StageTimes`] and wrapped in a `stage` span;
     /// the whole job gets a `job` span labelled with [`Self::id`].
     pub fn run_with(&self, cache: Option<&Arc<DesignCache>>) -> Result<JobResult> {
+        self.run_warm(cache, None)
+    }
+
+    /// [`Self::run_with`] plus shared warm-start state — the sweep
+    /// entry point ([`super::service::CompileService`] hands every
+    /// shard-mate the same [`crate::dse::WarmStart`] so node fronts and
+    /// incumbent seeds carry across the jobs of a sweep).
+    pub fn run_warm(
+        &self,
+        cache: Option<&Arc<DesignCache>>,
+        warm: Option<&Arc<crate::dse::WarmStart>>,
+    ) -> Result<JobResult> {
         let _job_span = crate::obs::span_with("job", || self.id());
         let job_start = std::time::Instant::now();
         let mut stages = StageTimes::default();
@@ -204,7 +222,7 @@ impl CompileJob {
         let solved = {
             let _sp = crate::obs::span("stage", "solve");
             let t = std::time::Instant::now();
-            let s = self.solve(&g, cache);
+            let s = self.solve(&g, cache, warm);
             stages.solve_us = t.elapsed().as_micros() as u64;
             s?
         };
@@ -400,7 +418,7 @@ mod tests {
             estimate_only: false,
         };
         let g = job.lower().unwrap();
-        let solved = job.solve(&g, None).unwrap();
+        let solved = job.solve(&g, None, None).unwrap();
         let (util, _est) = job.estimate(&solved);
         let (sim, cycles, error) = job.simulate(&g, &solved).unwrap();
         let r = job.run().unwrap();

@@ -17,7 +17,7 @@ pub mod report;
 pub mod service;
 pub mod spool;
 
-pub use cache::{CacheStats, CachedDesign, DesignCache};
+pub use cache::{CacheStats, CachedDesign, DesignCache, DiskStats};
 pub use job::{CompileJob, JobResult, StageTimes};
 pub use queue::WorkerPool;
 pub use service::{CompileService, Shard, SweepConfig};

@@ -93,6 +93,11 @@ impl std::fmt::Display for Shard {
 pub struct CompileService {
     pool: WorkerPool,
     cache: Option<Arc<DesignCache>>,
+    /// Warm-start state shared by every MING job this service runs
+    /// (node-front memoization + incumbent seeding, `dse::warmstart`).
+    /// Always on: it is provably solution-invariant, purely in-memory,
+    /// and a sweep is exactly the workload it pays off on.
+    warm: Arc<crate::dse::WarmStart>,
 }
 
 impl Default for CompileService {
@@ -103,7 +108,7 @@ impl Default for CompileService {
 
 impl CompileService {
     pub fn new(pool: WorkerPool) -> Self {
-        Self { pool, cache: None }
+        Self { pool, cache: None, warm: Arc::new(crate::dse::WarmStart::new()) }
     }
 
     /// Attach a design cache shared by every job of every sweep this
@@ -115,6 +120,12 @@ impl CompileService {
 
     pub fn cache(&self) -> Option<&Arc<DesignCache>> {
         self.cache.as_ref()
+    }
+
+    /// The service's shared warm-start state (one per service lifetime,
+    /// spanning every sweep it runs).
+    pub fn warm(&self) -> &Arc<crate::dse::WarmStart> {
+        &self.warm
     }
 
     pub fn workers(&self) -> usize {
@@ -195,22 +206,37 @@ impl CompileService {
         // Trace envelope for the whole shard; per-job spans open inside
         // `run_with` on the worker threads.
         let _sp = crate::obs::span_with("sweep", || format!("shard {shard}"));
-        let mine: Vec<(usize, CompileJob)> = Self::jobs(cfg)
+        let mut mine: Vec<(usize, CompileJob)> = Self::jobs(cfg)
             .into_iter()
             .enumerate()
             .filter(|(seq, _)| shard.owns(*seq) && !done.contains(seq))
             .collect();
+        // Locality-aware submission order: group structurally-adjacent
+        // problems (same kernel, then neighboring sizes) so warm-start
+        // front hits and incumbent seeds land while the neighbor's entry
+        // is hot, instead of a whole sweep later. Submission order is
+        // invisible in every rendered artifact — results are re-sorted
+        // to global sequence order below, spool records carry explicit
+        // seqs, and each job's outcome is order-independent (the warm
+        // tier is solution-invariant) — so this reorders wall-clock
+        // only. The sort is stable: equal keys keep sweep order.
+        mine.sort_by(|(_, a), (_, b)| {
+            (&a.kernel, a.size, a.framework.name()).cmp(&(&b.kernel, b.size, b.framework.name()))
+        });
         let seqs: Vec<usize> = mine.iter().map(|(s, _)| *s).collect();
         let closures: Vec<Box<dyn FnOnce() -> Result<JobResult, String> + Send>> = mine
             .into_iter()
             .map(|(_, j)| {
                 let cache = self.cache.clone();
+                let warm = Arc::clone(&self.warm);
                 Box::new(move || {
-                    j.run_with(cache.as_ref()).map_err(|e| format!("{}: {e:#}", j.id()))
+                    j.run_warm(cache.as_ref(), Some(&warm))
+                        .map_err(|e| format!("{}: {e:#}", j.id()))
                 }) as _
             })
             .collect();
-        self.pool
+        let mut out: Vec<(usize, Result<JobResult, String>)> = self
+            .pool
             .run_all_streaming(closures, |i, r| match r {
                 Ok(inner) => on_done(seqs[i], inner),
                 Err(panic) => on_done(seqs[i], &Err(panic.clone())),
@@ -223,7 +249,11 @@ impl CompileService {
                 };
                 (seqs[i], outcome)
             })
-            .collect()
+            .collect();
+        // Restore the documented contract: results in global seq order,
+        // regardless of the locality-sorted submission order above.
+        out.sort_by_key(|(seq, _)| *seq);
+        out
     }
 }
 
@@ -335,6 +365,33 @@ mod tests {
         let mut other = base.clone();
         other.workloads.push(("linear".into(), 0));
         assert_ne!(id, CompileService::sweep_id(&other), "job list");
+    }
+
+    #[test]
+    fn results_come_back_in_global_seq_order_despite_locality_sort() {
+        // Workloads deliberately out of kernel order: the locality sort
+        // submits conv_relu first and residual last, yet the returned
+        // vector must be in global sequence order — the contract report
+        // rendering, sharding, and merge-sweep are built on.
+        let cfg = SweepConfig {
+            workloads: vec![
+                ("residual".into(), 16),
+                ("linear".into(), 0),
+                ("conv_relu".into(), 16),
+            ],
+            frameworks: vec![FrameworkKind::Ming, FrameworkKind::Vanilla],
+            device: DeviceSpec::kv260(),
+            estimate_only: true,
+        };
+        let svc = CompileService::new(WorkerPool::new(1));
+        let results = svc.run_shard(&cfg, Shard::full(), &BTreeSet::new());
+        let seqs: Vec<usize> = results.iter().map(|(s, _)| *s).collect();
+        assert_eq!(seqs, (0..6).collect::<Vec<_>>(), "global seq order restored");
+        for (seq, r) in &results {
+            let r = r.as_ref().unwrap_or_else(|e| panic!("seq {seq}: {e}"));
+            // the locality sort must not reorder the (seq -> job) map
+            assert_eq!(r.job.id(), CompileService::jobs(&cfg)[*seq].id());
+        }
     }
 
     #[test]

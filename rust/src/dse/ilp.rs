@@ -12,7 +12,7 @@
 //! DSP and BRAM for pruning. Exact — no heuristics — and fast: paper
 //! kernels have ≤ 6 nodes × ≤ 96 candidates.
 //!
-//! Two cold-path accelerators sit on top of the exact search, both
+//! Three cold-path accelerators sit on top of the exact search, all
 //! **bit-identical** to the plain serial solver (the design cache's
 //! byte-identity invariant depends on that):
 //!
@@ -24,7 +24,12 @@
 //!   objective through an `AtomicU64` so one worker's improvement
 //!   tightens every other worker's pruning, with a deterministic final
 //!   argmin (lowest subtree index wins ties — exactly the assignment
-//!   the serial first-found DFS keeps).
+//!   the serial first-found DFS keeps);
+//! * cross-problem warm-starting ([`super::warmstart`]): memoized
+//!   per-node candidate fronts skip re-enumeration for recurring layer
+//!   geometries, and a re-validated neighbor solution seeds the shared
+//!   incumbent with a sound upper bound before the first leaf is ever
+//!   visited — pruning starts tight instead of starting blind.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
@@ -43,6 +48,7 @@ use crate::tiling::{compile_tiled_from, TiledCompilation};
 
 use super::fifo::size_fifos;
 use super::space::{self, candidates_with, Candidate};
+use super::warmstart::{FrontEntry, WarmStart};
 
 /// DSE configuration.
 ///
@@ -78,6 +84,12 @@ pub struct DseConfig {
     /// bit-identity. Tests force tiny lattices onto the parallel path
     /// with [`DseConfig::with_parallel_min_volume`]`(1)`.
     pub parallel_min_volume: u64,
+    /// Optional shared warm-start state ([`super::warmstart`]):
+    /// node-front memoization plus repair-based incumbent seeding.
+    /// Like `cache`, shared across the jobs of a sweep; like `workers`,
+    /// never part of the problem fingerprint — warm-starting changes
+    /// how fast the optimum is found, provably never which one.
+    pub warm: Option<Arc<WarmStart>>,
 }
 
 /// Default parallel fan-out threshold: paper-kernel-sized lattices
@@ -93,6 +105,7 @@ impl DseConfig {
             workers: default_workers(),
             dominance_filter: true,
             parallel_min_volume: PARALLEL_MIN_VOLUME,
+            warm: None,
         }
     }
 
@@ -118,6 +131,14 @@ impl DseConfig {
     /// [`DseConfig::parallel_min_volume`]).
     pub fn with_parallel_min_volume(mut self, v: u64) -> Self {
         self.parallel_min_volume = v;
+        self
+    }
+
+    /// Attach shared warm-start state (front memoization + incumbent
+    /// seeding). Cloned configs — including the per-cell configs the
+    /// tile-grid search derives — share the same underlying store.
+    pub fn with_warm_start(mut self, warm: Arc<WarmStart>) -> Self {
+        self.warm = Some(warm);
         self
     }
 }
@@ -165,12 +186,51 @@ pub fn solve(design: &mut Design, cfg: &DseConfig) -> Result<DseSolution> {
     // The incremental FIFO re-sizing per partial assignment is exact
     // because each channel's depth depends only on its producer's
     // pipeline depth plus a timing-independent diamond floor.
-    let (mut cand, base_fifo) = {
+    let metrics = crate::obs::metrics::global();
+    let (mut cand, fronts, base_fifo) = {
         let model = ResourceModel::new(design);
-        let cand: Vec<Vec<Candidate>> = (0..design.nodes.len())
-            .map(|i| candidates_with(&model, design, i))
-            .collect();
-        (cand, model.input_fifo_bram())
+        let base_fifo = model.input_fifo_bram();
+        match &cfg.warm {
+            // Warm path: per-node fronts memoized across problems (and
+            // across the nodes of this one). A hit replays a prior
+            // enumeration byte-for-byte; enumeration-side metrics
+            // (`dse.candidates`, `dse.dominance_pruned`) count at
+            // enumeration time only, so a warm sweep's deltas reflect
+            // work actually done. The unfiltered lists ride along in
+            // `fronts` for incumbent-seed validation below.
+            Some(w) => {
+                let n = design.nodes.len();
+                let mut cand = Vec::with_capacity(n);
+                let mut fronts: Vec<Arc<FrontEntry>> = Vec::with_capacity(n);
+                for i in 0..n {
+                    let key = WarmStart::front_key(&model, design, i, &cfg.device);
+                    let entry = match w.front(key) {
+                        Some(e) => e,
+                        None => {
+                            let full = candidates_with(&model, design, i);
+                            metrics.add("dse.candidates", full.len() as u64);
+                            let mut front = full.clone();
+                            let dropped = space::dominance_filter(&mut front);
+                            metrics.add("dse.dominance_pruned", dropped);
+                            w.store_front(key, full, front, dropped)
+                        }
+                    };
+                    cand.push(if cfg.dominance_filter {
+                        entry.front.clone()
+                    } else {
+                        entry.full.clone()
+                    });
+                    fronts.push(entry);
+                }
+                (cand, Some(fronts), base_fifo)
+            }
+            None => {
+                let cand: Vec<Vec<Candidate>> = (0..design.nodes.len())
+                    .map(|i| candidates_with(&model, design, i))
+                    .collect();
+                (cand, None, base_fifo)
+            }
+        }
     };
     for (i, c) in cand.iter().enumerate() {
         ensure!(!c.is_empty(), "node {} has no candidates", design.nodes[i].name);
@@ -182,13 +242,14 @@ pub fn solve(design: &mut Design, cfg: &DseConfig) -> Result<DseSolution> {
         "candidate vectors must be in canonical (cycle-sorted) order"
     );
 
-    let metrics = crate::obs::metrics::global();
-    metrics.add("dse.candidates", cand.iter().map(|c| c.len() as u64).sum::<u64>());
-    if cfg.dominance_filter {
-        // Solution-invariant (see `space::dominance_filter`): shrinks
-        // the lattice before the exponential part ever sees it.
-        let dropped: u64 = cand.iter_mut().map(space::dominance_filter).sum();
-        metrics.add("dse.dominance_pruned", dropped);
+    if cfg.warm.is_none() {
+        metrics.add("dse.candidates", cand.iter().map(|c| c.len() as u64).sum::<u64>());
+        if cfg.dominance_filter {
+            // Solution-invariant (see `space::dominance_filter`): shrinks
+            // the lattice before the exponential part ever sees it.
+            let dropped: u64 = cand.iter_mut().map(space::dominance_filter).sum();
+            metrics.add("dse.dominance_pruned", dropped);
+        }
     }
 
     let d_total = cfg.device.dsp;
@@ -225,14 +286,46 @@ pub fn solve(design: &mut Design, cfg: &DseConfig) -> Result<DseSolution> {
         b_total,
         base_fifo,
     };
-    let s = search(&problem, cfg);
+    // Repair-based incumbent seeding: offer the nearest recorded
+    // neighbor assignment to this problem's own lattice and budgets
+    // (`validate_seed`); a surviving seed's objective is a sound initial
+    // upper bound for the search's shared incumbent. Strictly after the
+    // minima feasibility check above, so infeasibility errors stay
+    // byte-identical to the cold solver's.
+    let warm_shape = cfg.warm.as_ref().map(|w| {
+        (w, WarmStart::shape_fingerprint(design), WarmStart::seed_extents(design, &cfg.device))
+    });
+    let mut seed = None;
+    if let (Some((w, shape, extents)), Some(fronts)) = (&warm_shape, &fronts) {
+        if let Some(picks) = w.nearest_seed(*shape, extents) {
+            seed = validate_seed(&picks, fronts, base_fifo, d_total, b_total);
+            match seed {
+                Some(_) => metrics.incr("dse.warm_seeds"),
+                None => metrics.incr("dse.warm_seed_rejected"),
+            }
+        }
+    }
+    let s = search(&problem, cfg, seed);
     metrics.incr("dse.solves");
     metrics.add("dse.nodes_explored", s.explored);
     metrics.add("dse.pruned", s.pruned);
+    // Holds seeded too: a validated seed proves a feasible assignment
+    // with objective <= the seed exists on the searched lattice (the
+    // dominance filter keeps, for every full-list pick, a no-worse
+    // candidate), and the strict bound U+1 cannot prune all of them.
     ensure!(s.best < u64::MAX, "DSE found no feasible assignment");
 
     let chosen: Vec<Candidate> =
         s.best_pick.iter().enumerate().map(|(i, &k)| cand[i][k]).collect();
+    if let Some((w, shape, extents)) = warm_shape {
+        // Record the winning assignment for future neighbors (repair
+        // source). After the search so only real solutions are stored.
+        w.record_seed(
+            shape,
+            extents,
+            chosen.iter().map(|c| (c.unroll_par, c.unroll_red)).collect(),
+        );
+    }
     let mut resources = ResourceVec { fifo_bram: base_fifo, ..Default::default() };
     for c in &chosen {
         resources += c.res;
@@ -290,11 +383,13 @@ struct SearchOutcome {
 
 struct Search<'a> {
     p: &'a Problem<'a>,
-    /// Cross-subtree incumbent objective — parallel search only. The
-    /// prune bound derived from it is `shared + 1`, i.e. *strict*: an
-    /// equal-objective assignment in a lexicographically earlier
-    /// subtree must stay discoverable, or the deterministic argmin
-    /// below would drift from the serial first-found pick.
+    /// Cross-subtree incumbent objective — the parallel search, and the
+    /// serial search when warm-seeded (the seed plays the role of an
+    /// already-published sibling result). The prune bound derived from
+    /// it is `shared + 1`, i.e. *strict*: an equal-objective assignment
+    /// in a lexicographically earlier subtree must stay discoverable,
+    /// or the deterministic argmin below would drift from the serial
+    /// first-found pick.
     shared: Option<&'a AtomicU64>,
     best: u64,
     best_pick: Vec<usize>,
@@ -308,9 +403,9 @@ struct Search<'a> {
 
 impl Search<'_> {
     /// The effective prune bound: the local incumbent, tightened by the
-    /// pool-wide one when present. On the serial path this is exactly
-    /// `self.best` — the `--workers 1` code path is the historical
-    /// serial solver, instruction for instruction.
+    /// pool-wide one when present. On the unseeded serial path this is
+    /// exactly `self.best` — the `--workers 1` cold code path is the
+    /// historical serial solver, instruction for instruction.
     fn bound(&self) -> u64 {
         match self.shared {
             Some(s) => self.best.min(s.load(Ordering::Relaxed).saturating_add(1)),
@@ -354,6 +449,34 @@ impl Search<'_> {
     }
 }
 
+/// Re-validate a neighbor's unroll assignment against the *current*
+/// problem: every pick must lie on its node's **unfiltered** lattice
+/// (`FrontEntry::full` — the dominance filter may drop the exact pick
+/// while keeping a dominator of it), and the summed resources must fit
+/// the device. Feasible → `Some(objective)`: a true upper bound on the
+/// optimum, safe to install as the initial shared incumbent. Any
+/// mismatch — wrong arity, an off-lattice pick, a budget bust — is
+/// `None` (`dse.warm_seed_rejected`) and the search runs cold.
+fn validate_seed(
+    picks: &[(u64, u64)],
+    fronts: &[Arc<FrontEntry>],
+    base_fifo: u64,
+    d_total: u64,
+    b_total: u64,
+) -> Option<u64> {
+    if picks.len() != fronts.len() {
+        return None;
+    }
+    let (mut cycles, mut dsp, mut bram) = (0u64, 0u64, base_fifo);
+    for (entry, pick) in fronts.iter().zip(picks) {
+        let c = entry.full.iter().find(|c| (c.unroll_par, c.unroll_red) == *pick)?;
+        cycles += c.cycles;
+        dsp += c.res.dsp;
+        bram += c.res.bram();
+    }
+    (dsp <= d_total && bram <= b_total).then_some(cycles)
+}
+
 /// Product of per-node candidate counts — the assignment-lattice size
 /// (saturating; only compared against thresholds).
 fn lattice_volume(cand: &[Vec<Candidate>]) -> u64 {
@@ -364,20 +487,32 @@ fn lattice_volume(cand: &[Vec<Candidate>]) -> u64 {
 /// workers and the lattice is big enough to amortize pool spin-up,
 /// the serial DFS otherwise. Both sides of the dispatch are
 /// deterministic functions of the problem, so the returned
-/// `best`/`best_pick` never depend on which path ran.
-fn search(p: &Problem<'_>, cfg: &DseConfig) -> SearchOutcome {
+/// `best`/`best_pick` never depend on which path ran — nor on `seed`,
+/// a validated upper bound that only tightens pruning.
+fn search(p: &Problem<'_>, cfg: &DseConfig, seed: Option<u64>) -> SearchOutcome {
     if cfg.workers > 1 && lattice_volume(p.cand) >= cfg.parallel_min_volume {
-        if let Some(out) = parallel_search(p, cfg.workers) {
+        if let Some(out) = parallel_search(p, cfg.workers, seed) {
             return out;
         }
     }
-    serial_search(p)
+    serial_search(p, seed)
 }
 
-fn serial_search(p: &Problem<'_>) -> SearchOutcome {
+fn serial_search(p: &Problem<'_>, seed: Option<u64>) -> SearchOutcome {
+    // A warm seed — the objective U of a re-validated feasible
+    // assignment, so U >= the optimum — arms the same shared-incumbent
+    // machinery the parallel path uses instead of touching `best`: the
+    // local incumbent stays MAX, so leaf recording (`cycles < best`)
+    // still fires for the first-found optimum even when it *equals* U,
+    // while the prune bound starts at U+1 instead of MAX. Strictness
+    // argument: along the DFS path to the serial first-found optimum,
+    // cy + LB <= opt <= U < U+1 at every level, so that leaf is always
+    // reached and recorded — the argmin cannot drift; only subtrees
+    // that provably exceed the optimum are cut earlier.
+    let seeded = seed.map(AtomicU64::new);
     let mut s = Search {
         p,
-        shared: None,
+        shared: seeded.as_ref(),
         best: u64::MAX,
         best_pick: Vec::new(),
         pick: Vec::new(),
@@ -461,7 +596,7 @@ impl PrefixEnum<'_> {
 /// running argmin, so the lowest-ranked subtree wins ties — exactly the
 /// first-found optimum of the serial DFS, which visits subtrees in the
 /// same lexicographic order.
-fn parallel_search(p: &Problem<'_>, workers: usize) -> Option<SearchOutcome> {
+fn parallel_search(p: &Problem<'_>, workers: usize, seed: Option<u64>) -> Option<SearchOutcome> {
     let depth = split_depth(p.cand, workers);
     let mut en =
         PrefixEnum { p, depth, pick: Vec::with_capacity(depth), out: Vec::new(), pruned: 0 };
@@ -473,7 +608,12 @@ fn parallel_search(p: &Problem<'_>, workers: usize) -> Option<SearchOutcome> {
     let metrics = crate::obs::metrics::global();
     metrics.incr("dse.par_solves");
     metrics.add("dse.subtree_tasks", prefixes.len() as u64);
-    let shared = AtomicU64::new(u64::MAX);
+    // A warm seed pre-loads the shared incumbent: every subtree prunes
+    // against `seed + 1` from its very first node, exactly as if a
+    // sibling worker had already published that objective. Same
+    // strict-bound argument as the serial path — the lex-first optimal
+    // leaf survives, so the deterministic argmin below is unchanged.
+    let shared = AtomicU64::new(seed.unwrap_or(u64::MAX));
     let shared_ref = &shared;
     let jobs: Vec<_> = prefixes
         .into_iter()
@@ -820,6 +960,132 @@ mod tests {
         solve(&mut d, &cfg).unwrap();
         assert!(m.get("dse.par_solves") > before, "forced fan-out must be counted");
         assert!(m.get("dse.subtree_tasks") > 0);
+    }
+
+    #[test]
+    fn warm_front_memoization_is_bit_identical_and_hits() {
+        // Cascade repeats its conv and requant geometries, so a warm
+        // re-solve hits every node front; the solution and the rebuilt
+        // design must match the cold solver's exactly.
+        let m = crate::obs::metrics::global();
+        let g = models::paper_kernel("cascade", 32).unwrap();
+        let mut cold_d = build_streaming_design(&g).unwrap();
+        let cold =
+            solve(&mut cold_d, &DseConfig::new(DeviceSpec::kv260()).with_workers(1)).unwrap();
+
+        let warm = Arc::new(WarmStart::new());
+        let cfg = DseConfig::new(DeviceSpec::kv260())
+            .with_workers(1)
+            .with_warm_start(warm.clone());
+        let mut d1 = build_streaming_design(&g).unwrap();
+        let s1 = solve(&mut d1, &cfg).unwrap();
+        let h0 = m.get("dse.front_hits");
+        let mut d2 = build_streaming_design(&g).unwrap();
+        let s2 = solve(&mut d2, &cfg).unwrap();
+        // monotone `>=`: the registry is global and other tests may bump
+        // the counter concurrently — same convention as dse.par_solves
+        assert!(
+            m.get("dse.front_hits") - h0 >= d2.nodes.len() as u64,
+            "a repeat solve hits every node front"
+        );
+
+        for (tag, s, d) in [("warm1", &s1, &d1), ("warm2", &s2, &d2)] {
+            assert_eq!(cold.chosen, s.chosen, "{tag}");
+            assert_eq!(cold.objective, s.objective, "{tag}");
+            assert_eq!(cold.resources, s.resources, "{tag}");
+            assert_eq!(cold.dsp_used, s.dsp_used, "{tag}");
+            assert_eq!(cold.bram_used, s.bram_used, "{tag}");
+            assert_eq!(format!("{cold_d:?}"), format!("{d:?}"), "{tag}: designs diverged");
+        }
+    }
+
+    #[test]
+    fn warm_seed_from_a_neighbor_is_accepted_and_identical() {
+        // conv_relu@32 and @48 share the shape fingerprint *and* the
+        // unroll lattice (par trip 8, red trip 72 — image size is not a
+        // lattice axis), so the recorded 32-solution re-validates as a
+        // seed for 48 and the warm solve must still return exactly the
+        // cold solution.
+        let m = crate::obs::metrics::global();
+        let warm = Arc::new(WarmStart::new());
+        let cfg = DseConfig::new(DeviceSpec::kv260())
+            .with_workers(1)
+            .with_warm_start(warm.clone());
+        let g32 = models::conv_relu(32, 8, 8);
+        let mut d32 = build_streaming_design(&g32).unwrap();
+        solve(&mut d32, &cfg).unwrap(); // records the seed
+
+        let w0 = m.get("dse.warm_seeds");
+        let g48 = models::conv_relu(48, 8, 8);
+        let mut warm_d = build_streaming_design(&g48).unwrap();
+        let warm_sol = solve(&mut warm_d, &cfg).unwrap();
+        assert!(m.get("dse.warm_seeds") > w0, "neighbor seed must validate");
+
+        let mut cold_d = build_streaming_design(&g48).unwrap();
+        let cold =
+            solve(&mut cold_d, &DseConfig::new(DeviceSpec::kv260()).with_workers(1)).unwrap();
+        assert_eq!(cold.chosen, warm_sol.chosen);
+        assert_eq!(cold.objective, warm_sol.objective);
+        assert_eq!(cold.resources, warm_sol.resources);
+        assert_eq!(format!("{cold_d:?}"), format!("{warm_d:?}"), "designs diverged");
+
+        // The U == optimum edge: re-solving 48 finds its *own* recorded
+        // optimum as the nearest seed (distance 0). The strict bound
+        // U+1 must still let the first-found optimal leaf be recorded.
+        let w1 = m.get("dse.warm_seeds");
+        let mut again_d = build_streaming_design(&g48).unwrap();
+        let again = solve(&mut again_d, &cfg).unwrap();
+        assert!(m.get("dse.warm_seeds") > w1);
+        assert_eq!(cold.chosen, again.chosen);
+        assert_eq!(cold.objective, again.objective);
+        assert_eq!(format!("{cold_d:?}"), format!("{again_d:?}"));
+    }
+
+    #[test]
+    fn warm_seed_off_lattice_is_rejected_not_trusted() {
+        // An injected seed whose picks lie on no lattice (unroll 0)
+        // must be rejected by re-validation; the solve then runs cold
+        // and still returns the exact solution.
+        let m = crate::obs::metrics::global();
+        let g = models::conv_relu(32, 8, 8);
+        let probe = build_streaming_design(&g).unwrap();
+        let dev = DeviceSpec::kv260();
+        let warm = Arc::new(WarmStart::new());
+        warm.record_seed(
+            WarmStart::shape_fingerprint(&probe),
+            WarmStart::seed_extents(&probe, &dev),
+            vec![(0, 0); probe.nodes.len()],
+        );
+        let r0 = m.get("dse.warm_seed_rejected");
+        let cfg = DseConfig::new(dev.clone()).with_workers(1).with_warm_start(warm);
+        let mut warm_d = build_streaming_design(&g).unwrap();
+        let warm_sol = solve(&mut warm_d, &cfg).unwrap();
+        assert!(m.get("dse.warm_seed_rejected") > r0, "off-lattice seed must be rejected");
+
+        let mut cold_d = build_streaming_design(&g).unwrap();
+        let cold = solve(&mut cold_d, &DseConfig::new(dev).with_workers(1)).unwrap();
+        assert_eq!(cold.chosen, warm_sol.chosen);
+        assert_eq!(cold.objective, warm_sol.objective);
+        assert_eq!(format!("{cold_d:?}"), format!("{warm_d:?}"));
+    }
+
+    #[test]
+    fn warm_infeasible_error_matches_cold_byte_for_byte() {
+        // Seeding happens after the minima feasibility check, so the
+        // infeasibility message cannot pick up warm-state wording.
+        let g = models::conv_relu(32, 8, 8);
+        let dev = DeviceSpec::kv260().with_dsp_limit(0);
+        let mut d1 = build_streaming_design(&g).unwrap();
+        let cold_err = solve(&mut d1, &DseConfig::new(dev.clone()).with_workers(1)).unwrap_err();
+        let warm = Arc::new(WarmStart::new());
+        let cfg = DseConfig::new(dev).with_workers(1).with_warm_start(warm);
+        let mut d2 = build_streaming_design(&g).unwrap();
+        let warm_err = solve(&mut d2, &cfg).unwrap_err();
+        // twice: front-cache cold, then fully warm
+        let mut d3 = build_streaming_design(&g).unwrap();
+        let warm_err2 = solve(&mut d3, &cfg).unwrap_err();
+        assert_eq!(format!("{cold_err:#}"), format!("{warm_err:#}"));
+        assert_eq!(format!("{cold_err:#}"), format!("{warm_err2:#}"));
     }
 
     #[test]

@@ -19,6 +19,8 @@
 pub mod space;
 pub mod ilp;
 pub mod fifo;
+pub mod warmstart;
 
 pub use ilp::{solve, solve_with_tiling_fallback, Compiled, DseConfig, DseSolution};
 pub use space::grid_counts;
+pub use warmstart::WarmStart;

@@ -2,6 +2,8 @@
 
 use crate::dataflow::design::Design;
 use crate::dataflow::node::NodeTiming;
+use crate::ir::fingerprint::Fnv64;
+use crate::ir::graph::TensorKind;
 use crate::resources::model::{ResourceModel, ResourceVec};
 
 /// All positive divisors of `n`, ascending.
@@ -175,6 +177,53 @@ pub fn candidates_with(model: &ResourceModel, d: &Design, nid: usize) -> Vec<Can
 /// Convenience wrapper over [`candidates_with`] for one-off callers.
 pub fn candidates(d: &Design, nid: usize) -> Vec<Candidate> {
     candidates_with(&ResourceModel::new(d), d, nid)
+}
+
+/// Structural fingerprint of everything [`candidates_with`] reads for
+/// node `nid` — the memoization key of `dse::warmstart`'s node-front
+/// cache (after the device budgets are folded on top). Covers:
+///
+/// * the node's streaming geometry (trip counts, token shapes, line
+///   buffer, warmup) — the inputs of [`unroll_timings`] and of
+///   `standalone_cycles`, hashed via its `Debug` rendering (the front
+///   cache is in-memory, so the encoding only needs within-process
+///   stability, unlike the on-disk problem fingerprint);
+/// * the op's reduction space (the lattice's second axis);
+/// * the channel count of the activation input (the partition clamp in
+///   the line-buffer pricing);
+/// * each weight operand's `(bits, numel)` — ROM pricing reads sizes
+///   only, so layers differing just in weight *values* deliberately
+///   share a front (unlike the whole-design cache, which bakes ROMs);
+/// * each output channel's `(token_len, lanes, elem_bits,
+///   externally_buffered)` plus its diamond depth floor — the FIFO
+///   pricing inputs.
+///
+/// Two nodes with equal fingerprints therefore enumerate byte-identical
+/// candidate vectors.
+pub fn node_front_fingerprint(model: &ResourceModel, d: &Design, nid: usize) -> u64 {
+    let n = &d.nodes[nid];
+    let op = &d.graph.ops[n.op_index];
+    let mut h = Fnv64::new();
+    h.write_str(&format!("{:?}", n.geo));
+    h.write_u64(op.reduction_space());
+    h.write_usize(*d.graph.tensor(op.inputs[0]).ty.shape.last().unwrap_or(&1));
+    for &inp in &op.inputs {
+        let t = d.graph.tensor(inp);
+        if t.kind == TensorKind::Weight {
+            h.write_u64(t.ty.bits());
+            h.write_usize(t.ty.numel());
+        }
+    }
+    h.write_usize(n.out_channels.len());
+    for &cid in &n.out_channels {
+        let c = d.channel(cid);
+        h.write_usize(c.token_len);
+        h.write_usize(c.lanes);
+        h.write_u64(c.elem_bits);
+        h.write_u8(c.externally_buffered as u8);
+        h.write_usize(model.diamond_floor(cid.0));
+    }
+    h.finish()
 }
 
 #[cfg(test)]

@@ -1,0 +1,315 @@
+//! Cross-problem DSE reuse: node-front memoization and repair-based
+//! incumbent warm-starting.
+//!
+//! A sweep solves many problems that share almost all of their per-node
+//! structure — the same `relu_requant` geometry recurs across layers of
+//! one design and across workloads, and a tile-grid search probes dozens
+//! of cell geometries that differ only in extents. This module holds the
+//! two reuse tiers the solver (`dse::ilp::solve`) consults when a shared
+//! [`WarmStart`] handle rides in its [`super::ilp::DseConfig`]:
+//!
+//! 1. **Node-front memoization.** Each node's canonical candidate list
+//!    *and* its dominance-filtered Pareto front are keyed by
+//!    [`WarmStart::front_key`] — a structural fingerprint of everything
+//!    candidate enumeration reads ([`space::node_front_fingerprint`])
+//!    folded with the device budgets — so each distinct layer geometry
+//!    is enumerated, priced, and filtered once per process instead of
+//!    once per job (`dse.front_hits` / `dse.front_misses`).
+//!
+//! 2. **Repair-based incumbent seeding.** Solved problems record their
+//!    winning unroll assignment under a *shape* fingerprint that
+//!    deliberately ignores extents and budgets
+//!    ([`WarmStart::shape_fingerprint`]), so a structurally-similar
+//!    neighbor (same op sequence, different sizes) can look up the
+//!    nearest solution ([`WarmStart::nearest_seed`]) and *repair* it
+//!    against its own lattice and resource model. A seed that
+//!    re-validates is a feasible assignment of the *current* problem,
+//!    so its objective is a sound initial upper bound for the shared
+//!    branch-and-bound incumbent (`dse.warm_seeds`); one that does not
+//!    is discarded (`dse.warm_seed_rejected`) and the search runs cold.
+//!
+//! Neither tier may move the solution — seeding preserves the strict
+//! prune bound (see the proof at `dse::ilp::serial_search`), and a front
+//! hit replays a byte-identical candidate vector — which is what lets
+//! the design cache's byte-identity invariant survive warm-started
+//! sweeps (pinned by `prop_parallel_dse_is_bit_identical_to_serial`).
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::dataflow::design::Design;
+use crate::ir::fingerprint::{fold_device_budgets, Fnv64};
+use crate::resources::device::DeviceSpec;
+use crate::resources::model::ResourceModel;
+
+use super::space::{self, Candidate};
+
+/// One memoized node-front: the full canonical candidate list, its
+/// dominance-filtered Pareto front, and how many candidates the filter
+/// dropped. `full` is kept alongside `front` because incumbent-seed
+/// validation must run against the *unfiltered* lattice (the filter may
+/// drop the seed's exact pick even though a dominator of it survives),
+/// and because configs with the filter disabled search `full` directly.
+#[derive(Debug)]
+pub struct FrontEntry {
+    pub full: Vec<Candidate>,
+    pub front: Vec<Candidate>,
+    pub dropped: u64,
+}
+
+/// One recorded solution under a shape fingerprint: the extent vector it
+/// was solved at (for nearest-neighbor distance) and the winning
+/// per-node `(unroll_par, unroll_red)` assignment.
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct SeedEntry {
+    extents: Vec<u64>,
+    picks: Vec<(u64, u64)>,
+}
+
+/// Seeds retained per shape fingerprint, most recent first. Small on
+/// purpose: a sweep visits each shape at a handful of extents, and a
+/// stale seed costs a full (failed) re-validation per solve.
+const SEED_CAP: usize = 8;
+
+/// The shared warm-start state: a node-front cache and a seed store,
+/// held in an `Arc` alongside the design cache (one per
+/// `CompileService`, or per CLI invocation) and consulted by every
+/// solve whose config carries it. Purely in-memory — unlike the design
+/// cache there is no disk tier, because fronts hash process-local
+/// `Debug` renderings and seeds are only worth microseconds each.
+#[derive(Debug, Default)]
+pub struct WarmStart {
+    fronts: Mutex<HashMap<u64, Arc<FrontEntry>>>,
+    seeds: Mutex<HashMap<u64, Vec<SeedEntry>>>,
+}
+
+impl WarmStart {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The node-front cache key: the structural fingerprint of
+    /// everything candidate enumeration reads for node `nid`, folded
+    /// with the device budgets. The budgets are included conservatively
+    /// (candidate vectors do not actually depend on them today) so the
+    /// key stays sound if pricing ever becomes budget-aware, mirroring
+    /// `problem_fingerprint`'s budget fold.
+    pub fn front_key(model: &ResourceModel, d: &Design, nid: usize, dev: &DeviceSpec) -> u64 {
+        let mut h = Fnv64::new();
+        h.write_u64(space::node_front_fingerprint(model, d, nid));
+        fold_device_budgets(&mut h, dev);
+        h.finish()
+    }
+
+    /// Look up a memoized front (counts `dse.front_hits` /
+    /// `dse.front_misses`).
+    pub fn front(&self, key: u64) -> Option<Arc<FrontEntry>> {
+        let hit = self.fronts.lock().unwrap().get(&key).cloned();
+        let m = crate::obs::metrics::global();
+        match &hit {
+            Some(_) => m.incr("dse.front_hits"),
+            None => m.incr("dse.front_misses"),
+        }
+        hit
+    }
+
+    /// Memoize an enumerated front. Returns the stored entry; on a
+    /// store race the first writer wins (both sides enumerated the same
+    /// key, so the vectors are byte-identical either way).
+    pub fn store_front(
+        &self,
+        key: u64,
+        full: Vec<Candidate>,
+        front: Vec<Candidate>,
+        dropped: u64,
+    ) -> Arc<FrontEntry> {
+        Arc::clone(
+            self.fronts
+                .lock()
+                .unwrap()
+                .entry(key)
+                .or_insert_with(|| Arc::new(FrontEntry { full, front, dropped })),
+        )
+    }
+
+    /// The seed store's key: the design's op-sequence *shape* — per node
+    /// its payload kind and kernel class, in node order — with extents,
+    /// weights, and budgets deliberately excluded so neighboring sweep
+    /// points (same chain, different sizes or budgets) collide. A loose
+    /// key is safe: a looked-up seed is never trusted, only offered to
+    /// re-validation against the current problem's own lattice.
+    pub fn shape_fingerprint(d: &Design) -> u64 {
+        let mut h = Fnv64::new();
+        h.write_usize(d.nodes.len());
+        for n in &d.nodes {
+            h.write_str(d.graph.ops[n.op_index].payload.name());
+            h.write_str(&format!("{:?}", n.geo.class));
+        }
+        h.finish()
+    }
+
+    /// The extent vector distances are measured in: per node its
+    /// parallel and reduction trip counts, then the two budget axes the
+    /// solver constrains. Nearer in this space means the recorded
+    /// assignment is likelier to still lie on the lattice and fit.
+    pub fn seed_extents(d: &Design, dev: &DeviceSpec) -> Vec<u64> {
+        let mut v = Vec::with_capacity(2 * d.nodes.len() + 2);
+        for n in &d.nodes {
+            v.push(n.geo.out_token_len as u64);
+            v.push(d.graph.ops[n.op_index].reduction_space().max(1));
+        }
+        v.push(dev.dsp);
+        v.push(dev.bram18k);
+        v
+    }
+
+    /// Record a solved assignment under its shape fingerprint:
+    /// duplicates (same picks) are refreshed to the front, the store is
+    /// capped at [`SEED_CAP`] most-recent entries.
+    pub fn record_seed(&self, shape: u64, extents: Vec<u64>, picks: Vec<(u64, u64)>) {
+        let mut seeds = self.seeds.lock().unwrap();
+        let list = seeds.entry(shape).or_default();
+        list.retain(|s| s.picks != picks);
+        list.insert(0, SeedEntry { extents, picks });
+        list.truncate(SEED_CAP);
+    }
+
+    /// The recorded assignment nearest to `extents` (L1 distance over
+    /// same-length extent vectors; ties keep the most recent). `None`
+    /// when no comparable seed exists. The caller must re-validate the
+    /// picks — this is a hint, never an answer.
+    pub fn nearest_seed(&self, shape: u64, extents: &[u64]) -> Option<Vec<(u64, u64)>> {
+        let seeds = self.seeds.lock().unwrap();
+        let mut best: Option<(u64, &SeedEntry)> = None;
+        for s in seeds.get(&shape)?.iter().filter(|s| s.extents.len() == extents.len()) {
+            let dist: u64 =
+                s.extents.iter().zip(extents).map(|(&a, &b)| a.abs_diff(b)).sum();
+            if best.as_ref().map_or(true, |(bd, _)| dist < *bd) {
+                best = Some((dist, s));
+            }
+        }
+        best.map(|(_, s)| s.picks.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::build::build_streaming_design;
+    use crate::ir::builder::models;
+
+    #[test]
+    fn front_cache_hits_after_store_and_counts_metrics() {
+        let m = crate::obs::metrics::global();
+        let (h0, m0) = (m.get("dse.front_hits"), m.get("dse.front_misses"));
+        let w = WarmStart::new();
+        assert!(w.front(7).is_none());
+        let stored = w.store_front(7, Vec::new(), Vec::new(), 3);
+        assert_eq!(stored.dropped, 3);
+        let hit = w.front(7).expect("stored front must hit");
+        assert!(Arc::ptr_eq(&stored, &hit), "hits share the stored Arc");
+        // monotone `>=`: the registry is global and concurrently-running
+        // tests may bump the counters too
+        assert!(m.get("dse.front_hits") - h0 >= 1);
+        assert!(m.get("dse.front_misses") - m0 >= 1);
+    }
+
+    #[test]
+    fn store_front_race_keeps_the_first_entry() {
+        let w = WarmStart::new();
+        let first = w.store_front(1, Vec::new(), Vec::new(), 1);
+        let second = w.store_front(1, Vec::new(), Vec::new(), 2);
+        assert!(Arc::ptr_eq(&first, &second), "first writer wins");
+        assert_eq!(second.dropped, 1);
+    }
+
+    #[test]
+    fn front_key_covers_structure_and_budgets() {
+        let g = models::conv_relu(32, 8, 8);
+        let d = build_streaming_design(&g).unwrap();
+        let model = ResourceModel::new(&d);
+        let kv = DeviceSpec::kv260();
+        let conv = WarmStart::front_key(&model, &d, 0, &kv);
+        assert_eq!(conv, WarmStart::front_key(&model, &d, 0, &DeviceSpec::kv260()), "stable");
+        assert_ne!(conv, WarmStart::front_key(&model, &d, 1, &kv), "distinct nodes");
+        assert_ne!(
+            conv,
+            WarmStart::front_key(&model, &d, 0, &kv.with_dsp_limit(64)),
+            "budgets key the front"
+        );
+        // a same-shape graph with different weight *contents* must share
+        // fronts: pricing reads ROM sizes, never values
+        let g2 = {
+            use crate::ir::builder::GraphBuilder;
+            use crate::ir::types::DType;
+            let mut b = GraphBuilder::new("reseeded");
+            let x = b.input("x", vec![32, 32, 8], DType::I8);
+            let w = b.det_weight("w", vec![8, 3, 3, 8], 4242);
+            let acc = b.conv2d("conv0", x, w, 1, 1);
+            let y = b.relu_requant("rr0", acc);
+            b.mark_output(y);
+            b.finish()
+        };
+        let d2 = build_streaming_design(&g2).unwrap();
+        let model2 = ResourceModel::new(&d2);
+        assert_eq!(conv, WarmStart::front_key(&model2, &d2, 0, &kv));
+    }
+
+    #[test]
+    fn nearest_seed_picks_the_closest_and_respects_arity() {
+        let w = WarmStart::new();
+        assert!(w.nearest_seed(9, &[10, 10]).is_none(), "empty store");
+        w.record_seed(9, vec![8, 8], vec![(1, 1)]);
+        w.record_seed(9, vec![32, 32], vec![(2, 2)]);
+        w.record_seed(9, vec![8, 8, 8], vec![(3, 3)]); // different arity
+        assert_eq!(w.nearest_seed(9, &[10, 10]), Some(vec![(1, 1)]));
+        assert_eq!(w.nearest_seed(9, &[30, 30]), Some(vec![(2, 2)]));
+        assert_eq!(w.nearest_seed(9, &[1, 2, 3]), Some(vec![(3, 3)]));
+        assert!(w.nearest_seed(1, &[10, 10]).is_none(), "unknown shape");
+    }
+
+    #[test]
+    fn seed_store_dedupes_and_caps() {
+        let w = WarmStart::new();
+        for i in 0..20u64 {
+            w.record_seed(5, vec![i], vec![(i, i)]);
+        }
+        // capped: the oldest picks are gone, the newest survive
+        assert_eq!(w.nearest_seed(5, &[19]), Some(vec![(19, 19)]));
+        assert!(w.nearest_seed(5, &[0]).is_some(), "some seed always matches");
+        assert_eq!(w.nearest_seed(5, &[0]), Some(vec![(12, 12)]), "oldest kept is 20-8");
+        // re-recording existing picks refreshes instead of duplicating
+        w.record_seed(5, vec![100], vec![(19, 19)]);
+        assert_eq!(w.nearest_seed(5, &[100]), Some(vec![(19, 19)]));
+    }
+
+    #[test]
+    fn shape_fingerprint_ignores_extents_but_not_structure() {
+        let d32 = build_streaming_design(&models::conv_relu(32, 8, 8)).unwrap();
+        let d48 = build_streaming_design(&models::conv_relu(48, 8, 8)).unwrap();
+        let dch = build_streaming_design(&models::conv_relu(32, 4, 8)).unwrap();
+        let casc = build_streaming_design(&models::cascade(32, 8, 8)).unwrap();
+        assert_eq!(
+            WarmStart::shape_fingerprint(&d32),
+            WarmStart::shape_fingerprint(&d48),
+            "sizes are extents, not shape"
+        );
+        assert_eq!(
+            WarmStart::shape_fingerprint(&d32),
+            WarmStart::shape_fingerprint(&dch),
+            "channel counts are extents, not shape"
+        );
+        assert_ne!(
+            WarmStart::shape_fingerprint(&d32),
+            WarmStart::shape_fingerprint(&casc),
+            "op sequences differ"
+        );
+        // extents differ where shapes agree — the distance axis works
+        let kv = DeviceSpec::kv260();
+        assert_ne!(WarmStart::seed_extents(&d32, &kv), WarmStart::seed_extents(&dch, &kv));
+        assert_ne!(
+            WarmStart::seed_extents(&d32, &kv),
+            WarmStart::seed_extents(&d32, &kv.with_dsp_limit(64))
+        );
+    }
+}

@@ -292,12 +292,18 @@ pub fn graph_fingerprint(g: &ModelGraph) -> u64 {
 pub fn problem_fingerprint(g: &ModelGraph, dev: &DeviceSpec) -> u64 {
     let mut h = Fnv64::new();
     h.write_u64(graph_fingerprint(g));
-    h.write_u64(dev.bram18k);
-    h.write_u64(dev.dsp);
-    h.write_u64(dev.lut);
-    h.write_u64(dev.lutram);
-    h.write_u64(dev.ff);
+    fold_device_budgets(&mut h, dev);
     h.finish()
+}
+
+/// Fold every solver-visible device capacity into `h` — the budget half
+/// of [`problem_fingerprint`], shared with the per-node front keys of
+/// `dse::warmstart` so both key on exactly the same capacity fields
+/// (and stay in lockstep when a capacity is added).
+pub fn fold_device_budgets(h: &mut Fnv64, dev: &DeviceSpec) {
+    for v in [dev.bram18k, dev.dsp, dev.lut, dev.lutram, dev.ff] {
+        h.write_u64(v);
+    }
 }
 
 /// Render a fingerprint the way cache files and logs spell it.

@@ -143,6 +143,14 @@ impl<'a> ResourceModel<'a> {
         Self { diamond_min: diamond_mins(d), d }
     }
 
+    /// Timing-independent diamond depth floor of channel `cid` — the
+    /// floor [`Self::node_fifo_bram`] prices into every candidate.
+    /// Exposed so `dse::warmstart`'s per-node front fingerprint can
+    /// cover exactly the inputs candidate pricing reads.
+    pub fn diamond_floor(&self, cid: usize) -> usize {
+        self.diamond_min[cid]
+    }
+
     /// Line-buffer / reduction-line BRAM of node `nid` under `timing`,
     /// optionally rescaled to a `(full_width, strip_width)` pair for the
     /// tiling subsystem's per-strip accounting.

@@ -369,6 +369,14 @@ fn serial_grid_search(
 /// fingerprints as the serial path), and each speculative job pins its
 /// cell DSE to one worker — the parallelism budget is spent across
 /// grids here, not nested inside one solve.
+///
+/// Warm-start state ([`crate::dse::WarmStart`] in `cfg.warm`) rides
+/// into every cell solve through the `cfg.clone()` below: grid
+/// candidates of one search probe dozens of cell geometries whose node
+/// fronts recur across grids (and whose shapes are identical, so each
+/// solved cell seeds the next grid's incumbent) — the highest-leverage
+/// consumer of cross-problem reuse, and still bit-identical because
+/// both warm tiers are solution-invariant.
 fn speculative_grid_search(
     g: &ModelGraph,
     cfg: &DseConfig,

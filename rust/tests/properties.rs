@@ -566,7 +566,22 @@ fn prop_parallel_dse_is_bit_identical_to_serial() {
     // serial solver's, and the rebuilt designs emit identical HLS bytes
     // — with and without the dominance filter. Infeasible cases must
     // fail identically too, message included.
+    //
+    // Warm starts are held to the same bar: with the front cache
+    // pre-populated and the incumbent seeded — from a self-recorded
+    // optimum (accepted), from off-lattice junk picks (rejected by
+    // validation), and from a neighbor solution solved under a
+    // different budget (accepted or budget-rejected) — every serial
+    // and parallel warm solve must reproduce the cold serial answer
+    // exactly, errors included. `nodes_explored` is deliberately not
+    // compared: it is an effort metric and warm seeds prune work.
     use ming::codegen::emit::emit_design;
+    use ming::dse::WarmStart;
+    use std::sync::Arc;
+    let m = ming::obs::metrics::global();
+    let h0 = m.get("dse.front_hits");
+    let s0 = m.get("dse.warm_seeds");
+    let j0 = m.get("dse.warm_seed_rejected");
     forall("parallel dse == serial", 18, random_budgeted_case, |(g, dev)| {
         for dominance in [true, false] {
             let serial_cfg = DseConfig::new(dev.clone())
@@ -578,30 +593,101 @@ fn prop_parallel_dse_is_bit_identical_to_serial() {
                 .with_workers(4)
                 .with_dominance_filter(dominance)
                 .with_parallel_min_volume(1);
-            let mut d2 = build_streaming_design(g).unwrap();
-            let r2 = solve(&mut d2, &par_cfg);
-            match (r1, r2) {
-                (Ok(s1), Ok(s2)) => {
-                    assert_eq!(s1.chosen, s2.chosen, "{}: chosen candidates", g.name);
-                    assert_eq!(s1.objective, s2.objective, "{}: objective", g.name);
-                    assert_eq!(s1.resources, s2.resources, "{}: resources", g.name);
-                    assert_eq!(s1.dsp_used, s2.dsp_used, "{}: dsp", g.name);
-                    assert_eq!(s1.bram_used, s2.bram_used, "{}: bram", g.name);
-                    assert_eq!(emit_design(&d1), emit_design(&d2), "{}: HLS bytes", g.name);
+
+            // (a) self-primed store: a prior warm solve of this very
+            // problem records its optimum, so the runs below take the
+            // accepted-seed branch (and hit every node front).
+            let warm_ok = Arc::new(WarmStart::new());
+            {
+                let mut dp = build_streaming_design(g).unwrap();
+                let _ = solve(&mut dp, &serial_cfg.clone().with_warm_start(Arc::clone(&warm_ok)));
+            }
+            // (b) junk store: (0, 0) is never on the unroll lattice
+            // (divisors are >= 1), so validation must discard it.
+            let warm_junk = Arc::new(WarmStart::new());
+            {
+                let d = build_streaming_design(g).unwrap();
+                warm_junk.record_seed(
+                    WarmStart::shape_fingerprint(&d),
+                    WarmStart::seed_extents(&d, dev),
+                    vec![(0, 0); d.nodes.len()],
+                );
+            }
+            // (c) neighbor store: the optimum under the unconstrained
+            // budget is a real on-lattice solution that the current
+            // (tighter) budget may accept or reject — either way the
+            // answer must not move.
+            let warm_near = Arc::new(WarmStart::new());
+            {
+                let mut du = build_streaming_design(g).unwrap();
+                let ucfg = DseConfig::new(DeviceSpec::kv260())
+                    .with_workers(1)
+                    .with_dominance_filter(dominance);
+                if let Ok(sol) = solve(&mut du, &ucfg) {
+                    let d = build_streaming_design(g).unwrap();
+                    warm_near.record_seed(
+                        WarmStart::shape_fingerprint(&d),
+                        WarmStart::seed_extents(&d, dev),
+                        sol.chosen.iter().map(|c| (c.unroll_par, c.unroll_red)).collect(),
+                    );
                 }
-                (Err(e1), Err(e2)) => {
-                    assert_eq!(format!("{e1:#}"), format!("{e2:#}"), "{}: error", g.name);
+            }
+
+            let mut runs = vec![("parallel cold".to_string(), par_cfg.clone())];
+            for (tag, warm) in
+                [("primed", &warm_ok), ("junk", &warm_junk), ("neighbor", &warm_near)]
+            {
+                for (mode, cfg) in [("serial", &serial_cfg), ("parallel", &par_cfg)] {
+                    runs.push((
+                        format!("{mode} warm-{tag}"),
+                        cfg.clone().with_warm_start(Arc::clone(warm)),
+                    ));
                 }
-                (r1, r2) => panic!(
-                    "{}: feasibility diverged (serial ok={}, parallel ok={})",
-                    g.name,
-                    r1.is_ok(),
-                    r2.is_ok()
-                ),
+            }
+            for (tag, cfg) in runs {
+                let mut d2 = build_streaming_design(g).unwrap();
+                let r2 = solve(&mut d2, &cfg);
+                match (&r1, r2) {
+                    (Ok(s1), Ok(s2)) => {
+                        assert_eq!(s1.chosen, s2.chosen, "{} {tag}: chosen candidates", g.name);
+                        assert_eq!(s1.objective, s2.objective, "{} {tag}: objective", g.name);
+                        assert_eq!(s1.resources, s2.resources, "{} {tag}: resources", g.name);
+                        assert_eq!(s1.dsp_used, s2.dsp_used, "{} {tag}: dsp", g.name);
+                        assert_eq!(s1.bram_used, s2.bram_used, "{} {tag}: bram", g.name);
+                        assert_eq!(
+                            emit_design(&d1),
+                            emit_design(&d2),
+                            "{} {tag}: HLS bytes",
+                            g.name
+                        );
+                    }
+                    (Err(e1), Err(e2)) => {
+                        assert_eq!(
+                            format!("{e1:#}"),
+                            format!("{e2:#}"),
+                            "{} {tag}: error",
+                            g.name
+                        );
+                    }
+                    (r1, r2) => panic!(
+                        "{} {tag}: feasibility diverged (serial ok={}, other ok={})",
+                        g.name,
+                        r1.is_ok(),
+                        r2.is_ok()
+                    ),
+                }
             }
         }
         true
     });
+    // The primed store guarantees front hits on every case, and the
+    // deterministic case list always contains feasible problems (the
+    // primed seed is accepted) and the junk store always rejects on
+    // them. Monotone `>`: the registry is global and concurrent tests
+    // may bump the counters too.
+    assert!(m.get("dse.front_hits") > h0, "warm solves must hit the node-front cache");
+    assert!(m.get("dse.warm_seeds") > s0, "primed seeds must be accepted");
+    assert!(m.get("dse.warm_seed_rejected") > j0, "junk seeds must be rejected");
 }
 
 #[test]
