@@ -10,7 +10,7 @@
 //!
 //! Emits `BENCH_sim.json` (uploaded as a CI artifact) and asserts the
 //! parallel-tiled smoke invariant: fanning the 2×2 `tiny_cnn` grid over
-//! the worker pool is not slower than the serial path.
+//! the work-stealing scheduler is not slower than the serial path.
 //!
 //! Run: `cargo bench --bench compiler_perf`
 
@@ -18,7 +18,6 @@ use std::time::{Duration, Instant};
 
 use ming::analysis::classify::classify;
 use ming::baselines::framework::{compile_with, FrameworkKind};
-use ming::coordinator::WorkerPool;
 use ming::dse::ilp::{solve, DseConfig};
 use ming::dataflow::build::build_streaming_design;
 use ming::ir::builder::models;
@@ -176,9 +175,9 @@ fn main() {
     // --- tiled: serial vs parallel ----------------------------------------
     // A vgg3-style 3-conv block, grid-tiled 2x2 — the oversized-showcase
     // shape at a CI-simulable size. Serial reuses one context across
-    // cells; parallel fans cells over the worker pool.
-    let workers = WorkerPool::default_size().workers().max(2);
-    let pool = WorkerPool::new(workers);
+    // cells; parallel fans cells over a scheduler.
+    let workers = ming::coordinator::sched::default_size().max(2);
+    let pool = ming::coordinator::Scheduler::new(workers);
     let (tiled_serial_ms, tiled_parallel_ms, ctx_builds, vgg_ff_speedup) = {
         let gg = models::vgg_block(128, 16, 3);
         let x = det_input(&gg);

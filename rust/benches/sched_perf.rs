@@ -1,0 +1,179 @@
+//! Bench: the unified work-stealing scheduler on a straggler-dominated
+//! sweep — several tiny kernels plus the oversized `vgg3@512` job,
+//! whose tile-grid search and DSE subtrees dwarf everything else:
+//!
+//!   * **baseline**: the pre-scheduler behaviour, reproduced exactly —
+//!     locality submission order ([`JobOrder::Submission`]) and nested
+//!     parallelism pinned to 1 ([`CompileService::with_nested_worker_cap`]),
+//!     so the straggler grinds on one worker while its siblings idle
+//!     past the sweep tail;
+//!   * **stealing**: the default configuration — makespan-aware (LPT)
+//!     ordering starts the straggler first, and idle workers steal its
+//!     nested DSE subtrees and grid-cell solves (`sched.steals` counts
+//!     the migrations);
+//!   * **lpt-vs-submission**: the stealing pool with submission order,
+//!     isolating what the LPT ordering itself buys.
+//!
+//! All three runs must render the identical table — the scheduler moves
+//! work between cores, never between answers.
+//!
+//! Emits `BENCH_sched.json` (uploaded as a CI artifact) and gates
+//! against the committed `BENCH_sched_baseline.json` floors (0.8x
+//! baseline, `MING_BENCH_NO_GATE=1` escape hatch). The speedup gates
+//! only arm on machines with >= 4 cores.
+//!
+//! Run: `cargo bench --bench sched_perf`
+
+use std::time::{Duration, Instant};
+
+use ming::baselines::framework::FrameworkKind;
+use ming::coordinator::report;
+use ming::coordinator::service::{CompileService, JobOrder, SweepConfig};
+use ming::coordinator::{JobResult, Scheduler};
+use ming::ir::json;
+use ming::resources::device::DeviceSpec;
+
+/// Min wall-time of `iters` runs (min is the noise-robust statistic for
+/// scheduling comparisons; it also lands on each service's warm
+/// steady state, so both sides amortize their cold solves equally).
+fn min_wall<T>(iters: usize, mut f: impl FnMut() -> T) -> Duration {
+    let mut best = Duration::MAX;
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        best = best.min(t0.elapsed());
+    }
+    best
+}
+
+/// The straggler sweep: six small MING cells plus the grid-tiled
+/// `vgg3@512` job (estimate-only — the wall time here is compile + DSE
+/// + grid search, which is where the scheduler earns its keep).
+fn straggler_sweep() -> SweepConfig {
+    SweepConfig {
+        workloads: vec![
+            ("conv_relu".into(), 32),
+            ("cascade".into(), 32),
+            ("residual".into(), 32),
+            ("linear".into(), 0),
+            ("feedforward".into(), 32),
+            ("conv_relu".into(), 48),
+            ("vgg3".into(), 512),
+        ],
+        frameworks: vec![FrameworkKind::Ming],
+        device: DeviceSpec::kv260(),
+        estimate_only: true,
+    }
+}
+
+fn render(results: &[Result<JobResult, String>]) -> String {
+    let cells: Vec<_> =
+        results.iter().filter_map(|r| r.as_ref().ok().map(report::cell)).collect();
+    report::render_table2(&cells)
+}
+
+fn main() {
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let workers = 4usize;
+    let cfg = straggler_sweep();
+    let jobs = CompileService::jobs(&cfg).len();
+    let m = ming::obs::metrics::global();
+
+    // --- baseline: chunked/pinned (submission order, nested cap 1) ----
+    let base_sched = Scheduler::new(workers);
+    let base_svc = CompileService::new(workers)
+        .with_scheduler(base_sched.handle())
+        .with_job_order(JobOrder::Submission)
+        .with_nested_worker_cap(1);
+    let mut base_table = String::new();
+    let base_wall = min_wall(2, || {
+        let results = base_svc.run_sweep(&cfg);
+        assert!(results.iter().all(|r| r.is_ok()), "baseline sweep must succeed");
+        base_table = render(&results);
+    });
+
+    // --- stealing: LPT order + nested groups on the shared pool -------
+    let steal_sched = Scheduler::new(workers);
+    let steal_svc = CompileService::new(workers).with_scheduler(steal_sched.handle());
+    let steals0 = m.get("sched.steals");
+    let mut steal_table = String::new();
+    let steal_wall = min_wall(2, || {
+        let results = steal_svc.run_sweep(&cfg);
+        assert!(results.iter().all(|r| r.is_ok()), "stealing sweep must succeed");
+        steal_table = render(&results);
+    });
+    let steals = m.get("sched.steals") - steals0;
+    assert!(steals > 0, "the straggler's nested tasks must migrate");
+    assert_eq!(base_table, steal_table, "stealing changed the rendered table");
+
+    // --- lpt vs submission, both on the stealing pool -----------------
+    let sub_svc = CompileService::new(workers)
+        .with_scheduler(steal_sched.handle())
+        .with_job_order(JobOrder::Submission);
+    let mut sub_table = String::new();
+    let sub_wall = min_wall(2, || {
+        let results = sub_svc.run_sweep(&cfg);
+        assert!(results.iter().all(|r| r.is_ok()), "submission-order sweep must succeed");
+        sub_table = render(&results);
+    });
+    assert_eq!(base_table, sub_table, "job order changed the rendered table");
+
+    let makespan_speedup = base_wall.as_secs_f64() / steal_wall.as_secs_f64().max(1e-9);
+    let lpt_speedup = sub_wall.as_secs_f64() / steal_wall.as_secs_f64().max(1e-9);
+    println!(
+        "straggler sweep ({jobs} jobs, {workers} workers, {cores} cores):\n\
+         \x20 chunked/pinned: {:>8.1} ms\n\
+         \x20 stealing (lpt): {:>8.1} ms  = {makespan_speedup:.2}x makespan \
+         ({steals} tasks stolen)\n\
+         \x20 stealing (sub): {:>8.1} ms  (lpt ordering alone: {lpt_speedup:.2}x)",
+        base_wall.as_secs_f64() * 1e3,
+        steal_wall.as_secs_f64() * 1e3,
+        sub_wall.as_secs_f64() * 1e3,
+    );
+
+    let json_out = format!(
+        "{{\"bench\":\"sched\",\"jobs\":{jobs},\"workers\":{workers},\"cores\":{cores},\
+         \"baseline_ms\":{:.3},\"stealing_ms\":{:.3},\"submission_ms\":{:.3},\
+         \"makespan_speedup\":{makespan_speedup:.2},\"lpt_speedup\":{lpt_speedup:.2},\
+         \"steals\":{steals}}}",
+        base_wall.as_secs_f64() * 1e3,
+        steal_wall.as_secs_f64() * 1e3,
+        sub_wall.as_secs_f64() * 1e3,
+    );
+    std::fs::write("BENCH_sched.json", format!("{json_out}\n"))
+        .expect("writing BENCH_sched.json");
+    println!("wrote BENCH_sched.json");
+
+    // --- perf-regression gate (BENCH_sched_baseline.json) -------------
+    // Committed floors, deliberately conservative: fail only when a
+    // gated speedup drops below 80% of its baseline. Both gates compare
+    // thread schedules, so they only arm with >= 4 real cores.
+    // Re-baseline by copying numbers from a CI BENCH_sched.json artifact.
+    if std::env::var_os("MING_BENCH_NO_GATE").is_some() {
+        println!("perf gate: skipped (MING_BENCH_NO_GATE=1)");
+    } else if cores < 4 {
+        println!("perf gate: skipped ({cores} cores < 4)");
+    } else if let Ok(text) = std::fs::read_to_string("BENCH_sched_baseline.json") {
+        let base = json::parse(&text).expect("BENCH_sched_baseline.json must parse");
+        let baseline = |path: &str| -> f64 {
+            base.get(path)
+                .and_then(|v| v.as_f64())
+                .unwrap_or_else(|e| panic!("baseline {path}: {e}"))
+        };
+        let mut failed = false;
+        for (path, cur) in
+            [("makespan_speedup", makespan_speedup), ("lpt_speedup", lpt_speedup)]
+        {
+            let floor = baseline(path) * 0.8;
+            if cur < floor {
+                eprintln!("perf gate FAIL {path}: {cur:.2} < floor {floor:.2} (0.8x baseline)");
+                failed = true;
+            } else {
+                println!("perf gate ok   {path}: {cur:.2} >= floor {floor:.2}");
+            }
+        }
+        assert!(!failed, "scheduler regressed >20% vs BENCH_sched_baseline.json");
+    } else {
+        println!("perf gate: BENCH_sched_baseline.json not found, skipping");
+    }
+}

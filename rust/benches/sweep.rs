@@ -11,8 +11,8 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use ming::coordinator::cache::DesignCache;
+use ming::coordinator::sched;
 use ming::coordinator::service::{CompileService, Shard, SweepConfig};
-use ming::coordinator::WorkerPool;
 use ming::resources::device::DeviceSpec;
 use ming::util::bench::fmt_dur;
 
@@ -25,7 +25,7 @@ fn main() {
     // cold run itself reuses node fronts across structurally-identical
     // layers and seeds incumbents between same-shape problems
     let cache = Arc::new(DesignCache::in_memory());
-    let svc = CompileService::new(WorkerPool::default_size()).with_cache(cache.clone());
+    let svc = CompileService::new(sched::default_size()).with_cache(cache.clone());
     let m = ming::obs::metrics::global();
     let fh0 = m.get("dse.front_hits");
     let ws0 = m.get("dse.warm_seeds");
@@ -89,9 +89,9 @@ fn main() {
     );
     println!(
         "  traced: {:>8}  ({trace_events} span events, {overhead_pct:+.1}% vs warm, \
-         pool busy {} ms)",
+         sched busy {} ms)",
         fmt_dur(traced),
-        traced_delta.get("pool.busy_us") / 1000,
+        traced_delta.get("sched.busy_us") / 1000,
     );
     println!("  {}", cache.summary());
     println!(
@@ -104,7 +104,7 @@ fn main() {
     // front cache must still pay off inside every shard
     let shard_hits: u64 = (0..2)
         .map(|index| {
-            let shard_svc = CompileService::new(WorkerPool::default_size());
+            let shard_svc = CompileService::new(sched::default_size());
             let before = m.get("dse.front_hits");
             let results =
                 shard_svc.run_shard(&cfg, Shard { index, count: 2 }, &BTreeSet::new());
@@ -127,7 +127,7 @@ fn main() {
          \"dse_front_hits\":{dse_front_hits},\"dse_warm_seeds\":{dse_warm_seeds},\
          \"dse_shard_front_hits\":{shard_hits},\
          \"traced_ms\":{:.3},\"trace_overhead_pct\":{overhead_pct:.2},\
-         \"trace_events\":{trace_events},\"pool_busy_us\":{},\"pool_idle_us\":{}}}",
+         \"trace_events\":{trace_events},\"sched_busy_us\":{},\"sched_idle_us\":{}}}",
         cold_results.len(),
         svc.workers(),
         cold.as_secs_f64() * 1e3,
@@ -135,8 +135,8 @@ fn main() {
         warm_stats.stores,
         cold_stats.solves,
         traced.as_secs_f64() * 1e3,
-        traced_delta.get("pool.busy_us"),
-        traced_delta.get("pool.idle_us"),
+        traced_delta.get("sched.busy_us"),
+        traced_delta.get("sched.idle_us"),
     );
     std::fs::write("BENCH_sweep.json", format!("{json}\n")).expect("writing BENCH_sweep.json");
     println!("wrote BENCH_sweep.json");

@@ -216,6 +216,18 @@ impl DesignCache {
         None
     }
 
+    /// Whether `fp` would hit, **without** counting a hit or a miss (and
+    /// without promoting a disk entry into memory). The sweep service's
+    /// makespan predictor peeks every job's fingerprint up front to
+    /// order work — those probes must not perturb the `cache.*` stats
+    /// the real lookups report.
+    pub fn peek(&self, fp: u64) -> bool {
+        if self.mem.lock().unwrap().contains_key(&fp) {
+            return true;
+        }
+        self.entry_path(fp).is_some_and(|p| p.exists())
+    }
+
     /// Insert an entry (memory + disk when configured). Disk writes are
     /// atomic — a concurrent reader sees the old file or the new one,
     /// never a torn line — and write failures are ignored: persistence

@@ -18,6 +18,7 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use crate::baselines::framework::{compile_with, FrameworkKind};
+use crate::dataflow::build::build_streaming_design;
 use crate::dataflow::design::Design;
 use crate::dse::ilp::{solve_with_tiling_fallback, Compiled, DseConfig};
 use crate::ir::builder::models;
@@ -26,10 +27,11 @@ use crate::resources::device::DeviceSpec;
 use crate::resources::estimate;
 use crate::resources::report::UtilizationReport;
 use crate::sim::{simulate, SimMode, SimReport};
-use crate::tiling::{simulate_tiled, TiledCompilation};
+use crate::tiling::{simulate_tiled, simulate_tiled_parallel, TiledCompilation};
 use crate::util::prng;
 
 use super::cache::DesignCache;
+use super::sched;
 
 /// One unit of work for the compile service: lower `kernel`@`size` with
 /// `framework` for `device`, estimate resources, simulate.
@@ -119,6 +121,53 @@ impl CompileJob {
         models::paper_kernel(&self.kernel, self.size)
     }
 
+    /// Predicted relative cost of this job, for makespan-aware (LPT)
+    /// sweep ordering — a *ranking* signal built from what the pipeline
+    /// already knows, never consulted for results:
+    ///
+    /// - simulation scales with the model's MAC count (0 when
+    ///   estimate-only);
+    /// - a MING solve is the assignment-lattice volume (exact per-node
+    ///   candidate counts, the same enumeration the solver performs) —
+    ///   or 0 when the design cache already holds the problem's
+    ///   fingerprint, probed with the stat-neutral
+    ///   [`DesignCache::peek`];
+    /// - an untiled-infeasible workload additionally pays the tile-grid
+    ///   search (many cell solves); `macs / 8` stands in for that —
+    ///   crude, but oversized workloads dominate the MAC scale by
+    ///   orders of magnitude, which is all a longest-first order needs;
+    /// - baseline frameworks are fixed strategies: no search, cost is
+    ///   simulation only.
+    ///
+    /// Jobs that fail to lower rank 0 — they fail instantly at run time
+    /// too.
+    pub fn predicted_cost(&self, cache: Option<&DesignCache>) -> u64 {
+        let Ok(g) = self.lower() else { return 0 };
+        let macs = g.total_macs();
+        let sim = if self.estimate_only { 0 } else { macs };
+        let solve = match self.framework {
+            FrameworkKind::Ming => {
+                let fp = crate::ir::fingerprint::problem_fingerprint(&g, &self.device);
+                if cache.is_some_and(|c| c.peek(fp)) {
+                    0
+                } else {
+                    let volume = build_streaming_design(&g)
+                        .map(|d| {
+                            let model = crate::resources::model::ResourceModel::new(&d);
+                            (0..d.nodes.len()).fold(1u64, |v, i| {
+                                let n = crate::dse::space::candidates_with(&model, &d, i).len();
+                                v.saturating_mul(n.max(1) as u64)
+                            })
+                        })
+                        .unwrap_or(0);
+                    volume.saturating_add(macs / 8)
+                }
+            }
+            _ => 0,
+        };
+        sim.saturating_add(solve)
+    }
+
     /// Stage 2 — solve. MING gets the tile-grid feasibility fallback
     /// (and, when `cache` is present, content-addressed design reuse;
     /// when `warm` is present, cross-problem front memoization and
@@ -134,11 +183,15 @@ impl CompileJob {
     ) -> Result<SolvedDesign> {
         match self.framework {
             FrameworkKind::Ming => {
-                // Sweep jobs are already fanned across the service pool;
-                // nested solver parallelism would only oversubscribe the
-                // cores, so each job solves serially. One-shot `compile`
-                // and `import` opt into the parallel solver instead.
-                let mut cfg = DseConfig::new(self.device.clone()).with_workers(1);
+                // Nested parallelism is safe now that every site submits
+                // into the one work-stealing scheduler: a sweep job's DSE
+                // subtrees land on its worker's own deque, and idle
+                // sweep workers steal them — a straggler recruits the
+                // cores its finished siblings freed instead of pinning
+                // itself to one. `current_workers()` sizes the fan-out
+                // to the owning scheduler (1 ⇒ exact serial paths).
+                let mut cfg = DseConfig::new(self.device.clone())
+                    .with_workers(sched::current_workers());
                 if let Some(c) = cache {
                     cfg = cfg.with_cache(Arc::clone(c));
                 }
@@ -182,13 +235,23 @@ impl CompileJob {
                 };
                 Ok((Some(rep), cycles, error))
             }
-            SolvedDesign::Tiled(tc) => match simulate_tiled(tc, &input) {
-                Ok(rep) => {
-                    let cycles = rep.cycles;
-                    Ok((Some(rep.into_sim_report()), cycles, None))
+            SolvedDesign::Tiled(tc) => {
+                // Cell fan-out submits into the current scheduler (the
+                // report is bit-identical to the serial stitch); with
+                // one worker this takes the exact serial path inline.
+                let run = if sched::current_workers() > 1 && tc.grid.n_cells() > 1 {
+                    simulate_tiled_parallel(tc, &input, &sched::current_or_global())
+                } else {
+                    simulate_tiled(tc, &input)
+                };
+                match run {
+                    Ok(rep) => {
+                        let cycles = rep.cycles;
+                        Ok((Some(rep.into_sim_report()), cycles, None))
+                    }
+                    Err(e) => Ok((None, 0, Some(format!("{e:#}")))),
                 }
-                Err(e) => Ok((None, 0, Some(format!("{e:#}")))),
-            },
+            }
         }
     }
 

@@ -2,8 +2,9 @@
 //!
 //! [`job`] runs one compile as explicit stages (lower → solve →
 //! estimate → simulate); [`service`] sweeps kernel × framework × size
-//! job lists over a worker pool ([`queue`]), with deterministic
-//! round-robin sharding across processes; [`cache`] memoizes solved
+//! job lists over the process-wide work-stealing scheduler ([`sched`]),
+//! with deterministic round-robin sharding across processes and
+//! makespan-aware (LPT) job ordering; [`cache`] memoizes solved
 //! designs content-addressed by `(graph, device, config)` fingerprint,
 //! in memory and as JSON on disk; [`spool`] persists shard results as
 //! mergeable, resumable JSONL; [`report`] formats the paper's Tables
@@ -12,12 +13,12 @@
 
 pub mod cache;
 pub mod job;
-pub mod queue;
 pub mod report;
+pub mod sched;
 pub mod service;
 pub mod spool;
 
 pub use cache::{CacheStats, CachedDesign, DesignCache, DiskStats};
 pub use job::{CompileJob, JobResult, StageTimes};
-pub use queue::WorkerPool;
-pub use service::{CompileService, Shard, SweepConfig};
+pub use sched::{SchedHandle, Scheduler};
+pub use service::{CompileService, JobOrder, Shard, SweepConfig};

@@ -21,7 +21,7 @@ use crate::resources::device::DeviceSpec;
 
 use super::cache::DesignCache;
 use super::job::{CompileJob, JobResult};
-use super::queue::WorkerPool;
+use super::sched::{self, SchedHandle};
 
 /// Sweep specification.
 #[derive(Debug, Clone)]
@@ -89,9 +89,33 @@ impl std::fmt::Display for Shard {
     }
 }
 
-/// Runs sweeps over a worker pool and collects results.
+/// How a shard's jobs are ordered for submission. Either way, results
+/// are restored to global sequence order before reporting.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum JobOrder {
+    /// Makespan-aware longest-first (LPT): predicted cost descending
+    /// ([`CompileJob::predicted_cost`] — lattice volume, cache-hit
+    /// prediction, MAC count), ties broken by the locality key. Starting
+    /// the expensive jobs first keeps the sweep tail short: the cheap
+    /// jobs pack around the stragglers, and whatever imbalance remains
+    /// is absorbed by work-stealing of the stragglers' nested tasks.
+    #[default]
+    Lpt,
+    /// Locality order (kernel, size, framework) — the pre-LPT behaviour,
+    /// kept as the measurable baseline for `benches/sched_perf.rs`.
+    Submission,
+}
+
+/// Runs sweeps over the process-wide work-stealing scheduler
+/// ([`super::sched`]) and collects results.
 pub struct CompileService {
-    pool: WorkerPool,
+    workers: usize,
+    /// Explicit scheduler for tests/benches; `None` = the global one.
+    sched: Option<SchedHandle>,
+    order: JobOrder,
+    /// Per-job [`sched::with_worker_cap`] pin, emulating the old
+    /// "nested sites solve serially" behaviour (bench baseline only).
+    nested_cap: Option<usize>,
     cache: Option<Arc<DesignCache>>,
     /// Warm-start state shared by every MING job this service runs
     /// (node-front memoization + incumbent seeding, `dse::warmstart`).
@@ -102,19 +126,51 @@ pub struct CompileService {
 
 impl Default for CompileService {
     fn default() -> Self {
-        Self::new(WorkerPool::default_size())
+        Self::new(sched::default_size())
     }
 }
 
 impl CompileService {
-    pub fn new(pool: WorkerPool) -> Self {
-        Self { pool, cache: None, warm: Arc::new(crate::dse::WarmStart::new()) }
+    /// A service fanning up to `workers` jobs at a time into the global
+    /// scheduler. `1` runs jobs serially inline, with nested parallelism
+    /// capped to 1 as well — the exact serial paths end to end.
+    pub fn new(workers: usize) -> Self {
+        Self {
+            workers: workers.max(1),
+            sched: None,
+            order: JobOrder::default(),
+            nested_cap: None,
+            cache: None,
+            warm: Arc::new(crate::dse::WarmStart::new()),
+        }
     }
 
     /// Attach a design cache shared by every job of every sweep this
     /// service runs (and, when disk-backed, by other processes too).
     pub fn with_cache(mut self, cache: Arc<DesignCache>) -> Self {
         self.cache = Some(cache);
+        self
+    }
+
+    /// Submit into an explicit scheduler instead of the global one
+    /// (tests and benches; the width actually used is the scheduler's).
+    pub fn with_scheduler(mut self, sched: SchedHandle) -> Self {
+        self.workers = sched.workers();
+        self.sched = Some(sched);
+        self
+    }
+
+    /// Override the job submission order (default [`JobOrder::Lpt`]).
+    pub fn with_job_order(mut self, order: JobOrder) -> Self {
+        self.order = order;
+        self
+    }
+
+    /// Pin every job's *nested* parallelism ([`sched::current_workers`]
+    /// as seen inside the job) to `n`. `benches/sched_perf.rs` uses
+    /// `1` to reproduce the old chunked/pinned sweep as its baseline.
+    pub fn with_nested_worker_cap(mut self, n: usize) -> Self {
+        self.nested_cap = Some(n.max(1));
         self
     }
 
@@ -129,7 +185,12 @@ impl CompileService {
     }
 
     pub fn workers(&self) -> usize {
-        self.pool.workers()
+        self.workers
+    }
+
+    /// The scheduler this service submits into.
+    fn sched(&self) -> SchedHandle {
+        self.sched.clone().unwrap_or_else(|| sched::global().handle())
     }
 
     /// Stable identity of a sweep: the device's capacities and name,
@@ -211,47 +272,96 @@ impl CompileService {
             .enumerate()
             .filter(|(seq, _)| shard.owns(*seq) && !done.contains(seq))
             .collect();
-        // Locality-aware submission order: group structurally-adjacent
-        // problems (same kernel, then neighboring sizes) so warm-start
-        // front hits and incumbent seeds land while the neighbor's entry
-        // is hot, instead of a whole sweep later. Submission order is
-        // invisible in every rendered artifact — results are re-sorted
-        // to global sequence order below, spool records carry explicit
-        // seqs, and each job's outcome is order-independent (the warm
-        // tier is solution-invariant) — so this reorders wall-clock
-        // only. The sort is stable: equal keys keep sweep order.
-        mine.sort_by(|(_, a), (_, b)| {
+        // Submission order is invisible in every rendered artifact —
+        // results are re-sorted to global sequence order below, spool
+        // records carry explicit seqs, and each job's outcome is
+        // order-independent (the warm tier is solution-invariant) — so
+        // ordering reorders wall-clock only. Both sorts are stable:
+        // equal keys keep sweep order.
+        //
+        // The locality key groups structurally-adjacent problems (same
+        // kernel, then neighboring sizes) so warm-start front hits and
+        // incumbent seeds land while the neighbor's entry is hot. LPT
+        // (the default) additionally puts predicted-expensive jobs
+        // first: a straggler started last runs alone past the sweep
+        // tail, started first it overlaps everything else — and the
+        // locality key still breaks cost ties, keeping the warmth.
+        let locality = |a: &CompileJob, b: &CompileJob| {
             (&a.kernel, a.size, a.framework.name()).cmp(&(&b.kernel, b.size, b.framework.name()))
-        });
+        };
+        match self.order {
+            JobOrder::Submission => mine.sort_by(|(_, a), (_, b)| locality(a, b)),
+            JobOrder::Lpt => {
+                let cache = self.cache.as_deref();
+                let mut costed: Vec<(u64, usize, CompileJob)> = mine
+                    .into_iter()
+                    .map(|(seq, j)| (j.predicted_cost(cache), seq, j))
+                    .collect();
+                costed.sort_by(|(ca, _, a), (cb, _, b)| {
+                    cb.cmp(ca).then_with(|| locality(a, b))
+                });
+                mine = costed.into_iter().map(|(_, seq, j)| (seq, j)).collect();
+            }
+        }
         let seqs: Vec<usize> = mine.iter().map(|(s, _)| *s).collect();
+        // A 1-worker service caps nested parallelism too: the exact
+        // serial code paths end to end, whatever the global scheduler's
+        // width. Benches pin other values to reproduce old behaviours.
+        let cap = match self.nested_cap {
+            Some(n) => Some(n),
+            None if self.workers <= 1 => Some(1),
+            None => None,
+        };
         let closures: Vec<Box<dyn FnOnce() -> Result<JobResult, String> + Send>> = mine
             .into_iter()
             .map(|(_, j)| {
                 let cache = self.cache.clone();
                 let warm = Arc::clone(&self.warm);
                 Box::new(move || {
-                    j.run_warm(cache.as_ref(), Some(&warm))
-                        .map_err(|e| format!("{}: {e:#}", j.id()))
+                    let run = || {
+                        j.run_warm(cache.as_ref(), Some(&warm))
+                            .map_err(|e| format!("{}: {e:#}", j.id()))
+                    };
+                    match cap {
+                        Some(n) => sched::with_worker_cap(n, run),
+                        None => run(),
+                    }
                 }) as _
             })
             .collect();
-        let mut out: Vec<(usize, Result<JobResult, String>)> = self
-            .pool
-            .run_all_streaming(closures, |i, r| match r {
-                Ok(inner) => on_done(seqs[i], inner),
-                Err(panic) => on_done(seqs[i], &Err(panic.clone())),
-            })
-            .into_iter()
-            .map(|(i, r)| {
-                let outcome = match r {
-                    Ok(inner) => inner,
-                    Err(panic) => Err(panic),
-                };
-                (seqs[i], outcome)
-            })
-            .collect();
+        let mut out: Vec<(usize, Result<JobResult, String>)> = if self.workers <= 1 {
+            // Serial inline on the coordinator thread (panic isolation
+            // intact), never touching — or instantiating — the pool.
+            closures
+                .into_iter()
+                .enumerate()
+                .map(|(i, job)| {
+                    let r = match sched::run_caught(job) {
+                        Ok(inner) => inner,
+                        Err(panic) => Err(panic),
+                    };
+                    on_done(seqs[i], &r);
+                    (seqs[i], r)
+                })
+                .collect()
+        } else {
+            self.sched()
+                .run_all_streaming(closures, |i, r| match r {
+                    Ok(inner) => on_done(seqs[i], inner),
+                    Err(panic) => on_done(seqs[i], &Err(panic.clone())),
+                })
+                .into_iter()
+                .map(|(i, r)| {
+                    let outcome = match r {
+                        Ok(inner) => inner,
+                        Err(panic) => Err(panic),
+                    };
+                    (seqs[i], outcome)
+                })
+                .collect()
+        };
         // Restore the documented contract: results in global seq order,
-        // regardless of the locality-sorted submission order above.
+        // regardless of the submission order above.
         out.sort_by_key(|(seq, _)| *seq);
         out
     }
@@ -269,7 +379,7 @@ mod tests {
             device: DeviceSpec::kv260(),
             estimate_only: false,
         };
-        let svc = CompileService::new(WorkerPool::new(2));
+        let svc = CompileService::new(2);
         let results = svc.run_sweep(&cfg);
         assert_eq!(results.len(), 4);
         for r in &results {
@@ -289,7 +399,7 @@ mod tests {
             device: DeviceSpec::kv260(),
             estimate_only: true,
         };
-        let results = CompileService::new(WorkerPool::new(1)).run_sweep(&cfg);
+        let results = CompileService::new(1).run_sweep(&cfg);
         assert_eq!(results.len(), 1);
         let r = results[0].as_ref().unwrap();
         assert!(r.tiles >= 2, "expected a tiled cell, got {} tiles", r.tiles);
@@ -304,7 +414,7 @@ mod tests {
             device: DeviceSpec::kv260(),
             estimate_only: false,
         };
-        let results = CompileService::new(WorkerPool::new(2)).run_sweep(&cfg);
+        let results = CompileService::new(2).run_sweep(&cfg);
         let cycles: Vec<u64> = results.iter().map(|r| r.as_ref().unwrap().cycles).collect();
         assert!(cycles[1] * 50 < cycles[0], "ming {} vs vanilla {}", cycles[1], cycles[0]);
     }
@@ -331,7 +441,7 @@ mod tests {
             device: DeviceSpec::kv260(),
             estimate_only: true,
         };
-        let svc = CompileService::new(WorkerPool::new(2));
+        let svc = CompileService::new(2);
         let all: Vec<usize> =
             (0..CompileService::jobs(&cfg).len()).collect();
         let mut seen = Vec::new();
@@ -383,7 +493,7 @@ mod tests {
             device: DeviceSpec::kv260(),
             estimate_only: true,
         };
-        let svc = CompileService::new(WorkerPool::new(1));
+        let svc = CompileService::new(1);
         let results = svc.run_shard(&cfg, Shard::full(), &BTreeSet::new());
         let seqs: Vec<usize> = results.iter().map(|(s, _)| *s).collect();
         assert_eq!(seqs, (0..6).collect::<Vec<_>>(), "global seq order restored");
@@ -402,7 +512,7 @@ mod tests {
             device: DeviceSpec::kv260(),
             estimate_only: true,
         };
-        let svc = CompileService::new(WorkerPool::new(1));
+        let svc = CompileService::new(1);
         let done: BTreeSet<usize> = [0usize].into_iter().collect();
         let rest = svc.run_shard(&cfg, Shard::full(), &done);
         assert_eq!(rest.len(), 1);

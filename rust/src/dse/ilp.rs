@@ -20,7 +20,8 @@
 //!   ([`super::space::dominance_filter`]) drops lattice points that can
 //!   never appear in the first-found optimum, before the search runs;
 //! * a parallel branch-and-bound: lexicographic prefix subtrees fan out
-//!   over a [`crate::coordinator::WorkerPool`], sharing the incumbent
+//!   as a task group on the process-wide work-stealing scheduler
+//!   ([`crate::coordinator::sched`]), sharing the incumbent
 //!   objective through an `AtomicU64` so one worker's improvement
 //!   tightens every other worker's pruning, with a deterministic final
 //!   argmin (lowest subtree index wins ties — exactly the assignment
@@ -37,7 +38,7 @@ use std::sync::Arc;
 use anyhow::{bail, ensure, Result};
 
 use crate::coordinator::cache::{self, DesignCache};
-use crate::coordinator::WorkerPool;
+use crate::coordinator::sched;
 use crate::dataflow::build::{build_streaming_design, refresh_buffers};
 use crate::dataflow::design::Design;
 use crate::ir::fingerprint::problem_fingerprint;
@@ -66,10 +67,12 @@ pub struct DseConfig {
     /// and the tile-grid search reuses per-cell solutions — the solver
     /// itself ([`solve`]) stays cache-oblivious.
     pub cache: Option<Arc<DesignCache>>,
-    /// Worker threads for the parallel branch-and-bound and the
+    /// Parallelism for the branch-and-bound subtree fan-out and the
     /// speculative tile-grid search. `1` takes the exact serial code
-    /// path; the default is machine-sized (mirroring
-    /// [`WorkerPool::default_size`]). Not part of the problem
+    /// path; `> 1` submits task groups into the current scheduler
+    /// ([`sched::current_or_global`]) — no site-local pool is spun up.
+    /// The default is the calling context's parallelism
+    /// ([`sched::current_workers`]). Not part of the problem
     /// fingerprint: worker count never changes the solution, only how
     /// fast it is found.
     pub workers: usize,
@@ -79,7 +82,7 @@ pub struct DseConfig {
     pub dominance_filter: bool,
     /// Minimum assignment-lattice volume (product of per-node candidate
     /// counts) before the solver fans subtrees across workers. Below
-    /// it, pool spin-up costs more than the whole serial search; the
+    /// it, task submission costs more than the whole serial search; the
     /// threshold is deterministic in the problem, so it never affects
     /// bit-identity. Tests force tiny lattices onto the parallel path
     /// with [`DseConfig::with_parallel_min_volume`]`(1)`.
@@ -143,14 +146,12 @@ impl DseConfig {
     }
 }
 
-/// Machine-sized solver parallelism: one thread per core, minus one for
-/// the caller (same policy as [`WorkerPool::default_size`]).
+/// Context-sized solver parallelism: the width of the scheduler that
+/// owns the calling thread (so a solve nested inside a sweep job sizes
+/// its fan-out to the shared pool), else the machine-sized global
+/// default ([`sched::default_size`]).
 fn default_workers() -> usize {
-    std::thread::available_parallelism()
-        .map(|n| n.get())
-        .unwrap_or(4)
-        .saturating_sub(1)
-        .max(1)
+    sched::current_workers()
 }
 
 /// Outcome of the DSE.
@@ -484,7 +485,7 @@ fn lattice_volume(cand: &[Vec<Candidate>]) -> u64 {
 }
 
 /// Dispatch: the parallel branch-and-bound when the config asks for
-/// workers and the lattice is big enough to amortize pool spin-up,
+/// workers and the lattice is big enough to amortize task fan-out,
 /// the serial DFS otherwise. Both sides of the dispatch are
 /// deterministic functions of the problem, so the returned
 /// `best`/`best_pick` never depend on which path ran — nor on `seed`,
@@ -552,7 +553,7 @@ fn split_depth(cand: &[Vec<Candidate>], workers: usize) -> usize {
 /// argmin tie-break below reproduces first-found semantics. The cycle
 /// lower bound cannot prune here (no incumbent exists yet), but the
 /// resource bounds are incumbent-independent and drop dead prefixes
-/// before they ever become pool jobs.
+/// before they ever become scheduler tasks.
 struct PrefixEnum<'a> {
     p: &'a Problem<'a>,
     depth: usize,
@@ -636,8 +637,10 @@ fn parallel_search(p: &Problem<'_>, workers: usize, seed: Option<u64>) -> Option
             }
         })
         .collect();
-    let pool = WorkerPool::new(workers);
-    let results = pool.run_all_scoped(jobs, |_, _| {});
+    // Submit into the calling context's scheduler: nested under a sweep
+    // job this lands on the sweep worker's own deque, where an idle
+    // sibling steals subtrees off a straggler instead of idling.
+    let results = sched::current_or_global().run_all_scoped(jobs, |_, _| {});
     let mut out = SearchOutcome {
         best: u64::MAX,
         best_pick: Vec::new(),

@@ -14,7 +14,7 @@
 //! solved designs content-addressed by (graph, device, config)
 //! fingerprint; `--shard i/n --spool <dir>` runs one deterministic
 //! slice of the sweep and spools JSONL results for `merge-sweep`;
-//! `--workers N` sizes the worker pool.
+//! `--workers N` sizes the process-wide work-stealing scheduler.
 //!
 //! (Hand-rolled argument parsing: clap is not vendored in this environment.)
 
@@ -31,7 +31,7 @@ use ming::coordinator::cache::DesignCache;
 use ming::coordinator::report::{self, Cell};
 use ming::coordinator::service::{CompileService, Shard, SweepConfig};
 use ming::coordinator::spool;
-use ming::coordinator::{StageTimes, WorkerPool};
+use ming::coordinator::{sched, StageTimes};
 use ming::dse::ilp::{solve_with_tiling_fallback, Compiled, DseConfig};
 use ming::dataflow::build::build_streaming_design;
 use ming::dataflow::design::Design;
@@ -110,7 +110,7 @@ impl Args {
     }
 
     /// DSE config for one-shot commands: device + optional cache +
-    /// solver pool size (`--workers N`; `--workers 1` takes the exact
+    /// solver parallelism (`--workers N`; `--workers 1` takes the exact
     /// serial code path). Also hands the cache back so the command can
     /// print its stats summary when it finishes (the one-shot commands
     /// used to drop the `Arc` into the config and stay silent about
@@ -121,11 +121,7 @@ impl Args {
         if let Some(c) = &cache {
             cfg = cfg.with_cache(Arc::clone(c));
         }
-        if let Some(n) = self.flags.get("workers") {
-            let n: usize = n.parse().context("--workers expects a positive integer")?;
-            ensure!(n >= 1, "--workers must be >= 1");
-            cfg = cfg.with_workers(n);
-        }
+        cfg = cfg.with_workers(self.workers()?);
         // Per-invocation warm-start state: within one command the
         // tile-grid search re-probes recurring cell geometries, so even
         // a one-shot compile benefits from front memoization — and it
@@ -142,21 +138,31 @@ impl Args {
         }
     }
 
-    /// Worker pool sized by `--workers N` (machine-sized by default).
-    fn worker_pool(&self) -> Result<WorkerPool> {
-        match self.flags.get("workers") {
-            Some(n) => {
-                let n: usize = n.parse().context("--workers expects a positive integer")?;
-                ensure!(n >= 1, "--workers must be >= 1");
-                Ok(WorkerPool::new(n))
+    /// Parallelism from `--workers N` (machine-sized by default),
+    /// rejected at parse time when invalid — `--workers 0` is an error
+    /// here, not a silent clamp to 1 — and wired into the process-wide
+    /// scheduler ([`sched::configure`]) before its first use.
+    fn workers(&self) -> Result<usize> {
+        let n = match self.flags.get("workers") {
+            Some(raw) => {
+                let n: usize = raw.parse().context("--workers expects a positive integer")?;
+                ensure!(
+                    n >= 1,
+                    "--workers 0 is invalid: there is no zero-worker mode. \
+                     Use --workers 1 for a fully serial run."
+                );
+                n
             }
-            None => Ok(WorkerPool::default_size()),
-        }
+            None => sched::default_size(),
+        };
+        sched::configure(n);
+        Ok(n)
     }
 
-    /// The compile service: `--workers N` pool + optional design cache.
+    /// The compile service: `--workers N` parallelism + optional design
+    /// cache, over the global work-stealing scheduler.
     fn service(&self) -> Result<CompileService> {
-        let mut svc = CompileService::new(self.worker_pool()?);
+        let mut svc = CompileService::new(self.workers()?);
         if let Some(cache) = self.design_cache()? {
             svc = svc.with_cache(cache);
         }
@@ -370,8 +376,8 @@ fn cmd_simulate(a: &Args) -> Result<()> {
     let dev = a.device()?;
     let fw = a.framework()?;
     // validate --workers up front so a bad value errors on the flat
-    // path too (the pool itself is only used by tiled designs)
-    let pool = a.worker_pool()?;
+    // path too (the fan-out itself is only used by tiled designs)
+    let workers = a.workers()?;
     let g = models::paper_kernel(&kernel, size)?;
     let (cfg, cache) = a.dse_config(&dev)?;
     let d = if fw == FrameworkKind::Ming {
@@ -381,13 +387,13 @@ fn cmd_simulate(a: &Args) -> Result<()> {
                 println!("untiled DSE infeasible — simulating the grid-tiled design");
                 println!("{}", tc.grid.describe());
                 let x = det_input(&g);
-                let rep = if pool.workers() > 1 {
+                let rep = if workers > 1 {
                     println!(
                         "fanning {} cells across {} workers",
                         tc.grid.n_cells(),
-                        pool.workers().min(tc.grid.n_cells())
+                        workers.min(tc.grid.n_cells())
                     );
-                    simulate_tiled_parallel_with(&tc, &x, &pool, sim_cfg)?
+                    simulate_tiled_parallel_with(&tc, &x, sched::global(), sim_cfg)?
                 } else {
                     simulate_tiled_with(&tc, &x, sim_cfg)?
                 };
@@ -830,9 +836,11 @@ fn help() {
          \x20                      infeasible verdicts are negative-cached too)\n\
          \x20 --cache-gc N        mtime-LRU sweep of the cache dir at start,\n\
          \x20                     keeping the N most recent entries\n\
-         \x20 --workers N         worker-pool size: sweep fan-out, tiled simulation,\n\
-         \x20                     and the cold-path DSE (parallel branch-and-bound +\n\
-         \x20                     speculative grid search; --workers 1 = exact serial path)\n\
+         \x20 --workers N         width of the process-wide work-stealing scheduler:\n\
+         \x20                     sweep jobs, tiled simulation, and the cold-path DSE\n\
+         \x20                     (parallel branch-and-bound + speculative grid search)\n\
+         \x20                     all share its cores; --workers 1 = exact serial path,\n\
+         \x20                     --workers 0 is rejected (N must be >= 1)\n\
          \x20 --shard i/n         run the i-th of n deterministic sweep slices\n\
          \x20 --spool DIR         append JSONL results for merge-sweep / resume\n\
          \x20                     (already-spooled jobs are skipped on re-run)\n\n\

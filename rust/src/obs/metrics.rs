@@ -10,7 +10,7 @@
 //! shared atomic directly.
 //!
 //! Naming convention: `subsystem.stat` (`cache.hits`, `dse.pruned`,
-//! `sim.firings`, `pool.busy_us`); span-derived phase times land under
+//! `sim.firings`, `sched.busy_us`); span-derived phase times land under
 //! `time.*` in microseconds (see [`crate::obs::trace`]).
 
 use std::collections::BTreeMap;

@@ -36,6 +36,10 @@ struct Event {
     begin: bool,
     ts_us: u64,
     tid: u64,
+    /// Optional single `"args":{key:value}` annotation, emitted on the
+    /// begin event (Perfetto shows it in the span's detail pane — e.g.
+    /// the scheduler tags stolen tasks with their victim lane).
+    arg: Option<(&'static str, String)>,
 }
 
 #[derive(Default)]
@@ -122,6 +126,41 @@ impl TraceSink {
         self.span_impl(cat, || Cow::Owned(name()), false)
     }
 
+    /// Open a span with a static name plus one `"args":{key:value}`
+    /// annotation on the begin event. The value closure only runs (and
+    /// allocates) when tracing is enabled; profile time aggregates
+    /// under `time.<cat>.<name>` like [`Self::span`].
+    pub fn span_with_arg<F>(
+        &self,
+        cat: &'static str,
+        name: &'static str,
+        key: &'static str,
+        value: F,
+    ) -> SpanGuard<'_>
+    where
+        F: FnOnce() -> String,
+    {
+        let tracing = self.is_tracing();
+        let profiling = self.is_profiling();
+        if !tracing && !profiling {
+            return SpanGuard { sink: self, state: None };
+        }
+        if tracing {
+            self.push(Cow::Borrowed(name), cat, true, Some((key, value())));
+        }
+        SpanGuard {
+            sink: self,
+            state: Some(SpanState {
+                name: Cow::Borrowed(name),
+                cat,
+                static_name: true,
+                tracing,
+                profiling,
+                start: Instant::now(),
+            }),
+        }
+    }
+
     fn span_impl<F>(&self, cat: &'static str, name: F, static_name: bool) -> SpanGuard<'_>
     where
         F: FnOnce() -> Cow<'static, str>,
@@ -133,7 +172,7 @@ impl TraceSink {
         }
         let name = if tracing || static_name { name() } else { Cow::Borrowed("") };
         if tracing {
-            self.push(name.clone(), cat, true);
+            self.push(name.clone(), cat, true, None);
         }
         SpanGuard {
             sink: self,
@@ -148,13 +187,19 @@ impl TraceSink {
         }
     }
 
-    fn push(&self, name: Cow<'static, str>, cat: &'static str, begin: bool) {
+    fn push(
+        &self,
+        name: Cow<'static, str>,
+        cat: &'static str,
+        begin: bool,
+        arg: Option<(&'static str, String)>,
+    ) {
         let mut inner = self.inner.lock().unwrap();
         // Timestamp under the lock: the recorded order is globally
         // chronological, and per-lane B/E pairs nest by construction.
         let ts_us = self.origin.elapsed().as_micros() as u64;
         let tid = inner.lane(std::thread::current().id());
-        inner.events.push(Event { name, cat, begin, ts_us, tid });
+        inner.events.push(Event { name, cat, begin, ts_us, tid, arg });
     }
 
     /// Number of recorded events (tests; 0 while disabled).
@@ -197,10 +242,16 @@ impl TraceSink {
         }
         for ev in &inner.events {
             let ph = if ev.begin { 'B' } else { 'E' };
+            let args = match &ev.arg {
+                Some((k, v)) => {
+                    format!(",\"args\":{{\"{}\":\"{}\"}}", escape(k), escape(v))
+                }
+                None => String::new(),
+            };
             emit(
                 format!(
                     "{{\"name\":\"{}\",\"cat\":\"{}\",\"ph\":\"{ph}\",\"ts\":{},\
-                     \"pid\":{pid},\"tid\":{}}}",
+                     \"pid\":{pid},\"tid\":{}{args}}}",
                     escape(&ev.name),
                     escape(ev.cat),
                     ev.ts_us,
@@ -258,7 +309,7 @@ impl Drop for SpanGuard<'_> {
     fn drop(&mut self) {
         let Some(st) = self.state.take() else { return };
         if st.tracing {
-            self.sink.push(st.name.clone(), st.cat, false);
+            self.sink.push(st.name.clone(), st.cat, false, None);
         }
         if st.profiling {
             let us = st.start.elapsed().as_micros() as u64;
@@ -332,6 +383,37 @@ mod tests {
         }
         assert!(stacks.values().all(Vec::is_empty), "unclosed spans");
         assert_eq!(pairs, 3);
+    }
+
+    #[test]
+    fn span_args_appear_on_begin_events_only() {
+        let sink = TraceSink::new();
+        sink.set_tracing(true);
+        drop(sink.span_with_arg("sched", "steal", "stolen_from", || "worker-2".to_string()));
+        let doc = parse(&sink.to_chrome_json()).unwrap();
+        let events = doc.as_arr().unwrap();
+        let begin = events
+            .iter()
+            .find(|ev| ev.get("ph").map(|p| p == &Json::Str("B".into())).unwrap_or(false))
+            .expect("begin event");
+        assert_eq!(
+            begin.get("args").and_then(|a| a.get("stolen_from")).ok(),
+            Some(&Json::Str("worker-2".into()))
+        );
+        let end = events
+            .iter()
+            .find(|ev| ev.get("ph").map(|p| p == &Json::Str("E".into())).unwrap_or(false))
+            .expect("end event");
+        assert!(end.get("args").is_err(), "args belong on the begin event");
+    }
+
+    #[test]
+    fn span_arg_value_is_lazy_when_disabled() {
+        let sink = TraceSink::new();
+        drop(sink.span_with_arg("sched", "steal", "stolen_from", || {
+            unreachable!("arg value must not be built while tracing is off")
+        }));
+        assert_eq!(sink.event_count(), 0);
     }
 
     #[test]

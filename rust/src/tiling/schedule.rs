@@ -27,7 +27,7 @@
 
 use anyhow::{bail, ensure, Context, Result};
 
-use crate::coordinator::WorkerPool;
+use crate::coordinator::sched::{self, SchedHandle};
 use crate::dataflow::build::{build_cell_design, build_streaming_design};
 use crate::dataflow::design::Design;
 use crate::dse::ilp::{DseConfig, DseSolution};
@@ -366,9 +366,11 @@ fn serial_grid_search(
 /// abandoned ones as `tiling.speculative_cancelled`.
 ///
 /// Per-cell solves still dedupe through the design cache (same
-/// fingerprints as the serial path), and each speculative job pins its
-/// cell DSE to one worker — the parallelism budget is spent across
-/// grids here, not nested inside one solve.
+/// fingerprints as the serial path), and nested cell DSE keeps its
+/// configured parallelism: every level submits into the same
+/// work-stealing scheduler, so a wide cell solve becomes stealable
+/// subtree tasks instead of oversubscribed threads — idle workers here
+/// drain a straggler grid's solves rather than spinning.
 ///
 /// Warm-start state ([`crate::dse::WarmStart`] in `cfg.warm`) rides
 /// into every cell solve through the `cfg.clone()` below: grid
@@ -387,12 +389,11 @@ fn speculative_grid_search(
     use std::sync::atomic::{AtomicUsize, Ordering};
 
     let metrics = crate::obs::metrics::global();
-    let cell_cfg = cfg.clone().with_workers(1);
     let dims: Vec<(u64, u64)> =
         survivors.iter().map(|gr| (gr.rows() as u64, gr.cols() as u64)).collect();
     let committed = AtomicUsize::new(usize::MAX);
     let committed_ref = &committed;
-    let cell_cfg_ref = &cell_cfg;
+    let cell_cfg_ref = cfg;
     let jobs: Vec<_> = survivors
         .into_iter()
         .enumerate()
@@ -413,8 +414,7 @@ fn speculative_grid_search(
             }
         })
         .collect();
-    let pool = WorkerPool::new(cfg.workers.min(dims.len()));
-    let results = pool.run_all_scoped(jobs, |_, _| {});
+    let results = sched::current_or_global().run_all_scoped(jobs, |_, _| {});
     let mut winner: Option<TiledCompilation> = None;
     for (idx, r) in results {
         let (rows, cols) = dims[idx];
@@ -660,29 +660,30 @@ pub fn simulate_tiled_with(
     Ok(stitch(tc, &geo, runs, 1))
 }
 
-/// Like [`simulate_tiled`], fanning the independent grid cells out
-/// across `pool`'s workers. Cells are split into small contiguous
-/// row-major chunks (several per worker, for load balance); chunk jobs
-/// draw a `SimContext` from a **shared context pool** — pop-or-build on
-/// entry, return on exit — so weights are transposed at most once per
-/// concurrently-active worker no matter how many chunks run
-/// ([`TiledSimReport::ctx_builds`] counts the builds, proving reuse).
-/// Cropped cores are stitched in deterministic cell order — the report
-/// is identical to the serial path's, cycle counts included (asserted
-/// by the equivalence tests and the `BENCH_sim.json` smoke check).
+/// Like [`simulate_tiled`], fanning the independent grid cells out as a
+/// task group on `sched`'s workers. Cells are split into small
+/// contiguous row-major chunks (several per worker, for load balance);
+/// chunk jobs draw a `SimContext` from a **shared context pool** —
+/// pop-or-build on entry, return on exit — so weights are transposed at
+/// most once per concurrently-active worker no matter how many chunks
+/// run ([`TiledSimReport::ctx_builds`] counts the builds, proving
+/// reuse). Cropped cores are stitched in deterministic cell order — the
+/// report is identical to the serial path's, cycle counts included
+/// (asserted by the equivalence tests and the `BENCH_sim.json` smoke
+/// check).
 pub fn simulate_tiled_parallel(
     tc: &TiledCompilation,
     input: &[i32],
-    pool: &WorkerPool,
+    sched: &SchedHandle,
 ) -> Result<TiledSimReport> {
-    simulate_tiled_parallel_with(tc, input, pool, crate::sim::SimConfig::default())
+    simulate_tiled_parallel_with(tc, input, sched, crate::sim::SimConfig::default())
 }
 
 /// [`simulate_tiled_parallel`] with explicit fast-path knobs.
 pub fn simulate_tiled_parallel_with(
     tc: &TiledCompilation,
     input: &[i32],
-    pool: &WorkerPool,
+    sched: &SchedHandle,
     cfg: crate::sim::SimConfig,
 ) -> Result<TiledSimReport> {
     use std::sync::atomic::{AtomicU64, Ordering};
@@ -695,12 +696,12 @@ pub fn simulate_tiled_parallel_with(
         .iter()
         .flat_map(|rs| grid.w.segs.iter().map(move |cs| (rs, cs)))
         .collect();
-    if pool.workers() <= 1 || cells.len() <= 1 {
+    if sched.workers() <= 1 || cells.len() <= 1 {
         return simulate_tiled_with(tc, input, cfg);
     }
     // ~4 chunks per worker: fine-grained enough that a slow chunk does
     // not straggle, and the context pool makes extra chunks free.
-    let chunk = cells.len().div_ceil(pool.workers() * 4).max(1);
+    let chunk = cells.len().div_ceil(sched.workers() * 4).max(1);
     let geo_ref = &geo;
     // one weight extraction + transposition for the whole pool: every
     // worker context shares the bank's Arc'd storage
@@ -741,7 +742,7 @@ pub fn simulate_tiled_parallel_with(
             }
         })
         .collect();
-    let results = pool.run_all_scoped(jobs, |_, _| {});
+    let results = sched.run_all_scoped(jobs, |_, _| {});
     let mut runs = Vec::with_capacity(cells.len());
     for (idx, r) in results {
         let chunk_runs = r
@@ -858,7 +859,7 @@ mod tests {
             let serial = simulate_tiled(&tc, &x).unwrap();
             for workers in [2usize, 3, 8] {
                 let par =
-                    simulate_tiled_parallel(&tc, &x, &WorkerPool::new(workers)).unwrap();
+                    simulate_tiled_parallel(&tc, &x, &crate::coordinator::Scheduler::new(workers)).unwrap();
                 assert_eq!(par.output, serial.output, "{}@{workers}: output", g.name);
                 assert_eq!(par.cycles, serial.cycles, "{}@{workers}: cycles", g.name);
                 assert_eq!(par.tile_cycles, serial.tile_cycles, "{}@{workers}", g.name);
@@ -892,7 +893,7 @@ mod tests {
             "independently built contexts must not share storage"
         );
         for workers in [2usize, 4] {
-            let par = simulate_tiled_parallel(&tc, &x, &WorkerPool::new(workers)).unwrap();
+            let par = simulate_tiled_parallel(&tc, &x, &crate::coordinator::Scheduler::new(workers)).unwrap();
             assert_eq!(par.output, serial.output);
             assert!(par.ctx_builds >= 1);
             assert!(
@@ -909,7 +910,7 @@ mod tests {
         let x = det_input(&g);
         let tc = compile_tiled_fixed(&g, &DseConfig::new(DeviceSpec::kv260()), 2, 2).unwrap();
         let a = simulate_tiled(&tc, &x).unwrap();
-        let b = simulate_tiled_parallel(&tc, &x, &WorkerPool::new(1)).unwrap();
+        let b = simulate_tiled_parallel(&tc, &x, &crate::coordinator::Scheduler::new(1)).unwrap();
         assert_eq!(a.output, b.output);
         assert_eq!(a.cycles, b.cycles);
     }

@@ -289,11 +289,11 @@ fn prop_arena_engine_matches_naive_reference_exactly() {
 
 #[test]
 fn prop_parallel_tiled_simulation_matches_serial() {
-    // Random pooled stride chains through the worker-pool fan-out: for
+    // Random pooled stride chains through the scheduler fan-out: for
     // every buildable grid, the parallel tiled simulation is identical
     // to the serial one — stitched output, total cycles, per-cell
     // cycles — at several worker counts.
-    use ming::coordinator::WorkerPool;
+    use ming::coordinator::Scheduler;
     use ming::tiling::{compile_tiled_fixed, simulate_tiled, simulate_tiled_parallel};
     let dev = DeviceSpec::kv260();
     forall("parallel tiled == serial", 8, random_stride_chain, |g| {
@@ -306,7 +306,7 @@ fn prop_parallel_tiled_simulation_matches_serial() {
             };
             let serial = simulate_tiled(&tc, &x).unwrap();
             for workers in [2usize, 5] {
-                let par = simulate_tiled_parallel(&tc, &x, &WorkerPool::new(workers)).unwrap();
+                let par = simulate_tiled_parallel(&tc, &x, &Scheduler::new(workers)).unwrap();
                 if par.output != serial.output
                     || par.cycles != serial.cycles
                     || par.tile_cycles != serial.tile_cycles

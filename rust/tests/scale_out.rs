@@ -21,7 +21,7 @@ use ming::coordinator::cache::DesignCache;
 use ming::coordinator::report::{self, Cell};
 use ming::coordinator::service::{CompileService, Shard, SweepConfig};
 use ming::coordinator::spool;
-use ming::coordinator::WorkerPool;
+
 use ming::dse::ilp::{solve_with_tiling_fallback, Compiled, DseConfig};
 use ming::ir::builder::models;
 use ming::ir::fingerprint::problem_fingerprint;
@@ -54,7 +54,7 @@ fn repeated_table2_sweep_with_cache_performs_zero_solves() {
     let mut cfg = SweepConfig::table2(DeviceSpec::kv260());
     cfg.estimate_only = true;
     let cache = Arc::new(DesignCache::in_memory());
-    let svc = CompileService::new(WorkerPool::new(2)).with_cache(cache.clone());
+    let svc = CompileService::new(2).with_cache(cache.clone());
 
     let first = svc.run_sweep(&cfg);
     let after_first = cache.stats();
@@ -263,13 +263,13 @@ fn disk_cache_is_shared_across_service_instances() {
     let dir = tmp_dir("shared");
     let cfg = small_sweep();
 
-    let svc1 = CompileService::new(WorkerPool::new(2))
+    let svc1 = CompileService::new(2)
         .with_cache(Arc::new(DesignCache::at_dir(&dir).unwrap()));
     svc1.run_sweep(&cfg);
     let solves1 = svc1.cache().unwrap().stats().solves;
     assert!(solves1 > 0);
 
-    let svc2 = CompileService::new(WorkerPool::new(2))
+    let svc2 = CompileService::new(2)
         .with_cache(Arc::new(DesignCache::at_dir(&dir).unwrap()));
     svc2.run_sweep(&cfg);
     let s2 = svc2.cache().unwrap().stats();
@@ -281,7 +281,7 @@ fn disk_cache_is_shared_across_service_instances() {
 #[test]
 fn two_shard_sweep_merges_row_identical_to_unsharded() {
     let cfg = small_sweep();
-    let svc = CompileService::new(WorkerPool::new(2));
+    let svc = CompileService::new(2);
 
     // unsharded reference
     let unsharded = report::render_table2(&cells_of(&svc.run_sweep(&cfg)));
@@ -310,9 +310,130 @@ fn two_shard_sweep_merges_row_identical_to_unsharded() {
 }
 
 #[test]
+fn sweep_outputs_are_bit_identical_across_worker_counts() {
+    // The scheduler's determinism contract, end to end: the same sweep
+    // run serially (`--workers 1`) and at widths 2, 5, and 16 — with
+    // nested parallelism enabled, so sweep fan-out, DSE subtree groups,
+    // and the speculative grid search all share the pool — must agree
+    // field for field, table row for row, and through the spool
+    // encode/merge path. The workload mixes flat cells with the
+    // oversized vgg3@512 straggler so the tiled path is on the clock.
+    use ming::coordinator::{JobResult, Scheduler};
+    let mut cfg = small_sweep();
+    cfg.workloads.push(("vgg3".into(), 512));
+
+    // Every solution-bearing field; stage wall-times are the one
+    // legitimately nondeterministic part of a result and stay out.
+    let fingerprint = |results: &[(usize, Result<JobResult, String>)]| -> Vec<String> {
+        results
+            .iter()
+            .map(|(seq, r)| match r {
+                Ok(r) => format!(
+                    "{seq} {} cycles={} macs={} tiles={} util={:?} err={:?}",
+                    r.job.id(),
+                    r.cycles,
+                    r.macs,
+                    r.tiles,
+                    r.util,
+                    r.error
+                ),
+                Err(e) => format!("{seq} ERR {e}"),
+            })
+            .collect()
+    };
+    let table_of = |results: &[(usize, Result<JobResult, String>)]| -> String {
+        let cells: Vec<Cell> =
+            results.iter().filter_map(|(_, r)| r.as_ref().ok().map(report::cell)).collect();
+        report::render_table2(&cells)
+    };
+    let merged_table_of = |results: &[(usize, Result<JobResult, String>)]| -> String {
+        let total = CompileService::jobs(&cfg).len();
+        let sweep = CompileService::sweep_id(&cfg);
+        let ids: Vec<String> = CompileService::jobs(&cfg).iter().map(|j| j.id()).collect();
+        let records: Vec<_> = results
+            .iter()
+            .map(|(seq, outcome)| {
+                let line =
+                    spool::record_line(sweep, "table2", *seq, total, &ids[*seq], outcome);
+                spool::parse_line(&line).unwrap()
+            })
+            .collect();
+        report::render_table2(&spool::merge(records).unwrap().cells)
+    };
+
+    let reference = CompileService::new(1).run_shard(&cfg, Shard::full(), &BTreeSet::new());
+    let (ref_fp, ref_table) = (fingerprint(&reference), table_of(&reference));
+    let ref_merged = merged_table_of(&reference);
+
+    for n in [2usize, 5, 16] {
+        let sched = Scheduler::new(n);
+        let svc = CompileService::new(n).with_scheduler(sched.handle());
+        let got = svc.run_shard(&cfg, Shard::full(), &BTreeSet::new());
+        assert_eq!(fingerprint(&got), ref_fp, "workers={n}: results diverged");
+        assert_eq!(table_of(&got), ref_table, "workers={n}: rendered table diverged");
+        assert_eq!(
+            merged_table_of(&got),
+            ref_merged,
+            "workers={n}: spool-merged table diverged"
+        );
+    }
+}
+
+#[test]
+fn emitted_hls_is_byte_identical_across_worker_counts() {
+    // The generated C++ — flat and grid-tiled — must not depend on how
+    // wide the solver fanned out. `parallel_min_volume(1)` forces the
+    // parallel branch-and-bound even on these small lattices.
+    let flat_g = models::conv_relu(32, 8, 8);
+    let tiled_g = models::conv_relu(400, 8, 8);
+    let flat_dev = DeviceSpec::kv260();
+    let tiled_dev = DeviceSpec::kv260().with_bram_limit(3);
+
+    let flat_ref = match solve_with_tiling_fallback(
+        &flat_g,
+        &DseConfig::new(flat_dev.clone()).with_workers(1),
+    )
+    .unwrap()
+    {
+        Compiled::Flat(d, _) => emit_design(&d),
+        Compiled::Tiled(_) => panic!("conv_relu@32 is flat-feasible"),
+    };
+    let tiled_ref = match solve_with_tiling_fallback(
+        &tiled_g,
+        &DseConfig::new(tiled_dev.clone()).with_workers(1),
+    )
+    .unwrap()
+    {
+        Compiled::Tiled(tc) => emit_tiled_design(&tc),
+        Compiled::Flat(..) => panic!("BRAM-starved workload must tile"),
+    };
+
+    for n in [2usize, 5, 16] {
+        let cfg = DseConfig::new(flat_dev.clone()).with_workers(n).with_parallel_min_volume(1);
+        match solve_with_tiling_fallback(&flat_g, &cfg).unwrap() {
+            Compiled::Flat(d, _) => assert_eq!(
+                emit_design(&d),
+                flat_ref,
+                "workers={n}: flat HLS diverged"
+            ),
+            Compiled::Tiled(_) => panic!("workers={n}: outcome kind changed"),
+        }
+        let cfg = DseConfig::new(tiled_dev.clone()).with_workers(n).with_parallel_min_volume(1);
+        match solve_with_tiling_fallback(&tiled_g, &cfg).unwrap() {
+            Compiled::Tiled(tc) => assert_eq!(
+                emit_tiled_design(&tc),
+                tiled_ref,
+                "workers={n}: tiled HLS diverged"
+            ),
+            Compiled::Flat(..) => panic!("workers={n}: outcome kind changed"),
+        }
+    }
+}
+
+#[test]
 fn resume_skips_already_spooled_jobs() {
     let cfg = small_sweep();
-    let svc = CompileService::new(WorkerPool::new(1));
+    let svc = CompileService::new(1);
     let total = CompileService::jobs(&cfg).len();
     let sweep = CompileService::sweep_id(&cfg);
     let ids: Vec<String> = CompileService::jobs(&cfg).iter().map(|j| j.id()).collect();
